@@ -1,0 +1,58 @@
+"""Fig. 7 + Fig. 8 reproduction: episode-length and entropy-coefficient
+impact on PPO convergence; initial-temperature impact on SA."""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import env as chipenv
+from repro.rl import ppo
+from repro.sa import annealing as sa
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+RL_STEPS = 100_000 if FULL else 24_576
+SA_ITERS = 100_000 if FULL else 20_000
+
+
+def run(report):
+    # Fig. 7: episode length 2 vs 10 — longer episodes raise the mean
+    # episodic reward but not the cost-model value (reward/step)
+    for ep_len in (2, 10):
+        env_cfg = chipenv.EnvConfig(episode_len=ep_len)
+        cfg = ppo.PPOConfig(n_steps=256, n_envs=8)
+        t0 = time.time()
+        res = ppo.train(jax.random.PRNGKey(0), env_cfg, cfg,
+                        total_timesteps=RL_STEPS)
+        us = (time.time() - t0) * 1e6
+        ep_r = float(res.log.mean_episodic_reward[-1])
+        cost_val = ep_r / ep_len      # the paper's normalization
+        report(f"fig7_episode_len_{ep_len}", us,
+               f"mean_episodic={ep_r:.1f};cost_model_value={cost_val:.1f};"
+               f"best={float(res.best_reward):.1f}")
+
+    # Fig. 8a: entropy coefficient 0 vs 0.1
+    for ent in (0.0, 0.1):
+        cfg = ppo.PPOConfig(n_steps=256, n_envs=8, ent_coef=ent)
+        t0 = time.time()
+        res = ppo.train(jax.random.PRNGKey(1), chipenv.EnvConfig(), cfg,
+                        total_timesteps=RL_STEPS)
+        us = (time.time() - t0) * 1e6
+        report(f"fig8a_entropy_{ent}", us,
+               f"final={float(res.log.mean_episodic_reward[-1]):.1f};"
+               f"best={float(res.best_reward):.1f}")
+
+    # Fig. 8b: SA initial temperature 1 vs 200
+    for temp in (1.0, 200.0):
+        cfg = sa.SAConfig(n_iters=SA_ITERS, temperature=temp)
+        t0 = time.time()
+        res = sa.run_population(jax.random.PRNGKey(2), 4,
+                                chipenv.EnvConfig(), cfg)
+        us = (time.time() - t0) * 1e6
+        vals = np.asarray(res.best_reward)
+        report(f"fig8b_sa_temp_{int(temp)}", us / 4,
+               f"best={vals.max():.1f};mean={vals.mean():.1f}")

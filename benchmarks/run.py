@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Set REPRO_BENCH_FULL=1 for
+paper-scale seeds/iterations (default: CI-scale, ~5 min on CPU).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig12,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_ablation, bench_kernels, bench_mlperf,
+                        bench_optimizer, bench_weights, bench_yield)
+
+MODULES = {
+    "yield": bench_yield,          # Fig. 3
+    "optimizer": bench_optimizer,  # Fig. 9-11, Table 6
+    "mlperf": bench_mlperf,        # Fig. 12, Table 7
+    "ablation": bench_ablation,    # Fig. 7-8
+    "weights": bench_weights,      # Eq. 17 objective-weight study
+    "kernels": bench_kernels,      # framework perf (ours)
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    help=f"comma list of {sorted(MODULES)}")
+    args = ap.parse_args()
+    names = list(MODULES) if args.only == "all" else args.only.split(",")
+
+    print("name,us_per_call,derived")
+    failed = []
+
+    def report(name: str, us: float, derived: str = ""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    for name in names:
+        t0 = time.time()
+        try:
+            MODULES[name].run(report)
+        except Exception as e:                             # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+            report(f"{name}_FAILED", 0.0, repr(e))
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: optimize a chiplet-based AI accelerator in ~a minute.
+
+Runs a small Alg.-1 portfolio (SA population + one PPO agent + exhaustive
+coordinate refinement) on the default objective (alpha, beta, gamma =
+1, 1, 0.1 — throughput-weighted, Eq. 17) and prints the optimized design
+point next to the paper's Table-6 case-(i) configuration.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+from repro.core import costmodel as cm
+from repro.core import env as chipenv
+from repro.core import params as ps
+from repro.optimizer import portfolio
+from repro.rl import ppo
+from repro.sa import annealing as sa
+
+
+def main():
+    cfg = portfolio.PortfolioConfig(
+        n_sa=4, n_rl=1,
+        sa=sa.SAConfig(n_iters=30_000),
+        rl=ppo.PPOConfig(n_steps=256, n_envs=8),
+        rl_timesteps=40_960,
+        refine=True)
+    print("Running Chiplet-Gym portfolio optimizer "
+          f"({cfg.n_sa} SA chains + {cfg.n_rl} PPO agent + refinement)...")
+    res = portfolio.optimize(jax.random.PRNGKey(0), chipenv.EnvConfig(),
+                             cfg, verbose=True)
+
+    print(f"\nBest design (source: {res.source}, "
+          f"reward {res.best_reward:.1f}, {res.wall_time_s:.0f}s):\n")
+    print(ps.describe(res.best_design))
+
+    m = cm.evaluate(res.best_design)
+    print(f"\nPPAC: {float(m.eff_tops):.0f} effective TOPS | "
+          f"{float(m.e_comm_pj_per_op):.2f} pJ/op comm | "
+          f"die ${float(m.die_cost):.0f} + pkg ${float(m.pkg_cost):.0f} | "
+          f"yield {float(m.die_yield):.1%} | "
+          f"{int(m.n_dies)} chiplets on a "
+          f"{int(m.mesh_m)}x{int(m.mesh_n)} mesh, {int(m.n_hbm)} HBMs")
+
+    print("\nSA bests:", [f"{v:.0f}" for v in res.sa_rewards])
+    print("RL bests:", [f"{v:.0f}" for v in res.rl_rewards])
+    print(f"refined:  {res.refined_reward:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Serving demo: continuous batching over a pool of decode slots.
+
+Loads a small randomly-initialized model (greedy decode over random
+weights is deterministic — the demo verifies engine mechanics: slot
+reuse, batched decode, per-request completion).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_REGISTRY
+from repro.models import model as M
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    arch = ARCH_REGISTRY["qwen2-0.5b"].reduced()
+    params = M.init_params(arch, jax.random.PRNGKey(0), jnp.float32)
+    engine = ServingEngine(arch, params, n_slots=4, max_len=128)
+
+    requests = [
+        Request(uid=i, prompt=[3 + i, 10 + i, 7, 9][: 2 + i % 3],
+                max_new_tokens=12)
+        for i in range(8)                      # 8 requests, 4 slots
+    ]
+    t0 = time.time()
+    done = engine.run(requests)
+    dt = time.time() - t0
+
+    total_tokens = sum(len(r.output) for r in done)
+    print(f"served {len(done)} requests / {total_tokens} tokens "
+          f"in {dt:.1f}s ({total_tokens/dt:.1f} tok/s with "
+          f"{engine.n_slots} slots, continuous batching)")
+    for r in done:
+        assert r.done, r.uid
+        print(f"  req {r.uid}: prompt={r.prompt} -> {r.output}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results JSONs.
+
+    PYTHONPATH=src python scripts/render_tables.py results/dryrun
+"""
+
+import glob
+import json
+import os
+import sys
+
+
+def load(out_dir):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        if "__opt" in p or "__base" in p:
+            continue
+        rows.append(json.load(open(p)))
+    return rows
+
+
+def dryrun_table(rows):
+    print("\n### Dry-run matrix (status / per-device temp memory / "
+          "compile time)\n")
+    print("| arch | shape | 16x16 (256 chips) | 2x16x16 (512 chips) |")
+    print("|---|---|---|---|")
+    cells = {}
+    for r in rows:
+        if r["arch"] == "chipletgym":
+            continue
+        key = (r["arch"], r["shape"])
+        mesh = "single" if r["mesh"] == "pod16x16" else "multi"
+        if r["status"] == "ok":
+            import re
+            m = re.search(r"temp_size_in_bytes=(\d+)", r["memory_analysis"])
+            tmp = int(m.group(1)) / 2**30 if m else 0
+            txt = f"ok ({tmp:.1f} GiB tmp, {r['compile_s']:.0f}s)"
+        elif r["status"] == "skipped":
+            txt = "skip (full attention)"
+        else:
+            txt = "ERROR"
+        cells.setdefault(key, {})[mesh] = txt
+    for (arch, shape), d in sorted(cells.items()):
+        print(f"| {arch} | {shape} | {d.get('single','-')} "
+              f"| {d.get('multi','-')} |")
+    chip = [r for r in rows if r["arch"] == "chipletgym"]
+    for r in chip:
+        print(f"| chipletgym (PPO update) | rl_rollout | "
+              f"{'ok' if r['mesh']=='pod16x16' and r['status']=='ok' else ''} "
+              f"| {'ok' if r['mesh']=='pod2x16x16' and r['status']=='ok' else ''} |"
+              if False else "", end="")
+    print(f"\nchipletgym PPO update: "
+          + ", ".join(f"{r['mesh']}={r['status']}" for r in chip))
+
+
+def roofline_table(rows, mesh="pod16x16"):
+    print(f"\n### Roofline ({mesh}, per chip: 197 TF/s bf16, 819 GB/s HBM,"
+          " 3x50 GB/s ICI)\n")
+    print("| arch | shape | t_comp ms | t_mem ms | t_coll ms | bottleneck "
+          "| 6ND/HLO | roofline frac | dominant collective |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(rows, key=lambda r: (r["shape"], r["arch"])):
+        if r["status"] != "ok" or r["arch"] == "chipletgym" \
+                or r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        coll = rf.get("collective_breakdown", {})
+        dom_coll = max(coll, key=coll.get) if coll else "-"
+        print(f"| {r['arch']} | {r['shape']} "
+              f"| {rf['t_compute']*1e3:.1f} | {rf['t_memory']*1e3:.1f} "
+              f"| {rf['t_collective']*1e3:.1f} | {rf['bottleneck']} "
+              f"| {rf['useful_ratio']:.2f} "
+              f"| {rf['roofline_fraction']:.1%} | {dom_coll} |")
+
+
+if __name__ == "__main__":
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    rows = load(out_dir)
+    dryrun_table(rows)
+    roofline_table(rows, "pod16x16")
+    roofline_table(rows, "pod2x16x16")

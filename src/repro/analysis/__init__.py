@@ -1,0 +1,1 @@
+"""Roofline analysis: HLO cost/collective accounting (analysis/roofline.py)."""

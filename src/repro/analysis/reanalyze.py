@@ -1,0 +1,50 @@
+"""Recompute roofline reports from persisted HLO (no recompilation).
+
+The dry-run stores each cell's optimized HLO under results/dryrun/hlo/;
+whenever the analyzer (analysis/hlo.py) improves, this tool refreshes the
+JSON records in place:
+
+    PYTHONPATH=src python -m repro.analysis.reanalyze [results/dryrun]
+"""
+
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+from repro.analysis import roofline as RL
+from repro.configs import ARCH_REGISTRY, SHAPES_BY_NAME
+
+
+def reanalyze_dir(out_dir: str) -> int:
+    n = 0
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok" or rec.get("arch") == "chipletgym":
+            continue
+        stem = os.path.basename(path).removesuffix(".json")
+        hlo_path = os.path.join(out_dir, "hlo", stem + ".hlo.gz")
+        if not os.path.exists(hlo_path):
+            continue
+        with gzip.open(hlo_path, "rt") as f:
+            hlo_text = f.read()
+        arch = ARCH_REGISTRY[rec["arch"]]
+        shape = SHAPES_BY_NAME[rec["shape"]]
+        report = RL.analyze(arch, shape, rec["mesh"], rec["n_devices"],
+                            rec.get("cost", {}), hlo_text,
+                            rec.get("memory_analysis"))
+        rec["roofline"] = report.to_dict()
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        n += 1
+    return n
+
+
+if __name__ == "__main__":
+    target = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+    print(f"re-analyzed {reanalyze_dir(os.path.abspath(target))} records")

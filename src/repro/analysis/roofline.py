@@ -1,0 +1,170 @@
+"""Roofline analysis from compiled dry-run artifacts (assignment §Roofline).
+
+Per (arch x shape x mesh) cell, derived from the SPMD-partitioned module
+(cost_analysis + HLO text — per *device*):
+
+    compute term    = HLO_FLOPs_dev / peak_FLOPs          (197 TF/s bf16)
+    memory term     = HLO_bytes_dev / HBM_bw              (819 GB/s)
+    collective term = collective_bytes_dev / link_bw      (~50 GB/s/link,
+                      3 ICI links per v5e chip when >1 mesh axis is used)
+
+plus MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per device-step and
+the usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional
+
+from repro.analysis import hlo as hlo_lib
+from repro.configs.base import ArchConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12           # bf16 / chip (TPU v5e-class)
+HBM_BW = 819e9                # bytes/s / chip
+LINK_BW = 50e9                # bytes/s per ICI link
+N_LINKS = 3                   # usable links per chip in a 2D/3D torus slice
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    collective_breakdown: Dict[str, int]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops_per_device: float
+    useful_ratio: float              # MODEL_FLOPS / HLO_FLOPs
+    peak_memory_bytes: Optional[float] = None
+    note: str = ""
+    # materialized attention-score traffic (VMEM-resident under the Pallas
+    # flash kernel on the TPU target) and the kernel-adjusted memory term
+    score_bytes: float = 0.0
+    t_memory_flash: float = 0.0
+    bytes_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline-optimistic step time: max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the roofline step: how close the cell
+        is to pure compute-bound at MODEL_FLOPS (the score in §Perf)."""
+        if self.step_time_s <= 0:
+            return 0.0
+        return (self.model_flops_per_device / PEAK_FLOPS) / self.step_time_s
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["t_step"] = self.step_time_s
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS for one step: 6*N_active*D (train) / 2*N_active*D
+    (inference) where D = tokens processed in the step."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n_active * shape.global_batch
+
+
+def analyze(arch_cfg: ArchConfig, shape: ShapeConfig, mesh_name: str,
+            n_devices: int, cost: Dict, hlo_text: str,
+            memory_stats: Optional[str] = None,
+            note: str = "") -> RooflineReport:
+    # while-aware program costs from the HLO (cost_analysis() reports scan
+    # bodies only once — see analysis/hlo.py docstring); the raw
+    # cost_analysis dict is kept in the dry-run record for reference.
+    pc = hlo_lib.program_costs(hlo_text)
+    flops_dev = pc.flops
+    bytes_dev = pc.bytes
+    coll_bytes, breakdown = pc.collective_bytes, pc.collective_breakdown
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_bytes / (LINK_BW * N_LINKS)
+
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+
+    mf_total = model_flops(arch_cfg, shape)
+    mf_dev = mf_total / n_devices
+    useful = mf_dev / flops_dev if flops_dev > 0 else 0.0
+
+    peak_mem = None
+    if memory_stats:
+        peak_mem = _parse_peak_memory(memory_stats)
+
+    return RooflineReport(
+        arch=arch_cfg.name, shape=shape.name, mesh=mesh_name,
+        n_devices=n_devices,
+        flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+        collective_bytes=float(coll_bytes),
+        collective_breakdown=breakdown,
+        t_compute=t_compute, t_memory=t_memory, t_collective=t_coll,
+        bottleneck=bottleneck,
+        model_flops_per_device=mf_dev, useful_ratio=useful,
+        peak_memory_bytes=peak_mem, note=note,
+        score_bytes=pc.score_bytes,
+        t_memory_flash=(bytes_dev - pc.score_bytes) / HBM_BW,
+        bytes_by_kind=pc.bytes_by_kind,
+    )
+
+
+def _parse_peak_memory(stats: str) -> Optional[float]:
+    import re
+    m = re.search(r"(\d+(?:\.\d+)?)\s*(GiB|MiB|KiB|B)", stats)
+    if not m:
+        return None
+    val, unit = float(m.group(1)), m.group(2)
+    mult = {"B": 1, "KiB": 2**10, "MiB": 2**20, "GiB": 2**30}[unit]
+    return val * mult
+
+
+def format_table(reports) -> str:
+    """Markdown roofline table for EXPERIMENTS.md."""
+    header = ("| arch | shape | mesh | t_comp (ms) | t_mem (ms) | "
+              "t_coll (ms) | bottleneck | 6ND/HLO | roofline frac |")
+    sep = "|" + "---|" * 9
+    rows = [header, sep]
+    for r in reports:
+        rows.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} "
+            f"| {r.t_compute*1e3:.2f} | {r.t_memory*1e3:.2f} "
+            f"| {r.t_collective*1e3:.2f} | {r.bottleneck} "
+            f"| {r.useful_ratio:.2f} | {r.roofline_fraction:.2%} |")
+    return "\n".join(rows)
+
+
+def save_reports(reports, path: str):
+    with open(path, "w") as f:
+        json.dump([r.to_dict() for r in reports], f, indent=2)
+
+
+def load_reports(path: str):
+    with open(path) as f:
+        data = json.load(f)
+    out = []
+    for d in data:
+        d.pop("t_step", None)
+        d.pop("roofline_fraction", None)
+        out.append(RooflineReport(**d))
+    return out

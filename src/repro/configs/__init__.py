@@ -1,0 +1,35 @@
+"""Architecture registry: the 10 assigned archs + the paper's own workload."""
+
+from repro.configs.base import (ArchConfig, ShapeConfig, SHAPES,
+                                SHAPES_BY_NAME, shape_applicable)
+from repro.configs.mamba2_130m import CONFIG as MAMBA2_130M
+from repro.configs.qwen2_0_5b import CONFIG as QWEN2_0_5B
+from repro.configs.starcoder2_3b import CONFIG as STARCODER2_3B
+from repro.configs.h2o_danube3_4b import CONFIG as H2O_DANUBE3_4B
+from repro.configs.llama3_8b import CONFIG as LLAMA3_8B
+from repro.configs.qwen3_moe_235b import CONFIG as QWEN3_MOE_235B
+from repro.configs.deepseek_v2_lite import CONFIG as DEEPSEEK_V2_LITE
+from repro.configs.llava_next_mistral_7b import CONFIG as LLAVA_NEXT_MISTRAL_7B
+from repro.configs.seamless_m4t_v2 import CONFIG as SEAMLESS_M4T_V2
+from repro.configs.hymba_1_5b import CONFIG as HYMBA_1_5B
+from repro.configs.chipletgym import CONFIG as CHIPLETGYM
+
+ARCH_REGISTRY = {
+    c.name: c for c in (
+        MAMBA2_130M, QWEN2_0_5B, STARCODER2_3B, H2O_DANUBE3_4B, LLAMA3_8B,
+        QWEN3_MOE_235B, DEEPSEEK_V2_LITE, LLAVA_NEXT_MISTRAL_7B,
+        SEAMLESS_M4T_V2, HYMBA_1_5B,
+    )
+}
+
+# the paper's own RL workload is dry-runnable but not an LM cell
+EXTRA_REGISTRY = {CHIPLETGYM.name: CHIPLETGYM}
+
+
+def get(name: str) -> ArchConfig:
+    if name in ARCH_REGISTRY:
+        return ARCH_REGISTRY[name]
+    if name in EXTRA_REGISTRY:
+        return EXTRA_REGISTRY[name]
+    raise KeyError(f"unknown arch '{name}'; have "
+                   f"{sorted(ARCH_REGISTRY) + sorted(EXTRA_REGISTRY)}")

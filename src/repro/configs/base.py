@@ -1,0 +1,234 @@
+"""Unified architecture config for the 10 assigned architectures.
+
+One frozen dataclass covers dense / MoE / SSM / hybrid / enc-dec / VLM /
+audio families; each ``src/repro/configs/<id>.py`` instantiates the exact
+published configuration. ``reduced()`` yields the same *family* at smoke
+scale (tests run one forward/train step on CPU).
+
+``param_count`` / ``active_param_count`` / ``flops_per_token`` feed both
+the Chiplet-Gym workload descriptors (core/workload.py) and the roofline's
+MODEL_FLOPS = 6*N*D accounting (analysis/roofline.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+
+    # attention flavour
+    attention: str = "gqa"            # gqa | mla | none
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0           # 0 = full attention
+    global_layer_every: int = 0       # hybrid: every k-th layer full attn
+
+    # MLA (DeepSeek-V2)
+    kv_lora_rank: int = 0
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 0               # 0 -> head_dim
+
+    # MoE
+    n_experts: int = 0
+    n_experts_per_tok: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0                 # per-expert FFN width
+    first_dense_layers: int = 0       # leading dense layers (DeepSeek)
+
+    # SSM (Mamba-2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+
+    mixer: str = "attention"          # attention | mamba2 | hybrid_parallel
+
+    # encoder-decoder
+    encoder_layers: int = 0           # >0 -> enc-dec (n_layers = decoder)
+
+    # modality frontend (STUB: precomputed embeddings via input_specs)
+    frontend: str = "none"            # none | vision_patches | audio_frames
+    frontend_tokens: int = 0
+
+    act: str = "swiglu"               # swiglu | gelu
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    source: str = ""                  # provenance note from the assignment
+
+    # ------------------------------------------------------------------ #
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.v_head_dim == 0:
+            object.__setattr__(self, "v_head_dim", self.head_dim)
+
+    # --- derived dims -------------------------------------------------- #
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k shape (SSM / SWA / hybrid)."""
+        if self.mixer in ("mamba2", "hybrid_parallel"):
+            return True
+        return self.sliding_window > 0 and self.global_layer_every == 0
+
+    # --- parameter accounting ------------------------------------------ #
+    def _attn_params(self) -> int:
+        d, hd = self.d_model, self.head_dim
+        if self.attention == "mla":
+            kvr, rhd, vhd = self.kv_lora_rank, self.qk_rope_head_dim, \
+                self.v_head_dim
+            p = d * self.n_heads * (hd + rhd)              # q proj
+            p += d * (kvr + rhd)                           # kv down + k_rope
+            p += kvr * self.n_heads * (hd + vhd)           # kv up
+            p += self.n_heads * vhd * d                    # o proj
+            return p
+        q = d * self.n_heads * hd
+        kv = 2 * d * self.n_kv_heads * hd
+        o = self.n_heads * hd * d
+        return q + kv + o
+
+    def _mlp_params(self, width: Optional[int] = None) -> int:
+        ff = width if width is not None else self.d_ff
+        mult = 3 if self.act == "swiglu" else 2
+        return mult * self.d_model * ff
+
+    def _ssm_params(self) -> int:
+        d, di = self.d_model, self.ssm_d_inner
+        n, h = self.ssm_state, self.ssm_heads
+        in_proj = d * (2 * di + 2 * n + h)   # x, z, B, C, dt
+        conv = self.ssm_conv * (di + 2 * n)
+        out = di * d
+        return in_proj + conv + out + 2 * h  # + A_log, D
+
+    def _layer_params(self, layer_idx: int) -> int:
+        p = 2 * self.d_model                              # norms
+        if self.mixer == "mamba2":
+            return p + self._ssm_params()
+        if self.mixer == "hybrid_parallel":
+            return p + self._attn_params() + self._ssm_params() \
+                + self._mlp_params()
+        p += self._attn_params()
+        if self.n_experts > 0 and layer_idx >= self.first_dense_layers:
+            p += self.n_experts * self._mlp_params(self.moe_d_ff)
+            p += self.n_shared_experts * self._mlp_params(self.moe_d_ff)
+            p += self.d_model * self.n_experts            # router
+        else:
+            p += self._mlp_params()
+        return p
+
+    def param_count(self) -> int:
+        p = self.vocab_size * self.d_model                # embedding
+        if not self.tie_embeddings:
+            p += self.vocab_size * self.d_model           # lm head
+        p += sum(self._layer_params(i) for i in range(self.n_layers))
+        if self.is_encdec:
+            enc_layer = (2 * self.d_model + self._attn_params()
+                         + self._mlp_params())
+            cross = self.n_layers * (self._attn_params() + self.d_model)
+            p += self.encoder_layers * enc_layer + cross
+        p += self.d_model                                 # final norm
+        return p
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: top-k + shared only)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        p = self.param_count()
+        moe_layers = self.n_layers - self.first_dense_layers
+        inactive = (self.n_experts - self.n_experts_per_tok)
+        p -= moe_layers * inactive * self._mlp_params(self.moe_d_ff)
+        return p
+
+    def flops_per_token(self, seq_len: int = 4096) -> float:
+        """Forward FLOPs per token: 2*N_active(non-embed) + attention."""
+        n_active = self.active_param_count() \
+            - self.vocab_size * self.d_model * (1 if self.tie_embeddings else 2)
+        flops = 2.0 * n_active
+        flops += 2.0 * self.vocab_size * self.d_model     # lm head matmul
+        if self.mixer != "mamba2" and self.attention != "none":
+            eff_ctx = min(seq_len, self.sliding_window) \
+                if self.sliding_window > 0 else seq_len
+            per_layer = 2.0 * 2.0 * self.n_heads * self.head_dim * eff_ctx / 2
+            flops += self.n_layers * per_layer
+        if self.mixer in ("mamba2", "hybrid_parallel"):
+            per_layer = 2.0 * self.ssm_d_inner * self.ssm_state * 2
+            flops += self.n_layers * per_layer
+        return flops
+
+    # --- smoke-scale family twin ---------------------------------------- #
+    def reduced(self) -> "ArchConfig":
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=min(self.n_layers, 2),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2),
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab_size=512,
+            kv_lora_rank=32 if self.kv_lora_rank else 0,
+            qk_rope_head_dim=8 if self.attention == "mla" else 64,
+            v_head_dim=16,
+            n_experts=4 if self.n_experts else 0,
+            n_experts_per_tok=2 if self.n_experts else 0,
+            n_shared_experts=min(self.n_shared_experts, 1),
+            moe_d_ff=32 if self.moe_d_ff else 0,
+            first_dense_layers=min(self.first_dense_layers, 1),
+            ssm_state=16 if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_state else 64,
+            sliding_window=32 if self.sliding_window else 0,
+            global_layer_every=2 if self.global_layer_every else 0,
+            encoder_layers=2 if self.encoder_layers else 0,
+            frontend_tokens=8 if self.frontend_tokens else 0,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # train | prefill | decode
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(runs?, reason). long_500k needs sub-quadratic attention."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 512k-token KV cache / "
+                       "quadratic attention — skipped per assignment")
+    return True, ""

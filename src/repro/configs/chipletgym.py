@@ -1,0 +1,13 @@
+"""chipletgym [rl]: the paper's own training workload — distributed PPO
+over the Chiplet-Gym environment (policy [10,64,64,591], value
+[10,64,64,1], Table-5 hyper-parameters). Dry-runs the rl/distributed.py
+pod update alongside the 10 assigned LM architectures."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="chipletgym", family="rl",
+    n_layers=2, d_model=64, n_heads=1, n_kv_heads=1,
+    d_ff=64, vocab_size=591,
+    attention="none", mixer="attention",
+    source="this paper (Chiplet-Gym PPO)",
+)

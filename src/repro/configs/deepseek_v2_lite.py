@@ -1,0 +1,16 @@
+"""deepseek-v2-lite-16b [moe]: 27L d_model=2048 16H, MLA kv_lora=512,
+2 shared + 64 routed experts top-6, expert d_ff=1408, first layer dense.
+[arXiv:2405.04434; hf]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-lite-16b", family="moe",
+    n_layers=27, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+    d_ff=10_944, vocab_size=102_400,
+    attention="mla", kv_lora_rank=512, qk_rope_head_dim=64, v_head_dim=128,
+    rope_theta=1e4,
+    n_experts=64, n_experts_per_tok=6, n_shared_experts=2,
+    moe_d_ff=1_408, first_dense_layers=1,
+    act="swiglu", norm="rmsnorm",
+    source="arXiv:2405.04434 (MLA kv_lora=512, 2 shared + routed top-6)",
+)

@@ -1,0 +1,12 @@
+"""h2o-danube-3-4b [dense]: 24L d_model=3840 32H (GQA kv=8) d_ff=10240,
+sliding-window attention. [arXiv:2401.16818; unverified]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="h2o-danube-3-4b", family="dense",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8,
+    d_ff=10_240, vocab_size=32_000,
+    attention="gqa", rope_theta=1e4, sliding_window=4_096,
+    act="swiglu", norm="rmsnorm",
+    source="arXiv:2401.16818 (llama+mistral mix, SWA)",
+)

@@ -1,0 +1,16 @@
+"""hymba-1.5b [hybrid]: 32L d_model=1600 25H (GQA kv=5) d_ff=5504,
+parallel attention + mamba heads per layer, ssm_state=16, SWA with
+periodic global layers. [arXiv:2411.13676; hf]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, head_dim=64,
+    d_ff=5_504, vocab_size=32_001,
+    attention="gqa", rope_theta=1e4,
+    sliding_window=1_024, global_layer_every=16,   # layers 0,16 (+ last) full
+    mixer="hybrid_parallel",
+    ssm_state=16, ssm_head_dim=50, ssm_expand=2, ssm_conv=4,
+    act="swiglu", norm="rmsnorm",
+    source="arXiv:2411.13676 (parallel attn+mamba heads)",
+)

@@ -1,0 +1,12 @@
+"""llama3-8b [dense]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336,
+128k vocab. [arXiv:2407.21783; unverified]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3-8b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14_336, vocab_size=128_256,
+    attention="gqa", rope_theta=5e5,
+    act="swiglu", norm="rmsnorm",
+    source="arXiv:2407.21783 (GQA, 128k vocab)",
+)

@@ -1,0 +1,14 @@
+"""llava-next-mistral-7b [vlm]: mistral-7B backbone (32L d_model=4096 32H
+GQA kv=8 d_ff=14336), anyres vision tiling as a STUB frontend delivering
+precomputed patch embeddings. [hf:llava-hf/llava-v1.6-mistral-7b-hf]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-mistral-7b", family="vlm",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14_336, vocab_size=32_000,
+    attention="gqa", rope_theta=1e6,
+    frontend="vision_patches", frontend_tokens=2_880,   # 5 anyres tiles x 576
+    act="swiglu", norm="rmsnorm",
+    source="hf:llava-v1.6-mistral-7b (anyres tiling; frontend stubbed)",
+)

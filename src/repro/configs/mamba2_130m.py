@@ -1,0 +1,13 @@
+"""mamba2-130m [ssm]: 24L d_model=768, attention-free SSD, ssm_state=128.
+[arXiv:2405.21060; unverified]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-130m", family="ssm",
+    n_layers=24, d_model=768, n_heads=12, n_kv_heads=12,
+    d_ff=0, vocab_size=50_280,
+    attention="none", mixer="mamba2",
+    ssm_state=128, ssm_head_dim=64, ssm_expand=2, ssm_conv=4,
+    norm="rmsnorm", tie_embeddings=True,
+    source="arXiv:2405.21060 (SSD / state-space duality)",
+)

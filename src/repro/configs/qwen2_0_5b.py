@@ -1,0 +1,12 @@
+"""qwen2-0.5b [dense]: 24L d_model=896 14H (GQA kv=2) d_ff=4864.
+[arXiv:2407.10671; hf]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-0.5b", family="dense",
+    n_layers=24, d_model=896, n_heads=14, n_kv_heads=2,
+    d_ff=4_864, vocab_size=151_936,
+    attention="gqa", qkv_bias=True, rope_theta=1e6,
+    act="swiglu", norm="rmsnorm", tie_embeddings=True,
+    source="arXiv:2407.10671 (GQA, QKV bias)",
+)

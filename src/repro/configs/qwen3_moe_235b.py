@@ -1,0 +1,13 @@
+"""qwen3-moe-235b-a22b [moe]: 94L d_model=4096 64H (GQA kv=4),
+128 experts top-8, expert d_ff=1536. [hf:Qwen/Qwen3-30B-A3B; hf]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, head_dim=128,
+    d_ff=1_536, vocab_size=151_936,
+    attention="gqa", rope_theta=1e6,
+    n_experts=128, n_experts_per_tok=8, moe_d_ff=1_536,
+    act="swiglu", norm="rmsnorm",
+    source="hf:Qwen/Qwen3 MoE family (128e top-8)",
+)

@@ -1,0 +1,15 @@
+"""seamless-m4t-large-v2 [audio]: enc-dec 24L+24L d_model=1024 16H
+d_ff=8192 vocab=256206; audio frontend STUB (precomputed frame embeddings).
+[arXiv:2308.11596; hf]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-large-v2", family="audio",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=8_192, vocab_size=256_206,
+    attention="gqa", rope_theta=1e4,
+    encoder_layers=24,
+    frontend="audio_frames", frontend_tokens=0,   # encoder input = frames
+    act="gelu", norm="layernorm",
+    source="arXiv:2308.11596 (enc-dec, multimodal; frontend stubbed)",
+)

@@ -1,0 +1,12 @@
+"""starcoder2-3b [dense]: 30L d_model=3072 24H (GQA kv=2) d_ff=12288.
+[arXiv:2402.19173; hf]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-3b", family="dense",
+    n_layers=30, d_model=3072, n_heads=24, n_kv_heads=2,
+    d_ff=12_288, vocab_size=49_152,
+    attention="gqa", qkv_bias=True, rope_theta=1e5,
+    act="gelu", norm="layernorm",
+    source="arXiv:2402.19173 (GQA, RoPE, GELU MLP)",
+)

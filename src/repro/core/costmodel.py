@@ -1,0 +1,425 @@
+"""Analytical PPAC model for chiplet-based AI accelerators (paper §3).
+
+Implements, in pure jnp (vmap/jit-safe, fully branchless):
+
+  - throughput        Eqs. 1-5, 12-14   (systolic chiplets on a 2D NoP mesh)
+  - energy            Eqs. 6-7, 15      (compute + interconnect + HBM device)
+  - yield / die cost  Eqs. 8-9          (negative-binomial yield)
+  - NoP latency       Eqs. 10-11        (hop model with placement, Fig. 4)
+  - packaging cost    Eq. 16            (mu-regression per interconnect)
+  - reward            Eq. 17            (r = alpha*T - beta*C - gamma*E)
+
+Every design decision that the paper leaves implicit is documented in
+DESIGN.md §5 and marked CAL (calibrated) below.
+
+The model evaluates a *batch* of design points at once: every field of
+``DesignPoint`` may carry an arbitrary (identical) batch shape.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hw_constants as hw
+from repro.core import params as ps
+
+_MAX_MESH_DIM = 16        # m, n <= 12 for P <= 128; 16 gives headroom
+_TERA = 1e12
+_GIGA = 1e9
+
+
+# ---------------------------------------------------------------------------
+# Geometry: near-square mesh factorization (precomputed lookup, §3.3.2
+# "aspect ratio as close as possible to 1")
+# ---------------------------------------------------------------------------
+
+def _mesh_table(max_p: int = 129):
+    ms, ns = np.zeros(max_p, np.int32), np.zeros(max_p, np.int32)
+    ms[0], ns[0] = 1, 1
+    for p in range(1, max_p):
+        root = int(np.floor(np.sqrt(p)))
+        m0 = max(1, int(round(np.sqrt(p))))
+        best = 1
+        for cand in range(root, 0, -1):
+            if p % cand == 0:
+                best = cand
+                break
+        # exact near-square factorization when one exists; otherwise a
+        # partially-filled near-square grid (last row not full)
+        if best >= m0 - 1 and (best >= 2 or p <= 2):
+            ms[p], ns[p] = best, p // best
+        else:
+            ms[p], ns[p] = m0, int(np.ceil(p / m0))
+    return jnp.asarray(ms), jnp.asarray(ns)
+
+
+_MESH_M, _MESH_N = _mesh_table()
+
+
+def mesh_dims(n_positions: jnp.ndarray):
+    """(m, n) grid dims for `n_positions` footprint slots, aspect ~1."""
+    p = jnp.clip(jnp.asarray(n_positions, jnp.int32), 1, 128)
+    return _MESH_M[p].astype(jnp.float32), _MESH_N[p].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# HBM placement -> worst-case hop count (Fig. 4 / §3.3.2)
+# ---------------------------------------------------------------------------
+
+_GRID_I, _GRID_J = jnp.meshgrid(
+    jnp.arange(_MAX_MESH_DIM, dtype=jnp.float32),
+    jnp.arange(_MAX_MESH_DIM, dtype=jnp.float32),
+    indexing="ij",
+)
+
+
+def hbm_worst_hops(m, n, hbm_mask, arch_type):
+    """max over AI chiplets of min over placed HBMs of mesh hop distance.
+
+    Location semantics (paper Fig. 4): edge HBMs sit adjacent to the middle
+    of their edge (1 hop to the nearest chiplet); 'middle' occupies the
+    array center; '3D-stacked' stacks one HBM over the center chiplet
+    (0-hop for that chiplet, vertical hop folded into 3D wire delay).
+    For a pure-2.5D architecture the 3D bit degrades to 'middle' (CAL).
+    """
+    m = jnp.asarray(m, jnp.float32)[..., None, None]
+    n = jnp.asarray(n, jnp.float32)[..., None, None]
+    mask = jnp.asarray(hbm_mask, jnp.int32)[..., None, None]
+    arch = jnp.asarray(arch_type, jnp.float32)[..., None, None]
+
+    i, j = _GRID_I, _GRID_J                       # (16,16) broadcast grid
+    valid = (i < m) & (j < n)
+    mc, nc = (m - 1.0) / 2.0, (n - 1.0) / 2.0
+
+    d_left = jnp.abs(i - mc) + (j + 1.0)
+    d_right = jnp.abs(i - mc) + (n - j)
+    d_top = (i + 1.0) + jnp.abs(j - nc)
+    d_bottom = (m - i) + jnp.abs(j - nc)
+    d_middle = jnp.maximum(jnp.abs(i - mc) + jnp.abs(j - nc), 1.0)
+    d_stacked = jnp.abs(i - mc) + jnp.abs(j - nc)      # 0 under the stack
+
+    # pure 2.5D cannot stack memory -> 3D bit behaves like 'middle'
+    d_stacked = jnp.where(arch >= 1.0, d_stacked, d_middle)
+
+    big = jnp.float32(1e9)
+    dists = jnp.stack(
+        [d_left, d_right, d_top, d_bottom, d_middle, d_stacked], axis=-1)
+    bits = jnp.stack(
+        [(mask >> b) & 1 for b in range(ps.N_HBM_LOCATIONS)],
+        axis=-1).astype(jnp.float32)
+    per_cell = jnp.min(jnp.where(bits > 0, dists, big), axis=-1)
+    per_cell = jnp.where(valid, per_cell, -big)
+    return jnp.max(per_cell, axis=(-2, -1))           # worst chiplet
+
+
+# ---------------------------------------------------------------------------
+# Yield & die cost (Eqs. 8-9)
+# ---------------------------------------------------------------------------
+
+def die_yield(area_mm2, defect_density_per_cm2, alpha=hw.YIELD_ALPHA):
+    """Negative-binomial yield model, Eq. 8. d is per cm^2, A in mm^2."""
+    d_mm2 = defect_density_per_cm2 / 100.0
+    return (1.0 + d_mm2 * area_mm2 / alpha) ** (-alpha)
+
+
+def die_cost_physical(area_mm2, cfg: hw.HWConfig):
+    """Cost of one known-good die: wafer silicon / yield + KGD test."""
+    y = die_yield(area_mm2, cfg.defect_density_per_cm2, cfg.yield_alpha)
+    return cfg.wafer_price_per_mm2 * area_mm2 / y * (1.0 + hw.KGD_TEST_COST_FRAC)
+
+
+def die_cost_taylor(area_mm2, cfg: hw.HWConfig):
+    """Paper's KGD form: cost_KGD ~ A^(5/2) (§5.3.2, two-term Taylor).
+
+    Normalized so a 26 mm^2 die costs the same as in the physical model;
+    only *ratios* of this mode are meaningful (used to reproduce the
+    paper's 76x/143x die-cost headline).
+    """
+    return cfg.wafer_price_per_mm2 * area_mm2 ** 2.5 / jnp.sqrt(26.0)
+
+
+# ---------------------------------------------------------------------------
+# Interconnect property lookup (Table 4), branchless by index
+# ---------------------------------------------------------------------------
+
+def _lerp_by_trace(lo, hi, trace_mm):
+    """E_bit grows linearly with trace length over the Table-4 range."""
+    t = (jnp.clip(trace_mm, 1.0, 10.0) - 1.0) / 9.0
+    return lo + (hi - lo) * t
+
+
+def e_bit_2p5d(ic_idx, trace_mm):
+    lo = jnp.where(ic_idx < 0.5, hw.E_BIT_PJ_2P5D_MIN[0], hw.E_BIT_PJ_2P5D_MIN[1])
+    hi = jnp.where(ic_idx < 0.5, hw.E_BIT_PJ_2P5D_MAX[0], hw.E_BIT_PJ_2P5D_MAX[1])
+    return _lerp_by_trace(lo, hi, trace_mm)
+
+
+def e_bit_3d(ic_idx):
+    return jnp.where(ic_idx < 0.5, hw.E_BIT_PJ_3D[0], hw.E_BIT_PJ_3D[1])
+
+
+# ---------------------------------------------------------------------------
+# Workload descriptor (Eq. 2 terms)
+# ---------------------------------------------------------------------------
+
+class Workload(NamedTuple):
+    """ops/task split (Eq. 2) + mapping efficiency + traffic shape.
+
+    gemm_ops / nongemm_ops are MAC-equivalent operation counts per task
+    (one inference / one token / one image — workload defines the task).
+    ``hbm_bytes`` is the per-task DRAM traffic of the ideal mapping; it
+    sets the fraction of operands that must come from HBM vs on-chip reuse.
+    """
+
+    gemm_ops: jnp.ndarray          # MACs per task (GEMM)
+    nongemm_ops: jnp.ndarray       # MAC-equivalent non-GEMM ops per task
+    hbm_bytes: jnp.ndarray         # DRAM bytes per task (weights+acts)
+    mapping_eff: jnp.ndarray       # M_eff of Eq. 2 (U_AI_chip proxy)
+
+
+GENERIC_WORKLOAD = Workload(
+    gemm_ops=jnp.float32(1e9),
+    nongemm_ops=jnp.float32(2e7),
+    hbm_bytes=jnp.float32(25e6),
+    mapping_eff=jnp.float32(0.85),
+)
+
+
+# ---------------------------------------------------------------------------
+# Full metric bundle
+# ---------------------------------------------------------------------------
+
+class Metrics(NamedTuple):
+    # geometry
+    n_dies: jnp.ndarray
+    n_positions: jnp.ndarray
+    mesh_m: jnp.ndarray
+    mesh_n: jnp.ndarray
+    die_area_mm2: jnp.ndarray
+    logic_area_mm2: jnp.ndarray        # per die
+    pes_per_die: jnp.ndarray
+    sram_mb_per_die: jnp.ndarray
+    n_hbm: jnp.ndarray
+    hbm_capacity_gb: jnp.ndarray
+    # latency / bandwidth
+    hops_ai_ai: jnp.ndarray
+    hops_hbm_ai: jnp.ndarray
+    lat_ai_ai_ns: jnp.ndarray
+    lat_hbm_ai_ns: jnp.ndarray
+    cycles_per_op: jnp.ndarray
+    bw_req_hbm_gbps: jnp.ndarray
+    bw_act_hbm_gbps: jnp.ndarray
+    bw_req_ai_gbps: jnp.ndarray
+    bw_act_ai_gbps: jnp.ndarray
+    u_sys: jnp.ndarray
+    # throughput
+    peak_tops: jnp.ndarray             # system peak (MACs/s /1e12)
+    eff_tops: jnp.ndarray              # after U_chip, U_sys, cycles/op
+    tasks_per_sec: jnp.ndarray
+    # energy
+    e_comm_pj_per_op: jnp.ndarray
+    e_op_pj: jnp.ndarray
+    energy_per_task_j: jnp.ndarray
+    tasks_per_joule: jnp.ndarray
+    # cost
+    die_yield: jnp.ndarray
+    die_cost: jnp.ndarray              # physical model, whole system
+    die_cost_paper: jnp.ndarray        # paper's A^(5/2) form, whole system
+    pkg_cost: jnp.ndarray
+    total_cost: jnp.ndarray
+    # reward terms (Eq. 17)
+    reward_t: jnp.ndarray
+    reward_c: jnp.ndarray
+    reward_e: jnp.ndarray
+    reward: jnp.ndarray
+
+
+class RewardWeights(NamedTuple):
+    alpha: jnp.ndarray = jnp.float32(1.0)
+    beta: jnp.ndarray = jnp.float32(1.0)
+    gamma: jnp.ndarray = jnp.float32(0.1)
+
+
+def evaluate(dp: ps.DesignPoint,
+             workload: Workload = GENERIC_WORKLOAD,
+             weights: RewardWeights = RewardWeights(),
+             cfg: hw.HWConfig = hw.DEFAULT_HW) -> Metrics:
+    """Evaluate a (batch of) design point(s) -> full PPAC metrics."""
+    v = ps.decode(dp)
+    arch = v.arch_type
+    is_lol = (arch == ps.ARCH_LOGIC_ON_LOGIC).astype(jnp.float32)   # pairs
+    uses_3d_mem = ((jnp.asarray(v.hbm_mask, jnp.int32) >> 5) & 1).astype(
+        jnp.float32) * (arch >= 1).astype(jnp.float32)
+
+    # ---- geometry ---------------------------------------------------------
+    n_dies = v.n_chiplets
+    n_positions = jnp.where(is_lol > 0, jnp.ceil(n_dies / 2.0), n_dies)
+    m, n = mesh_dims(n_positions)
+
+    n_hbm = ps.hbm_count(v.hbm_mask)
+    n_hbm_2p5d = n_hbm - uses_3d_mem          # the 3D-stacked one is free
+    avail = (cfg.package_area_mm2
+             - (m + n + 2.0) * hw.CHIPLET_SPACING_MM
+             - n_hbm_2p5d * cfg.hbm_footprint_mm2)
+    avail = jnp.maximum(avail, 1.0)
+    die_area = jnp.minimum(avail / n_positions, cfg.max_chiplet_area_mm2)
+
+    # logic area per die: TSV + keep-out for any 3D-stacked die (CAL:
+    # 2 tiers x (1-0.24) = the paper's 1.52x logic density). TSV area is
+    # capped at 8 % of the die for small dies (a 14 mm^2 die does not need
+    # the full 2 mm^2 sized for signal+power of a near-reticle die).
+    any_3d_on_die = jnp.maximum(is_lol, uses_3d_mem)
+    tsv_area = jnp.minimum(cfg.tsv_area_mm2, 0.08 * die_area)
+    logic_area = (die_area - any_3d_on_die * tsv_area)
+    logic_area = jnp.maximum(logic_area, 0.1)
+    logic_eff = 1.0 - is_lol * cfg.tsv_keepout_frac
+    compute_area = logic_area * cfg.compute_area_frac * logic_eff
+    sram_mb = logic_area * hw.SRAM_AREA_FRAC * logic_eff * hw.SRAM_MB_PER_MM2
+
+    pes_per_die = compute_area * 1e6 / cfg.pe_area_um2
+    reuse = jnp.sqrt(jnp.maximum(pes_per_die, 1.0))    # array-level reuse
+    # DRAM-traffic amortization: cache-blocked GEMM arithmetic intensity is
+    # bounded by on-chip SRAM capacity — tile dim ~ sqrt(S / 3 operands)
+    # (CAL; this is why small chiplets demand relatively more HBM BW).
+    # Paper-literal mode (comm_reuse_systolic=False) charges every MAC two
+    # fresh operands through the fabric (Eq. 13 verbatim).
+    dw_bytes = cfg.data_width_bits / 8.0
+    reuse_mem = jnp.sqrt(jnp.maximum(sram_mb * 1e6 / (3.0 * dw_bytes), 1.0))
+    reuse_comm = (reuse_mem if cfg.comm_reuse_systolic
+                  else jnp.ones_like(reuse_mem))
+
+    # ---- NoP latency (Eqs. 10-11) ----------------------------------------
+    h_ai = m + n - 2.0
+    h_hbm = hbm_worst_hops(m, n, v.hbm_mask, arch)
+    wire_ai = cfg.wire_delay_ps_2p5d * v.ai_trace_2p5d / 1000.0     # ns/hop
+    wire_hbm = cfg.wire_delay_ps_2p5d * v.hbm_trace_2p5d / 1000.0
+    fixed = cfg.contention_delay_ns + cfg.serialization_delay_ns
+    lat_ai = h_ai * (wire_ai + cfg.router_delay_ns) + fixed
+    lat_hbm = h_hbm * (wire_hbm + cfg.router_delay_ns) + fixed
+    lat_hbm = lat_hbm + uses_3d_mem * (cfg.wire_delay_ps_3d / 1000.0)
+    # intra-pair 3D hop for logic-on-logic
+    lat_3d = cfg.wire_delay_ps_3d / 1000.0 + cfg.serialization_delay_ns
+
+    worst_lat = jnp.maximum(lat_ai, lat_hbm) + is_lol * lat_3d
+    # Eq. 5: cycles/op = cycle_op* + amortized communication cycles (CAL:
+    # the per-op share of the worst-case transfer latency; amortized over
+    # reuse^e — e=2 spreads a tile transfer over the k x k systolic tile)
+    cycles_per_op = 1.0 + worst_lat * cfg.freq_ghz / (
+        reuse ** cfg.latency_amort_exp)
+
+    # ---- bandwidth & utilization (Eqs. 12-14) -----------------------------
+    ops_per_die = pes_per_die * cfg.freq_ghz * _GIGA / cycles_per_op  # MAC/s
+    operand_gbps = (cfg.n_operands * cfg.data_width_bits
+                    * ops_per_die / reuse_comm) / _GIGA
+    bw_req_hbm = 4.0 * operand_gbps                    # Eq. 13 (src = HBM)
+    bw_req_ai = 1.0 * operand_gbps                     # Eq. 13 (src = AI)
+    link_bw_hbm = v.hbm_dr_2p5d * v.hbm_links_2p5d
+    if cfg.hbm_peak_cap:
+        bw_act_hbm = jnp.minimum(link_bw_hbm,
+                                 hw.HBM_BANDWIDTH_GBPS_PER_STACK)
+    else:
+        bw_act_hbm = link_bw_hbm
+    bw_act_ai = v.ai_dr_2p5d * v.ai_links_2p5d
+    bw_act_3d = v.ai_dr_3d * v.ai_links_3d
+
+    u_hbm = jnp.minimum(1.0, bw_act_hbm / jnp.maximum(bw_req_hbm, 1e-6))
+    u_ai = jnp.minimum(1.0, bw_act_ai / jnp.maximum(bw_req_ai, 1e-6))
+    u_3d = jnp.minimum(1.0, bw_act_3d / jnp.maximum(bw_req_ai, 1e-6))
+    u_sys = jnp.minimum(u_hbm, u_ai)
+    u_sys = jnp.where(is_lol > 0, jnp.minimum(u_sys, u_3d), u_sys)
+
+    # ---- throughput (Eqs. 3-4) --------------------------------------------
+    u_chip = workload.mapping_eff
+    peak_tops = pes_per_die * n_dies * cfg.freq_ghz * _GIGA / _TERA
+    eff_ops = ops_per_die * n_dies * u_sys * u_chip          # MAC/s, Eq. 3
+    eff_tops = eff_ops / _TERA
+
+    ops_per_task = workload.gemm_ops + workload.nongemm_ops
+    tasks_per_sec = eff_ops / jnp.maximum(ops_per_task, 1.0)  # Eqs. 1-2
+
+    # ---- energy (Eqs. 6-7, 15) --------------------------------------------
+    e_link_hbm = e_bit_2p5d(v.hbm_ic_2p5d, v.hbm_trace_2p5d)
+    e_link_ai = e_bit_2p5d(v.ai_ic_2p5d, v.ai_trace_2p5d)
+    e_link_3d = e_bit_3d(v.ai_ic_3d)
+    bits_per_op_hbm = cfg.n_operands * cfg.data_width_bits / reuse_comm
+    # half of the operand traffic is forwarded chiplet-to-chiplet (Fig. 5
+    # dataflow: inputs broadcast through neighbours) (CAL)
+    bits_per_op_ai = 0.5 * bits_per_op_hbm
+    e_comm = (bits_per_op_hbm * (e_link_hbm + cfg.e_bit_hbm_device_pj)
+              + bits_per_op_ai * e_link_ai
+              + is_lol * bits_per_op_ai * e_link_3d
+              + uses_3d_mem * bits_per_op_hbm * (e_link_3d - e_link_hbm))
+    e_op_total = cfg.e_op_pj + e_comm                         # Eq. 7
+    energy_per_task = ops_per_task * e_op_total * 1e-12 / u_chip
+    tasks_per_joule = 1.0 / jnp.maximum(energy_per_task, 1e-30)
+
+    # ---- cost (Eqs. 8-9, 16) ----------------------------------------------
+    y_die = die_yield(die_area, cfg.defect_density_per_cm2, cfg.yield_alpha)
+    die_cost = n_dies * die_cost_physical(die_area, cfg)
+    die_cost_paper = n_dies * die_cost_taylor(die_area, cfg)
+
+    mesh_edges = m * (n - 1.0) + n * (m - 1.0)
+    l_2p5d_ai = v.ai_links_2p5d * mesh_edges
+    l_2p5d_hbm = v.hbm_links_2p5d * n_hbm_2p5d
+    n_pairs = jnp.where(is_lol > 0, jnp.floor(n_dies / 2.0), 0.0)
+    l_3d = v.ai_links_3d * n_pairs + v.ai_links_3d * uses_3d_mem
+
+    mu0 = jnp.maximum(
+        jnp.where(v.ai_ic_2p5d < 0.5, hw.PKG_MU0_PER_MM2[0], hw.PKG_MU0_PER_MM2[1]),
+        jnp.where(v.hbm_ic_2p5d < 0.5, hw.PKG_MU0_PER_MM2[0], hw.PKG_MU0_PER_MM2[1]))
+    mu2 = jnp.maximum(
+        jnp.where(v.ai_ic_2p5d < 0.5, hw.PKG_MU2_FIXED[0], hw.PKG_MU2_FIXED[1]),
+        jnp.where(v.hbm_ic_2p5d < 0.5, hw.PKG_MU2_FIXED[0], hw.PKG_MU2_FIXED[1]))
+    mu1_ai = jnp.where(v.ai_ic_2p5d < 0.5,
+                       hw.PKG_MU1_PER_LINK[0], hw.PKG_MU1_PER_LINK[1])
+    mu1_hbm = jnp.where(v.hbm_ic_2p5d < 0.5,
+                        hw.PKG_MU1_PER_LINK[0], hw.PKG_MU1_PER_LINK[1])
+    mu1_3d = jnp.where(v.ai_ic_3d < 0.5,
+                       hw.PKG_MU1_PER_LINK_3D[0], hw.PKG_MU1_PER_LINK_3D[1])
+    fix_3d = jnp.where(v.ai_ic_3d < 0.5,
+                       hw.PKG_3D_FIXED_PER_STACK[0], hw.PKG_3D_FIXED_PER_STACK[1])
+
+    n_stacks = n_pairs + uses_3d_mem
+    pkg_cost_raw = (mu0 * cfg.package_area_mm2
+                    + mu1_ai * l_2p5d_ai + mu1_hbm * l_2p5d_hbm
+                    + mu1_3d * l_3d + fix_3d * n_stacks + mu2)
+    y_asm = cfg.bond_yield ** n_stacks
+    pkg_cost = pkg_cost_raw / jnp.maximum(y_asm, 1e-3)
+
+    total_cost = die_cost + pkg_cost
+
+    # ---- reward (Eq. 17) ---------------------------------------------------
+    r_t = eff_tops * cfg.reward_throughput_scale
+    r_c = pkg_cost * cfg.reward_cost_scale / 10.0
+    r_e = e_comm * cfg.reward_energy_scale
+    reward = weights.alpha * r_t - weights.beta * r_c - weights.gamma * r_e
+
+    return Metrics(
+        n_dies=n_dies, n_positions=n_positions, mesh_m=m, mesh_n=n,
+        die_area_mm2=die_area, logic_area_mm2=logic_area,
+        pes_per_die=pes_per_die, sram_mb_per_die=sram_mb,
+        n_hbm=n_hbm, hbm_capacity_gb=n_hbm * hw.HBM_CAPACITY_GB,
+        hops_ai_ai=h_ai, hops_hbm_ai=h_hbm,
+        lat_ai_ai_ns=lat_ai, lat_hbm_ai_ns=lat_hbm,
+        cycles_per_op=cycles_per_op,
+        bw_req_hbm_gbps=bw_req_hbm, bw_act_hbm_gbps=bw_act_hbm,
+        bw_req_ai_gbps=bw_req_ai, bw_act_ai_gbps=bw_act_ai,
+        u_sys=u_sys,
+        peak_tops=peak_tops, eff_tops=eff_tops, tasks_per_sec=tasks_per_sec,
+        e_comm_pj_per_op=e_comm, e_op_pj=e_op_total,
+        energy_per_task_j=energy_per_task, tasks_per_joule=tasks_per_joule,
+        die_yield=y_die, die_cost=die_cost, die_cost_paper=die_cost_paper,
+        pkg_cost=pkg_cost, total_cost=total_cost,
+        reward_t=r_t, reward_c=r_c, reward_e=r_e, reward=reward,
+    )
+
+
+def reward_only(dp: ps.DesignPoint,
+                workload: Workload = GENERIC_WORKLOAD,
+                weights: RewardWeights = RewardWeights(),
+                cfg: hw.HWConfig = hw.DEFAULT_HW) -> jnp.ndarray:
+    """Cheap scalar objective for the optimizers."""
+    return evaluate(dp, workload, weights, cfg).reward

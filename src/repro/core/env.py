@@ -1,0 +1,126 @@
+"""Chiplet-Gym: the paper's OpenAI-Gym environment, as pure JAX functions.
+
+The original wraps the analytical simulator in gym v0.26 with a
+MultiDiscrete action space and a Box observation space (§5.2.1). Here the
+environment is *functional* — ``reset`` and ``step`` are pure, jit/vmap
+safe — so a pod can run millions of environment steps per second inside a
+single XLA program.
+
+Semantics follow the paper:
+  - an action assigns values to *all 14 parameters* at once (the agent
+    "selects values for each of the parameters in Table 1"),
+  - the observation exposes the items listed in §4.1 (package-area budget,
+    per-chiplet areas, AI2AI / AI2HBM latency, communication energy,
+    packaging cost, throughput), padded to the 10-dim input of the paper's
+    policy network with the episode step index and previous reward,
+  - reward is Eq. 17,
+  - episodes are ``episode_len`` steps (paper default 2, Fig. 7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costmodel as cm
+from repro.core import hw_constants as hw
+from repro.core import params as ps
+from repro.core import spaces
+
+OBS_DIM = 10
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvConfig:
+    episode_len: int = 2
+    weights: cm.RewardWeights = cm.RewardWeights()
+    workload: cm.Workload = cm.GENERIC_WORKLOAD
+    hw: hw.HWConfig = hw.DEFAULT_HW
+
+
+class EnvState(NamedTuple):
+    design: ps.DesignPoint      # current design point (indices)
+    t: jnp.ndarray              # step within the episode (int32)
+    prev_reward: jnp.ndarray    # float32
+    key: jnp.ndarray            # PRNG key for reset randomization
+
+
+action_space = spaces.MultiDiscrete(ps.HEAD_SIZES)
+observation_space = spaces.Box(-10.0, 10.0, (OBS_DIM,))
+
+
+def _observe(metrics: cm.Metrics, t, prev_reward, cfg: EnvConfig):
+    """10-dim normalized observation (see module docstring)."""
+    o = jnp.stack([
+        jnp.broadcast_to(jnp.float32(cfg.hw.package_area_mm2 / 1000.0),
+                         jnp.shape(metrics.die_area_mm2)),
+        jnp.broadcast_to(jnp.float32(cfg.hw.max_chiplet_area_mm2 / 400.0),
+                         jnp.shape(metrics.die_area_mm2)),
+        metrics.die_area_mm2 / 400.0,
+        metrics.lat_ai_ai_ns / 100.0,
+        metrics.lat_hbm_ai_ns / 100.0,
+        metrics.e_comm_pj_per_op / 10.0,
+        metrics.pkg_cost / 100.0,
+        metrics.eff_tops / 1000.0,
+        jnp.asarray(t, jnp.float32) / jnp.float32(cfg.episode_len),
+        jnp.asarray(prev_reward, jnp.float32) / 200.0,
+    ], axis=-1)
+    return jnp.clip(o, -10.0, 10.0)
+
+
+def reset(key, cfg: EnvConfig = EnvConfig()) -> Tuple[EnvState, jnp.ndarray]:
+    """Start an episode from a uniformly random design point."""
+    k_design, k_state = jax.random.split(key)
+    design = ps.random_design(k_design)
+    metrics = cm.evaluate(design, cfg.workload, cfg.weights, cfg.hw)
+    zero = jnp.float32(0.0)
+    state = EnvState(design=design, t=jnp.int32(0), prev_reward=zero,
+                     key=k_state)
+    return state, _observe(metrics, 0, zero, cfg)
+
+
+def step(state: EnvState, action: jnp.ndarray,
+         cfg: EnvConfig = EnvConfig()
+         ) -> Tuple[EnvState, jnp.ndarray, jnp.ndarray, jnp.ndarray, cm.Metrics]:
+    """Apply a full design-point assignment; returns (state', obs, r, done, metrics)."""
+    design = ps.from_flat(action)
+    metrics = cm.evaluate(design, cfg.workload, cfg.weights, cfg.hw)
+    reward = metrics.reward
+    t_next = state.t + 1
+    done = t_next >= cfg.episode_len
+    obs = _observe(metrics, t_next, reward, cfg)
+    new_state = EnvState(design=design, t=t_next, prev_reward=reward,
+                         key=state.key)
+    return new_state, obs, reward, done, metrics
+
+
+def auto_reset_step(state: EnvState, action: jnp.ndarray,
+                    cfg: EnvConfig = EnvConfig()):
+    """step() that re-seeds a fresh episode when done (for rollout scans)."""
+    new_state, obs, reward, done, metrics = step(state, action, cfg)
+    k_next, k_reset = jax.random.split(new_state.key)
+    reset_state, reset_obs = reset(k_reset, cfg)
+    out_state = jax.tree_util.tree_map(
+        lambda a, b: jnp.where(done, a, b),
+        reset_state._replace(key=k_next), new_state)
+    out_obs = jnp.where(done, reset_obs, obs)
+    return out_state, out_obs, reward, done, metrics
+
+
+class VecEnv:
+    """Convenience wrapper: N independent environments via vmap."""
+
+    def __init__(self, n_envs: int, cfg: EnvConfig = EnvConfig()):
+        self.n_envs = n_envs
+        self.cfg = cfg
+        self._reset = jax.jit(jax.vmap(lambda k: reset(k, cfg)))
+        self._step = jax.jit(jax.vmap(lambda s, a: auto_reset_step(s, a, cfg)))
+
+    def reset(self, key):
+        return self._reset(jax.random.split(key, self.n_envs))
+
+    def step(self, states, actions):
+        return self._step(states, actions)

@@ -1,0 +1,111 @@
+"""Monolithic (A100-class) baseline model for the paper's §5.3 comparison.
+
+Same PE/SRAM density assumptions as the chiplet model (iso-node, 7 nm) so
+the comparison isolates *integration architecture*, exactly as the paper
+intends. Implements:
+
+  - single-die throughput / energy (no NoP; on-die systolic reuse),
+  - die cost at 826 mm^2 (48 % yield with the calibrated d=0.1/cm^2),
+  - CoWoS package cost for die + 4 HBM stacks,
+  - iso-throughput system energy: to match a chiplet system that is k times
+    faster, ceil(k) monolithic chips must be linked off-board (PCB/NVLink
+    class, ~10x on-package energy/bit — paper's [4] citation).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import hw_constants as hw
+from repro.core import costmodel as cm
+
+
+class MonoMetrics(NamedTuple):
+    die_area_mm2: jnp.ndarray
+    pes: jnp.ndarray
+    peak_tops: jnp.ndarray
+    eff_tops: jnp.ndarray
+    tasks_per_sec: jnp.ndarray
+    e_comm_pj_per_op: jnp.ndarray
+    energy_per_task_j: jnp.ndarray
+    tasks_per_joule: jnp.ndarray
+    die_yield: jnp.ndarray
+    die_cost: jnp.ndarray
+    die_cost_paper: jnp.ndarray
+    pkg_cost: jnp.ndarray
+    n_chips_iso: jnp.ndarray          # chips needed to match iso-throughput
+
+
+def evaluate(workload: cm.Workload = cm.GENERIC_WORKLOAD,
+             cfg: hw.HWConfig = hw.DEFAULT_HW,
+             iso_tops: jnp.ndarray | float | None = None) -> MonoMetrics:
+    """Evaluate the 826 mm^2 monolithic baseline.
+
+    If ``iso_tops`` (the chiplet system's effective TOPS) is given and
+    exceeds one chip's throughput, the system is built from
+    ceil(iso/chip) chips with off-board interconnect energy added.
+    """
+    area = jnp.float32(hw.MONO_DIE_AREA_MM2)
+    compute_area = area * cfg.compute_area_frac
+    pes = compute_area * 1e6 / cfg.pe_area_um2
+    reuse = jnp.sqrt(pes)
+    # SRAM-capacity-bounded DRAM amortization (same model as costmodel.py)
+    sram_bytes = area * hw.SRAM_AREA_FRAC * hw.SRAM_MB_PER_MM2 * 1e6
+    dw_bytes = cfg.data_width_bits / 8.0
+    reuse_mem = jnp.sqrt(sram_bytes / (3.0 * dw_bytes))
+    reuse_comm = reuse_mem if cfg.comm_reuse_systolic else jnp.float32(1.0)
+
+    # on-die data movement: cross-die wire latency folded into cycles/op
+    die_span_mm = jnp.sqrt(area)
+    lat_ns = die_span_mm * 0.10 + 1.0          # repeated global wire + ctrl
+    cycles_per_op = 1.0 + lat_ns * cfg.freq_ghz / (
+        reuse ** cfg.latency_amort_exp)
+
+    ops_per_sec = pes * cfg.freq_ghz * 1e9 / cycles_per_op
+    operand_gbps = (cfg.n_operands * cfg.data_width_bits
+                    * ops_per_sec / reuse_comm) / 1e9
+    bw_act = hw.MONO_HBM_COUNT * hw.HBM_BANDWIDTH_GBPS_PER_STACK
+    u_sys = jnp.minimum(1.0, bw_act / jnp.maximum(operand_gbps, 1e-6))
+
+    u_chip = workload.mapping_eff
+    peak_tops = pes * cfg.freq_ghz * 1e9 / 1e12
+    eff_ops = ops_per_sec * u_sys * u_chip
+    eff_tops = eff_ops / 1e12
+
+    n_chips = jnp.float32(1.0)
+    if iso_tops is not None:
+        n_chips = jnp.maximum(1.0, jnp.ceil(jnp.asarray(iso_tops) / eff_tops))
+
+    # energy: HBM over CoWoS interposer (on-package) + device access energy;
+    # with >1 chips, half the operand traffic crosses the PCB at 10x energy
+    bits_per_op = cfg.n_operands * cfg.data_width_bits / reuse_comm
+    e_hbm_link = 0.35                                # CoWoS mid (Table 4)
+    # with multi-chip model parallelism, ~a quarter of operand traffic
+    # crosses the board-level link (activations + reduce) (CAL)
+    cross_frac = jnp.where(n_chips > 1.0, 0.25, 0.0)
+    e_comm = (bits_per_op * (e_hbm_link + cfg.e_bit_hbm_device_pj)
+              + cross_frac * bits_per_op * hw.E_BIT_PJ_OFFBOARD)
+    e_op_total = cfg.e_op_pj + e_comm
+    ops_per_task = workload.gemm_ops + workload.nongemm_ops
+    energy_per_task = ops_per_task * e_op_total * 1e-12 / u_chip
+
+    y = cm.die_yield(area, cfg.defect_density_per_cm2, cfg.yield_alpha)
+    die_cost = n_chips * cm.die_cost_physical(area, cfg)
+    die_cost_paper = n_chips * cm.die_cost_taylor(area, cfg)
+
+    # CoWoS package: full-area interposer + HBM PHY links (1024 b x 4 stacks)
+    pkg_cost = n_chips * (hw.PKG_MU0_PER_MM2[0] * cfg.package_area_mm2
+                          + hw.PKG_MU1_PER_LINK[0] * 1024.0 * hw.MONO_HBM_COUNT
+                          + hw.PKG_MU2_FIXED[0])
+
+    tasks_per_sec = n_chips * eff_ops / jnp.maximum(ops_per_task, 1.0)
+    return MonoMetrics(
+        die_area_mm2=area, pes=pes, peak_tops=peak_tops, eff_tops=eff_tops,
+        tasks_per_sec=tasks_per_sec,
+        e_comm_pj_per_op=e_comm, energy_per_task_j=energy_per_task,
+        tasks_per_joule=1.0 / jnp.maximum(energy_per_task, 1e-30),
+        die_yield=y, die_cost=die_cost, die_cost_paper=die_cost_paper,
+        pkg_cost=pkg_cost, n_chips_iso=n_chips,
+    )

@@ -1,0 +1,180 @@
+"""Design space of Chiplet-Gym (paper Table 1) and the action codec.
+
+The 14 parameters and their value grids reproduce Table 1 exactly:
+
+    Architecture type            2.5D, 5.5D mem-on-logic, 5.5D logic-on-logic
+    No. of chiplets              1..128 step 1
+    No. & location of HBMs       2^6 - 1 placements over {L,R,T,B,mid,3D}
+    AI2AI interconnect 2.5D      CoWoS, EMIB
+    AI2AI data rate 2.5D         1..20 Gbps step 1
+    AI2AI link count 2.5D        50..5000 step 50
+    AI2AI trace length 2.5D      1..10 mm step 1
+    AI2AI interconnect 3D        SoIC, FOVEROS
+    AI2AI data rate 3D           20..50 Gbps step 1
+    AI2AI link count 3D          100..10000 step 100
+    AI2HBM interconnect 2.5D     CoWoS, EMIB
+    AI2HBM data rate 2.5D        1..20 Gbps step 1
+    AI2HBM link count 2.5D       50..5000 step 50
+    AI2HBM trace length 2.5D     1..10 mm step 1
+
+Total |S| = prod(head sizes) ~= 2.4e17, matching the paper's ">2x10^17".
+
+A design point is represented as a ``DesignPoint`` NamedTuple of int32
+*indices* (not values) so PPO's MultiDiscrete heads map 1:1 onto fields.
+``decode()`` turns indices into physical values; everything is jnp-friendly
+and vmap-safe.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# --- categorical encodings -------------------------------------------------
+
+ARCH_2P5D = 0
+ARCH_MEM_ON_LOGIC = 1
+ARCH_LOGIC_ON_LOGIC = 2
+ARCH_NAMES = ("2.5D", "5.5D-Memory-on-Logic", "5.5D-Logic-on-Logic")
+
+IC_COWOS = 0
+IC_EMIB = 1
+IC_2P5D_NAMES = ("CoWoS", "EMIB")
+
+IC_SOIC = 0
+IC_FOVEROS = 1
+IC_3D_NAMES = ("SoIC", "FOVEROS")
+
+HBM_LOCATIONS = ("left", "right", "top", "bottom", "middle", "3D-stacked")
+N_HBM_LOCATIONS = 6
+
+
+class DesignPoint(NamedTuple):
+    """Indices into each parameter grid (all int32, any batch shape)."""
+
+    arch_type: jnp.ndarray        # 0..2
+    n_chiplets: jnp.ndarray       # 0..127  -> 1..128
+    hbm_mask: jnp.ndarray         # 0..62   -> bitmask 1..63
+    ai_ic_2p5d: jnp.ndarray       # 0..1    -> CoWoS / EMIB
+    ai_dr_2p5d: jnp.ndarray       # 0..19   -> 1..20 Gbps
+    ai_links_2p5d: jnp.ndarray    # 0..99   -> 50..5000 step 50
+    ai_trace_2p5d: jnp.ndarray    # 0..9    -> 1..10 mm
+    ai_ic_3d: jnp.ndarray         # 0..1    -> SoIC / FOVEROS
+    ai_dr_3d: jnp.ndarray         # 0..30   -> 20..50 Gbps
+    ai_links_3d: jnp.ndarray      # 0..99   -> 100..10000 step 100
+    hbm_ic_2p5d: jnp.ndarray      # 0..1    -> CoWoS / EMIB
+    hbm_dr_2p5d: jnp.ndarray      # 0..19   -> 1..20 Gbps
+    hbm_links_2p5d: jnp.ndarray   # 0..99   -> 50..5000 step 50
+    hbm_trace_2p5d: jnp.ndarray   # 0..9    -> 1..10 mm
+
+
+N_PARAMS = len(DesignPoint._fields)
+
+# Number of discrete choices per head, in DesignPoint field order.
+HEAD_SIZES = (3, 128, 63, 2, 20, 100, 10, 2, 31, 100, 2, 20, 100, 10)
+TOTAL_LOGITS = sum(HEAD_SIZES)        # 591 (paper: 810 with an unstated
+                                      # discretization; see DESIGN.md §8)
+DESIGN_SPACE_SIZE = float(np.prod([float(h) for h in HEAD_SIZES]))
+
+
+class DesignValues(NamedTuple):
+    """Physical values decoded from a DesignPoint (float32 throughout)."""
+
+    arch_type: jnp.ndarray        # categorical, kept as int-valued float
+    n_chiplets: jnp.ndarray       # 1..128
+    hbm_mask: jnp.ndarray         # 1..63 bitmask
+    ai_ic_2p5d: jnp.ndarray
+    ai_dr_2p5d: jnp.ndarray       # Gbps
+    ai_links_2p5d: jnp.ndarray
+    ai_trace_2p5d: jnp.ndarray    # mm
+    ai_ic_3d: jnp.ndarray
+    ai_dr_3d: jnp.ndarray         # Gbps
+    ai_links_3d: jnp.ndarray
+    hbm_ic_2p5d: jnp.ndarray
+    hbm_dr_2p5d: jnp.ndarray      # Gbps
+    hbm_links_2p5d: jnp.ndarray
+    hbm_trace_2p5d: jnp.ndarray   # mm
+
+
+def clip_indices(dp: DesignPoint) -> DesignPoint:
+    """Clamp every index into its legal range (SA proposals can overshoot)."""
+    return DesignPoint(*[
+        jnp.clip(jnp.asarray(v, jnp.int32), 0, h - 1)
+        for v, h in zip(dp, HEAD_SIZES)
+    ])
+
+
+def decode(dp: DesignPoint) -> DesignValues:
+    """Map grid indices to physical parameter values (Table 1)."""
+    f = lambda x: jnp.asarray(x, jnp.float32)
+    return DesignValues(
+        arch_type=f(dp.arch_type),
+        n_chiplets=f(dp.n_chiplets) + 1.0,
+        hbm_mask=f(dp.hbm_mask) + 1.0,
+        ai_ic_2p5d=f(dp.ai_ic_2p5d),
+        ai_dr_2p5d=f(dp.ai_dr_2p5d) + 1.0,
+        ai_links_2p5d=(f(dp.ai_links_2p5d) + 1.0) * 50.0,
+        ai_trace_2p5d=f(dp.ai_trace_2p5d) + 1.0,
+        ai_ic_3d=f(dp.ai_ic_3d),
+        ai_dr_3d=f(dp.ai_dr_3d) + 20.0,
+        ai_links_3d=(f(dp.ai_links_3d) + 1.0) * 100.0,
+        hbm_ic_2p5d=f(dp.hbm_ic_2p5d),
+        hbm_dr_2p5d=f(dp.hbm_dr_2p5d) + 1.0,
+        hbm_links_2p5d=(f(dp.hbm_links_2p5d) + 1.0) * 50.0,
+        hbm_trace_2p5d=f(dp.hbm_trace_2p5d) + 1.0,
+    )
+
+
+def from_flat(flat: jnp.ndarray) -> DesignPoint:
+    """Build a DesignPoint from a (..., 14) int array of head indices."""
+    parts = [flat[..., i] for i in range(N_PARAMS)]
+    return clip_indices(DesignPoint(*parts))
+
+
+def to_flat(dp: DesignPoint) -> jnp.ndarray:
+    """Inverse of :func:`from_flat` — stack indices on the last axis."""
+    return jnp.stack([jnp.asarray(v, jnp.int32) for v in dp], axis=-1)
+
+
+def random_design(key, batch_shape=()) -> DesignPoint:
+    """Uniform random design points (used by SA init and tests)."""
+    import jax
+    keys = jax.random.split(key, N_PARAMS)
+    return DesignPoint(*[
+        jax.random.randint(k, batch_shape, 0, h, dtype=jnp.int32)
+        for k, h in zip(keys, HEAD_SIZES)
+    ])
+
+
+def hbm_count(hbm_mask: jnp.ndarray) -> jnp.ndarray:
+    """Population count of the 6-bit HBM placement mask."""
+    mask = jnp.asarray(hbm_mask, jnp.int32)
+    bits = [(mask >> i) & 1 for i in range(N_HBM_LOCATIONS)]
+    return sum(bits).astype(jnp.float32)
+
+
+def describe(dp: DesignPoint) -> str:
+    """Human-readable single design point (host-side, for reports)."""
+    v = decode(dp)
+    g = lambda x: np.asarray(x).item()
+    mask = int(g(v.hbm_mask))
+    locs = [n for i, n in enumerate(HBM_LOCATIONS) if mask >> i & 1]
+    lines = [
+        f"Architecture type       : {ARCH_NAMES[int(g(v.arch_type))]}",
+        f"No. of chiplets         : {int(g(v.n_chiplets))}",
+        f"No. & location of HBMs  : {len(locs)} @ {', '.join(locs)}",
+        f"AI2AI interconnect 2.5D : {IC_2P5D_NAMES[int(g(v.ai_ic_2p5d))]}",
+        f"AI2AI data rate 2.5D    : {g(v.ai_dr_2p5d):.0f} Gbps",
+        f"AI2AI link count 2.5D   : {g(v.ai_links_2p5d):.0f}",
+        f"AI2AI trace length 2.5D : {g(v.ai_trace_2p5d):.0f} mm",
+        f"AI2AI interconnect 3D   : {IC_3D_NAMES[int(g(v.ai_ic_3d))]}",
+        f"AI2AI data rate 3D      : {g(v.ai_dr_3d):.0f} Gbps",
+        f"AI2AI link count 3D     : {g(v.ai_links_3d):.0f}",
+        f"AI2HBM interconnect 2.5D: {IC_2P5D_NAMES[int(g(v.hbm_ic_2p5d))]}",
+        f"AI2HBM data rate 2.5D   : {g(v.hbm_dr_2p5d):.0f} Gbps",
+        f"AI2HBM link count 2.5D  : {g(v.hbm_links_2p5d):.0f}",
+        f"AI2HBM trace length 2.5D: {g(v.hbm_trace_2p5d):.0f} mm",
+    ]
+    return "\n".join(lines)

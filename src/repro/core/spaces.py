@@ -1,0 +1,73 @@
+"""Minimal Gym-style space definitions (offline stand-in for gym v0.26).
+
+Only what Chiplet-Gym needs: ``MultiDiscrete`` for the 14-parameter action
+space and ``Box`` for the observation space, both JAX-native (sampling via
+jax.random, no numpy RNG state).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class MultiDiscrete:
+    """Cartesian product of discrete heads, actions are index vectors."""
+
+    def __init__(self, nvec: Sequence[int]):
+        self.nvec = tuple(int(n) for n in nvec)
+        assert all(n >= 1 for n in self.nvec)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (len(self.nvec),)
+
+    @property
+    def n_heads(self) -> int:
+        return len(self.nvec)
+
+    @property
+    def total_logits(self) -> int:
+        return sum(self.nvec)
+
+    def sample(self, key, batch_shape=()) -> jnp.ndarray:
+        keys = jax.random.split(key, len(self.nvec))
+        cols = [jax.random.randint(k, batch_shape, 0, n, dtype=jnp.int32)
+                for k, n in zip(keys, self.nvec)]
+        return jnp.stack(cols, axis=-1)
+
+    def contains(self, x) -> bool:
+        x = np.asarray(x)
+        if x.shape[-1] != len(self.nvec):
+            return False
+        lo = (x >= 0).all()
+        hi = (x < np.asarray(self.nvec)).all()
+        return bool(lo and hi)
+
+    def __repr__(self):
+        return f"MultiDiscrete({list(self.nvec)})"
+
+
+class Box:
+    """Continuous box space (float32)."""
+
+    def __init__(self, low, high, shape: Tuple[int, ...]):
+        self.low = jnp.broadcast_to(jnp.float32(low), shape)
+        self.high = jnp.broadcast_to(jnp.float32(high), shape)
+        self.shape = shape
+
+    def sample(self, key, batch_shape=()) -> jnp.ndarray:
+        u = jax.random.uniform(key, batch_shape + self.shape)
+        return self.low + u * (self.high - self.low)
+
+    def contains(self, x) -> bool:
+        x = np.asarray(x)
+        return (x.shape[-len(self.shape):] == self.shape
+                and bool((x >= np.asarray(self.low) - 1e-6).all())
+                and bool((x <= np.asarray(self.high) + 1e-6).all()))
+
+    def __repr__(self):
+        return f"Box(shape={self.shape})"

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+- ``chiplet_eval``     — batched Chiplet-Gym PPAC evaluation (DSE hot loop)
+- ``flash_attention``  — tiled online-softmax attention (GQA/causal/SWA)
+- ``ssd_scan``         — Mamba-2 SSD chunked scan
+- ``decode_attention`` — single-token GQA decode vs a KV cache (bf16
+  operands, fp32 accumulation, grouped heads — the TPU-native resolution
+  of the decode cell's refuted XLA-path optimization, EXPERIMENTS.md §Perf)
+
+``ops.py`` holds the dispatching jit wrappers, ``ref.py`` the pure-jnp
+oracles. All kernels validate in interpret mode on CPU (tests).
+"""

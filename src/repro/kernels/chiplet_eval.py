@@ -1,0 +1,271 @@
+"""Pallas TPU kernel: batched Chiplet-Gym design-point evaluation.
+
+This is the DSE hot loop — the portfolio optimizer evaluates millions of
+design points (SA proposals, PPO rollouts, exhaustive refinement sweeps).
+The kernel evaluates a VMEM-resident tile of design points entirely on the
+VPU:
+
+  layout:  a tile of ``BLOCK_N`` design points occupies the sublane axis;
+           the 16x16 placement grid (the Fig.-4 max-min hop reduction) and
+           the 14 design fields live on the 128-lane axis. The mesh-dims
+           lookup (the Table of near-square factorizations) is a one-hot
+           matmul — TPU-native, no gather.
+
+  inputs:  designs  f32 (N, 128)   — cols 0..13 = Table-1 grid indices
+           mesh_tab f32 (256, 128) — col 0 = m, col 1 = n, row = #positions
+  output:  metrics  f32 (N, 128)   — cols 0..7 =
+           [reward, eff_tops, e_comm_pj, pkg_cost, die_cost, u_sys,
+            lat_hbm_ns, lat_ai_ns]
+
+The arithmetic mirrors ``repro.core.costmodel.evaluate`` term by term;
+``tests/test_kernels.py`` sweeps shapes and asserts allclose against the
+pure-jnp oracle (``kernels/ref.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import costmodel as cm
+from repro.core import hw_constants as hw
+from repro.core import params as ps
+
+BLOCK_N = 256
+LANES = 128
+N_OUT = 8
+_GRID = 16          # 16x16 placement grid = 256 cells = 2 x 128 lanes
+
+
+def _mesh_tables() -> np.ndarray:
+    """(256, 128) table: row p -> [m, n, 0...] for p footprint positions."""
+    tab = np.zeros((256, LANES), np.float32)
+    m = np.asarray(cm._MESH_M)
+    n = np.asarray(cm._MESH_N)
+    tab[: len(m), 0] = m
+    tab[: len(n), 1] = n
+    return tab
+
+
+def _bit(x, b):
+    return jnp.floor(x / (2.0 ** b)) % 2.0
+
+
+def _kernel(design_ref, mesh_ref, out_ref, *,
+            workload_vals: Tuple[float, float, float, float],
+            weight_vals: Tuple[float, float, float],
+            cfg: hw.HWConfig):
+    gemm_ops, nongemm_ops, _hbm_bytes, mapping_eff = workload_vals
+    w_alpha, w_beta, w_gamma = weight_vals
+
+    raw = design_ref[...].astype(jnp.float32)          # (B, 128)
+    b = raw.shape[0]
+
+    # ---- decode Table-1 indices -> values (cols 0..13) --------------------
+    arch = raw[:, 0]
+    n_dies = raw[:, 1] + 1.0
+    mask = raw[:, 2] + 1.0
+    ai_ic = raw[:, 3]
+    ai_dr = raw[:, 4] + 1.0
+    ai_links = (raw[:, 5] + 1.0) * 50.0
+    ai_trace = raw[:, 6] + 1.0
+    ic3d = raw[:, 7]
+    dr3d = raw[:, 8] + 20.0
+    links3d = (raw[:, 9] + 1.0) * 100.0
+    hbm_ic = raw[:, 10]
+    hbm_dr = raw[:, 11] + 1.0
+    hbm_links = (raw[:, 12] + 1.0) * 50.0
+    hbm_trace = raw[:, 13] + 1.0
+
+    is_lol = (arch == 2.0).astype(jnp.float32)
+    uses_3d_mem = _bit(mask, 5) * (arch >= 1.0).astype(jnp.float32)
+
+    # ---- geometry ----------------------------------------------------------
+    n_pos = jnp.where(is_lol > 0, jnp.ceil(n_dies / 2.0), n_dies)
+    onehot = (jax.lax.broadcasted_iota(jnp.float32, (b, 256), 1)
+              == n_pos[:, None]).astype(jnp.float32)       # (B, 256)
+    mn = jnp.dot(onehot, mesh_ref[...],
+                 preferred_element_type=jnp.float32)        # (B, 128)
+    m, n = mn[:, 0], mn[:, 1]
+
+    bits = [_bit(mask, i) for i in range(6)]
+    n_hbm = sum(bits)
+    n_hbm_2p5d = n_hbm - uses_3d_mem
+    avail = (cfg.package_area_mm2 - (m + n + 2.0) * hw.CHIPLET_SPACING_MM
+             - n_hbm_2p5d * cfg.hbm_footprint_mm2)
+    avail = jnp.maximum(avail, 1.0)
+    die_area = jnp.minimum(avail / n_pos, cfg.max_chiplet_area_mm2)
+
+    any_3d = jnp.maximum(is_lol, uses_3d_mem)
+    tsv_area = jnp.minimum(cfg.tsv_area_mm2, 0.08 * die_area)
+    logic_area = jnp.maximum(die_area - any_3d * tsv_area, 0.1)
+    logic_eff = 1.0 - is_lol * cfg.tsv_keepout_frac
+    compute_area = logic_area * cfg.compute_area_frac * logic_eff
+    sram_mb = logic_area * hw.SRAM_AREA_FRAC * logic_eff * hw.SRAM_MB_PER_MM2
+
+    pes = compute_area * 1e6 / cfg.pe_area_um2
+    reuse = jnp.sqrt(jnp.maximum(pes, 1.0))
+    dw_bytes = cfg.data_width_bits / 8.0
+    reuse_mem = jnp.sqrt(jnp.maximum(sram_mb * 1e6 / (3.0 * dw_bytes), 1.0))
+    reuse_comm = reuse_mem if cfg.comm_reuse_systolic else jnp.ones_like(reuse_mem)
+
+    # ---- worst-case HBM->AI hops over the 16x16 grid (2 x 128 lanes) ------
+    lane = jax.lax.broadcasted_iota(jnp.float32, (b, LANES), 1)
+
+    def cell_minmax(cell_idx):
+        i = jnp.floor(cell_idx / _GRID)
+        j = cell_idx % _GRID
+        mc = (m[:, None] - 1.0) / 2.0
+        nc = (n[:, None] - 1.0) / 2.0
+        valid = (i < m[:, None]) & (j < n[:, None])
+        d_l = jnp.abs(i - mc) + (j + 1.0)
+        d_r = jnp.abs(i - mc) + (n[:, None] - j)
+        d_t = (i + 1.0) + jnp.abs(j - nc)
+        d_b = (m[:, None] - i) + jnp.abs(j - nc)
+        d_m = jnp.maximum(jnp.abs(i - mc) + jnp.abs(j - nc), 1.0)
+        d_s3 = jnp.abs(i - mc) + jnp.abs(j - nc)
+        d_s = jnp.where(arch[:, None] >= 1.0, d_s3, d_m)
+        big = jnp.float32(1e9)
+        dmin = jnp.full_like(d_l, big)
+        for bit, d in zip(bits, (d_l, d_r, d_t, d_b, d_m, d_s)):
+            dmin = jnp.minimum(dmin, jnp.where(bit[:, None] > 0, d, big))
+        return jnp.max(jnp.where(valid, dmin, -big), axis=1)
+
+    h_hbm = jnp.maximum(cell_minmax(lane), cell_minmax(lane + LANES))
+    h_ai = m + n - 2.0
+
+    # ---- latency (Eqs. 10-11) ---------------------------------------------
+    wire_ai = cfg.wire_delay_ps_2p5d * ai_trace / 1000.0
+    wire_hbm = cfg.wire_delay_ps_2p5d * hbm_trace / 1000.0
+    fixed = cfg.contention_delay_ns + cfg.serialization_delay_ns
+    lat_ai = h_ai * (wire_ai + cfg.router_delay_ns) + fixed
+    lat_hbm = (h_hbm * (wire_hbm + cfg.router_delay_ns) + fixed
+               + uses_3d_mem * (cfg.wire_delay_ps_3d / 1000.0))
+    lat_3d = cfg.wire_delay_ps_3d / 1000.0 + cfg.serialization_delay_ns
+    worst_lat = jnp.maximum(lat_ai, lat_hbm) + is_lol * lat_3d
+    cycles_per_op = 1.0 + worst_lat * cfg.freq_ghz / (
+        reuse ** cfg.latency_amort_exp)
+
+    # ---- bandwidth / utilization (Eqs. 12-14) ------------------------------
+    ops_per_die = pes * cfg.freq_ghz * 1e9 / cycles_per_op
+    operand_gbps = (cfg.n_operands * cfg.data_width_bits
+                    * ops_per_die / reuse_comm) / 1e9
+    bw_req_hbm = 4.0 * operand_gbps
+    bw_req_ai = operand_gbps
+    link_bw_hbm = hbm_dr * hbm_links
+    bw_act_hbm = (jnp.minimum(link_bw_hbm, hw.HBM_BANDWIDTH_GBPS_PER_STACK)
+                  if cfg.hbm_peak_cap else link_bw_hbm)
+    u_hbm = jnp.minimum(1.0, bw_act_hbm / jnp.maximum(bw_req_hbm, 1e-6))
+    u_ai = jnp.minimum(1.0, ai_dr * ai_links / jnp.maximum(bw_req_ai, 1e-6))
+    u_3d = jnp.minimum(1.0, dr3d * links3d / jnp.maximum(bw_req_ai, 1e-6))
+    u_sys = jnp.minimum(u_hbm, u_ai)
+    u_sys = jnp.where(is_lol > 0, jnp.minimum(u_sys, u_3d), u_sys)
+
+    # ---- throughput ---------------------------------------------------------
+    eff_ops = ops_per_die * n_dies * u_sys * mapping_eff
+    eff_tops = eff_ops / 1e12
+
+    # ---- energy -------------------------------------------------------------
+    def lerp(lo, hi, tr):
+        t = (jnp.clip(tr, 1.0, 10.0) - 1.0) / 9.0
+        return lo + (hi - lo) * t
+
+    e_hbm_link = lerp(jnp.where(hbm_ic < 0.5, hw.E_BIT_PJ_2P5D_MIN[0],
+                                hw.E_BIT_PJ_2P5D_MIN[1]),
+                      jnp.where(hbm_ic < 0.5, hw.E_BIT_PJ_2P5D_MAX[0],
+                                hw.E_BIT_PJ_2P5D_MAX[1]), hbm_trace)
+    e_ai_link = lerp(jnp.where(ai_ic < 0.5, hw.E_BIT_PJ_2P5D_MIN[0],
+                               hw.E_BIT_PJ_2P5D_MIN[1]),
+                     jnp.where(ai_ic < 0.5, hw.E_BIT_PJ_2P5D_MAX[0],
+                               hw.E_BIT_PJ_2P5D_MAX[1]), ai_trace)
+    e_3d = jnp.where(ic3d < 0.5, hw.E_BIT_PJ_3D[0], hw.E_BIT_PJ_3D[1])
+    bits_hbm = cfg.n_operands * cfg.data_width_bits / reuse_comm
+    bits_ai = 0.5 * bits_hbm
+    e_comm = (bits_hbm * (e_hbm_link + cfg.e_bit_hbm_device_pj)
+              + bits_ai * e_ai_link + is_lol * bits_ai * e_3d
+              + uses_3d_mem * bits_hbm * (e_3d - e_hbm_link))
+
+    # ---- cost ---------------------------------------------------------------
+    d_mm2 = cfg.defect_density_per_cm2 / 100.0
+    y_die = (1.0 + d_mm2 * die_area / cfg.yield_alpha) ** (-cfg.yield_alpha)
+    die_cost = (n_dies * cfg.wafer_price_per_mm2 * die_area / y_die
+                * (1.0 + hw.KGD_TEST_COST_FRAC))
+
+    mesh_edges = m * (n - 1.0) + n * (m - 1.0)
+    l_ai = ai_links * mesh_edges
+    l_hbm = hbm_links * n_hbm_2p5d
+    n_pairs = jnp.where(is_lol > 0, jnp.floor(n_dies / 2.0), 0.0)
+    l_3d = links3d * n_pairs + links3d * uses_3d_mem
+
+    mu0 = jnp.maximum(
+        jnp.where(ai_ic < 0.5, hw.PKG_MU0_PER_MM2[0], hw.PKG_MU0_PER_MM2[1]),
+        jnp.where(hbm_ic < 0.5, hw.PKG_MU0_PER_MM2[0], hw.PKG_MU0_PER_MM2[1]))
+    mu2 = jnp.maximum(
+        jnp.where(ai_ic < 0.5, hw.PKG_MU2_FIXED[0], hw.PKG_MU2_FIXED[1]),
+        jnp.where(hbm_ic < 0.5, hw.PKG_MU2_FIXED[0], hw.PKG_MU2_FIXED[1]))
+    mu1_ai = jnp.where(ai_ic < 0.5, hw.PKG_MU1_PER_LINK[0],
+                       hw.PKG_MU1_PER_LINK[1])
+    mu1_hbm = jnp.where(hbm_ic < 0.5, hw.PKG_MU1_PER_LINK[0],
+                        hw.PKG_MU1_PER_LINK[1])
+    mu1_3d = jnp.where(ic3d < 0.5, hw.PKG_MU1_PER_LINK_3D[0],
+                       hw.PKG_MU1_PER_LINK_3D[1])
+    fix_3d = jnp.where(ic3d < 0.5, hw.PKG_3D_FIXED_PER_STACK[0],
+                       hw.PKG_3D_FIXED_PER_STACK[1])
+    n_stacks = n_pairs + uses_3d_mem
+    pkg_raw = (mu0 * cfg.package_area_mm2 + mu1_ai * l_ai + mu1_hbm * l_hbm
+               + mu1_3d * l_3d + fix_3d * n_stacks + mu2)
+    y_asm = cfg.bond_yield ** n_stacks
+    pkg_cost = pkg_raw / jnp.maximum(y_asm, 1e-3)
+
+    # ---- reward (Eq. 17) ----------------------------------------------------
+    r_t = eff_tops * cfg.reward_throughput_scale
+    r_c = pkg_cost * cfg.reward_cost_scale / 10.0
+    r_e = e_comm * cfg.reward_energy_scale
+    reward = w_alpha * r_t - w_beta * r_c - w_gamma * r_e
+
+    out = jnp.stack([reward, eff_tops, e_comm, pkg_cost, die_cost,
+                     u_sys, lat_hbm, lat_ai], axis=-1)       # (B, 8)
+    pad = jnp.zeros((b, LANES - N_OUT), jnp.float32)
+    out_ref[...] = jnp.concatenate([out, pad], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("workload_vals", "weight_vals",
+                                             "cfg", "interpret", "block_n"))
+def evaluate_batch(designs_padded: jnp.ndarray,
+                   workload_vals: Tuple[float, float, float, float],
+                   weight_vals: Tuple[float, float, float],
+                   cfg: hw.HWConfig = hw.DEFAULT_HW,
+                   interpret: bool = True,
+                   block_n: int = BLOCK_N) -> jnp.ndarray:
+    """Run the kernel on (N, 128) padded designs; returns (N, 8) metrics."""
+    n = designs_padded.shape[0]
+    assert n % block_n == 0, f"batch {n} must be a multiple of {block_n}"
+    mesh_tab = jnp.asarray(_mesh_tables())
+    kernel = functools.partial(_kernel, workload_vals=workload_vals,
+                               weight_vals=weight_vals, cfg=cfg)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((256, LANES), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, LANES), jnp.float32),
+        interpret=interpret,
+    )(designs_padded.astype(jnp.float32), mesh_tab)
+    return out[:, :N_OUT]
+
+
+def pad_designs(dp: ps.DesignPoint, block_n: int = BLOCK_N) -> jnp.ndarray:
+    """(B,)-batched DesignPoint -> (N_padded, 128) f32 kernel input."""
+    flat = ps.to_flat(dp).astype(jnp.float32)          # (B, 14)
+    n = flat.shape[0]
+    n_pad = (-n) % block_n
+    flat = jnp.pad(flat, ((0, n_pad), (0, LANES - ps.N_PARAMS)))
+    return flat

@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: single-token GQA decode attention.
+
+The §Perf decode hillclimb (EXPERIMENTS.md) showed the XLA path cannot
+express the ideal decode step: removing the f32 cache cast re-exposed a
+GSPMD resharding (opt3 refuted). This kernel IS that ideal step, on the
+TPU target:
+
+  - KV cache blocks stream HBM -> VMEM in bf16; scores accumulate in
+    fp32 VREGs (MXU-native) — no materialized f32 cache copy,
+  - GQA grouped natively: the q tile is (group, D) per kv head — no
+    repeat of K/V across query heads,
+  - online softmax across cache blocks with position masking (supports
+    ragged fill: positions > pos are masked, so one compiled kernel
+    serves every step),
+  - grid = (batch * kv_heads, cache_blocks); running (acc, m, l) in VMEM
+    scratch across the sequential cache axis.
+
+ops.decode_attention dispatches it on TPU; interpret mode validates on
+CPU against the grouped-einsum oracle (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 512
+_NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *,
+                   scale: float, block_s: int, num_blocks: int,
+                   window: int):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[0, 0]
+    q = q_ref[0].astype(jnp.float32) * scale          # (G, D)
+    k = k_ref[0]                                      # (BS, D) bf16/f32
+    v = v_ref[0]
+
+    # MXU: low-precision operands, fp32 accumulation
+    s = jax.lax.dot_general(
+        q.astype(k.dtype), k,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)           # (G, BS)
+
+    k_pos = si * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    valid = k_pos <= pos
+    if window > 0:
+        valid &= (pos - k_pos) < window
+    s = jnp.where(valid, s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * corr
+                    + jax.lax.dot_general(
+                        p.astype(v.dtype), v,
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(si == num_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "window", "block_s", "interpret"))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     pos: jnp.ndarray, scale: float | None = None,
+                     window: int = 0,
+                     block_s: int = DEFAULT_BLOCK_S,
+                     interpret: bool = True) -> jnp.ndarray:
+    """q: (B, Hq, D) one token; k/v: (B, KV, S, D) cache; pos: () int32.
+
+    Returns (B, Hq, D). Positions > pos (unfilled cache) are masked.
+    """
+    b, hq, d = q.shape
+    _, kv, s_len, _ = k.shape
+    assert hq % kv == 0
+    group = hq // kv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    bs = min(block_s, s_len)
+    assert s_len % bs == 0, (s_len, bs)
+    n_blocks = s_len // bs
+
+    qr = q.reshape(b * kv, group, d)
+    kr = k.reshape(b * kv, s_len, d)
+    vr = v.reshape(b * kv, s_len, d)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1, 1)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, block_s=bs, num_blocks=n_blocks,
+        window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kv, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda h, si: (0, 0)),
+            pl.BlockSpec((1, group, d), lambda h, si: (h, 0, 0)),
+            pl.BlockSpec((1, bs, d), lambda h, si: (h, si, 0)),
+            pl.BlockSpec((1, bs, d), lambda h, si: (h, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, d), lambda h, si: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, group, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, d), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, qr, kr, vr)
+    return out.reshape(b, hq, d)

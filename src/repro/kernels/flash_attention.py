@@ -1,0 +1,137 @@
+"""Pallas TPU flash attention (GQA/causal) — the LM substrate's hot spot.
+
+Online-softmax tiled attention adapted to the TPU memory hierarchy:
+
+  - grid = (batch * q_heads, num_q_blocks, num_kv_blocks); the kv axis is
+    the innermost (sequential on TPU), so running max / sum / accumulator
+    live in VMEM scratch across kv steps of one (head, q-block),
+  - q/k/v tiles are (BLOCK_Q, head_dim) / (BLOCK_K, head_dim); head_dim is
+    a 128-lane multiple for the assigned archs — MXU-shaped matmuls,
+  - softmax statistics are fp32 regardless of input dtype (bf16-safe),
+  - GQA: q head h reads kv head h // group at BlockSpec index-map level —
+    no materialized KV replication,
+  - causal blocks above the diagonal are masked (full-block skip is a
+    documented TODO for real-TPU tuning; interpret-mode correctness first).
+
+``ops.attention`` is the dispatching wrapper; ``ref.attention_reference``
+is the pure-jnp oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref,
+                 acc_ref, m_ref, l_ref, *,
+                 scale: float, causal: bool, window: int,
+                 block_q: int, block_k: int, num_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)                  # (BK, D)
+    v = v_ref[0].astype(jnp.float32)                  # (BK, D)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (BQ, BK)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    if causal:
+        s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+    if window > 0:  # sliding-window attention (h2o-danube / hymba)
+        s = jnp.where(q_pos - k_pos < window, s, _NEG_INF)
+
+    m_prev = m_ref[...]                                # (BQ, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                             # (BQ, BK)
+    correction = jnp.exp(m_prev - m_new)               # (BQ, 1)
+
+    l_ref[...] = l_ref[...] * correction + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * correction
+                    + jnp.dot(p, v, preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "window",
+                     "block_q", "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, scale: float | None = None,
+                    window: int = 0,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: (B, Hq, L, D); k/v: (B, Hkv, S, D); Hq % Hkv == 0 -> (B, Hq, L, D).
+
+    ``window > 0`` enables causal sliding-window masking (token i attends
+    to [i-window+1, i]).
+    """
+    batch, hq, q_len, d = q.shape
+    _, hkv, kv_len, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+
+    bq = min(block_q, q_len)
+    bk = min(block_k, kv_len)
+    assert q_len % bq == 0 and kv_len % bk == 0, (q_len, bq, kv_len, bk)
+    n_q = q_len // bq
+    n_k = kv_len // bk
+
+    qr = q.reshape(batch * hq, q_len, d)
+    kr = k.reshape(batch * hkv, kv_len, d)
+    vr = v.reshape(batch * hkv, kv_len, d)
+
+    def kv_index(h, qi, ki):
+        b_idx = h // hq
+        h_idx = (h % hq) // group
+        return (b_idx * hkv + h_idx, ki, 0)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        block_q=bq, block_k=bk, num_kv_blocks=n_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(batch * hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch * hq, q_len, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),      # output accumulator
+            pltpu.VMEM((bq, 1), jnp.float32),      # running max
+            pltpu.VMEM((bq, 1), jnp.float32),      # running sum
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(batch, hq, q_len, d)

@@ -1,0 +1,103 @@
+"""Dispatching wrappers for the Pallas kernels.
+
+Each op picks the best backend for the current platform:
+  - on TPU: the Pallas kernel (compiled),
+  - on CPU (this container): the mathematically-identical pure-jnp path
+    (fast), with ``backend="pallas"`` forcing interpret-mode Pallas for
+    validation (tests/test_kernels.py does exactly that).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costmodel as cm
+from repro.core import hw_constants as hw
+from repro.core import params as ps
+from repro.kernels import chiplet_eval as _ce
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import ssd_scan as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, causal: bool = True, scale: float | None = None,
+              window: int = 0, backend: str = "auto",
+              block_q: int = _fa.DEFAULT_BLOCK_Q,
+              block_k: int = _fa.DEFAULT_BLOCK_K) -> jnp.ndarray:
+    """Flash attention with GQA + optional sliding window.
+
+    backend: "auto" (pallas on TPU, jnp ref elsewhere), "pallas", "ref".
+    """
+    if backend == "pallas" or (backend == "auto" and _on_tpu()):
+        return _fa.flash_attention(q, k, v, causal=causal, scale=scale,
+                                   window=window, block_q=block_q,
+                                   block_k=block_k,
+                                   interpret=not _on_tpu())
+    return _ref.attention_reference(q, k, v, causal=causal, scale=scale,
+                                    window=window)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan (Mamba-2)
+# ---------------------------------------------------------------------------
+
+def ssd(x, dt, a, b, c, chunk: int = _ssd.DEFAULT_CHUNK,
+        backend: str = "auto") -> jnp.ndarray:
+    """Chunked SSD scan; (BH, L, P) API (see kernels/ssd_scan.py)."""
+    if backend == "pallas" or (backend == "auto" and _on_tpu()):
+        return _ssd.ssd_scan(x, dt, a, b, c, chunk=chunk,
+                             interpret=not _on_tpu())
+    if backend == "ref":
+        return _ref.ssd_reference(x, dt, a, b, c)
+    return _ref.ssd_chunked_jnp(x, dt, a, b, c, chunk=chunk)
+
+
+ssd_decode_step = _ref.ssd_decode_step
+
+
+# ---------------------------------------------------------------------------
+# Chiplet-Gym batched design evaluation
+# ---------------------------------------------------------------------------
+
+def chiplet_eval(dp: ps.DesignPoint,
+                 workload: cm.Workload = cm.GENERIC_WORKLOAD,
+                 weights: cm.RewardWeights = cm.RewardWeights(),
+                 cfg: hw.HWConfig = hw.DEFAULT_HW,
+                 backend: str = "auto") -> jnp.ndarray:
+    """Evaluate a batch of design points -> (N, 8) metric matrix:
+    [reward, eff_tops, e_comm_pj, pkg_cost, die_cost, u_sys,
+     lat_hbm_ns, lat_ai_ns]."""
+    flat = ps.to_flat(dp)
+    n = flat.shape[0]
+    wl_vals = (float(workload.gemm_ops), float(workload.nongemm_ops),
+               float(workload.hbm_bytes), float(workload.mapping_eff))
+    w_vals = (float(weights.alpha), float(weights.beta), float(weights.gamma))
+    if backend == "pallas" or (backend == "auto" and _on_tpu()):
+        padded = _ce.pad_designs(dp)
+        out = _ce.evaluate_batch(padded, wl_vals, w_vals, cfg,
+                                 interpret=not _on_tpu())
+        return out[:n]
+    return _ref.chiplet_eval_reference(flat, wl_vals, w_vals, cfg)
+
+
+def decode_attention(q, k, v, pos, scale=None, window: int = 0,
+                     backend: str = "auto"):
+    """Single-token GQA decode attention against a (B, KV, S, D) cache."""
+    from repro.kernels import decode_attention as _da
+    if backend == "pallas" or (backend == "auto" and _on_tpu()):
+        return _da.decode_attention(q, k, v, pos, scale=scale,
+                                    window=window,
+                                    interpret=not _on_tpu())
+    return _ref.decode_attention_reference(q, k, v, pos, scale=scale,
+                                           window=window)

@@ -1,0 +1,168 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests).
+
+- ``attention_reference``     : naive softmax attention (GQA/causal/SWA)
+- ``ssd_reference``           : exact sequential SSD recurrence (lax.scan)
+- ``ssd_chunked_jnp``         : fast chunked SSD (same math as the kernel,
+                                pure jnp — the CPU path of ops.ssd)
+- ``chiplet_eval_reference``  : the core cost model itself
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costmodel as cm
+from repro.core import hw_constants as hw
+from repro.core import params as ps
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention_reference(q, k, v, causal: bool = True,
+                        scale: float | None = None,
+                        window: int = 0) -> jnp.ndarray:
+    """q: (B, Hq, L, D); k/v: (B, Hkv, S, D) -> (B, Hq, L, D). fp32 softmax."""
+    batch, hq, q_len, d = q.shape
+    _, hkv, kv_len, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(q_len)[:, None]
+    k_pos = jnp.arange(kv_len)[None, :]
+    if causal:
+        s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+    if window > 0:
+        s = jnp.where(q_pos - k_pos < window, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD (Mamba-2)
+# ---------------------------------------------------------------------------
+
+def ssd_reference(x, dt, a, b, c) -> jnp.ndarray:
+    """Exact sequential recurrence. Same (BH, L, ...) API as the kernel."""
+    bh, seq, p = x.shape
+    n = b.shape[-1]
+
+    def per_seq(x1, dt1, a1, b1, c1):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            h = (jnp.exp(dtt * a1) * h
+                 + dtt * bt[:, None] * xt[None, :])       # (N, P)
+            y = ct @ h                                     # (P,)
+            return h, y
+
+        h0 = jnp.zeros((n, p), jnp.float32)
+        _, ys = jax.lax.scan(step, h0,
+                             (x1.astype(jnp.float32), dt1.astype(jnp.float32),
+                              b1.astype(jnp.float32), c1.astype(jnp.float32)))
+        return ys
+
+    return jax.vmap(per_seq)(x, dt, a, b, c).astype(x.dtype)
+
+
+def ssd_chunked_jnp(x, dt, a, b, c, chunk: int = 128) -> jnp.ndarray:
+    """Chunked SSD, pure jnp — mirrors the Pallas kernel math exactly."""
+    bh, seq, p = x.shape
+    n = b.shape[-1]
+    ch = min(chunk, seq)
+    assert seq % ch == 0
+    n_chunks = seq // ch
+
+    xr = x.reshape(bh, n_chunks, ch, p).astype(jnp.float32)
+    dtr = dt.reshape(bh, n_chunks, ch).astype(jnp.float32)
+    br = b.reshape(bh, n_chunks, ch, n).astype(jnp.float32)
+    cr = c.reshape(bh, n_chunks, ch, n).astype(jnp.float32)
+    a = a.astype(jnp.float32)
+
+    ii = jnp.arange(ch)[:, None]
+    jj = jnp.arange(ch)[None, :]
+    causal = ii >= jj
+
+    def per_chunk(h_prev, inp):
+        xc, dtc, bc, cc, a1 = inp
+        cum = jnp.cumsum(dtc * a1)
+        diff = cum[:, None] - cum[None, :]
+        decay = jnp.where(causal, jnp.exp(jnp.where(causal, diff, 0.0)), 0.0)
+        scores = (cc @ bc.T) * decay * dtc[None, :]
+        y_intra = scores @ xc
+        y_cross = jnp.exp(cum)[:, None] * (cc @ h_prev)
+        w = jnp.exp(cum[-1] - cum) * dtc
+        h_new = jnp.exp(cum[-1]) * h_prev + (bc * w[:, None]).T @ xc
+        return h_new, y_intra + y_cross
+
+    def per_seq(xs, dts, bs, cs, a1):
+        h0 = jnp.zeros((n, p), jnp.float32)
+        a_rep = jnp.broadcast_to(a1, (n_chunks,))
+        _, ys = jax.lax.scan(per_chunk, h0, (xs, dts, bs, cs, a_rep))
+        return ys.reshape(seq, p)
+
+    return jax.vmap(per_seq)(xr, dtr, br, cr, a).astype(x.dtype)
+
+
+def ssd_decode_step(h, x_t, dt_t, a, b_t, c_t):
+    """One-token recurrence update (serving path). h: (BH, N, P)."""
+    decay = jnp.exp(dt_t * a)[:, None, None]
+    h = decay * h + (dt_t[:, None] * b_t)[:, :, None] * x_t[:, None, :]
+    y = jnp.einsum("gn,gnp->gp", c_t, h)
+    return h, y
+
+
+# ---------------------------------------------------------------------------
+# Chiplet-Gym design evaluation
+# ---------------------------------------------------------------------------
+
+def chiplet_eval_reference(designs_flat: jnp.ndarray,
+                           workload_vals: Tuple[float, float, float, float],
+                           weight_vals: Tuple[float, float, float],
+                           cfg: hw.HWConfig = hw.DEFAULT_HW) -> jnp.ndarray:
+    """(N, >=14) index array -> (N, 8) metrics matching the Pallas kernel."""
+    dp = ps.from_flat(designs_flat[:, : ps.N_PARAMS].astype(jnp.int32))
+    workload = cm.Workload(
+        gemm_ops=jnp.float32(workload_vals[0]),
+        nongemm_ops=jnp.float32(workload_vals[1]),
+        hbm_bytes=jnp.float32(workload_vals[2]),
+        mapping_eff=jnp.float32(workload_vals[3]))
+    weights = cm.RewardWeights(alpha=jnp.float32(weight_vals[0]),
+                               beta=jnp.float32(weight_vals[1]),
+                               gamma=jnp.float32(weight_vals[2]))
+    m = cm.evaluate(dp, workload, weights, cfg)
+    return jnp.stack([m.reward, m.eff_tops, m.e_comm_pj_per_op, m.pkg_cost,
+                      m.die_cost, m.u_sys, m.lat_hbm_ai_ns, m.lat_ai_ai_ns],
+                     axis=-1)
+
+
+def decode_attention_reference(q, k, v, pos, scale=None, window: int = 0):
+    """Oracle for the single-token decode kernel.
+
+    q: (B, Hq, D); k/v: (B, KV, S, D); pos: scalar. fp32 throughout.
+    """
+    b, hq, d = q.shape
+    _, kv, s_len, _ = k.shape
+    group = hq // kv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, kv, group, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, k.astype(jnp.float32))
+    k_pos = jnp.arange(s_len)
+    valid = k_pos <= pos
+    if window > 0:
+        valid &= (pos - k_pos) < window
+    s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)

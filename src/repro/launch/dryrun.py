@@ -1,0 +1,410 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init). This module is the multi-pod dry-run:
+# for every (architecture x input-shape x mesh) cell it lowers + compiles
+# the real train/prefill/decode step against ShapeDtypeStruct inputs on
+# the production mesh, prints memory/cost analysis, and emits the
+# roofline JSON consumed by EXPERIMENTS.md.
+
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis import roofline as RL
+from repro.configs import ARCH_REGISTRY, EXTRA_REGISTRY, SHAPES_BY_NAME
+from repro.configs.base import ArchConfig, ShapeConfig, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.parallel import sharding as shd
+from repro.training import trainer as T
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+ENC_LEN = 4096          # fixed encoder context for enc-dec decode cells
+
+
+# ---------------------------------------------------------------------------
+# per-cell sharding rules
+# ---------------------------------------------------------------------------
+
+def cell_rules(mesh, shape: ShapeConfig) -> shd.ShardingRules:
+    from repro.models.tuning import TUNING
+    if TUNING.pure_dp:
+        all_axes = tuple(mesh.axis_names)
+        n_dev = mesh.devices.size
+        if shape.global_batch % n_dev == 0:
+            return shd.ShardingRules(
+                batch=all_axes, seq=None, heads=None, ff=None,
+                vocab=None, experts=None, kv_seq=None)
+        # fall through to standard rules if the batch cannot cover the mesh
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    total = 1
+    for a in data_axes:
+        total *= mesh.shape[a]
+    if shape.global_batch % total == 0:
+        batch = data_axes
+    elif shape.global_batch % mesh.shape[data_axes[-1]] == 0:
+        batch = (data_axes[-1],)
+    else:
+        batch = ()                      # replicate tiny batches (long_500k)
+    return shd.ShardingRules(batch=batch if batch else (None,))
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig) -> Dict:
+    """Batch inputs for the step of this cell (assignment deliverable)."""
+    b, l = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        text_len = l - (arch.frontend_tokens
+                        if arch.frontend == "vision_patches" else 0)
+        batch = {
+            "tokens": sds((b, text_len), jnp.int32),
+            "labels": sds((b, text_len), jnp.int32),
+            "loss_mask": sds((b, text_len), jnp.float32),
+        }
+        if arch.frontend == "vision_patches":
+            batch["patch_embeds"] = sds((b, arch.frontend_tokens,
+                                         arch.d_model), jnp.bfloat16)
+        if arch.is_encdec:
+            batch["enc_frames"] = sds((b, l, arch.d_model), jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        text_len = l - (arch.frontend_tokens
+                        if arch.frontend == "vision_patches" else 0)
+        batch = {"tokens": sds((b, text_len), jnp.int32)}
+        if arch.frontend == "vision_patches":
+            batch["patch_embeds"] = sds((b, arch.frontend_tokens,
+                                         arch.d_model), jnp.bfloat16)
+        if arch.is_encdec:
+            batch["enc_frames"] = sds((b, l, arch.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token against a seq_len KV cache
+    batch = {"token": sds((b,), jnp.int32), "pos": sds((), jnp.int32)}
+    if arch.is_encdec:
+        batch["enc_out"] = sds((b, ENC_LEN, arch.d_model), jnp.bfloat16)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# sharding trees
+# ---------------------------------------------------------------------------
+
+def _ns(mesh, p, shape):
+    return NamedSharding(mesh, shd.best_effort_spec(mesh, p, shape))
+
+
+def batch_input_shardings(mesh, rules, batch_sds) -> Dict:
+    out = {}
+    for k, v in batch_sds.items():
+        if v.ndim == 0:
+            out[k] = NamedSharding(mesh, P())
+        else:
+            out[k] = _ns(mesh, P(rules.batch, *([None] * (v.ndim - 1))),
+                         v.shape)
+    return out
+
+
+_CACHE_SPECS = {
+    "k": lambda r: P(None, r.batch, None, r.kv_seq, None),
+    "v": lambda r: P(None, r.batch, None, r.kv_seq, None),
+    "c_kv": lambda r: P(None, r.batch, r.kv_seq, None),
+    "k_rope": lambda r: P(None, r.batch, None, r.kv_seq, None),
+    "conv": lambda r: P(None, r.batch, None, None),
+    "ssd": lambda r: P(None, r.batch, None, None),
+}
+
+
+def cache_shardings(mesh, rules, cache_shapes):
+    from repro.models.tuning import TUNING
+    if TUNING.decode_batch_cache:
+        # batch-only sharding: no seq-dim resharding around cache updates
+        rules = shd.ShardingRules(batch=rules.batch, kv_seq=None,
+                                  seq=rules.seq, heads=rules.heads,
+                                  ff=rules.ff, vocab=rules.vocab,
+                                  experts=rules.experts)
+
+    def one(path, leaf):
+        name = None
+        for part in reversed(path):
+            key = getattr(part, "key", None)
+            if isinstance(key, str):
+                name = key
+                break
+        p = _CACHE_SPECS[name](rules) if name in _CACHE_SPECS else P()
+        return _ns(mesh, p, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def metrics_shardings(mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree)
+
+
+# ---------------------------------------------------------------------------
+# cell builders: returns (lowered, n_devices)
+# ---------------------------------------------------------------------------
+
+KEY_SDS = sds((2,), jnp.uint32)
+
+
+def build_train_cell(arch: ArchConfig, shape: ShapeConfig, mesh, rules,
+                     train_cfg: Optional[T.TrainConfig] = None):
+    tc = train_cfg or T.TrainConfig(microbatches=1)
+    state_shape = jax.eval_shape(
+        lambda k: T.init_state(arch, tc, k), KEY_SDS)
+    with shd.use_mesh(mesh, rules):
+        state_sh = T.state_shardings(mesh, state_shape)
+        batch_sds = input_specs(arch, shape)
+        batch_sh = batch_input_shardings(mesh, rules, batch_sds)
+        step = T.make_train_step(arch, tc)
+        metrics_shape = jax.eval_shape(step, state_shape, batch_sds)[1]
+        jitted = jax.jit(
+            step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, metrics_shardings(mesh, metrics_shape)),
+            donate_argnums=(0,))
+        lowered = jitted.lower(state_shape, batch_sds)
+    return lowered
+
+
+def build_prefill_cell(arch: ArchConfig, shape: ShapeConfig, mesh, rules):
+    b, l = shape.global_batch, shape.seq_len
+    params_shape = jax.eval_shape(
+        lambda k: M.init_params(arch, k, jnp.bfloat16), KEY_SDS)
+    cache_shape = jax.eval_shape(
+        lambda: M.init_cache(arch, b, l, jnp.bfloat16))
+
+    def serve_prefill(params, batch, cache):
+        logits, cache, enc_out = M.prefill(
+            params, arch, batch["tokens"], cache,
+            prefix_embeds=batch.get("patch_embeds"),
+            enc_frames=batch.get("enc_frames"))
+        return logits, cache
+
+    with shd.use_mesh(mesh, rules):
+        params_sh = T.param_shardings(mesh, params_shape)
+        batch_sds = input_specs(arch, shape)
+        batch_sh = batch_input_shardings(mesh, rules, batch_sds)
+        cache_sh = cache_shardings(mesh, rules, cache_shape)
+        logits_shape = jax.eval_shape(serve_prefill, params_shape,
+                                      batch_sds, cache_shape)[0]
+        logits_sh = _ns(mesh, P(rules.batch, rules.vocab),
+                        logits_shape.shape)
+        jitted = jax.jit(serve_prefill,
+                         in_shardings=(params_sh, batch_sh, cache_sh),
+                         out_shardings=(logits_sh, cache_sh),
+                         donate_argnums=(2,))
+        lowered = jitted.lower(params_shape, batch_sds, cache_shape)
+    return lowered
+
+
+def build_decode_cell(arch: ArchConfig, shape: ShapeConfig, mesh, rules):
+    b, l = shape.global_batch, shape.seq_len
+    params_shape = jax.eval_shape(
+        lambda k: M.init_params(arch, k, jnp.bfloat16), KEY_SDS)
+    cache_shape = jax.eval_shape(
+        lambda: M.init_cache(arch, b, l, jnp.bfloat16))
+
+    def serve_decode(params, batch, cache):
+        logits, cache = M.decode_step(
+            params, arch, batch["token"], batch["pos"], cache,
+            enc_out=batch.get("enc_out"))
+        return logits, cache
+
+    with shd.use_mesh(mesh, rules):
+        params_sh = T.param_shardings(mesh, params_shape)
+        batch_sds = input_specs(arch, shape)
+        batch_sh = batch_input_shardings(mesh, rules, batch_sds)
+        cache_sh = cache_shardings(mesh, rules, cache_shape)
+        logits_shape = jax.eval_shape(serve_decode, params_shape,
+                                      batch_sds, cache_shape)[0]
+        logits_sh = _ns(mesh, P(rules.batch, rules.vocab),
+                        logits_shape.shape)
+        jitted = jax.jit(serve_decode,
+                         in_shardings=(params_sh, batch_sh, cache_sh),
+                         out_shardings=(logits_sh, cache_sh),
+                         donate_argnums=(2,))
+        lowered = jitted.lower(params_shape, batch_sds, cache_shape)
+    return lowered
+
+
+def build_chipletgym_cell(mesh):
+    """The paper's own technique: distributed PPO update on the mesh."""
+    from repro.core import env as chipenv
+    from repro.rl import distributed as dist
+    from repro.rl import ppo
+    from repro.training.optim import Adam
+
+    cfg = ppo.PPOConfig(n_steps=128, n_envs=8, batch_size=64)
+    env_cfg = chipenv.EnvConfig()
+    optimizer = Adam(learning_rate=cfg.learning_rate,
+                     max_grad_norm=cfg.max_grad_norm)
+    carry_shape = jax.eval_shape(
+        lambda k: dist.init_carry(k, mesh, env_cfg, cfg, optimizer),
+        KEY_SDS)
+    update = dist.make_pod_update(mesh, env_cfg, cfg, optimizer)
+    return update.lower(carry_shape)
+
+
+# ---------------------------------------------------------------------------
+# the runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             out_dir: str, force: bool = False,
+             train_cfg: Optional[T.TrainConfig] = None,
+             tag: str = "") -> Optional[dict]:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(
+        out_dir, f"{arch_name}__{shape_name}__{mesh_name}{tag}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            cached = json.load(f)
+        if cached.get("status") in ("ok", "skipped"):
+            return cached           # only successful cells are cached
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    record = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+              "n_devices": int(n_dev), "status": "started", "tag": tag}
+
+    try:
+        if arch_name == "chipletgym":
+            arch = EXTRA_REGISTRY["chipletgym"]
+            shape = ShapeConfig("rl_rollout", 128, 8 * n_dev, "train")
+            t0 = time.time()
+            lowered = build_chipletgym_cell(mesh)
+        else:
+            arch = ARCH_REGISTRY[arch_name]
+            shape = SHAPES_BY_NAME[shape_name]
+            ok, reason = shape_applicable(arch, shape)
+            if not ok:
+                record.update(status="skipped", reason=reason)
+                with open(out_path, "w") as f:
+                    json.dump(record, f, indent=2)
+                return record
+            rules = cell_rules(mesh, shape)
+            t0 = time.time()
+            if shape.kind == "train":
+                lowered = build_train_cell(arch, shape, mesh, rules,
+                                           train_cfg)
+            elif shape.kind == "prefill":
+                lowered = build_prefill_cell(arch, shape, mesh, rules)
+            else:
+                lowered = build_decode_cell(arch, shape, mesh, rules)
+        lower_s = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        cost = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float))}
+        mem = compiled.memory_analysis()
+        mem_str = str(mem)
+        hlo_text = compiled.as_text()
+        # persist the optimized HLO so rooflines can be recomputed without
+        # recompiling (analysis/reanalyze path + hillclimb diffing)
+        import gzip
+        hlo_dir = os.path.join(out_dir, "hlo")
+        os.makedirs(hlo_dir, exist_ok=True)
+        with gzip.open(os.path.join(
+                hlo_dir, f"{arch_name}__{shape_name}__{mesh_name}{tag}"
+                ".hlo.gz"), "wt") as f:
+            f.write(hlo_text)
+        print(mem_str)
+        print({k: v for k, v in sorted(cost.items())
+               if k in ("flops", "bytes accessed", "utilization")})
+
+        if arch_name == "chipletgym":
+            coll, breakdown = __import__(
+                "repro.analysis.hlo", fromlist=["x"]).collective_bytes(
+                    hlo_text)
+            report_dict = {
+                "collective_bytes": coll,
+                "collective_breakdown": breakdown,
+                "flops_per_device": cost.get("flops", 0.0),
+                "bytes_per_device": cost.get("bytes accessed", 0.0),
+            }
+        else:
+            report = RL.analyze(arch, shape, mesh_name, n_dev, cost,
+                                hlo_text, mem_str)
+            report_dict = report.to_dict()
+
+        record.update(
+            status="ok", lower_s=lower_s, compile_s=compile_s,
+            cost=cost, memory_analysis=mem_str,
+            hlo_bytes=len(hlo_text), roofline=report_dict)
+    except Exception as e:                                # noqa: BLE001
+        record.update(status="error", error=repr(e),
+                      traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] FAILED {arch_name} {shape_name} {mesh_name}: {e}")
+
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = (sorted(ARCH_REGISTRY) + ["chipletgym"]) \
+        if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES_BY_NAME) if args.shape == "all" \
+        else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    summary = []
+    for multi in meshes:
+        for arch in archs:
+            for shape in (["rl_rollout"] if arch == "chipletgym"
+                          else shapes):
+                t0 = time.time()
+                rec = run_cell(arch, shape, multi, args.out,
+                               force=args.force)
+                status = rec["status"] if rec else "?"
+                print(f"[dryrun] {arch:26s} {shape:12s} "
+                      f"{'multi' if multi else 'single':6s} -> {status} "
+                      f"({time.time()-t0:.0f}s)", flush=True)
+                summary.append((arch, shape, multi, status))
+    bad = [s for s in summary if s[3] not in ("ok", "skipped")]
+    print(f"\n[dryrun] {len(summary)} cells: "
+          f"{sum(1 for s in summary if s[3]=='ok')} ok, "
+          f"{sum(1 for s in summary if s[3]=='skipped')} skipped, "
+          f"{len(bad)} failed")
+    for b in bad:
+        print("  FAILED:", b)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,36 @@
+"""Production mesh definitions (assignment MULTI-POD DRY-RUN spec).
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state. The caller (only
+``launch/dryrun.py`` and pod launchers) is responsible for having set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before the first
+jax import when running the dry-run on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 (256-chip pod) or 2x16x16 (2-pod, 512 chips) mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (launch/dryrun.py does this)")
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev_array, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Small mesh for CI tests (8 fake devices)."""
+    n = int(np.prod(shape))
+    dev_array = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(dev_array, axes)

@@ -1,0 +1,88 @@
+"""Training launcher: LM training or distributed Chiplet-Gym PPO.
+
+    # LM training (reduced config on CPU; full config on a pod):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \\
+        --steps 50 --reduced --ckpt-dir /tmp/ckpt
+
+    # the paper's own workload — PPO over Chiplet-Gym, data-parallel
+    # across all local devices:
+    PYTHONPATH=src python -m repro.launch.train --arch chipletgym --steps 5
+
+On a real pod this module is the per-host entrypoint
+(jax.distributed.initialize + the same code path).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_REGISTRY
+from repro.data.pipeline import DataConfig, DataLoader
+from repro.training import trainer as T
+from repro.training.compression import CompressionConfig
+
+
+def train_chipletgym(args):
+    from repro.core import env as chipenv
+    from repro.rl import distributed as dist
+    from repro.rl import ppo
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    cfg = ppo.PPOConfig(n_steps=256, n_envs=8)
+    print(f"[train] distributed PPO on {n_dev} device(s), "
+          f"{n_dev * cfg.n_envs} parallel environments")
+    carry, log = dist.train_distributed(
+        jax.random.PRNGKey(args.seed), mesh, chipenv.EnvConfig(), cfg,
+        n_updates=args.steps)
+    for i, r in enumerate(log.mean_episodic_reward):
+        print(f"  update {i}: mean episodic reward {float(r):.1f}, "
+              f"best {float(log.best_reward[i]):.1f}")
+    from repro.core import params as ps
+    print("\nbest design:")
+    print(ps.describe(ps.from_flat(carry.best_action)))
+
+
+def train_lm(args):
+    arch = ARCH_REGISTRY[args.arch]
+    if args.reduced:
+        arch = arch.reduced()
+    cfg = T.TrainConfig(
+        learning_rate=args.lr,
+        warmup_steps=max(args.steps // 20, 2),
+        total_steps=args.steps,
+        microbatches=args.microbatches,
+        checkpoint_every=max(args.steps // 4, 10),
+        compression=CompressionConfig(scheme=args.compression),
+        param_dtype=jnp.float32 if args.reduced else jnp.bfloat16)
+    data = DataLoader(DataConfig(batch_size=args.batch_size,
+                                 seq_len=args.seq_len,
+                                 vocab_size=arch.vocab_size), arch=arch)
+    T.train_loop(arch, cfg, data, ckpt_dir=args.ckpt_dir,
+                 n_steps=args.steps, key=jax.random.PRNGKey(args.seed))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="chipletgym")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "int8", "topk"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.arch == "chipletgym":
+        train_chipletgym(args)
+    else:
+        train_lm(args)
+
+
+if __name__ == "__main__":
+    main()

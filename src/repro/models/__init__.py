@@ -1,0 +1,2 @@
+"""LM substrate: layers, attention (GQA/MLA/SWA), Mamba-2 SSD, MoE,
+hybrid and enc-dec blocks, and the unified model API (model.py)."""

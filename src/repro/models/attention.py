@@ -1,0 +1,413 @@
+"""Attention mixers: GQA (+ sliding window) and MLA (DeepSeek-V2).
+
+Three execution paths share one set of parameters:
+  - train/prefill: q-chunked exact softmax attention (`chunked_attention`)
+    — memory-bounded for 32k prefill; on TPU the Pallas flash kernel is
+    dispatched instead (kernels/ops.attention),
+  - decode: single-token attention against a (possibly sequence-sharded)
+    KV cache updated in place with dynamic_update_slice,
+  - MLA keeps the compressed (kv_lora + rope) cache and re-expands K/V —
+    the paper-faithful trade of FLOPs for cache bytes.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.models import layers as L
+from repro.parallel.sharding import lshard
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# exact q-chunked attention (jnp path; flash kernel on TPU)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, causal: bool = True, window: int = 0,
+                      q_chunk: int = 512,
+                      q_offset: int = 0) -> jnp.ndarray:
+    """q: (B,H,L,D), k/v: (B,KV,S,D) -> (B,H,L,D); softmax in fp32.
+
+    ``q_offset`` positions q tokens at [q_offset, q_offset+L) within the
+    kv sequence (prefill continuation / decode batching).
+    """
+    b, h, q_len, d = q.shape
+    _, hkv, kv_len, _ = k.shape
+    group = h // hkv
+    scale = 1.0 / (d ** 0.5)
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    k_pos = jnp.arange(kv_len)
+
+    chunk = min(q_chunk, q_len)
+    while q_len % chunk:               # largest divisor of q_len <= q_chunk
+        chunk -= 1
+    n_chunks = max(q_len // chunk, 1)
+    qs = q.reshape(b, h, n_chunks, chunk, d)
+
+    def one_chunk(ci):
+        qc = qs[:, :, ci].astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qc,
+                       kr.astype(jnp.float32)) * scale
+        q_pos = q_offset + ci * chunk + jnp.arange(chunk)
+        rel = q_pos[:, None] - k_pos[None, :]
+        if causal:
+            s = jnp.where(rel >= 0, s, _NEG_INF)
+        if window > 0:
+            s = jnp.where(rel < window, s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+
+    from repro.models.tuning import TUNING
+    if TUNING.attn_chunk_remat:
+        # backward recomputes each chunk's scores (flash-style residuals)
+        one_chunk = jax.checkpoint(one_chunk, prevent_cse=False)
+
+    out = jax.lax.map(one_chunk, jnp.arange(n_chunks))     # (C, B, H, ch, D)
+    out = jnp.moveaxis(out, 0, 2).reshape(b, h, q_len, d)
+    return out.astype(q.dtype)
+
+
+def _full_attention(q, k, v, causal, window, q_offset=0):
+    """Dispatch: Pallas flash kernel on TPU, chunked jnp elsewhere."""
+    if jax.default_backend() == "tpu" and q_offset == 0:
+        return kops.attention(q, k, v, causal=causal, window=window)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.init_dense(ks[0], d, h * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": L.init_dense(ks[1], d, kv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": L.init_dense(ks[2], d, kv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": L.init_dense(ks[3], h * hd, d, dtype=dtype),
+    }
+
+
+def _qkv(p, cfg: ArchConfig, x, positions):
+    b, l, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = L.dense(p["wq"], x).reshape(b, l, h, hd).transpose(0, 2, 1, 3)
+    k = L.dense(p["wk"], x).reshape(b, l, kv, hd).transpose(0, 2, 1, 3)
+    v = L.dense(p["wv"], x).reshape(b, l, kv, hd).transpose(0, 2, 1, 3)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    q = lshard(q, "batch", "heads", None, None)
+    return q, k, v
+
+
+def gqa_forward(p, cfg: ArchConfig, x, window: int = 0,
+                causal: bool = True) -> jnp.ndarray:
+    """Training / self-contained prefill (positions 0..L-1)."""
+    b, l, _ = x.shape
+    positions = jnp.arange(l)[None, :]
+    q, k, v = _qkv(p, cfg, x, positions)
+    out = _full_attention(q, k, v, causal=causal, window=window)
+    out = out.transpose(0, 2, 1, 3).reshape(b, l, -1)
+    return L.dense(p["wo"], out)
+
+
+def init_gqa_cache(cfg: ArchConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> dict:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (batch, kv, max_len, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_prefill(p, cfg: ArchConfig, x, cache: dict, window: int = 0):
+    """Fill cache[0:L]; returns (out, cache)."""
+    b, l, _ = x.shape
+    positions = jnp.arange(l)[None, :]
+    q, k, v = _qkv(p, cfg, x, positions)
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0)),
+    }
+    out = _full_attention(q, k, v, causal=True, window=window)
+    out = out.transpose(0, 2, 1, 3).reshape(b, l, -1)
+    return L.dense(p["wo"], out), cache
+
+
+def gqa_decode(p, cfg: ArchConfig, x, cache: dict, pos,
+               window: int = 0):
+    """One-token decode. x: (B, 1, d); pos: scalar int position."""
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = L.dense(p["wq"], x).reshape(b, 1, h, hd).transpose(0, 2, 1, 3)
+    k = L.dense(p["wk"], x).reshape(b, 1, kv, hd).transpose(0, 2, 1, 3)
+    v = L.dense(p["wv"], x).reshape(b, 1, kv, hd).transpose(0, 2, 1, 3)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, pos, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, pos, 0))
+    cache = {"k": ck, "v": cv}
+
+    from repro.models.tuning import TUNING
+    k_pos = jnp.arange(ck.shape[2])
+    valid = k_pos <= pos
+    if window > 0:
+        valid &= (pos - k_pos) < window
+
+    if TUNING.gqa_grouped_einsum:
+        # grouped attention: no materialized K/V repeat across query heads
+        group = h // kv
+        if TUNING.decode_bf16_einsum:
+            # MXU-native: bf16 operands, fp32 accumulation — no f32 copy
+            # of the cache is ever materialized
+            qg = q.reshape(b, kv, group, hd)
+            s = jnp.einsum("bkgd,bksd->bkgs", qg, ck,
+                           preferred_element_type=jnp.float32) / (hd ** 0.5)
+            s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+            prob = jax.nn.softmax(s, axis=-1)
+            out = jnp.einsum("bkgs,bksd->bkgd", prob.astype(ck.dtype), cv,
+                             preferred_element_type=jnp.float32)
+        else:
+            qg = q.reshape(b, kv, group, hd).astype(jnp.float32)
+            s = jnp.einsum("bkgd,bksd->bkgs", qg,
+                           ck.astype(jnp.float32)) / (hd ** 0.5)
+            s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+            prob = jax.nn.softmax(s, axis=-1)
+            out = jnp.einsum("bkgs,bksd->bkgd", prob,
+                             cv.astype(jnp.float32))
+        out = out.reshape(b, h, 1, hd)
+    else:
+        kr = jnp.repeat(ck, h // kv, axis=1)
+        vr = jnp.repeat(cv, h // kv, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                       kr.astype(jnp.float32)) / (hd ** 0.5)
+        s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+        prob = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", prob, vr.astype(jnp.float32))
+    out = out.astype(x.dtype).transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    return L.dense(p["wo"], out), cache
+
+
+# ---------------------------------------------------------------------------
+# sliding-window ring-buffer cache: the KV cache holds only `window` slots;
+# token t lives in slot t % window. This is what bounds decode memory for
+# the SWA archs (h2o-danube, hymba) — incl. the long_500k shape.
+# ---------------------------------------------------------------------------
+
+def init_gqa_ring_cache(cfg: ArchConfig, batch: int, window: int,
+                        dtype=jnp.bfloat16) -> dict:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (batch, kv, window, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_prefill_ring(p, cfg: ArchConfig, x, cache: dict, window: int):
+    """Windowed prefill; stores the last `window` tokens into the ring."""
+    b, l, _ = x.shape
+    positions = jnp.arange(l)[None, :]
+    q, k, v = _qkv(p, cfg, x, positions)
+    out = _full_attention(q, k, v, causal=True, window=window)
+
+    w = cache["k"].shape[2]
+    if l >= w:
+        tail_k, tail_v = k[:, :, l - w:], v[:, :, l - w:]
+        # token t -> slot t % w; roll so slot order matches
+        shift = (l - w) % w
+        ck = jnp.roll(tail_k, shift=shift, axis=2)
+        cv = jnp.roll(tail_v, shift=shift, axis=2)
+        cache = {"k": ck.astype(cache["k"].dtype),
+                 "v": cv.astype(cache["v"].dtype)}
+    else:
+        cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0)),
+        }
+    out = out.transpose(0, 2, 1, 3).reshape(b, l, -1)
+    return L.dense(p["wo"], out), cache
+
+
+def gqa_decode_ring(p, cfg: ArchConfig, x, cache: dict, pos, window: int):
+    """One-token decode against a ring cache of `window` slots."""
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    w = cache["k"].shape[2]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = L.dense(p["wq"], x).reshape(b, 1, h, hd).transpose(0, 2, 1, 3)
+    k = L.dense(p["wk"], x).reshape(b, 1, kv, hd).transpose(0, 2, 1, 3)
+    v = L.dense(p["wv"], x).reshape(b, 1, kv, hd).transpose(0, 2, 1, 3)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    slot = jnp.mod(pos, w)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, slot, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, slot, 0))
+    cache = {"k": ck, "v": cv}
+
+    kr = jnp.repeat(ck, h // kv, axis=1)
+    vr = jnp.repeat(cv, h // kv, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / (hd ** 0.5)
+    # absolute position held by slot s: latest t <= pos with t % w == s
+    slots = jnp.arange(w)
+    t_slot = pos - jnp.mod(pos - slots, w)
+    valid = (t_slot >= 0) & (pos - t_slot < window)
+    s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", prob, vr.astype(jnp.float32))
+    out = out.astype(x.dtype).transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    return L.dense(p["wo"], out), cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): compressed KV cache (kv_lora + shared rope key)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    hd, rhd, vhd = cfg.head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.init_dense(ks[0], d, h * (hd + rhd), dtype=dtype),
+        "wdkv": L.init_dense(ks[1], d, kvr + rhd, dtype=dtype),
+        "wukv": L.init_dense(ks[2], kvr, h * (hd + vhd), dtype=dtype),
+        "wo": L.init_dense(ks[3], h * vhd, d, dtype=dtype),
+        "kv_norm": L.init_norm(None, kvr, "rmsnorm"),
+    }
+
+
+def _mla_qkv(p, cfg: ArchConfig, x, positions):
+    b, l, _ = x.shape
+    h = cfg.n_heads
+    hd, rhd, vhd = cfg.head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+
+    q = L.dense(p["wq"], x).reshape(b, l, h, hd + rhd).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = L.dense(p["wdkv"], x)                       # (B, L, kvr + rhd)
+    c_kv = L.apply_norm(p["kv_norm"], dkv[..., :kvr], "rmsnorm")
+    k_rope = L.apply_rope(dkv[..., None, kvr:].transpose(0, 2, 1, 3),
+                          positions, cfg.rope_theta)  # (B, 1, L, rhd)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_expand(p, cfg: ArchConfig, c_kv):
+    """c_kv (B, S, kvr) -> k_nope (B,H,S,hd), v (B,H,S,vhd)."""
+    b, s, _ = c_kv.shape
+    h, hd, vhd = cfg.n_heads, cfg.head_dim, cfg.v_head_dim
+    kv = L.dense(p["wukv"], c_kv).reshape(b, s, h, hd + vhd)
+    kv = kv.transpose(0, 2, 1, 3)
+    return kv[..., :hd], kv[..., hd:]
+
+
+def _mla_attend(cfg, q_nope, q_rope, k_nope, k_rope, v, pos_q, kv_len,
+                causal=True):
+    h = cfg.n_heads
+    scale = 1.0 / ((cfg.head_dim + cfg.qk_rope_head_dim) ** 0.5)
+    s = (jnp.einsum("bhqd,bhkd->bhqk", q_nope.astype(jnp.float32),
+                    k_nope.astype(jnp.float32))
+         + jnp.einsum("bhqd,bokd->bhqk", q_rope.astype(jnp.float32),
+                      k_rope.astype(jnp.float32))) * scale
+    k_pos = jnp.arange(kv_len)[None, None, None, :]
+    if causal:
+        s = jnp.where(pos_q[None, None, :, None] >= k_pos, s, _NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", prob, v.astype(jnp.float32))
+
+
+def mla_forward(p, cfg: ArchConfig, x) -> jnp.ndarray:
+    b, l, _ = x.shape
+    positions = jnp.arange(l)[None, :]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    k_nope, v = _mla_expand(p, cfg, c_kv)
+    out = _mla_attend(cfg, q_nope, q_rope, k_nope, k_rope, v,
+                      jnp.arange(l), l)
+    out = out.astype(x.dtype).transpose(0, 2, 1, 3).reshape(b, l, -1)
+    return L.dense(p["wo"], out)
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, 1, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_prefill(p, cfg: ArchConfig, x, cache: dict):
+    b, l, _ = x.shape
+    positions = jnp.arange(l)[None, :]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0)),
+        "k_rope": jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+            (0, 0, 0, 0)),
+    }
+    k_nope, v = _mla_expand(p, cfg, c_kv)
+    out = _mla_attend(cfg, q_nope, q_rope, k_nope, k_rope, v,
+                      jnp.arange(l), l)
+    out = out.astype(x.dtype).transpose(0, 2, 1, 3).reshape(b, l, -1)
+    return L.dense(p["wo"], out), cache
+
+
+def mla_decode(p, cfg: ArchConfig, x, cache: dict, pos):
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0)),
+        "k_rope": jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+            (0, 0, pos, 0)),
+    }
+    # re-expand K/V from the compressed cache (MLA's FLOPs-for-bytes trade)
+    k_nope, v = _mla_expand(p, cfg, cache["c_kv"])
+    kv_len = cache["c_kv"].shape[1]
+    k_pos = jnp.arange(kv_len)[None, None, None, :]
+    scale = 1.0 / ((cfg.head_dim + cfg.qk_rope_head_dim) ** 0.5)
+    s = (jnp.einsum("bhqd,bhkd->bhqk", q_nope.astype(jnp.float32),
+                    k_nope.astype(jnp.float32))
+         + jnp.einsum("bhqd,bokd->bhqk", q_rope.astype(jnp.float32),
+                      cache["k_rope"].astype(jnp.float32))) * scale
+    s = jnp.where(k_pos <= pos, s, _NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", prob, v.astype(jnp.float32))
+    out = out.astype(x.dtype).transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    return L.dense(p["wo"], out), cache
+
+
+# ---------------------------------------------------------------------------
+# cross attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+def cross_forward(p, cfg: ArchConfig, x, enc_kv: Tuple[jnp.ndarray, jnp.ndarray]):
+    """Decoder cross-attn; enc_kv = (k, v) precomputed from encoder output."""
+    b, l, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = L.dense(p["wq"], x).reshape(b, l, h, hd).transpose(0, 2, 1, 3)
+    k, v = enc_kv
+    out = _full_attention(q, k, v, causal=False, window=0)
+    out = out.transpose(0, 2, 1, 3).reshape(b, l, -1)
+    return L.dense(p["wo"], out)
+
+
+def cross_kv(p, cfg: ArchConfig, enc_out):
+    b, s, _ = enc_out.shape
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = L.dense(p["wk"], enc_out).reshape(b, s, kv, hd).transpose(0, 2, 1, 3)
+    v = L.dense(p["wv"], enc_out).reshape(b, s, kv, hd).transpose(0, 2, 1, 3)
+    return k, v

@@ -1,0 +1,228 @@
+"""Transformer / Mamba / hybrid / enc-dec blocks + the layer plan.
+
+A *layer plan* assigns each layer a static kind (mixer flavour, window,
+MoE or dense FFN); consecutive identical kinds form *segments* whose
+stacked parameters run under one ``lax.scan`` (+remat) — this keeps the
+94-layer MoE's HLO compact enough to compile 512-way in the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.parallel.sharding import lshard
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerKind:
+    mixer: str = "attention"      # attention | mamba2 | hybrid_parallel
+    window: int = 0               # sliding window (0 = full)
+    moe: bool = False
+    cross: bool = False           # decoder block with cross-attn (enc-dec)
+    causal: bool = True
+
+
+def layer_plan(cfg: ArchConfig) -> List[LayerKind]:
+    """Per-decoder-layer kinds for an architecture."""
+    plan = []
+    for i in range(cfg.n_layers):
+        window = cfg.sliding_window
+        if window and cfg.global_layer_every:
+            if i % cfg.global_layer_every == 0 or i == cfg.n_layers - 1:
+                window = 0                       # periodic global layers
+        plan.append(LayerKind(
+            mixer=cfg.mixer if cfg.mixer != "attention" else "attention",
+            window=window,
+            moe=cfg.n_experts > 0 and i >= cfg.first_dense_layers,
+            cross=cfg.is_encdec,
+        ))
+    return plan
+
+
+def segments(plan: List[LayerKind]) -> List[Tuple[LayerKind, int]]:
+    """Group consecutive identical kinds -> [(kind, count), ...]."""
+    segs: List[Tuple[LayerKind, int]] = []
+    for kind in plan:
+        if segs and segs[-1][0] == kind:
+            segs[-1] = (kind, segs[-1][1] + 1)
+        else:
+            segs.append((kind, 1))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# single-layer init / forward
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ArchConfig, kind: LayerKind,
+               dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 6)
+    p = {"norm1": L.init_norm(None, cfg.d_model, cfg.norm)}
+    if kind.mixer in ("attention", "hybrid_parallel"):
+        p["attn"] = (attn.init_mla(ks[0], cfg, dtype)
+                     if cfg.attention == "mla"
+                     else attn.init_gqa(ks[0], cfg, dtype))
+    if kind.mixer in ("mamba2", "hybrid_parallel"):
+        p["ssm"] = ssm_lib.init_mamba2(ks[1], cfg, dtype)
+    if kind.mixer != "mamba2":                       # mamba blocks: no FFN
+        p["norm2"] = L.init_norm(None, cfg.d_model, cfg.norm)
+        if kind.moe:
+            p["moe"] = moe_lib.init_moe(ks[2], cfg, dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.act,
+                                  dtype)
+    if kind.cross:
+        p["norm_x"] = L.init_norm(None, cfg.d_model, cfg.norm)
+        p["xattn"] = attn.init_gqa(ks[3], cfg, dtype)
+    return p
+
+
+def _mixer_forward(p, cfg, kind: LayerKind, h):
+    if kind.mixer == "attention":
+        if cfg.attention == "mla":
+            return attn.mla_forward(p["attn"], cfg, h)
+        return attn.gqa_forward(p["attn"], cfg, h, window=kind.window,
+                                causal=kind.causal)
+    if kind.mixer == "mamba2":
+        return ssm_lib.mamba2_forward(p["ssm"], cfg, h)
+    # hybrid_parallel (Hymba): attention and SSM heads fused by averaging
+    a = attn.gqa_forward(p["attn"], cfg, h, window=kind.window)
+    s = ssm_lib.mamba2_forward(p["ssm"], cfg, h)
+    return 0.5 * (a + s)
+
+
+def block_forward(p, cfg: ArchConfig, kind: LayerKind, x,
+                  enc_kv=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pre-norm residual block. Returns (x, moe_aux_loss)."""
+    x = lshard(x, "batch", "seq", None)
+    h = L.apply_norm(p["norm1"], x, cfg.norm)
+    x = x + _mixer_forward(p, cfg, kind, h)
+    if kind.cross and enc_kv is not None:
+        h = L.apply_norm(p["norm_x"], x, cfg.norm)
+        x = x + attn.cross_forward(p["xattn"], cfg, h, enc_kv)
+    aux = jnp.float32(0.0)
+    if kind.mixer != "mamba2":
+        h = L.apply_norm(p["norm2"], x, cfg.norm)
+        if kind.moe:
+            y, aux = moe_lib.moe_forward(p["moe"], cfg, h)
+        else:
+            y = L.apply_mlp(p["mlp"], h, act=cfg.act)
+        x = x + y
+    x = lshard(x, "batch", "seq", None)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# caches (decode path)
+# ---------------------------------------------------------------------------
+
+def init_block_cache(cfg: ArchConfig, kind: LayerKind, batch: int,
+                     max_len: int, dtype=jnp.bfloat16) -> dict:
+    cache = {}
+    if kind.mixer in ("attention", "hybrid_parallel"):
+        eff_len = max_len if kind.window == 0 else min(max_len, kind.window)
+        if cfg.attention == "mla":
+            cache["attn"] = attn.init_mla_cache(cfg, batch, max_len, dtype)
+        else:
+            cache["attn"] = attn.init_gqa_cache(cfg, batch, eff_len, dtype)
+    if kind.mixer in ("mamba2", "hybrid_parallel"):
+        cache["ssm"] = ssm_lib.init_mamba2_state(cfg, batch)
+    return cache
+
+
+def _attn_decode(p, cfg, kind, h, cache, pos):
+    if cfg.attention == "mla":
+        return attn.mla_decode(p["attn"], cfg, h, cache, pos)
+    if kind.window > 0:
+        # ring-buffer cache for sliding windows (slot = pos % ring size)
+        return attn.gqa_decode_ring(p["attn"], cfg, h, cache, pos,
+                                    kind.window)
+    return attn.gqa_decode(p["attn"], cfg, h, cache, pos)
+
+
+def block_decode(p, cfg: ArchConfig, kind: LayerKind, x, cache: dict, pos,
+                 enc_kv=None):
+    """One-token decode through a block; returns (x, cache)."""
+    h = L.apply_norm(p["norm1"], x, cfg.norm)
+    new_cache = dict(cache)
+    if kind.mixer == "attention":
+        out, new_cache["attn"] = _attn_decode(p, cfg, kind, h,
+                                              cache["attn"], pos)
+    elif kind.mixer == "mamba2":
+        out, new_cache["ssm"] = ssm_lib.mamba2_decode(p["ssm"], cfg, h,
+                                                      cache["ssm"])
+    else:
+        a, new_cache["attn"] = _attn_decode(p, cfg, kind, h,
+                                            cache["attn"], pos)
+        s, new_cache["ssm"] = ssm_lib.mamba2_decode(p["ssm"], cfg, h,
+                                                    cache["ssm"])
+        out = 0.5 * (a + s)
+    x = x + out
+    if kind.cross and enc_kv is not None:
+        h = L.apply_norm(p["norm_x"], x, cfg.norm)
+        x = x + attn.cross_forward(p["xattn"], cfg, h, enc_kv)
+    if kind.mixer != "mamba2":
+        h = L.apply_norm(p["norm2"], x, cfg.norm)
+        if kind.moe:
+            y, _ = moe_lib.moe_forward(p["moe"], cfg, h)
+        else:
+            y = L.apply_mlp(p["mlp"], h, act=cfg.act)
+        x = x + y
+    return x, new_cache
+
+
+def block_prefill(p, cfg: ArchConfig, kind: LayerKind, x, cache: dict,
+                  enc_kv=None):
+    """Prefill: forward + cache fill. Returns (x, cache)."""
+    h = L.apply_norm(p["norm1"], x, cfg.norm)
+    new_cache = dict(cache)
+    if kind.mixer == "attention":
+        if cfg.attention == "mla":
+            out, new_cache["attn"] = attn.mla_prefill(p["attn"], cfg, h,
+                                                      cache["attn"])
+        else:
+            out, new_cache["attn"] = _gqa_prefill_any(p, cfg, kind, h,
+                                                      cache["attn"])
+    elif kind.mixer == "mamba2":
+        out, new_cache["ssm"] = _ssm_prefill(p, cfg, h, cache["ssm"])
+    else:
+        a, new_cache["attn"] = _gqa_prefill_any(p, cfg, kind, h,
+                                                cache["attn"])
+        s, new_cache["ssm"] = _ssm_prefill(p, cfg, h, cache["ssm"])
+        out = 0.5 * (a + s)
+    x = x + out
+    if kind.cross and enc_kv is not None:
+        h = L.apply_norm(p["norm_x"], x, cfg.norm)
+        x = x + attn.cross_forward(p["xattn"], cfg, h, enc_kv)
+    aux = jnp.float32(0.0)
+    if kind.mixer != "mamba2":
+        h = L.apply_norm(p["norm2"], x, cfg.norm)
+        if kind.moe:
+            y, aux = moe_lib.moe_forward(p["moe"], cfg, h)
+        else:
+            y = L.apply_mlp(p["mlp"], h, act=cfg.act)
+        x = x + y
+    return x, new_cache
+
+
+def _gqa_prefill_any(p, cfg, kind, h, cache):
+    if kind.window > 0:
+        return attn.gqa_prefill_ring(p["attn"], cfg, h, cache, kind.window)
+    return attn.gqa_prefill(p["attn"], cfg, h, cache, window=kind.window)
+
+
+def _ssm_prefill(p, cfg, h, state):
+    """Prefill for SSM: run the full scan, then rebuild the decode state
+    by replaying the tail (conv) and folding the scan's final SSD state."""
+    out = ssm_lib.mamba2_forward(p["ssm"], cfg, h)
+    state = ssm_lib.mamba2_prefill_state(p["ssm"], cfg, h)
+    return out, state

@@ -1,0 +1,139 @@
+"""Shared NN layers: norms, MLPs, rotary embeddings, initializers.
+
+Conventions:
+  - params are plain nested dicts of jnp arrays (bf16 weights by default,
+    fp32 norm scales), stackable on a leading layer axis for scan,
+  - all matmuls go through ``dense`` which applies tensor-parallel
+    sharding constraints via parallel/sharding.lshard,
+  - math that affects numerics (norm statistics, softmax, rotary) is fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import lshard
+
+Param = dict
+
+
+def truncnorm_init(key, shape, dtype=jnp.bfloat16, scale: float = 0.02):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(key, dim: int, kind: str = "rmsnorm") -> Param:
+    del key
+    p = {"scale": jnp.ones((dim,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), jnp.float32)
+    return p
+
+
+def apply_norm(p: Param, x: jnp.ndarray, kind: str = "rmsnorm",
+               eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) / jnp.sqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense / MLP
+# ---------------------------------------------------------------------------
+
+def init_dense(key, d_in: int, d_out: int, bias: bool = False,
+               dtype=jnp.bfloat16, scale: float = 0.02) -> Param:
+    p = {"w": truncnorm_init(key, (d_in, d_out), dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Param, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str = "swiglu",
+             dtype=jnp.bfloat16) -> Param:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "wi": init_dense(k1, d_model, d_ff, dtype=dtype),
+            "wg": init_dense(k2, d_model, d_ff, dtype=dtype),
+            "wo": init_dense(k3, d_ff, d_model, dtype=dtype),
+        }
+    return {
+        "wi": init_dense(k1, d_model, d_ff, bias=True, dtype=dtype),
+        "wo": init_dense(k2, d_ff, d_model, bias=True, dtype=dtype),
+    }
+
+
+def apply_mlp(p: Param, x: jnp.ndarray, act: str = "swiglu") -> jnp.ndarray:
+    """x: (..., d_model); hidden sharded over the ff/model axis."""
+    if act == "swiglu":
+        h = jax.nn.silu(dense(p["wg"], x)) * dense(p["wi"], x)
+    else:
+        h = jax.nn.gelu(dense(p["wi"], x))
+    if h.ndim == 3:
+        h = lshard(h, "batch", None, "ff")
+    return dense(p["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10_000.0) -> jnp.ndarray:
+    """x: (B, H, L, D), positions: (B, L) or (L,). fp32 rotation."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                     # (D/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, L, D/2)
+    cos = jnp.cos(angles)[:, None, :, :]                   # (B, 1, L, D/2)
+    sin = jnp.sin(angles)[:, None, :, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., 0::2], xf[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int,
+                   dtype=jnp.bfloat16) -> Param:
+    return {"table": truncnorm_init(key, (vocab, d_model), dtype)}
+
+
+def embed(p: Param, tokens: jnp.ndarray) -> jnp.ndarray:
+    return p["table"][tokens]
+
+
+def unembed(p: Param, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits in fp32 (numerics) — caller is responsible for chunking."""
+    return (x.astype(jnp.float32)
+            @ p["table"].astype(jnp.float32).T)

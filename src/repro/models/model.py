@@ -1,0 +1,280 @@
+"""The LM model: init / train loss / prefill / decode for all 10 archs.
+
+Structure (decoder-only; seamless adds an encoder stack + cross-attn):
+
+    tokens -> embed -> [frontend embeds prepended] -> segment scans
+           -> final norm -> (tied or separate) unembed
+
+Key scalability choices:
+  - scan-over-layers per homogeneous segment with ``jax.checkpoint``
+    (remat) around the block body: activation memory = one layer boundary
+    per segment layer, HLO size = O(#segments), not O(#layers),
+  - the LM loss never materializes (B, L, V) logits: a seq-chunked scan
+    computes fp32 logits per chunk (vocab sharded over "model"),
+  - decode caches are stacked per segment so the decode step is also a
+    scan; all cache updates are in-place dynamic_update_slice.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.parallel.sharding import lshard
+
+PyTree = dict
+LOSS_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_segment(key, cfg: ArchConfig, kind: B.LayerKind, count: int,
+                  dtype) -> PyTree:
+    keys = jax.random.split(key, count)
+    per_layer = [B.init_block(k, cfg, kind, dtype) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_layer)
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> PyTree:
+    plan = B.layer_plan(cfg)
+    segs = B.segments(plan)
+    n_seg = len(segs)
+    keys = jax.random.split(key, n_seg + 4)
+
+    params: PyTree = {
+        "embed": L.init_embedding(keys[0], cfg.vocab_size, cfg.d_model,
+                                  dtype),
+        "final_norm": L.init_norm(None, cfg.d_model, cfg.norm),
+        "segments": [
+            _init_segment(keys[2 + i], cfg, kind, count, dtype)
+            for i, (kind, count) in enumerate(segs)
+        ],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_dense(keys[1], cfg.d_model,
+                                         cfg.vocab_size, dtype=dtype)
+    if cfg.is_encdec:
+        enc_kind = B.LayerKind(mixer="attention", causal=False)
+        params["encoder"] = {
+            "segments": [_init_segment(keys[n_seg + 2], cfg, enc_kind,
+                                       cfg.encoder_layers, dtype)],
+            "final_norm": L.init_norm(None, cfg.d_model, cfg.norm),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (training)
+# ---------------------------------------------------------------------------
+
+def _scan_segment(seg_params, cfg: ArchConfig, kind: B.LayerKind, x,
+                  enc_kv=None):
+    """Remat-scan over a stacked segment; accumulates MoE aux loss."""
+
+    def body(x, p_layer):
+        return B.block_forward(p_layer, cfg, kind, x, enc_kv=enc_kv)
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    x, auxs = jax.lax.scan(body, x, seg_params)
+    return x, jnp.sum(auxs)
+
+
+def _encode(params, cfg: ArchConfig, frames):
+    """Encoder stack over precomputed frame embeddings (B, S, d)."""
+    enc_kind = B.LayerKind(mixer="attention", causal=False)
+    x = frames
+    for seg in params["encoder"]["segments"]:
+        x, _ = _scan_segment(seg, cfg, enc_kind, x)
+    return L.apply_norm(params["encoder"]["final_norm"], x, cfg.norm)
+
+
+def backbone(params: PyTree, cfg: ArchConfig, tokens: jnp.ndarray,
+             prefix_embeds: Optional[jnp.ndarray] = None,
+             enc_frames: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B, L) -> hidden (B, L', d), aux loss. L' includes prefix."""
+    x = L.embed(params["embed"], tokens)
+    if prefix_embeds is not None:        # VLM patches / modality stub
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = lshard(x, "batch", "seq", None)
+
+    enc_kv = None
+    if cfg.is_encdec:
+        assert enc_frames is not None, "enc-dec arch needs encoder frames"
+        enc_out = _encode(params, cfg, enc_frames)
+        # pre-compute shared cross K/V from the first decoder segment's
+        # cross projections (weights per layer; K/V computed inside blocks
+        # would recompute per layer — we pass enc_out and let each layer
+        # derive K/V lazily through its own wk/wv)
+        enc_kv = enc_out
+
+    plan = B.layer_plan(cfg)
+    segs = B.segments(plan)
+    aux_total = jnp.float32(0.0)
+    for seg_params, (kind, _count) in zip(params["segments"], segs):
+        if cfg.is_encdec:
+            x, aux = _scan_segment_encdec(seg_params, cfg, kind, x, enc_kv)
+        else:
+            x, aux = _scan_segment(seg_params, cfg, kind, x)
+        aux_total = aux_total + aux
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    return x, aux_total
+
+
+def _scan_segment_encdec(seg_params, cfg, kind, x, enc_out):
+    def body(x, p_layer):
+        kv = attn_lib.cross_kv(p_layer["xattn"], cfg, enc_out)
+        return B.block_forward(p_layer, cfg, kind, x, enc_kv=kv)
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    x, auxs = jax.lax.scan(body, x, seg_params)
+    return x, jnp.sum(auxs)
+
+
+def _unembed_chunk(params, cfg: ArchConfig, h_chunk):
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], h_chunk)
+    else:
+        logits = L.dense(params["lm_head"], h_chunk).astype(jnp.float32)
+    return lshard(logits, "batch", None, "vocab")
+
+
+def lm_loss(params: PyTree, cfg: ArchConfig, hidden: jnp.ndarray,
+            labels: jnp.ndarray, mask: Optional[jnp.ndarray] = None
+            ) -> jnp.ndarray:
+    """Seq-chunked fp32 cross-entropy; never materializes full logits."""
+    bsz, seq, _ = hidden.shape
+    chunk = min(LOSS_CHUNK, seq)
+    while seq % chunk:                 # largest divisor of seq <= LOSS_CHUNK
+        chunk -= 1
+    n_chunks = seq // chunk
+    if mask is None:
+        mask = jnp.ones((bsz, seq), jnp.float32)
+
+    def chunk_loss(ci):
+        h = jax.lax.dynamic_slice_in_dim(hidden, ci * chunk, chunk, 1)
+        lab = jax.lax.dynamic_slice_in_dim(labels, ci * chunk, chunk, 1)
+        msk = jax.lax.dynamic_slice_in_dim(mask, ci * chunk, chunk, 1)
+        logits = _unembed_chunk(params, cfg, h)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - gold) * msk), jnp.sum(msk)
+
+    from repro.models.tuning import TUNING
+    if TUNING.loss_remat:
+        # backward recomputes chunk logits instead of stacking residuals
+        chunk_loss = jax.checkpoint(chunk_loss, prevent_cse=False)
+
+    def scan_body(carry, ci):
+        tot, cnt = carry
+        l, c = chunk_loss(ci)
+        return (tot + l, cnt + c), None
+
+    (total, count), _ = jax.lax.scan(
+        scan_body, (jnp.float32(0.0), jnp.float32(0.0)),
+        jnp.arange(n_chunks))
+    return total / jnp.maximum(count, 1.0)
+
+
+def train_loss(params: PyTree, cfg: ArchConfig, batch: Dict,
+               aux_coef: float = 0.01) -> jnp.ndarray:
+    """batch: tokens (B,L), labels (B,L) [+ patch_embeds / enc_frames]."""
+    hidden, aux = backbone(
+        params, cfg, batch["tokens"],
+        prefix_embeds=batch.get("patch_embeds"),
+        enc_frames=batch.get("enc_frames"))
+    n_prefix = 0 if batch.get("patch_embeds") is None \
+        else batch["patch_embeds"].shape[1]
+    if n_prefix:
+        hidden = hidden[:, n_prefix:]
+    loss = lm_loss(params, cfg, hidden, batch["labels"],
+                   batch.get("loss_mask"))
+    return loss + aux_coef * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> List[PyTree]:
+    plan = B.layer_plan(cfg)
+    segs = B.segments(plan)
+    caches = []
+    for kind, count in segs:
+        per_layer = B.init_block_cache(cfg, kind, batch, max_len, dtype)
+        caches.append(jax.tree_util.tree_map(
+            lambda x: jnp.tile(x[None], (count,) + (1,) * x.ndim),
+            per_layer))
+    return caches
+
+
+def prefill(params: PyTree, cfg: ArchConfig, tokens: jnp.ndarray,
+            cache: List[PyTree],
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            enc_frames: Optional[jnp.ndarray] = None):
+    """Consume the prompt; returns (last-token logits, cache, enc_out)."""
+    x = L.embed(params["embed"], tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = lshard(x, "batch", "seq", None)
+
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = _encode(params, cfg, enc_frames)
+
+    plan = B.layer_plan(cfg)
+    segs = B.segments(plan)
+    new_caches = []
+    for seg_params, seg_cache, (kind, _c) in zip(params["segments"], cache,
+                                                 segs):
+        def body(x, layer):
+            p_layer, c_layer = layer
+            kv = (attn_lib.cross_kv(p_layer["xattn"], cfg, enc_out)
+                  if kind.cross else None)
+            x, new_c = B.block_prefill(p_layer, cfg, kind, x, c_layer,
+                                       enc_kv=kv)
+            return x, new_c
+
+        x, new_c = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_caches.append(new_c)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = _unembed_chunk(params, cfg, x[:, -1:, :])
+    return logits[:, 0], new_caches, enc_out
+
+
+def decode_step(params: PyTree, cfg: ArchConfig, token: jnp.ndarray,
+                pos, cache: List[PyTree],
+                enc_out: Optional[jnp.ndarray] = None):
+    """token (B,) int32, pos scalar -> (logits (B, V'), new cache)."""
+    x = L.embed(params["embed"], token[:, None])
+    plan = B.layer_plan(cfg)
+    segs = B.segments(plan)
+    new_caches = []
+    for seg_params, seg_cache, (kind, _c) in zip(params["segments"], cache,
+                                                 segs):
+        def body(x, layer):
+            p_layer, c_layer = layer
+            kv = (attn_lib.cross_kv(p_layer["xattn"], cfg, enc_out)
+                  if kind.cross else None)
+            x, new_c = B.block_decode(p_layer, cfg, kind, x, c_layer, pos,
+                                      enc_kv=kv)
+            return x, new_c
+
+        x, new_c = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_caches.append(new_c)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = _unembed_chunk(params, cfg, x)
+    return logits[:, 0], new_caches
+
+
+def param_count_actual(params: PyTree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,200 @@
+"""Mixture-of-Experts FFN with GShard-style capacity dispatch (EP-ready).
+
+Token-choice top-k routing with per-group capacity: tokens are grouped by
+batch row (G = batch, S = seq), each expert accepts at most
+C = ceil(S * k / E * capacity_factor) tokens per group; overflow drops
+(standard Switch/GShard semantics). The dispatch/combine einsums are the
+all-to-all points — with experts sharded over the "model" mesh axis
+(parallel/sharding: ``experts -> model``), GSPMD emits the EP all-to-alls
+automatically.
+
+Shapes (bf16 dispatch masks keep the transient footprint at
+G x S x E x C / device-shards — the dominant MoE memory term, see
+EXPERIMENTS.md §Perf for the capacity-factor hillclimb):
+
+    x        (G, S, d)
+    gates    (G, S, E)
+    dispatch (G, S, E, C)   one-hot   combine (G, S, E, C) weighted
+    expert_in  (E, G, C, d) -> FFN -> expert_out (E, G, C, d)
+
+The router aux loss (load-balance) is returned for the trainer.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.parallel.sharding import lshard
+
+CAPACITY_FACTOR = 1.25
+
+
+def init_moe(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L.truncnorm_init(ks[0], (d, e), jnp.float32),
+        "wi": L.truncnorm_init(ks[1], (e, d, ff), dtype),
+        "wg": L.truncnorm_init(ks[2], (e, d, ff), dtype),
+        "wo": L.truncnorm_init(ks[3], (e, ff, d), dtype),
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared"] = L.init_mlp(ks[4], d,
+                                 cfg.n_shared_experts * cfg.moe_d_ff,
+                                 act=cfg.act, dtype=dtype)
+    return p
+
+
+def _capacity(cfg: ArchConfig, s: int) -> int:
+    from repro.models.tuning import TUNING
+    c = int(s * cfg.n_experts_per_tok * TUNING.moe_capacity_factor
+            / max(cfg.n_experts, 1))
+    return max(c, 1)
+
+
+def moe_forward(p, cfg: ArchConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (G, S, d) -> (out (G, S, d), aux_loss scalar)."""
+    from repro.models.tuning import TUNING
+    if TUNING.moe_scatter_dispatch:
+        return moe_forward_scatter(p, cfg, x)
+    g, s, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_per_tok
+    c = _capacity(cfg, s)
+
+    logits = (x.astype(jnp.float32) @ p["router"])        # (G, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k selection; renormalized combine weights
+    top_w, top_idx = jax.lax.top_k(probs, k)              # (G, S, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum(frac_tokens * frac_probs)
+    onehot_all = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)  # (G,S,k,E)
+    token_frac = onehot_all.sum(2).mean(axis=(0, 1))      # (E,)
+    prob_frac = probs.mean(axis=(0, 1))
+    aux = e * jnp.sum(token_frac * prob_frac)
+
+    # capacity assignment: position of each (token, slot) in its expert
+    # queue, computed over the flattened (S*k) routing decisions per group
+    flat_idx = top_idx.reshape(g, s * k)                  # (G, S*k)
+    onehot = jax.nn.one_hot(flat_idx, e, dtype=jnp.float32)
+    pos_in_expert = (jnp.cumsum(onehot, axis=1) - 1.0) * onehot  # (G, S*k, E)
+    within = (pos_in_expert < c) & (onehot > 0)
+    slot = jnp.sum(pos_in_expert * within, axis=-1)       # (G, S*k)
+    kept = jnp.any(within, axis=-1)                       # (G, S*k)
+
+    slot_onehot = jax.nn.one_hot(slot, c, dtype=jnp.float32) \
+        * kept[..., None]                                 # (G, S*k, C)
+    # dispatch (G, S*k, E, C)
+    dispatch = onehot[..., :, None] * slot_onehot[..., None, :]
+    weights = top_w.reshape(g, s * k)
+    combine = dispatch * weights[..., None, None]
+
+    # fold the k slots back onto tokens: (G, S, k, E, C) -> sum over k
+    dispatch_t = dispatch.reshape(g, s, k, e, c).sum(2)
+    combine_t = combine.reshape(g, s, k, e, c).sum(2)
+
+    dispatch_t = lshard(dispatch_t.astype(x.dtype),
+                        "batch", None, "experts", None)
+    combine_t = lshard(combine_t.astype(jnp.float32),
+                       "batch", None, "experts", None)
+
+    # all-to-all 1: tokens -> experts
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch_t, x)
+    expert_in = lshard(expert_in, "experts", "batch", None, None)
+
+    # expert FFN (einsum over the expert axis stays local under EP)
+    h = (jax.nn.silu(jnp.einsum("egcd,edf->egcf", expert_in, p["wg"]))
+         * jnp.einsum("egcd,edf->egcf", expert_in, p["wi"]))
+    expert_out = jnp.einsum("egcf,efd->egcd", h, p["wo"])
+    expert_out = lshard(expert_out, "experts", "batch", None, None)
+
+    # all-to-all 2: experts -> tokens
+    out = jnp.einsum("gsec,egcd->gsd",
+                     combine_t, expert_out.astype(jnp.float32))
+    out = out.astype(x.dtype)
+
+    if cfg.n_shared_experts > 0:
+        out = out + L.apply_mlp(p["shared"], x, act=cfg.act)
+    return out, aux
+
+
+def moe_forward_scatter(p, cfg: ArchConfig, x
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter/gather MoE dispatch (beyond-paper §Perf lever).
+
+    Same capacity semantics as the dense GShard path (top-k, per-group
+    capacity, overflow drops) but token movement is index-based:
+
+        expert_in[e, c] = x[token assigned to slot (e, c)]   (gather)
+        y[token]       += w * expert_out[e, c]               (gather+add)
+
+    Replaces the O(S*E*C*d) one-hot dispatch/combine einsums with O(S*k*d)
+    data movement — on qwen3-moe the dense path burns 3.3x MODEL_FLOPS on
+    dispatch alone. Numerics match the dense path exactly
+    (tests/test_tuning.py::test_moe_scatter_matches_dense).
+    """
+    g, s, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_per_tok
+    c = _capacity(cfg, s)
+
+    logits = (x.astype(jnp.float32) @ p["router"])        # (G, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, k)              # (G, S, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    onehot_all = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)
+    token_frac = onehot_all.sum(2).mean(axis=(0, 1))
+    prob_frac = probs.mean(axis=(0, 1))
+    aux = e * jnp.sum(token_frac * prob_frac)
+
+    # slot assignment identical to the dense path (cumsum over S*k)
+    flat_idx = top_idx.reshape(g, s * k)                  # (G, N) N=S*k
+    onehot = jax.nn.one_hot(flat_idx, e, dtype=jnp.float32)
+    pos_in_expert = (jnp.cumsum(onehot, axis=1) - 1.0) * onehot
+    within = (pos_in_expert < c) & (onehot > 0)
+    slot = jnp.sum(pos_in_expert * within, axis=-1).astype(jnp.int32)
+    kept = jnp.any(within, axis=-1)                       # (G, N)
+    weights = top_w.reshape(g, s * k) * kept              # (G, N)
+
+    # scatter tokens into the (E*C) expert buffer per group
+    tok_of_route = jnp.repeat(
+        jnp.arange(s)[None, :, None], k, axis=2).reshape(1, s * k)
+    tok_of_route = jnp.broadcast_to(tok_of_route, (g, s * k))
+    dest = flat_idx * c + slot                            # (G, N) in [0,E*C)
+    dest = jnp.where(kept, dest, e * c)                   # drop bucket
+
+    def per_group(xg, destg, tokg, wg):
+        buf = jnp.zeros((e * c + 1, d), xg.dtype)
+        buf = buf.at[destg].add(xg[tokg] * wg[:, None].astype(xg.dtype))
+        return buf[: e * c].reshape(e, c, d)
+
+    # weight applied at dispatch (equivalent to dense path's combine
+    # weighting since each slot receives exactly one token)
+    expert_in = jax.vmap(per_group)(x, dest, tok_of_route,
+                                    jnp.ones_like(weights))
+    expert_in = lshard(expert_in, "batch", "experts", None, None)
+
+    h = (jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, p["wg"]))
+         * jnp.einsum("gecd,edf->gecf", expert_in, p["wi"]))
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    expert_out = lshard(expert_out, "batch", "experts", None, None)
+
+    # gather back: y[token] += w * expert_out[dest]
+    def per_group_back(outg, destg, tokg, wg):
+        flat = jnp.concatenate(
+            [outg.reshape(e * c, d), jnp.zeros((1, d), outg.dtype)])
+        vals = flat[destg] * wg[:, None].astype(outg.dtype)   # (N, d)
+        y = jnp.zeros((s, d), outg.dtype)
+        return y.at[tokg].add(vals)
+
+    out = jax.vmap(per_group_back)(expert_out, dest, tok_of_route,
+                                   weights)
+    if cfg.n_shared_experts > 0:
+        out = out + L.apply_mlp(p["shared"], x, act=cfg.act)
+    return out, aux

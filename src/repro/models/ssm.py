@@ -1,0 +1,176 @@
+"""Mamba-2 (SSD) mixer: in-proj -> causal conv -> SSD scan -> gate -> out.
+
+Follows the Mamba-2 block (arXiv:2405.21060): single projection producing
+[z (gate), x, B, C, dt]; depthwise causal conv over (x, B, C); scalar
+per-head A; SSD scan via kernels/ops.ssd (Pallas on TPU, chunked jnp on
+CPU); gated RMSNorm before the output projection.
+
+Decode carries (conv_state, ssd_state): the conv tail (width-1 samples)
+and the (heads, N, P) recurrent state — O(1) memory in sequence length,
+which is what makes ``long_500k`` decoding tractable.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.models import layers as L
+
+
+def init_mamba2(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": L.init_dense(ks[0], d, 2 * di + 2 * n + h, dtype=dtype),
+        "conv_w": L.truncnorm_init(ks[1], (cfg.ssm_conv, conv_dim), dtype,
+                                   scale=0.1),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "gate_norm": L.init_norm(None, di, "rmsnorm"),
+        "out_proj": L.init_dense(ks[3], di, d, dtype=dtype),
+    }
+
+
+def _split(cfg: ArchConfig, proj):
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(w, b, xbc):
+    """Depthwise causal conv, width K. xbc: (B, L, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def mamba2_forward(p, cfg: ArchConfig, x) -> jnp.ndarray:
+    b, l, _ = x.shape
+    di, n, h, pd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, \
+        cfg.ssm_head_dim
+
+    proj = L.dense(p["in_proj"], x)
+    z, xbc, dt_raw = _split(cfg, proj)
+    xbc = _causal_conv(p["conv_w"], p["conv_b"], xbc)
+    xs = xbc[..., :di]
+    bmat = xbc[..., di:di + n]
+    cmat = xbc[..., di + n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])                               # (h,) negative
+
+    # -> (B*h, L, ...) kernel layout
+    xh = xs.reshape(b, l, h, pd).transpose(0, 2, 1, 3).reshape(b * h, l, pd)
+    dth = dt.transpose(0, 2, 1).reshape(b * h, l)
+    bh = jnp.repeat(bmat[:, None], h, axis=1).reshape(b * h, l, n)
+    ch = jnp.repeat(cmat[:, None], h, axis=1).reshape(b * h, l, n)
+    ah = jnp.tile(a, (b,))
+
+    y = kops.ssd(xh, dth, ah, bh, ch)                      # (B*h, L, pd)
+    y = y.reshape(b, h, l, pd).transpose(0, 2, 1, 3)
+    y = y + p["d_skip"][None, None, :, None] * xs.reshape(b, l, h, pd)
+    y = y.reshape(b, l, di)
+
+    y = L.apply_norm(p["gate_norm"], y, "rmsnorm") * jax.nn.silu(
+        z.astype(jnp.float32))
+    return L.dense(p["out_proj"], y.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# decode path (O(1) state)
+# ---------------------------------------------------------------------------
+
+def init_mamba2_state(cfg: ArchConfig, batch: int,
+                      dtype=jnp.float32) -> dict:
+    di, n, h, pd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, \
+        cfg.ssm_head_dim
+    conv_dim = di + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((batch * h, n, pd), dtype),
+    }
+
+
+def mamba2_prefill_state(p, cfg: ArchConfig, x) -> dict:
+    """Build the decode state after consuming a full prefix x (B, L, d).
+
+    conv state = the last (K-1) *raw* pre-conv rows; SSD state = the exact
+    final recurrent state h_L = sum_j exp(cum_L - cum_j) dt_j B_j x_j^T
+    (stable: all exponents non-positive).
+    """
+    b, l, _ = x.shape
+    di, n, h, pd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, \
+        cfg.ssm_head_dim
+    k = cfg.ssm_conv
+
+    proj = L.dense(p["in_proj"], x)
+    _, xbc_raw, dt_raw = _split(cfg, proj)
+    # conv tail: last K-1 raw rows (zero-padded when L < K-1)
+    pad = jnp.pad(xbc_raw, ((0, 0), (k - 1, 0), (0, 0)))
+    conv_state = pad[:, l:l + k - 1, :].astype(jnp.float32)
+
+    xbc = _causal_conv(p["conv_w"], p["conv_b"], xbc_raw)
+    xs = xbc[..., :di]
+    bmat = xbc[..., di:di + n].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])                                # (h,)
+
+    xh = xs.reshape(b, l, h, pd).transpose(0, 2, 1, 3).astype(jnp.float32)
+    dth = dt.transpose(0, 2, 1)                             # (B, h, L)
+    cum = jnp.cumsum(dth * a[None, :, None], axis=-1)       # (B, h, L)
+    w = jnp.exp(cum[..., -1:] - cum) * dth                  # (B, h, L)
+    # h_L = sum_j w_j B_j (x_j)^T  -> (B, h, N, P)
+    state = jnp.einsum("bhl,bln,bhlp->bhnp", w, bmat, xh)
+    return {"conv": conv_state, "ssd": state.reshape(b * h, n, pd)}
+
+
+def mamba2_decode(p, cfg: ArchConfig, x, state: dict) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, 1, d) -> (y (B, 1, d), state)."""
+    b = x.shape[0]
+    di, n, h, pd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, \
+        cfg.ssm_head_dim
+
+    proj = L.dense(p["in_proj"], x)
+    z, xbc_t, dt_raw = _split(cfg, proj)                   # (B, 1, .)
+    window = jnp.concatenate(
+        [state["conv"], xbc_t.astype(state["conv"].dtype)], axis=1)
+    conv_out = sum(window[:, i] * p["conv_w"][i][None, :]
+                   for i in range(cfg.ssm_conv)) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)                       # (B, C)
+    new_conv = window[:, 1:]
+
+    xs = conv_out[:, :di]
+    bmat = conv_out[:, di:di + n]
+    cmat = conv_out[:, di + n:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    xh = xs.reshape(b, h, pd).reshape(b * h, pd).astype(jnp.float32)
+    dth = dt.reshape(b * h)
+    bh = jnp.repeat(bmat[:, None], h, axis=1).reshape(b * h, n).astype(
+        jnp.float32)
+    ch = jnp.repeat(cmat[:, None], h, axis=1).reshape(b * h, n).astype(
+        jnp.float32)
+    ah = jnp.tile(a, (b,))
+
+    new_ssd, y = kops.ssd_decode_step(state["ssd"], xh, dth, ah, bh, ch)
+    y = y.reshape(b, h, pd) + p["d_skip"][None, :, None] * xs.reshape(
+        b, h, pd).astype(jnp.float32)
+    y = y.reshape(b, 1, di)
+    y = L.apply_norm(p["gate_norm"], y, "rmsnorm") * jax.nn.silu(
+        z.astype(jnp.float32))
+    out = L.dense(p["out_proj"], y.astype(x.dtype))
+    return out, {"conv": new_conv, "ssd": new_ssd}

@@ -1,0 +1,66 @@
+"""Performance-tuning flags for the §Perf hillclimb.
+
+Every flag defaults to the *baseline* (paper-faithful / first-pass)
+behaviour; the hillclimb runner flips them one at a time and re-lowers the
+cell, so EXPERIMENTS.md §Perf shows before/after per change. Flags are
+process-global (consumed at trace time).
+
+  loss_remat          — jax.checkpoint around the per-chunk LM loss body:
+                        the backward pass recomputes chunk logits instead
+                        of stacking (n_chunks, B, chunk, V/16) fp32
+                        residuals (the dominant train-cell HBM term).
+  attn_chunk_remat    — jax.checkpoint around each q-chunk of exact
+                        attention: backward recomputes score matrices
+                        chunk-by-chunk instead of saving all of them.
+  gqa_grouped_einsum  — decode attention via grouped einsum
+                        (b, kv, group, d) x (b, kv, s, d) instead of
+                        jnp.repeat'ing K/V to all query heads (kills the
+                        (B, H, S, D) materialization in decode).
+  decode_batch_cache  — shard decode KV caches over batch only (no seq
+                        sharding), eliminating GSPMD's "involuntary full
+                        rematerialization" resharding copies around the
+                        cache update.
+  moe_capacity_factor — expert capacity factor (dispatch tensor size vs
+                        drop rate trade).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+
+@dataclasses.dataclass
+class Tuning:
+    loss_remat: bool = False
+    attn_chunk_remat: bool = False
+    gqa_grouped_einsum: bool = False
+    decode_batch_cache: bool = False
+    moe_capacity_factor: float = 1.25
+    # right-size parallelism: run the cell pure-data-parallel (params
+    # replicated, batch over every mesh axis) — for sub-1B models TP=16
+    # is over-sharding and its activation collectives dominate
+    pure_dp: bool = False
+    # decode attention in bf16 with fp32 accumulation (MXU-native): no
+    # materialized f32 copy of the KV cache per layer per step
+    decode_bf16_einsum: bool = False
+    # MoE dispatch via scatter/gather index ops instead of the dense
+    # GShard one-hot einsums — removes the O(S*E*C*d) dispatch FLOPs
+    # (qwen3-moe burns 3.3x MODEL_FLOPS on them; 6ND/HLO = 0.30)
+    moe_scatter_dispatch: bool = False
+
+
+TUNING = Tuning()
+
+
+@contextlib.contextmanager
+def tuned(**kw):
+    """Temporarily override tuning flags (hillclimb runner)."""
+    old = dataclasses.replace(TUNING)
+    try:
+        for k, v in kw.items():
+            setattr(TUNING, k, v)
+        yield TUNING
+    finally:
+        for f in dataclasses.fields(Tuning):
+            setattr(TUNING, f.name, getattr(old, f.name))

@@ -1,0 +1,1 @@
+"""Portfolio optimizer (paper Algorithm 1)."""

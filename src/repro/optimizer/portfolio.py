@@ -1,0 +1,134 @@
+"""Portfolio optimizer (paper Algorithm 1) + local refinement.
+
+Runs ``n_sa`` SA chains and ``n_rl`` PPO agents (different seeds), then an
+exhaustive argmax across all produced design points — exactly the paper's
+robustness recipe ("we train multiple RL models and SA algorithms with
+different seed values ... perform an exhaustive search across the
+outcomes").
+
+Beyond the paper: a final *coordinate-descent exhaustive refinement* —
+for each of the 14 parameters in turn, sweep its entire Table-1 grid while
+holding the others fixed (591 evaluations per sweep, vectorized) until a
+fixed point. This provably never worsens the objective and usually adds a
+few percent on top of the raw RL/SA winners.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core import env as chipenv
+from repro.core import params as ps
+from repro.rl import ppo
+from repro.sa import annealing as sa
+
+
+@dataclasses.dataclass(frozen=True)
+class PortfolioConfig:
+    n_sa: int = 20
+    n_rl: int = 20
+    sa: sa.SAConfig = sa.SAConfig(n_iters=100_000)
+    rl: ppo.PPOConfig = ppo.PPOConfig()
+    rl_timesteps: int = 250_000
+    refine: bool = True
+    max_refine_sweeps: int = 8
+
+
+class PortfolioResult(NamedTuple):
+    best_design: ps.DesignPoint
+    best_reward: float
+    sa_rewards: np.ndarray          # (n_sa,)
+    rl_rewards: np.ndarray          # (n_rl,)
+    refined_reward: float
+    wall_time_s: float
+    source: str                     # 'sa' | 'rl' | 'refined'
+
+
+def _objective_fn(env_cfg):
+    def f(flat_idx):
+        return cm.reward_only(ps.from_flat(flat_idx), env_cfg.workload,
+                              env_cfg.weights, env_cfg.hw)
+    return jax.jit(f)
+
+
+def coordinate_refine(flat: jnp.ndarray, env_cfg: chipenv.EnvConfig,
+                      max_sweeps: int = 8):
+    """Exhaustive per-coordinate sweep until a fixed point."""
+    obj = _objective_fn(env_cfg)
+    best = jnp.asarray(flat, jnp.int32)
+    best_r = float(obj(best))
+    for _ in range(max_sweeps):
+        improved = False
+        for dim, head in enumerate(ps.HEAD_SIZES):
+            cand = jnp.tile(best[None, :], (head, 1))
+            cand = cand.at[:, dim].set(jnp.arange(head, dtype=jnp.int32))
+            rewards = jax.vmap(obj)(cand)
+            idx = int(jnp.argmax(rewards))
+            r = float(rewards[idx])
+            if r > best_r + 1e-6:
+                best = cand[idx]
+                best_r = r
+                improved = True
+        if not improved:
+            break
+    return best, best_r
+
+
+def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
+             cfg: PortfolioConfig = PortfolioConfig(),
+             verbose: bool = False) -> PortfolioResult:
+    """Algorithm 1: best of {n_sa SA chains} U {n_rl RL agents} (+refine)."""
+    t0 = time.time()
+    k_sa, k_rl = jax.random.split(key)
+
+    # --- SA population (one vmapped program) -------------------------------
+    sa_res = sa.run_population(k_sa, cfg.n_sa, env_cfg, cfg.sa)
+    sa_rewards = np.asarray(sa_res.best_reward)
+    sa_flats = np.asarray(ps.to_flat(sa_res.best_design))
+
+    # --- RL agents ----------------------------------------------------------
+    rl_rewards: List[float] = []
+    rl_flats: List[np.ndarray] = []
+    rl_keys = jax.random.split(k_rl, cfg.n_rl)
+    for i in range(cfg.n_rl):
+        res = ppo.train(rl_keys[i], env_cfg, cfg.rl,
+                        total_timesteps=cfg.rl_timesteps)
+        rl_rewards.append(float(res.best_reward))
+        rl_flats.append(np.asarray(ps.to_flat(res.best_design)))
+        if verbose:
+            print(f"  [portfolio] RL agent {i}: best={rl_rewards[-1]:.2f}")
+    rl_rewards_arr = np.asarray(rl_rewards, np.float32)
+
+    # --- exhaustive argmax over all outcomes (Alg. 1 lines 5-11) -----------
+    all_flats = np.concatenate(
+        [sa_flats, np.stack(rl_flats)] if rl_flats else [sa_flats], axis=0)
+    all_rewards = np.concatenate([sa_rewards, rl_rewards_arr]) \
+        if rl_flats else sa_rewards
+    top = int(np.argmax(all_rewards))
+    best_flat = jnp.asarray(all_flats[top], jnp.int32)
+    best_r = float(all_rewards[top])
+    source = "sa" if top < len(sa_rewards) else "rl"
+
+    refined_r = best_r
+    if cfg.refine:
+        refined_flat, refined_r = coordinate_refine(
+            best_flat, env_cfg, cfg.max_refine_sweeps)
+        if refined_r > best_r:
+            best_flat, source = refined_flat, "refined"
+
+    return PortfolioResult(
+        best_design=ps.from_flat(best_flat),
+        best_reward=max(best_r, refined_r),
+        sa_rewards=sa_rewards,
+        rl_rewards=rl_rewards_arr,
+        refined_reward=refined_r,
+        wall_time_s=time.time() - t0,
+        source=source,
+    )

@@ -1,0 +1,1 @@
+"""Distribution: logical sharding rules (DP/TP/SP/EP) and pipeline stages."""

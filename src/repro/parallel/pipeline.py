@@ -1,0 +1,87 @@
+"""Pipeline parallelism: GPipe-style microbatched stage execution.
+
+Opt-in alternative to pure TP for very deep models (qwen3-moe's 94
+layers): the layer stack splits into S stages along a dedicated "stage"
+mesh axis; microbatches stream through stages with a shard_map +
+collective_permute rotation. With M microbatches the bubble fraction is
+(S-1)/(M+S-1) — reported per config by ``bubble_fraction``.
+
+Implementation: the classic loop-skewed schedule. At tick t, stage s
+processes microbatch (t - s); activations hop stage s -> s+1 between
+ticks via ppermute. All stages run the same block code (same-kind
+segments), so one program serves every stage.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)
+
+
+def pipelined_forward(mesh: Mesh, stage_axis: str,
+                      block_fn: Callable, n_stages: int,
+                      n_microbatches: int):
+    """Build fn(stage_params, x_microbatches) -> y_microbatches.
+
+    stage_params: pytree with leading [n_stages] axis, sharded over
+    ``stage_axis`` (one stage's params per mesh slice).
+    x_microbatches: (M, mb, ...) activations, replicated across stages.
+    block_fn(params_slice, x) -> x: one stage's computation.
+    """
+    assert n_stages == mesh.shape[stage_axis]
+
+    def body(stage_params, xs):
+        # inside shard_map: stage_params has its local stage slice
+        # (leading axis 1), xs is the full (M, mb, d) microbatch stack.
+        sp = jax.tree_util.tree_map(lambda a: a[0], stage_params)
+        stage_id = jax.lax.axis_index(stage_axis)
+        m, mb = xs.shape[0], xs.shape[1]
+        n_ticks = n_microbatches + n_stages - 1
+
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def tick(carry, t):
+            buf, outs = carry          # buf: (mb, d) current activation
+            mb_idx = t - stage_id      # microbatch this stage works on
+            valid = (mb_idx >= 0) & (mb_idx < n_microbatches)
+            # stage 0 loads a fresh microbatch; others use the rotated buf
+            x_in = jnp.where(
+                stage_id == 0,
+                xs[jnp.clip(mb_idx, 0, n_microbatches - 1)],
+                buf)
+            y = block_fn(sp, x_in)
+            y = jnp.where(valid, y, buf)
+            # last stage records its finished microbatch
+            outs = jnp.where(
+                (stage_id == n_stages - 1) & valid,
+                outs.at[jnp.clip(mb_idx, 0, n_microbatches - 1)].set(y),
+                outs)
+            # rotate activations to the next stage
+            buf_next = jax.lax.ppermute(y, stage_axis, perm)
+            return (buf_next, outs), None
+
+        buf0 = jnp.zeros_like(xs[0])
+        outs0 = jnp.zeros_like(xs)
+        (_, outs), _ = jax.lax.scan(tick, (buf0, outs0),
+                                    jnp.arange(n_ticks))
+        # only the last stage holds real outputs (others accumulated zeros);
+        # psum broadcasts them to every stage replica
+        outs = jax.lax.psum(outs, stage_axis)
+        return outs
+
+    other_axes = tuple(a for a in mesh.axis_names if a != stage_axis)
+    del other_axes
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(stage_axis), P()),
+        out_specs=P(),
+        check_vma=False)

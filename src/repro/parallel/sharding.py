@@ -1,0 +1,134 @@
+"""Logical-axis sharding rules for the LM substrate (DP/TP/SP/EP).
+
+The model code annotates activations with *logical* axes via ``lshard``;
+the mapping logical axis -> mesh axis lives in ``ShardingRules``. With no
+active mesh (CPU smoke tests) every annotation is a no-op, so the same
+model code runs single-device and on the 512-chip production mesh.
+
+Default production mapping (TPU v5e pods, DESIGN.md):
+
+    batch   -> ("pod", "data")     pure data parallel over pods
+    seq     -> "model"             sequence parallelism for the residual
+                                   stream between blocks (Megatron-SP):
+                                   cuts saved activations by the TP degree
+    heads   -> "model"             tensor parallel attention
+    ff      -> "model"             tensor parallel MLP
+    vocab   -> "model"             sharded embedding + logits
+    experts -> "model"             expert parallelism (MoE)
+    kv_seq  -> "model"             decode KV caches shard the *sequence*
+                                   axis (kv_heads of GQA archs are too few
+                                   to shard 16 ways)
+
+GSPMD inserts the all-gather/reduce-scatter pairs at the SP<->TP
+boundaries and the all-to-alls for EP.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    batch: Tuple[str, ...] = ("pod", "data")
+    seq: Optional[str] = "model"          # sequence parallelism (None = off)
+    heads: Optional[str] = "model"
+    ff: Optional[str] = "model"
+    vocab: Optional[str] = "model"
+    experts: Optional[str] = "model"
+    kv_seq: Optional[str] = "model"
+
+    def axis(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        if logical == "batch":
+            return self.batch
+        return getattr(self, logical)
+
+
+SINGLE_POD_RULES = ShardingRules(batch=("data",))
+MULTI_POD_RULES = ShardingRules(batch=("pod", "data"))
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[ShardingRules] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[ShardingRules] = None):
+    """Activate sharding annotations for model code traced inside."""
+    if rules is None:
+        rules = (MULTI_POD_RULES if "pod" in mesh.axis_names
+                 else SINGLE_POD_RULES)
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        with mesh:
+            yield rules
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return _CTX.rules
+
+
+def spec(*logical_axes) -> P:
+    """PartitionSpec for the given logical axes under the active rules."""
+    rules = _CTX.rules
+    if rules is None:
+        return P()
+    return P(*[rules.axis(a) for a in logical_axes])
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def best_effort_spec(mesh: Mesh, p: P, shape) -> P:
+    """Drop spec entries that do not divide the dimension (e.g. 14 query
+    heads over a 16-way model axis) — GSPMD would pad; replication is the
+    predictable choice and is logged in the dry-run report."""
+    out = []
+    for dim, axis in zip(shape, tuple(p) + (None,) * (len(shape) - len(p))):
+        if axis is not None and dim % _axis_size(mesh, axis) != 0:
+            axis = None
+        out.append(axis)
+    return P(*out)
+
+
+def lshard(x, *logical_axes):
+    """with_sharding_constraint under the active rules (no-op without mesh)."""
+    if _CTX.mesh is None or _CTX.rules is None:
+        return x
+    assert x.ndim == len(logical_axes), (x.shape, logical_axes)
+    p = best_effort_spec(_CTX.mesh, spec(*logical_axes), x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, p))
+
+
+def named_sharding(mesh: Mesh, *logical_axes,
+                   rules: Optional[ShardingRules] = None) -> NamedSharding:
+    rules = rules or (MULTI_POD_RULES if "pod" in mesh.axis_names
+                      else SINGLE_POD_RULES)
+    return NamedSharding(
+        mesh, P(*[rules.axis(a) for a in logical_axes]))

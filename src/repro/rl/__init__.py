@@ -1,0 +1,1 @@
+"""Pure-JAX PPO for Chiplet-Gym (paper §4.1, Table 5)."""

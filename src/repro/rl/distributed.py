@@ -1,0 +1,143 @@
+"""Pod-scale data-parallel PPO via shard_map (beyond-paper scaling).
+
+The paper trains PPO on a hexa-core CPU. Here the same update step runs
+data-parallel over an entire (pod, data, model) TPU mesh: every device
+owns ``n_envs`` Chiplet-Gym environments and a full policy replica;
+minibatch gradients are ``pmean``-reduced across *all* mesh axes, so the
+policy stays bit-identical on every device while the rollout batch scales
+with the device count (512 devices x 8 envs = 4096 parallel environments).
+
+This module is what ``launch/dryrun.py`` lowers for the ``chipletgym``
+config — proving the paper's technique itself shards over the production
+mesh, alongside the 10 assigned LM architectures.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import env as chipenv
+from repro.core import params as ps
+from repro.rl import networks as nets
+from repro.rl import ppo
+from repro.training.optim import Adam
+
+
+def _env_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """All mesh axes act as environment-parallel axes for RL."""
+    return tuple(mesh.axis_names)
+
+
+def init_carry(key, mesh: Mesh, env_cfg: chipenv.EnvConfig,
+               cfg: ppo.PPOConfig, optimizer: Adam) -> ppo.TrainCarry:
+    """Build a TrainCarry whose env fields carry a global leading axis of
+    ``n_devices * n_envs`` (sharded), params replicated."""
+    n_dev = mesh.devices.size
+    total_envs = n_dev * cfg.n_envs
+    k_init, k_env, k_train = jax.random.split(key, 3)
+    params = nets.init_actor_critic(k_init, obs_dim=chipenv.OBS_DIM)
+    opt_state = optimizer.init(params)
+    env_keys = jax.random.split(k_env, total_envs)
+    env_states, obs = jax.vmap(lambda k: chipenv.reset(k, env_cfg))(env_keys)
+    keys = jax.random.split(k_train, n_dev)
+    return ppo.TrainCarry(
+        params=params, opt_state=opt_state, env_states=env_states, obs=obs,
+        key=keys,                                  # (n_dev, 2) one per shard
+        best_reward=jnp.float32(-jnp.inf),
+        best_action=jnp.zeros((ps.N_PARAMS,), jnp.int32))
+
+
+def carry_specs(mesh: Mesh) -> ppo.TrainCarry:
+    """PartitionSpecs for each TrainCarry field."""
+    env_axes = _env_axes(mesh)
+    return ppo.TrainCarry(
+        params=P(),                        # replicated policy
+        opt_state=P(),
+        env_states=P(env_axes),            # env batch sharded over all axes
+        obs=P(env_axes),
+        key=P(env_axes),                   # one key per device
+        best_reward=P(),
+        best_action=P(),
+    )
+
+
+def make_pod_update(mesh: Mesh, env_cfg: chipenv.EnvConfig,
+                    cfg: ppo.PPOConfig, optimizer: Adam):
+    """One data-parallel PPO update across the whole mesh.
+
+    Returns a jit'd function carry -> (carry, log). Gradients are averaged
+    over every mesh axis; the globally best design point is all-gathered
+    and argmax-selected so all replicas agree.
+    """
+    env_axes = _env_axes(mesh)
+    grad_reduce = lambda g: jax.lax.pmean(g, env_axes)
+    local_update = ppo.make_update_step(env_cfg, cfg, optimizer,
+                                        grad_reduce=grad_reduce)
+
+    def shard_body(carry: ppo.TrainCarry):
+        # inside shard_map: env fields have their local block, key is (1,2)
+        local = carry._replace(key=carry.key[0])
+        local, log = local_update(local, None)
+
+        # agree on the global best (reward, action) pair
+        all_r = jax.lax.all_gather(local.best_reward, env_axes[0])
+        all_a = jax.lax.all_gather(local.best_action, env_axes[0])
+        for ax in env_axes[1:]:
+            all_r = jax.lax.all_gather(all_r, ax).reshape(-1)
+            all_a = jax.lax.all_gather(all_a, ax).reshape(-1, ps.N_PARAMS)
+        all_r = all_r.reshape(-1)
+        all_a = all_a.reshape(-1, ps.N_PARAMS)
+        idx = jnp.argmax(all_r)
+        best_r, best_a = all_r[idx], all_a[idx]
+
+        out = local._replace(key=local.key[None],
+                             best_reward=best_r, best_action=best_a)
+        log = log._replace(
+            mean_step_reward=jax.lax.pmean(log.mean_step_reward, env_axes),
+            mean_episodic_reward=jax.lax.pmean(
+                log.mean_episodic_reward, env_axes),
+            best_reward=best_r,
+            policy_loss=jax.lax.pmean(log.policy_loss, env_axes),
+            value_loss=jax.lax.pmean(log.value_loss, env_axes),
+            entropy=jax.lax.pmean(log.entropy, env_axes))
+        return out, log
+
+    specs = carry_specs(mesh)
+    log_specs = ppo.TrainLog(*([P()] * len(ppo.TrainLog._fields)))
+    sharded = jax.shard_map(shard_body, mesh=mesh,
+                            in_specs=(specs,), out_specs=(specs, log_specs),
+                            check_vma=False)
+    return jax.jit(sharded)
+
+
+def train_distributed(key, mesh: Mesh,
+                      env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
+                      cfg: ppo.PPOConfig = ppo.PPOConfig(),
+                      n_updates: int = 10):
+    """Full distributed training loop (used by launch/train.py --arch chipletgym)."""
+    optimizer = Adam(learning_rate=cfg.learning_rate,
+                     max_grad_norm=cfg.max_grad_norm)
+    carry = init_carry(key, mesh, env_cfg, cfg, optimizer)
+
+    # place carry according to its (prefix) specs
+    def _put(tree, spec):
+        return jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, NamedSharding(mesh, spec)), tree)
+
+    specs = carry_specs(mesh)
+    carry = ppo.TrainCarry(*[
+        _put(getattr(carry, f), getattr(specs, f))
+        for f in ppo.TrainCarry._fields])
+    update = make_pod_update(mesh, env_cfg, cfg, optimizer)
+    logs = []
+    for _ in range(n_updates):
+        carry, log = update(carry)
+        logs.append(log)
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *logs)
+    return carry, stacked

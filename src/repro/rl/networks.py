@@ -1,0 +1,117 @@
+"""Actor-critic MLPs for Chiplet-Gym PPO (paper §5.2.1).
+
+Policy network  [obs_dim, 64, 64, sum(HEAD_SIZES)]  (MultiDiscrete heads)
+Value network   [obs_dim, 64, 64, 1]
+tanh activations, orthogonal init (SB3 defaults, which the paper uses).
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import params as ps
+
+
+class MLPParams(NamedTuple):
+    weights: List[jnp.ndarray]
+    biases: List[jnp.ndarray]
+
+
+class ACParams(NamedTuple):
+    policy: MLPParams
+    value: MLPParams
+
+
+def _orthogonal(key, shape, scale):
+    a = jax.random.normal(key, shape, jnp.float32)
+    q, r = jnp.linalg.qr(a if shape[0] >= shape[1] else a.T)
+    q = q * jnp.sign(jnp.diag(r))
+    if shape[0] < shape[1]:
+        q = q.T
+    return scale * q[:shape[0], :shape[1]]
+
+
+def init_mlp(key, sizes: Sequence[int], out_scale: float) -> MLPParams:
+    ws, bs = [], []
+    keys = jax.random.split(key, len(sizes) - 1)
+    for i, k in enumerate(keys):
+        scale = out_scale if i == len(sizes) - 2 else jnp.sqrt(2.0)
+        ws.append(_orthogonal(k, (sizes[i], sizes[i + 1]), scale))
+        bs.append(jnp.zeros((sizes[i + 1],), jnp.float32))
+    return MLPParams(weights=ws, biases=bs)
+
+
+def apply_mlp(p: MLPParams, x: jnp.ndarray) -> jnp.ndarray:
+    h = x
+    n = len(p.weights)
+    for i, (w, b) in enumerate(zip(p.weights, p.biases)):
+        h = h @ w + b
+        if i < n - 1:
+            h = jnp.tanh(h)
+    return h
+
+
+def init_actor_critic(key, obs_dim: int = 10,
+                      hidden: Tuple[int, int] = (64, 64)) -> ACParams:
+    kp, kv = jax.random.split(key)
+    policy = init_mlp(kp, (obs_dim, *hidden, ps.TOTAL_LOGITS), out_scale=0.01)
+    value = init_mlp(kv, (obs_dim, *hidden, 1), out_scale=1.0)
+    return ACParams(policy=policy, value=value)
+
+
+# --- MultiDiscrete categorical over the 14 Table-1 heads -------------------
+
+_HEAD_OFFSETS = []
+_off = 0
+for _h in ps.HEAD_SIZES:
+    _HEAD_OFFSETS.append(_off)
+    _off += _h
+
+
+def split_logits(logits: jnp.ndarray) -> List[jnp.ndarray]:
+    return [logits[..., o:o + h]
+            for o, h in zip(_HEAD_OFFSETS, ps.HEAD_SIZES)]
+
+
+def sample_action(key, logits: jnp.ndarray) -> jnp.ndarray:
+    """Sample one index per head; returns (..., 14) int32."""
+    heads = split_logits(logits)
+    keys = jax.random.split(key, len(heads))
+    idx = [jax.random.categorical(k, h) for k, h in zip(keys, heads)]
+    return jnp.stack(idx, axis=-1).astype(jnp.int32)
+
+
+def log_prob(logits: jnp.ndarray, action: jnp.ndarray) -> jnp.ndarray:
+    """Joint log-probability of a (..., 14) MultiDiscrete action."""
+    heads = split_logits(logits)
+    total = 0.0
+    for i, h in enumerate(heads):
+        logp = jax.nn.log_softmax(h, axis=-1)
+        total = total + jnp.take_along_axis(
+            logp, action[..., i:i + 1], axis=-1)[..., 0]
+    return total
+
+
+def entropy(logits: jnp.ndarray) -> jnp.ndarray:
+    """Sum of per-head categorical entropies."""
+    heads = split_logits(logits)
+    total = 0.0
+    for h in heads:
+        logp = jax.nn.log_softmax(h, axis=-1)
+        total = total - jnp.sum(jnp.exp(logp) * logp, axis=-1)
+    return total
+
+
+def greedy_action(logits: jnp.ndarray) -> jnp.ndarray:
+    heads = split_logits(logits)
+    return jnp.stack([jnp.argmax(h, axis=-1) for h in heads],
+                     axis=-1).astype(jnp.int32)
+
+
+def policy_value(params: ACParams, obs: jnp.ndarray):
+    logits = apply_mlp(params.policy, obs)
+    value = apply_mlp(params.value, obs)[..., 0]
+    return logits, value

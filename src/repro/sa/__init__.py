@@ -1,0 +1,1 @@
+"""Modified simulated annealing (paper Algorithm 2)."""

@@ -1,0 +1,99 @@
+"""Modified simulated annealing (paper Algorithm 2), vectorized in JAX.
+
+The paper's modification: instead of the Metropolis criterion
+``exp(-(O_curr - O_cand)/t)`` (numerically unstable for their reward
+ranges), a candidate that *worsens* the objective is still accepted when
+``rand() < t`` with ``t = temp / iteration`` — pure temperature-scheduled
+random acceptance. Defaults follow §5.2.2: initial temperature 200,
+step size 10, 500k iterations (<1 min).
+
+Beyond the paper: chains are vmapped, so a whole SA *population* runs as
+one XLA program (the Alg.-1 portfolio runs 20+ chains in one call), and
+the same program shards over a pod (optimizer/portfolio.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costmodel as cm
+from repro.core import env as chipenv
+from repro.core import params as ps
+
+_HEADS = jnp.asarray(ps.HEAD_SIZES, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class SAConfig:
+    n_iters: int = 500_000
+    temperature: float = 200.0
+    step_size: float = 10.0
+
+
+class SAState(NamedTuple):
+    x_curr: jnp.ndarray       # (14,) float — continuous index space
+    o_curr: jnp.ndarray
+    x_best: jnp.ndarray
+    o_best: jnp.ndarray
+    key: jnp.ndarray
+
+
+class SAResult(NamedTuple):
+    best_design: ps.DesignPoint
+    best_reward: jnp.ndarray
+    history: jnp.ndarray      # (n_records,) best-so-far trace
+
+
+def _objective(x: jnp.ndarray, env_cfg: chipenv.EnvConfig) -> jnp.ndarray:
+    """Evaluate a continuous index-space point (rounded to the grid)."""
+    idx = jnp.clip(jnp.round(x), 0.0, _HEADS - 1.0).astype(jnp.int32)
+    dp = ps.from_flat(idx)
+    return cm.reward_only(dp, env_cfg.workload, env_cfg.weights, env_cfg.hw)
+
+
+def run(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
+        cfg: SAConfig = SAConfig(), record_every: int = 1000) -> SAResult:
+    """One SA chain (Algorithm 2). jit/vmap-safe."""
+    k_init, k_run = jax.random.split(key)
+    x0 = jax.random.uniform(k_init, (ps.N_PARAMS,)) * (_HEADS - 1.0)
+    o0 = _objective(x0, env_cfg)
+    state = SAState(x_curr=x0, o_curr=o0, x_best=x0, o_best=o0, key=k_run)
+
+    def step(state: SAState, it):
+        key, k_prop, k_acc = jax.random.split(state.key, 3)
+        delta = jax.random.uniform(
+            k_prop, (ps.N_PARAMS,), minval=-1.0, maxval=1.0) * cfg.step_size
+        x_cand = jnp.clip(state.x_curr + delta, 0.0, _HEADS - 1.0)
+        o_cand = _objective(x_cand, env_cfg)
+
+        better_best = o_cand > state.o_best
+        x_best = jnp.where(better_best, x_cand, state.x_best)
+        o_best = jnp.where(better_best, o_cand, state.o_best)
+
+        # paper's acceptance: better, OR rand() < t = temp/iteration
+        t = cfg.temperature / (it + 1.0)
+        accept = (o_cand > state.o_curr) | (jax.random.uniform(k_acc) < t)
+        x_curr = jnp.where(accept, x_cand, state.x_curr)
+        o_curr = jnp.where(accept, o_cand, state.o_curr)
+
+        return SAState(x_curr, o_curr, x_best, o_best, key), o_best
+
+    iters = jnp.arange(cfg.n_iters, dtype=jnp.float32)
+    state, trace = jax.lax.scan(step, state, iters)
+    history = trace[::record_every]
+    idx = jnp.clip(jnp.round(state.x_best), 0.0, _HEADS - 1.0).astype(jnp.int32)
+    return SAResult(best_design=ps.from_flat(idx),
+                    best_reward=state.o_best, history=history)
+
+
+def run_population(key, n_chains: int,
+                   env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
+                   cfg: SAConfig = SAConfig(),
+                   record_every: int = 1000) -> SAResult:
+    """N independent chains in one vmapped program; results stacked."""
+    keys = jax.random.split(key, n_chains)
+    return jax.jit(jax.vmap(lambda k: run(k, env_cfg, cfg, record_every)))(keys)

@@ -1,0 +1,135 @@
+"""Serving engine: batched prefill/decode with continuous batching.
+
+A compact vLLM-style slot scheduler over the model's functional
+prefill/decode API:
+
+  - a fixed pool of B decode slots, each holding one in-flight request,
+  - new requests prefill into a free slot (per-slot cache write at the
+    slot's batch row); finished rows free their slot immediately,
+  - every decode step advances *all* active slots in one jit'd call,
+  - greedy or temperature sampling.
+
+Slot-level cache surgery uses one batched cache of shape (B, ...) and
+jax.lax.dynamic_update_index_in_dim writes — no per-request recompile.
+The decode step is the exact function the dry-run lowers for the
+``decode_32k`` / ``long_500k`` cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, arch: ArchConfig, params, n_slots: int = 4,
+                 max_len: int = 256, dtype=jnp.float32, seed: int = 0):
+        self.arch = arch
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = M.init_cache(arch, n_slots, max_len, dtype)
+        self.positions = np.zeros(n_slots, np.int32)       # next position
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.key = jax.random.PRNGKey(seed)
+
+        self._prefill1 = jax.jit(
+            lambda params, toks, cache: M.prefill(params, arch, toks, cache))
+        self._decode = jax.jit(
+            lambda params, tok, pos, cache: M.decode_step(
+                params, arch, tok, pos, cache))
+
+    # ------------------------------------------------------------------ #
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def add_request(self, req: Request) -> bool:
+        """Prefill `req` into a free slot; False if engine is full."""
+        free = self._free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        # single-row prefill into a fresh single-row cache, then splice
+        row_cache = M.init_cache(self.arch, 1, self.max_len,
+                                 jax.tree_util.tree_leaves(
+                                     self.cache)[0].dtype)
+        logits, row_cache, _ = self._prefill1(self.params, toks, row_cache)
+        self.cache = jax.tree_util.tree_map(
+            lambda full, row: jax.lax.dynamic_update_slice_in_dim(
+                full, row.astype(full.dtype), slot, axis=1),
+            self.cache, row_cache)
+        self.slot_req[slot] = req
+        self.positions[slot] = len(req.prompt)
+        first = self._sample(logits[0], req)
+        req.output.append(int(first))
+        return True
+
+    def _sample(self, logits: jnp.ndarray, req: Request) -> int:
+        if req.temperature <= 0.0:
+            return int(jnp.argmax(logits))
+        self.key, k = jax.random.split(self.key)
+        return int(jax.random.categorical(k, logits / req.temperature))
+
+    # ------------------------------------------------------------------ #
+    def step(self):
+        """One decode step for all active slots (continuous batching)."""
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return
+        tokens = np.zeros(self.n_slots, np.int32)
+        for i in active:
+            tokens[i] = self.slot_req[i].output[-1]
+        # all rows share one position scalar per step; slots may differ ->
+        # decode at each distinct position group
+        for pos in sorted({int(self.positions[i]) for i in active}):
+            group = [i for i in active if self.positions[i] == pos]
+            logits, new_cache = self._decode(
+                self.params, jnp.asarray(tokens), pos, self.cache)
+            # only splice back rows belonging to this position group
+            rows = jnp.asarray(group)
+            self.cache = jax.tree_util.tree_map(
+                lambda full, new: full.at[:, rows].set(new[:, rows])
+                if full.ndim >= 2 else new,
+                self.cache, new_cache)
+            for i in group:
+                req = self.slot_req[i]
+                tok = self._sample(logits[i], req)
+                req.output.append(tok)
+                self.positions[i] += 1
+                if (len(req.output) >= req.max_new_tokens
+                        or self.positions[i] >= self.max_len - 1):
+                    req.done = True
+                    self.slot_req[i] = None
+
+    def run(self, requests: List[Request], max_steps: int = 512
+            ) -> List[Request]:
+        """Serve a request list to completion with continuous batching."""
+        pending = list(requests)
+        finished: List[Request] = []
+        steps = 0
+        while (pending or any(self.slot_req)) and steps < max_steps:
+            while pending and self._free_slots():
+                self.add_request(pending.pop(0))
+            self.step()
+            finished.extend(r for r in requests
+                            if r.done and r not in finished)
+            steps += 1
+        return requests

@@ -1,0 +1,111 @@
+"""Fault-tolerance harness: failure injection, auto-restart, elasticity.
+
+What a 1000-node fleet needs from the *framework* side (the cluster
+scheduler handles machine replacement):
+
+  - ``run_with_restarts``: drives the training loop; on any step failure,
+    reloads the newest complete checkpoint and replays from there
+    (deterministic data pipeline => bit-identical recovery modulo the
+    failed steps),
+  - ``FailureInjector``: deterministic fault schedule for tests
+    (raise at step k / corrupt a checkpoint / delay a step to trip the
+    straggler watchdog),
+  - ``elastic_remesh``: re-places a checkpointed state onto a *different*
+    mesh (fewer/more pods) using the logical sharding rules — the elastic
+    scaling path (tests restore a 4-device state onto 2 devices).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro.parallel import sharding as shd
+from repro.training import trainer as T
+from repro.training.checkpoint import CheckpointManager
+
+
+class FailureInjector:
+    """Deterministic failure schedule: {step: kind} with kinds
+    'crash' (raise RuntimeError) and 'stall' (sleep seconds)."""
+
+    def __init__(self, schedule: Optional[dict] = None,
+                 stall_seconds: float = 0.0):
+        self.schedule = dict(schedule or {})
+        self.stall_seconds = stall_seconds
+        self.log = []
+
+    def check(self, step: int):
+        kind = self.schedule.pop(step, None)
+        if kind == "crash":
+            self.log.append(("crash", step))
+            raise RuntimeError(f"injected node failure at step {step}")
+        if kind == "stall":
+            self.log.append(("stall", step))
+            time.sleep(self.stall_seconds)
+
+
+def run_with_restarts(arch, cfg: T.TrainConfig, make_data_iter: Callable,
+                      ckpt_dir: str, total_steps: int,
+                      injector: Optional[FailureInjector] = None,
+                      max_restarts: int = 5, key=None,
+                      verbose: bool = False):
+    """Train to ``total_steps`` surviving injected failures via resume."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    mgr = CheckpointManager(ckpt_dir, cfg.keep_checkpoints)
+    restarts = 0
+    history = []
+
+    while True:
+        state = T.init_state(arch, cfg, key)
+        start = 0
+        if mgr.latest_step() is not None and mgr.verify():
+            state, start = mgr.restore(state)
+        if start >= total_steps:
+            return state, history, restarts
+
+        step_fn = jax.jit(T.make_train_step(arch, cfg))
+        data_iter = make_data_iter(start)
+        try:
+            for i in range(start, total_steps):
+                if injector is not None:
+                    injector.check(i)
+                batch = next(data_iter)
+                state, metrics = step_fn(state, batch)
+                history.append({k: float(v) for k, v in metrics.items()})
+                if (i + 1) % cfg.checkpoint_every == 0 or i + 1 == total_steps:
+                    mgr.save(i + 1, state,
+                             metadata={"loss": history[-1]["loss"]})
+            return state, history, restarts
+        except RuntimeError as e:
+            restarts += 1
+            if verbose:
+                print(f"[fault] {e} -> restart #{restarts}")
+            if restarts > max_restarts:
+                raise
+
+
+def elastic_remesh(state, old_mesh, new_mesh,
+                   rules: Optional[shd.ShardingRules] = None):
+    """Re-place a train state from one mesh onto another (elastic scale).
+
+    Checkpoints store unsharded arrays, so this is gather + re-place under
+    the new mesh's logical rules; used when a job restarts with a
+    different healthy-device count.
+    """
+    del old_mesh
+    gathered = jax.tree_util.tree_map(
+        lambda x: jax.device_get(x) if hasattr(x, "shape") else x, state)
+    with shd.use_mesh(new_mesh, rules):
+        shardings = T.state_shardings(new_mesh, gathered)
+
+        def put(x, s):
+            if x is None or not hasattr(x, "shape"):
+                return x
+            return jax.device_put(x, s)
+
+        return jax.tree_util.tree_map(
+            put, gathered, shardings,
+            is_leaf=lambda x: x is None or hasattr(x, "shape"))

@@ -1,0 +1,108 @@
+"""Pure-JAX optimizers over pytrees (no optax dependency offline).
+
+Used by both the PPO trainer (paper Table 5: Adam, lr 3e-4) and the LM
+training substrate (AdamW + cosine schedule + global-norm clipping).
+Functional API mirroring optax: ``init(params) -> state``,
+``update(grads, state, params) -> (updates, state)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    """Adam/AdamW. ``weight_decay > 0`` gives decoupled AdamW."""
+
+    learning_rate: float | Callable[[jnp.ndarray], jnp.ndarray] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    max_grad_norm: Optional[float] = None   # global-norm clip before update
+
+    def init(self, params: PyTree) -> AdamState:
+        zeros = lambda p: jax.tree_util.tree_map(
+            lambda x: jnp.zeros_like(x, dtype=jnp.float32), p)
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=zeros(params), nu=zeros(params))
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.float32(self.learning_rate)
+
+    def update(self, grads: PyTree, state: AdamState,
+               params: Optional[PyTree] = None):
+        if self.max_grad_norm is not None:
+            grads = clip_by_global_norm(grads, self.max_grad_norm)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        t = step.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1 - b1 ** t)
+        nu_hat_scale = 1.0 / (1 - b2 ** t)
+        lr = self._lr(step)
+
+        def upd(m, v, p):
+            u = -(lr * m * mu_hat_scale
+                  / (jnp.sqrt(v * nu_hat_scale) + self.eps))
+            if self.weight_decay > 0.0 and p is not None:
+                u = u - lr * self.weight_decay * p.astype(jnp.float32)
+            return u
+
+        if params is None:
+            updates = jax.tree_util.tree_map(
+                lambda m, v: upd(m, v, None), mu, nu)
+        else:
+            updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda x: x * scale, tree)
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int,
+                    min_frac: float = 0.1) -> Callable:
+    """Linear warmup then cosine decay to ``min_frac * base_lr``."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac)
+                         * 0.5 * (1.0 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr

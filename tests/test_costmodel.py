@@ -1,0 +1,226 @@
+"""Cost-model tests: anchors from the paper + structural invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core import hw_constants as hw
+from repro.core import monolithic as mono
+from repro.core import params as ps
+from repro.core import workload as wl
+
+
+def case_i_design() -> ps.DesignPoint:
+    """Paper Table 6, case (i): 60 chiplets (30 SoIC pairs, 5x6 EMIB mesh),
+    4 HBMs @ top/right/bottom/middle, EMIB 20 Gbps."""
+    return ps.DesignPoint(
+        arch_type=jnp.int32(ps.ARCH_LOGIC_ON_LOGIC),
+        n_chiplets=jnp.int32(59),            # index -> 60
+        hbm_mask=jnp.int32(29),              # mask 30 = right,top,bottom,mid
+        ai_ic_2p5d=jnp.int32(ps.IC_EMIB),
+        ai_dr_2p5d=jnp.int32(19),            # 20 Gbps
+        ai_links_2p5d=jnp.int32(61),         # 3100
+        ai_trace_2p5d=jnp.int32(0),          # 1 mm
+        ai_ic_3d=jnp.int32(ps.IC_SOIC),
+        ai_dr_3d=jnp.int32(22),              # 42 Gbps
+        ai_links_3d=jnp.int32(31),           # 3200
+        hbm_ic_2p5d=jnp.int32(ps.IC_EMIB),
+        hbm_dr_2p5d=jnp.int32(19),           # 20 Gbps
+        hbm_links_2p5d=jnp.int32(97),        # 4900
+        hbm_trace_2p5d=jnp.int32(0),         # 1 mm
+    )
+
+
+def case_ii_design() -> ps.DesignPoint:
+    """Paper Table 6, case (ii): 112 chiplets (56 FOVEROS pairs, 7x8 mesh)."""
+    return ps.DesignPoint(
+        arch_type=jnp.int32(ps.ARCH_LOGIC_ON_LOGIC),
+        n_chiplets=jnp.int32(111),
+        hbm_mask=jnp.int32(26),              # mask 27 = left,right,bottom,mid
+        ai_ic_2p5d=jnp.int32(ps.IC_EMIB),
+        ai_dr_2p5d=jnp.int32(19),
+        ai_links_2p5d=jnp.int32(28),         # 1450
+        ai_trace_2p5d=jnp.int32(0),
+        ai_ic_3d=jnp.int32(ps.IC_FOVEROS),
+        ai_dr_3d=jnp.int32(14),              # 34 Gbps
+        ai_links_3d=jnp.int32(43),           # 4400
+        hbm_ic_2p5d=jnp.int32(ps.IC_EMIB),
+        hbm_dr_2p5d=jnp.int32(19),
+        hbm_links_2p5d=jnp.int32(76),        # 3850
+        hbm_trace_2p5d=jnp.int32(0),
+    )
+
+
+class TestPaperAnchors:
+    """Each assertion is traceable to a number in the paper."""
+
+    def test_design_space_size(self):
+        # §4: "more than 2x10^17 design points"
+        assert ps.DESIGN_SPACE_SIZE > 2e17
+
+    def test_case_i_geometry(self):
+        m = cm.evaluate(case_i_design())
+        assert float(m.n_dies) == 60
+        assert float(m.n_positions) == 30
+        assert (float(m.mesh_m), float(m.mesh_n)) == (5.0, 6.0)
+        # §5.3.2: 60-chiplet die size ~26 mm^2
+        assert 24.0 <= float(m.die_area_mm2) <= 28.0
+        # §5.3.2: 97 % die yield at 7 nm
+        assert 0.96 <= float(m.die_yield) <= 0.985
+
+    def test_case_ii_geometry(self):
+        m = cm.evaluate(case_ii_design())
+        assert float(m.n_dies) == 112
+        assert float(m.n_positions) == 56
+        assert (float(m.mesh_m), float(m.mesh_n)) == (7.0, 8.0)
+        # §5.3.2: ~14 mm^2 die, 98 % yield
+        assert 12.0 <= float(m.die_area_mm2) <= 16.0
+        assert float(m.die_yield) >= 0.975
+
+    def test_monolithic_yield_48pct(self):
+        y = cm.die_yield(hw.MONO_DIE_AREA_MM2, 0.10)
+        assert 0.46 <= float(y) <= 0.50
+
+    def test_yield_75pct_at_400mm2_14nm(self):
+        y = cm.die_yield(400.0, hw.DEFECT_DENSITY_PER_CM2["14nm"])
+        assert 0.73 <= float(y) <= 0.77
+
+    def test_3d_logic_density_1p52x(self):
+        # 2 tiers x (1 - keepout) = 1.52x at identical footprint
+        density = 2.0 * (1.0 - hw.TSV_KEEPOUT_FRAC)
+        assert abs(density - 1.52) < 1e-6
+
+    def test_throughput_beats_monolithic(self):
+        m = cm.evaluate(case_i_design())
+        mm = mono.evaluate()
+        ratio = float(m.eff_tops / mm.eff_tops)
+        # paper: 1.52x; our physical model (mesh spacing + HBM footprint
+        # accounted) gives ~1.3x — must at least clearly exceed 1x
+        assert 1.2 <= ratio <= 1.7
+
+    def test_package_cost_ratio(self):
+        m = cm.evaluate(case_i_design())
+        mm = mono.evaluate()                      # single monolithic package
+        ratio = float(m.pkg_cost / mm.pkg_cost)
+        # paper: 1.62x
+        assert 1.3 <= ratio <= 2.0
+
+    def test_paper_mode_die_cost_ratio(self):
+        m = cm.evaluate(case_i_design())
+        mm = mono.evaluate()
+        ratio = float(mm.die_cost_paper / m.die_cost_paper)
+        # paper: 76x under the A^(5/2) KGD form; ours lands same order
+        assert 50.0 <= ratio <= 200.0
+
+    def test_paper_mode_energy_ratio(self):
+        cfgp = dataclasses.replace(hw.DEFAULT_HW, comm_reuse_systolic=False,
+                                   e_bit_hbm_device_pj=0.0)
+        w = wl.MLPERF["bert"]
+        m = cm.evaluate(case_i_design(), w, cfg=cfgp)
+        mm = mono.evaluate(w, cfg=cfgp, iso_tops=m.eff_tops)
+        ratio = float(mm.energy_per_task_j / m.energy_per_task_j)
+        # paper: 3.7x energy efficiency vs iso-throughput monolithic
+        assert 2.5 <= ratio <= 5.0
+
+    def test_reward_in_paper_band(self):
+        # paper Fig. 11: best cost-model values ~178-185 (case i),
+        # 188-194 (case ii) for alpha,beta,gamma=[1,1,0.1]
+        r1 = float(cm.evaluate(case_i_design()).reward)
+        r2 = float(cm.evaluate(case_ii_design()).reward)
+        assert 120.0 <= r1 <= 220.0
+        # note: under the physics-mode (SRAM-bounded traffic) model,
+        # case (ii) ranks below case (i) — the paper's ordering only holds
+        # in its literal-Eq.13 utilization model; see EXPERIMENTS.md.
+        assert 80.0 <= r2 <= 240.0
+
+
+class TestStructuralInvariants:
+    def setup_method(self):
+        self.key = jax.random.PRNGKey(42)
+        self.batch = ps.random_design(self.key, (256,))
+        self.metrics = cm.evaluate(self.batch)
+
+    def test_finite_and_positive(self):
+        m = self.metrics
+        for field in m._fields:
+            arr = np.asarray(getattr(m, field))
+            assert np.isfinite(arr).all(), field
+        assert (np.asarray(m.eff_tops) > 0).all()
+        assert (np.asarray(m.die_cost) > 0).all()
+        assert (np.asarray(m.pkg_cost) > 0).all()
+
+    def test_utilization_bounded(self):
+        u = np.asarray(self.metrics.u_sys)
+        assert (u > 0).all() and (u <= 1.0 + 1e-6).all()
+
+    def test_yield_monotone_decreasing_in_area(self):
+        areas = jnp.linspace(10.0, 800.0, 64)
+        y = np.asarray(cm.die_yield(areas, 0.10))
+        assert (np.diff(y) < 0).all()
+        assert (y > 0).all() and (y <= 1.0).all()
+
+    def test_latency_increases_with_chiplets(self):
+        # Fig. 3(b): NoP latency grows with chiplet count
+        base = case_i_design()
+        lat = []
+        for n in [8, 16, 32, 64, 128]:
+            m = cm.evaluate(base._replace(n_chiplets=jnp.int32(n - 1),
+                                          arch_type=jnp.int32(0)))
+            lat.append(float(m.lat_ai_ai_ns))
+        assert all(b >= a for a, b in zip(lat, lat[1:]))
+
+    def test_more_hbms_reduce_worst_hops(self):
+        # Fig. 4: 5 HBMs cut worst-case hops vs 1 HBM
+        base = case_i_design()
+        one = cm.evaluate(base._replace(hbm_mask=jnp.int32(0)))    # left only
+        five = cm.evaluate(base._replace(hbm_mask=jnp.int32(30)))  # 5 spots
+        assert float(five.hops_hbm_ai) < float(one.hops_hbm_ai)
+
+    def test_eff_at_most_peak(self):
+        m = self.metrics
+        assert (np.asarray(m.eff_tops) <= np.asarray(m.peak_tops) + 1e-5).all()
+
+    def test_bw_act_matches_dr_times_links(self):
+        # Eq. 14 (below the HBM physical cap)
+        v = ps.decode(self.batch)
+        act = np.asarray(self.metrics.bw_act_ai_gbps)
+        expect = np.asarray(v.ai_dr_2p5d * v.ai_links_2p5d)
+        np.testing.assert_allclose(act, expect, rtol=1e-6)
+
+    def test_action_codec_roundtrip(self):
+        flat = ps.to_flat(self.batch)
+        back = ps.from_flat(flat)
+        for a, b in zip(self.batch, back):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_vmap_jit_consistency(self):
+        single = jax.tree_util.tree_map(lambda x: x[0], self.batch)
+        m_single = cm.evaluate(single)
+        m_jit = jax.jit(cm.evaluate)(single)
+        np.testing.assert_allclose(float(m_single.reward),
+                                   float(m_jit.reward), rtol=1e-6)
+        np.testing.assert_allclose(float(m_single.reward),
+                                   float(self.metrics.reward[0]), rtol=1e-6)
+
+    def test_describe_runs(self):
+        single = jax.tree_util.tree_map(lambda x: x[0], self.batch)
+        text = ps.describe(single)
+        assert "Architecture type" in text
+
+
+class TestMeshDims:
+    def test_known_factorizations(self):
+        cases = {30: (5, 6), 56: (7, 8), 16: (4, 4), 12: (3, 4), 1: (1, 1)}
+        for p, (em, en) in cases.items():
+            m, n = cm.mesh_dims(jnp.int32(p))
+            assert (float(m), float(n)) == (float(em), float(en)), p
+
+    def test_all_counts_covered(self):
+        for p in range(1, 129):
+            m, n = cm.mesh_dims(jnp.int32(p))
+            assert float(m) * float(n) >= p
+            assert float(n) / float(m) <= 2.5  # aspect ratio kept near 1

@@ -1,0 +1,224 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles.
+
+Sweeps shapes and dtypes per the assignment spec; each kernel must be
+allclose to its ref.py oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core import params as ps
+from repro.kernels import chiplet_eval as ce
+from repro.kernels import flash_attention as fa
+from repro.kernels import ops
+from repro.kernels import ref
+from repro.kernels import ssd_scan as ssd
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("batch,hq,hkv,q_len,kv_len,d", [
+        (1, 4, 4, 128, 128, 64),       # MHA
+        (2, 8, 2, 128, 256, 64),       # GQA group=4
+        (1, 14, 2, 256, 256, 64),      # qwen2-style GQA
+        (1, 4, 4, 256, 128, 32),       # q longer than kv blocks
+        (2, 2, 1, 128, 512, 128),      # MQA, head_dim 128
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal_matches_ref(self, batch, hq, hkv, q_len, kv_len, d, dtype):
+        keys = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(keys[0], (batch, hq, q_len, d), dtype)
+        k = jax.random.normal(keys[1], (batch, hkv, kv_len, d), dtype)
+        v = jax.random.normal(keys[2], (batch, hkv, kv_len, d), dtype)
+        out = fa.flash_attention(q, k, v, causal=True, interpret=True)
+        expect = ref.attention_reference(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expect, np.float32),
+            **_tol(dtype))
+
+    def test_non_causal(self):
+        keys = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(keys[0], (1, 2, 128, 64))
+        k = jax.random.normal(keys[1], (1, 2, 256, 64))
+        v = jax.random.normal(keys[2], (1, 2, 256, 64))
+        out = fa.flash_attention(q, k, v, causal=False, interpret=True)
+        expect = ref.attention_reference(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_sliding_window(self):
+        keys = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(keys[0], (1, 2, 256, 64))
+        k = jax.random.normal(keys[1], (1, 2, 256, 64))
+        v = jax.random.normal(keys[2], (1, 2, 256, 64))
+        out = fa.flash_attention(q, k, v, causal=True, window=64,
+                                 interpret=True)
+        expect = ref.attention_reference(q, k, v, causal=True, window=64)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_block_size_independence(self):
+        keys = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(keys[0], (1, 2, 256, 64))
+        k = jax.random.normal(keys[1], (1, 2, 256, 64))
+        v = jax.random.normal(keys[2], (1, 2, 256, 64))
+        a = fa.flash_attention(q, k, v, block_q=64, block_k=64,
+                               interpret=True)
+        b = fa.flash_attention(q, k, v, block_q=128, block_k=256,
+                               interpret=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("bh,seq,p,n,chunk", [
+        (2, 128, 64, 64, 32),
+        (4, 256, 64, 128, 64),
+        (1, 512, 128, 64, 128),
+        (3, 128, 32, 16, 128),        # chunk == seq (single chunk)
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_sequential_oracle(self, bh, seq, p, n, chunk, dtype):
+        keys = jax.random.split(jax.random.PRNGKey(0), 4)
+        x = jax.random.normal(keys[0], (bh, seq, p), dtype)
+        dt = jax.nn.softplus(
+            jax.random.normal(keys[1], (bh, seq))).astype(jnp.float32) * 0.1
+        a = -jnp.exp(jax.random.normal(keys[2], (bh,))).astype(jnp.float32)
+        b = jax.random.normal(keys[3], (bh, seq, n), dtype) * 0.5
+        c = jax.random.normal(keys[0], (bh, seq, n), dtype) * 0.5
+        out = ssd.ssd_scan(x, dt, a, b, c, chunk=chunk, interpret=True)
+        expect = ref.ssd_reference(x, dt, a, b, c)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expect, np.float32),
+            rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+            atol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+    def test_chunked_jnp_matches_oracle(self):
+        keys = jax.random.split(jax.random.PRNGKey(1), 4)
+        bh, seq, p, n = 2, 256, 64, 64
+        x = jax.random.normal(keys[0], (bh, seq, p))
+        dt = jax.nn.softplus(jax.random.normal(keys[1], (bh, seq))) * 0.1
+        a = -jnp.exp(jax.random.normal(keys[2], (bh,)))
+        b = jax.random.normal(keys[3], (bh, seq, n)) * 0.5
+        c = jax.random.normal(keys[0], (bh, seq, n)) * 0.5
+        out = ref.ssd_chunked_jnp(x, dt, a, b, c, chunk=64)
+        expect = ref.ssd_reference(x, dt, a, b, c)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_decode_step_matches_scan(self):
+        """Sequential decode steps must reproduce the full-sequence scan."""
+        keys = jax.random.split(jax.random.PRNGKey(2), 4)
+        bh, seq, p, n = 2, 16, 8, 4
+        x = jax.random.normal(keys[0], (bh, seq, p))
+        dt = jax.nn.softplus(jax.random.normal(keys[1], (bh, seq))) * 0.1
+        a = -jnp.exp(jax.random.normal(keys[2], (bh,)))
+        b = jax.random.normal(keys[3], (bh, seq, n)) * 0.5
+        c = jax.random.normal(keys[0], (bh, seq, n)) * 0.5
+        full = ref.ssd_reference(x, dt, a, b, c)
+        h = jnp.zeros((bh, n, p))
+        ys = []
+        for t in range(seq):
+            h, y = ref.ssd_decode_step(h, x[:, t], dt[:, t], a, b[:, t],
+                                       c[:, t])
+            ys.append(y)
+        stepped = jnp.stack(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(stepped), np.asarray(full),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestChipletEval:
+    @pytest.mark.parametrize("n", [256, 512, 1024])
+    def test_matches_costmodel(self, n):
+        dp = ps.random_design(jax.random.PRNGKey(n), (n,))
+        padded = ce.pad_designs(dp)
+        wl = cm.GENERIC_WORKLOAD
+        wl_vals = (float(wl.gemm_ops), float(wl.nongemm_ops),
+                   float(wl.hbm_bytes), float(wl.mapping_eff))
+        w_vals = (1.0, 1.0, 0.1)
+        out = ce.evaluate_batch(padded, wl_vals, w_vals, interpret=True)[:n]
+        expect = ref.chiplet_eval_reference(ps.to_flat(dp), wl_vals, w_vals)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_ops_dispatch_consistency(self):
+        dp = ps.random_design(jax.random.PRNGKey(7), (256,))
+        a = ops.chiplet_eval(dp, backend="pallas")
+        b = ops.chiplet_eval(dp, backend="ref")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_paper_case_design(self):
+        """Kernel reproduces the Table-6 case-(i) reward."""
+        import sys
+        sys.path.insert(0, "tests")
+        from test_costmodel import case_i_design
+        dp = jax.tree_util.tree_map(
+            lambda x: jnp.tile(x[None], (256,)), case_i_design())
+        out = ops.chiplet_eval(dp, backend="pallas")
+        expect = float(cm.evaluate(case_i_design()).reward)
+        np.testing.assert_allclose(np.asarray(out[:, 0]), expect, rtol=1e-4)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("b,hq,kv,s,d,pos", [
+        (2, 8, 2, 512, 64, 100),       # GQA group=4, partially filled
+        (1, 32, 8, 1024, 128, 1023),   # llama3-like, full cache
+        (4, 4, 4, 512, 64, 0),         # MHA, first token
+        (1, 14, 2, 512, 64, 300),      # qwen2-like
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, b, hq, kv, s, d, pos, dtype):
+        from repro.kernels import decode_attention as da
+        keys = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(keys[0], (b, hq, d), dtype)
+        k = jax.random.normal(keys[1], (b, kv, s, d), dtype)
+        v = jax.random.normal(keys[2], (b, kv, s, d), dtype)
+        out = da.decode_attention(q, k, v, jnp.int32(pos), interpret=True)
+        expect = ref.decode_attention_reference(q, k, v, jnp.int32(pos))
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expect, np.float32),
+            **_tol(dtype))
+
+    def test_sliding_window(self):
+        from repro.kernels import decode_attention as da
+        keys = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(keys[0], (1, 4, 64))
+        k = jax.random.normal(keys[1], (1, 2, 512, 64))
+        v = jax.random.normal(keys[2], (1, 2, 512, 64))
+        out = da.decode_attention(q, k, v, jnp.int32(400), window=128,
+                                  interpret=True)
+        expect = ref.decode_attention_reference(q, k, v, jnp.int32(400),
+                                                window=128)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_block_size_independence(self):
+        from repro.kernels import decode_attention as da
+        keys = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(keys[0], (2, 8, 64))
+        k = jax.random.normal(keys[1], (2, 2, 1024, 64))
+        v = jax.random.normal(keys[2], (2, 2, 1024, 64))
+        a = da.decode_attention(q, k, v, jnp.int32(700), block_s=128,
+                                interpret=True)
+        b = da.decode_attention(q, k, v, jnp.int32(700), block_s=1024,
+                                interpret=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_ops_dispatch(self):
+        keys = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(keys[0], (1, 4, 64))
+        k = jax.random.normal(keys[1], (1, 2, 512, 64))
+        v = jax.random.normal(keys[2], (1, 2, 512, 64))
+        a = ops.decode_attention(q, k, v, jnp.int32(99), backend="pallas")
+        b = ops.decode_attention(q, k, v, jnp.int32(99), backend="ref")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5)

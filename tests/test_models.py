@@ -1,0 +1,150 @@
+"""Per-architecture smoke tests (assignment requirement: reduced config of
+the same family, one forward/train step on CPU, output shapes + no NaNs)
+plus decode-vs-forward consistency and gradient health."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_REGISTRY, SHAPES_BY_NAME, shape_applicable
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import model as M
+from repro.training.optim import Adam, apply_updates, global_norm
+
+ARCH_NAMES = sorted(ARCH_REGISTRY)
+
+
+def _batch(cfg, bsz=2, seq=32, key=jax.random.PRNGKey(7)):
+    batch = {
+        "tokens": jax.random.randint(key, (bsz, seq), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (bsz, seq), 0, cfg.vocab_size),
+    }
+    if cfg.frontend == "vision_patches":
+        batch["patch_embeds"] = jnp.full(
+            (bsz, cfg.frontend_tokens, cfg.d_model), 0.01, jnp.float32)
+    if cfg.is_encdec:
+        batch["enc_frames"] = jnp.full((bsz, seq, cfg.d_model), 0.01,
+                                       jnp.float32)
+    return batch
+
+
+class TestSmoke:
+    @pytest.mark.parametrize("name", ARCH_NAMES)
+    def test_forward_shapes_no_nans(self, name):
+        cfg = ARCH_REGISTRY[name].reduced()
+        params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+        batch = _batch(cfg)
+        hidden, aux = M.backbone(
+            params, cfg, batch["tokens"],
+            prefix_embeds=batch.get("patch_embeds"),
+            enc_frames=batch.get("enc_frames"))
+        expect_len = 32 + (cfg.frontend_tokens
+                           if cfg.frontend == "vision_patches" else 0)
+        assert hidden.shape == (2, expect_len, cfg.d_model)
+        assert np.isfinite(np.asarray(hidden)).all()
+        assert np.isfinite(float(aux))
+
+    @pytest.mark.parametrize("name", ARCH_NAMES)
+    def test_train_step_no_nans(self, name):
+        cfg = ARCH_REGISTRY[name].reduced()
+        params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+        batch = _batch(cfg)
+        loss, grads = jax.value_and_grad(M.train_loss)(params, cfg, batch)
+        assert np.isfinite(float(loss))
+        gn = float(global_norm(grads))
+        assert np.isfinite(gn) and gn > 0.0
+        # one optimizer step moves the loss
+        opt = Adam(learning_rate=1e-2)
+        state = opt.init(params)
+        updates, state = opt.update(grads, state, params)
+        params2 = apply_updates(params, updates)
+        loss2 = float(M.train_loss(params2, cfg, batch))
+        assert loss2 < float(loss)
+
+    @pytest.mark.parametrize("name", ARCH_NAMES)
+    def test_param_count_matches_config_estimate(self, name):
+        cfg = ARCH_REGISTRY[name].reduced()
+        params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+        actual = M.param_count_actual(params)
+        estimate = cfg.param_count()
+        assert abs(actual - estimate) / estimate < 0.10, (actual, estimate)
+
+
+class TestDecodeConsistency:
+    TOLS = {"default": 5e-3, "moe": 5e-2, "mla": 5e-2}
+
+    @pytest.mark.parametrize("name", ARCH_NAMES)
+    def test_prefill_decode_matches_forward(self, name):
+        cfg = ARCH_REGISTRY[name].reduced()
+        params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+        bsz, lp, n_new = 2, 16, 4
+        tokens = jax.random.randint(jax.random.PRNGKey(1),
+                                    (bsz, lp + n_new), 0, cfg.vocab_size)
+        enc = (jnp.full((bsz, 8, cfg.d_model), 0.05, jnp.float32)
+               if cfg.is_encdec else None)
+
+        hidden, _ = M.backbone(params, cfg, tokens, enc_frames=enc)
+        hidden = L.apply_norm(params["final_norm"], hidden, cfg.norm)
+        full_logits = M._unembed_chunk(params, cfg, hidden)
+
+        cache = M.init_cache(cfg, bsz, lp + n_new, jnp.float32)
+        logits, cache, enc_out = M.prefill(params, cfg, tokens[:, :lp],
+                                           cache, enc_frames=enc)
+        tol = self.TOLS["moe"] if cfg.n_experts else (
+            self.TOLS["mla"] if cfg.attention == "mla" else
+            self.TOLS["default"])
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full_logits[:, lp - 1]),
+                                   atol=tol, rtol=tol)
+        for t in range(n_new):
+            logits, cache = M.decode_step(params, cfg, tokens[:, lp + t],
+                                          lp + t, cache, enc_out=enc_out)
+            np.testing.assert_allclose(
+                np.asarray(logits), np.asarray(full_logits[:, lp + t]),
+                atol=tol, rtol=tol)
+
+
+class TestLayerPlan:
+    def test_hymba_has_global_layers(self):
+        cfg = ARCH_REGISTRY["hymba-1.5b"]
+        plan = B.layer_plan(cfg)
+        windows = [k.window for k in plan]
+        assert windows[0] == 0 and windows[-1] == 0      # global
+        assert any(w > 0 for w in windows)               # windowed majority
+
+    def test_deepseek_first_layer_dense(self):
+        cfg = ARCH_REGISTRY["deepseek-v2-lite-16b"]
+        plan = B.layer_plan(cfg)
+        assert not plan[0].moe and all(k.moe for k in plan[1:])
+
+    def test_segment_grouping(self):
+        cfg = ARCH_REGISTRY["llama3-8b"]
+        segs = B.segments(B.layer_plan(cfg))
+        assert len(segs) == 1 and segs[0][1] == cfg.n_layers
+
+    def test_shape_applicability(self):
+        long = SHAPES_BY_NAME["long_500k"]
+        runs = {n: shape_applicable(c, long)[0]
+                for n, c in ARCH_REGISTRY.items()}
+        assert runs["mamba2-130m"] and runs["hymba-1.5b"] \
+            and runs["h2o-danube-3-4b"]
+        assert not runs["llama3-8b"] and not runs["qwen3-moe-235b-a22b"]
+
+
+class TestLossChunking:
+    def test_chunked_loss_matches_direct(self):
+        cfg = ARCH_REGISTRY["qwen2-0.5b"].reduced()
+        params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+        bsz, seq = 2, 64
+        hidden = jax.random.normal(jax.random.PRNGKey(3),
+                                   (bsz, seq, cfg.d_model)) * 0.1
+        labels = jax.random.randint(jax.random.PRNGKey(4), (bsz, seq), 0,
+                                    cfg.vocab_size)
+        chunked = float(M.lm_loss(params, cfg, hidden, labels))
+        logits = M._unembed_chunk(params, cfg, hidden)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        direct = float(-jnp.take_along_axis(
+            logp, labels[..., None], axis=-1).mean())
+        assert abs(chunked - direct) < 1e-4

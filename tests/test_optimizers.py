@@ -1,0 +1,159 @@
+"""PPO / SA / portfolio optimizer tests (paper §4, Algorithms 1-2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core import env as chipenv
+from repro.core import params as ps
+from repro.optimizer import portfolio
+from repro.rl import networks as nets
+from repro.rl import ppo
+from repro.sa import annealing as sa
+
+
+class TestNetworks:
+    def test_shapes(self):
+        params = nets.init_actor_critic(jax.random.PRNGKey(0))
+        obs = jnp.zeros((5, chipenv.OBS_DIM))
+        logits, value = nets.policy_value(params, obs)
+        assert logits.shape == (5, ps.TOTAL_LOGITS)
+        assert value.shape == (5,)
+
+    def test_action_sampling_in_range(self):
+        params = nets.init_actor_critic(jax.random.PRNGKey(0))
+        obs = jnp.zeros((64, chipenv.OBS_DIM))
+        logits, _ = nets.policy_value(params, obs)
+        a = nets.sample_action(jax.random.PRNGKey(1), logits)
+        assert a.shape == (64, ps.N_PARAMS)
+        assert chipenv.action_space.contains(np.asarray(a))
+
+    def test_log_prob_matches_manual(self):
+        params = nets.init_actor_critic(jax.random.PRNGKey(0))
+        obs = jax.random.normal(jax.random.PRNGKey(2), (3, chipenv.OBS_DIM))
+        logits, _ = nets.policy_value(params, obs)
+        a = nets.sample_action(jax.random.PRNGKey(3), logits)
+        lp = nets.log_prob(logits, a)
+        manual = 0.0
+        for i, head in enumerate(nets.split_logits(logits)):
+            logp = jax.nn.log_softmax(head, -1)
+            manual = manual + logp[jnp.arange(3), a[:, i]]
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(manual),
+                                   rtol=1e-5)
+
+    def test_entropy_positive_at_init(self):
+        params = nets.init_actor_critic(jax.random.PRNGKey(0))
+        obs = jnp.zeros((1, chipenv.OBS_DIM))
+        logits, _ = nets.policy_value(params, obs)
+        ent = float(nets.entropy(logits)[0])
+        # near-uniform at init: entropy ~ sum(log(head_sizes)) ~ 42 nats
+        expected = sum(np.log(h) for h in ps.HEAD_SIZES)
+        assert ent == pytest.approx(expected, rel=0.05)
+
+
+class TestEnv:
+    def test_reset_step(self):
+        state, obs = chipenv.reset(jax.random.PRNGKey(0))
+        assert obs.shape == (chipenv.OBS_DIM,)
+        action = chipenv.action_space.sample(jax.random.PRNGKey(1))
+        state, obs, r, done, metrics = chipenv.step(state, action)
+        assert obs.shape == (chipenv.OBS_DIM,)
+        assert np.isfinite(float(r))
+        assert not bool(done)
+        state, _, _, done, _ = chipenv.step(state, action)
+        assert bool(done)   # episode length 2 (paper Fig. 7)
+
+    def test_vec_env(self):
+        venv = chipenv.VecEnv(16)
+        states, obs = venv.reset(jax.random.PRNGKey(0))
+        assert obs.shape == (16, chipenv.OBS_DIM)
+        actions = chipenv.action_space.sample(jax.random.PRNGKey(1), (16,))
+        states, obs, r, done, _ = venv.step(states, actions)
+        assert r.shape == (16,)
+
+    def test_reward_equals_costmodel(self):
+        state, _ = chipenv.reset(jax.random.PRNGKey(0))
+        action = chipenv.action_space.sample(jax.random.PRNGKey(1))
+        _, _, r, _, _ = chipenv.step(state, action)
+        expect = cm.reward_only(ps.from_flat(action))
+        np.testing.assert_allclose(float(r), float(expect), rtol=1e-6)
+
+
+class TestSA:
+    def test_improves_over_random(self):
+        key = jax.random.PRNGKey(0)
+        res = sa.run(key, cfg=sa.SAConfig(n_iters=5000))
+        # random designs average well below 100; SA should beat 150
+        assert float(res.best_reward) > 150.0
+
+    def test_history_monotone(self):
+        res = sa.run(jax.random.PRNGKey(1), cfg=sa.SAConfig(n_iters=3000))
+        h = np.asarray(res.history)
+        assert (np.diff(h) >= -1e-5).all()
+
+    def test_population_stacks(self):
+        res = sa.run_population(jax.random.PRNGKey(2), 4,
+                                cfg=sa.SAConfig(n_iters=1000))
+        assert res.best_reward.shape == (4,)
+
+    def test_best_design_valid(self):
+        res = sa.run(jax.random.PRNGKey(3), cfg=sa.SAConfig(n_iters=1000))
+        flat = np.asarray(ps.to_flat(res.best_design))
+        assert chipenv.action_space.contains(flat)
+
+
+class TestPPO:
+    def test_learns(self):
+        cfg = ppo.PPOConfig(n_steps=128, n_envs=8, batch_size=64)
+        res = ppo.train(jax.random.PRNGKey(0), cfg=cfg,
+                        total_timesteps=128 * 8 * 6)
+        r = np.asarray(res.log.mean_episodic_reward)
+        assert r[-1] > r[0]            # reward increases
+        assert float(res.best_reward) > 150.0
+
+    def test_best_design_valid(self):
+        cfg = ppo.PPOConfig(n_steps=64, n_envs=4, batch_size=32)
+        res = ppo.train(jax.random.PRNGKey(1), cfg=cfg,
+                        total_timesteps=64 * 4 * 2)
+        flat = np.asarray(ps.to_flat(res.best_design))
+        assert chipenv.action_space.contains(flat)
+
+    def test_gae_shapes_and_terminal(self):
+        T, E = 8, 3
+        traj = ppo.Rollout(
+            obs=jnp.zeros((T, E, chipenv.OBS_DIM)),
+            actions=jnp.zeros((T, E, ps.N_PARAMS), jnp.int32),
+            log_probs=jnp.zeros((T, E)),
+            values=jnp.zeros((T, E)),
+            rewards=jnp.ones((T, E)),
+            dones=jnp.ones((T, E)),          # every step terminal
+        )
+        adv, ret = ppo.compute_gae(traj, jnp.zeros(E), ppo.PPOConfig())
+        # with V=0 and every step terminal, advantage == reward
+        np.testing.assert_allclose(np.asarray(adv), 1.0, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(ret), 1.0, rtol=1e-6)
+
+
+class TestPortfolio:
+    def test_runs_and_refines(self):
+        cfg = portfolio.PortfolioConfig(
+            n_sa=2, n_rl=1,
+            sa=sa.SAConfig(n_iters=2000),
+            rl=ppo.PPOConfig(n_steps=64, n_envs=4, batch_size=32),
+            rl_timesteps=64 * 4 * 2,
+            refine=True, max_refine_sweeps=2)
+        res = portfolio.optimize(jax.random.PRNGKey(0), cfg=cfg)
+        assert res.best_reward >= max(res.sa_rewards.max(),
+                                      res.rl_rewards.max()) - 1e-5
+        assert res.source in ("sa", "rl", "refined")
+        flat = np.asarray(ps.to_flat(res.best_design))
+        assert chipenv.action_space.contains(flat)
+
+    def test_coordinate_refine_never_worsens(self):
+        flat = jnp.zeros((ps.N_PARAMS,), jnp.int32)
+        env_cfg = chipenv.EnvConfig()
+        r0 = float(cm.reward_only(ps.from_flat(flat)))
+        _, r1 = portfolio.coordinate_refine(flat, env_cfg, max_sweeps=1)
+        assert r1 >= r0

@@ -1,0 +1,155 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis import hlo as hlo_lib
+from repro.core import costmodel as cm
+from repro.core import params as ps
+from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.training import compression as comp
+
+# small deadline budget: every example runs jitted numpy-ish code
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def design_strategy():
+    return st.tuples(*[st.integers(0, h - 1) for h in ps.HEAD_SIZES])
+
+
+class TestCostModelProperties:
+    @given(design_strategy())
+    @settings(**_SETTINGS)
+    def test_metrics_finite_positive(self, idx):
+        dp = ps.from_flat(jnp.asarray(idx, jnp.int32))
+        m = cm.evaluate(dp)
+        assert np.isfinite(float(m.reward))
+        assert float(m.eff_tops) > 0
+        assert 0 < float(m.u_sys) <= 1.0 + 1e-6
+        assert 0 < float(m.die_yield) <= 1.0
+        assert float(m.die_area_mm2) <= 400.0 + 1e-3
+        assert float(m.eff_tops) <= float(m.peak_tops) + 1e-3
+
+    @given(design_strategy())
+    @settings(**_SETTINGS)
+    def test_codec_roundtrip(self, idx):
+        flat = jnp.asarray(idx, jnp.int32)
+        back = ps.to_flat(ps.from_flat(flat))
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(idx))
+
+    @given(design_strategy(), st.integers(1, 127))
+    @settings(**_SETTINGS)
+    def test_more_links_never_reduce_utilization(self, idx, bump):
+        dp = ps.from_flat(jnp.asarray(idx, jnp.int32))
+        hi = dp._replace(hbm_links_2p5d=jnp.minimum(
+            dp.hbm_links_2p5d + bump, 99))
+        u_lo = float(cm.evaluate(dp).u_sys)
+        u_hi = float(cm.evaluate(hi).u_sys)
+        assert u_hi >= u_lo - 1e-6
+
+    @given(design_strategy())
+    @settings(**_SETTINGS)
+    def test_reward_decomposition(self, idx):
+        dp = ps.from_flat(jnp.asarray(idx, jnp.int32))
+        m = cm.evaluate(dp)
+        expect = float(m.reward_t) - float(m.reward_c) - 0.1 * float(m.reward_e)
+        np.testing.assert_allclose(float(m.reward), expect, rtol=1e-5)
+
+    @given(st.floats(1.0, 800.0), st.floats(0.01, 0.5))
+    @settings(**_SETTINGS)
+    def test_yield_bounds(self, area, d):
+        y = float(cm.die_yield(jnp.float32(area), d))
+        assert 0.0 < y <= 1.0
+        y2 = float(cm.die_yield(jnp.float32(area * 2), d))
+        assert y2 < y                      # strictly worse at larger area
+
+
+class TestCompressionProperties:
+    @given(st.integers(0, 2**31 - 1), st.integers(4, 512))
+    @settings(**_SETTINGS)
+    def test_int8_error_bounded_by_scale(self, seed, n):
+        g = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+        q, scale = comp.quantize_int8(g, jax.random.PRNGKey(seed + 1))
+        err = float(jnp.abs(comp.dequantize_int8(q, scale) - g).max())
+        assert err <= float(scale) * 1.01 + 1e-9
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(**_SETTINGS)
+    def test_error_feedback_identity(self, seed):
+        cfg = comp.CompressionConfig(scheme="int8")
+        g = {"w": jax.random.normal(jax.random.PRNGKey(seed), (64,))}
+        e0 = comp.init_error_state(g)
+        sent, e1 = comp.compress_grads(g, e0, cfg, jax.random.PRNGKey(1))
+        np.testing.assert_allclose(np.asarray(sent["w"] + e1["w"]),
+                                   np.asarray(g["w"]), atol=1e-5)
+
+
+class TestDataProperties:
+    @given(st.integers(0, 1000), st.integers(0, 7), st.integers(0, 100))
+    @settings(**_SETTINGS)
+    def test_batch_tokens_in_vocab(self, seed, shard, step):
+        cfg = DataConfig(seed=seed, shard=shard, vocab_size=512)
+        b = synthetic_batch(cfg, step)
+        toks = np.asarray(b["tokens"])
+        assert toks.min() >= 0 and toks.max() < 512
+        assert b["tokens"].shape == b["labels"].shape
+
+    @given(st.integers(0, 1000))
+    @settings(**_SETTINGS)
+    def test_determinism(self, step):
+        cfg = DataConfig(seed=3)
+        a, b = synthetic_batch(cfg, step), synthetic_batch(cfg, step)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                      np.asarray(b["tokens"]))
+
+
+class TestHLOParserProperties:
+    @given(st.integers(1, 20), st.integers(16, 128))
+    @settings(max_examples=8, deadline=None)
+    def test_scan_flops_scale_linearly(self, trips, dim):
+        dim = (dim // 16) * 16
+        a = jax.ShapeDtypeStruct((dim, dim), jnp.float32)
+
+        def f(x):
+            def body(c, _):
+                return c @ c, None
+            y, _ = jax.lax.scan(body, x, None, length=trips)
+            return y
+
+        txt = jax.jit(f).lower(a).compile().as_text()
+        pc = hlo_lib.program_costs(txt)
+        expect = trips * 2 * dim ** 3
+        np.testing.assert_allclose(pc.flops, expect, rtol=1e-6)
+
+
+class TestModelCausality:
+    """Causality invariant: changing future tokens must not change past
+    logits (catches masking bugs across all attention flavours)."""
+
+    def _logits(self, cfg, tokens):
+        from repro.models import layers as L
+        from repro.models import model as M
+        params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+        enc = (jnp.full((1, 8, cfg.d_model), 0.05, jnp.float32)
+               if cfg.is_encdec else None)
+        hidden, _ = M.backbone(params, cfg, tokens, enc_frames=enc)
+        hidden = L.apply_norm(params["final_norm"], hidden, cfg.norm)
+        return np.asarray(M._unembed_chunk(params, cfg, hidden))
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=5, deadline=None)
+    def test_causal_families(self, seed):
+        from repro.configs import ARCH_REGISTRY
+        for name in ("qwen2-0.5b", "mamba2-130m", "hymba-1.5b",
+                     "h2o-danube-3-4b", "deepseek-v2-lite-16b"):
+            cfg = ARCH_REGISTRY[name].reduced()
+            key = jax.random.PRNGKey(seed)
+            toks = jax.random.randint(key, (1, 16), 0, cfg.vocab_size)
+            toks2 = toks.at[0, -1].set((toks[0, -1] + 7) % cfg.vocab_size)
+            a = self._logits(cfg, toks)
+            b = self._logits(cfg, toks2)
+            np.testing.assert_allclose(a[0, :-1], b[0, :-1],
+                                       atol=1e-5, rtol=1e-5,
+                                       err_msg=name)

@@ -1,0 +1,135 @@
+"""Tuning-flag equivalence tests: every §Perf optimization must preserve
+numerics (same loss / same logits as the baseline path)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_REGISTRY
+from repro.models import model as M
+from repro.models.tuning import TUNING, tuned
+
+ARCH = ARCH_REGISTRY["llama3-8b"].reduced()
+QWEN = ARCH_REGISTRY["qwen2-0.5b"].reduced()
+
+
+def _train_loss(cfg, flags):
+    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0,
+                                     cfg.vocab_size),
+    }
+    with tuned(**flags):
+        loss, grads = jax.value_and_grad(M.train_loss)(params, cfg, batch)
+    return float(loss), grads
+
+
+class TestFlagEquivalence:
+    def test_loss_remat_same_loss_and_grads(self):
+        l0, g0 = _train_loss(QWEN, {})
+        l1, g1 = _train_loss(QWEN, {"loss_remat": True})
+        assert l0 == l1  # remat must be bit-identical forward
+        for a, b in zip(jax.tree_util.tree_leaves(g0),
+                        jax.tree_util.tree_leaves(g1)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_attn_chunk_remat_same_loss(self):
+        l0, _ = _train_loss(QWEN, {})
+        l1, _ = _train_loss(QWEN, {"attn_chunk_remat": True})
+        assert abs(l0 - l1) < 1e-6
+
+    def test_grouped_gqa_decode_matches_baseline(self):
+        cfg = ARCH
+        params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                  cfg.vocab_size)
+        outs = {}
+        for name, flags in (("base", {}),
+                            ("grouped", {"gqa_grouped_einsum": True})):
+            with tuned(**flags):
+                cache = M.init_cache(cfg, 2, 16, jnp.float32)
+                logits, cache, _ = M.prefill(params, cfg, toks[:, :8],
+                                             cache)
+                for t in range(4):
+                    logits, cache = M.decode_step(
+                        params, cfg, toks[:, 8 + t], 8 + t, cache)
+                outs[name] = np.asarray(logits)
+        np.testing.assert_allclose(outs["base"], outs["grouped"],
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_bf16_einsum_decode_close(self):
+        """bf16-accumulate path: looser tolerance (documented trade)."""
+        cfg = ARCH
+        params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                  cfg.vocab_size)
+        outs = {}
+        for name, flags in (
+                ("base", {}),
+                ("bf16", {"gqa_grouped_einsum": True,
+                          "decode_bf16_einsum": True})):
+            with tuned(**flags):
+                cache = M.init_cache(cfg, 2, 16, jnp.float32)
+                logits, cache, _ = M.prefill(params, cfg, toks[:, :8],
+                                             cache)
+                logits, _ = M.decode_step(params, cfg, toks[:, 8], 8,
+                                          cache)
+                outs[name] = np.asarray(logits)
+        np.testing.assert_allclose(outs["base"], outs["bf16"],
+                                   rtol=5e-2, atol=5e-2)
+
+    def test_tuned_context_restores(self):
+        assert not TUNING.loss_remat
+        with tuned(loss_remat=True, moe_capacity_factor=2.0):
+            assert TUNING.loss_remat
+            assert TUNING.moe_capacity_factor == 2.0
+        assert not TUNING.loss_remat
+        assert TUNING.moe_capacity_factor == 1.25
+
+    def test_moe_capacity_changes_drop_rate(self):
+        cfg = ARCH_REGISTRY["qwen3-moe-235b-a22b"].reduced()
+        params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+        batch = {
+            "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32),
+                                         0, cfg.vocab_size),
+            "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 32),
+                                         0, cfg.vocab_size),
+        }
+        with tuned(moe_capacity_factor=4.0):
+            l_hi = float(M.train_loss(params, cfg, batch))
+        with tuned(moe_capacity_factor=0.25):
+            l_lo = float(M.train_loss(params, cfg, batch))
+        # different capacity -> different routing drops -> different loss
+        assert np.isfinite(l_hi) and np.isfinite(l_lo)
+        assert l_hi != l_lo
+
+
+class TestMoEScatterDispatch:
+    def test_moe_scatter_matches_dense(self):
+        """Scatter dispatch must be numerically identical to the dense
+        GShard path (same top-k, capacity, drops, combine weights)."""
+        cfg = ARCH_REGISTRY["qwen3-moe-235b-a22b"].reduced()
+        params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+        batch = {
+            "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32),
+                                         0, cfg.vocab_size),
+            "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 32),
+                                         0, cfg.vocab_size),
+        }
+        l_dense = float(M.train_loss(params, cfg, batch))
+        with tuned(moe_scatter_dispatch=True):
+            l_scatter = float(M.train_loss(params, cfg, batch))
+        np.testing.assert_allclose(l_scatter, l_dense, rtol=1e-5)
+
+    def test_moe_scatter_grads_match(self):
+        cfg = ARCH_REGISTRY["deepseek-v2-lite-16b"].reduced()
+        l0, g0 = _train_loss(cfg, {})
+        l1, g1 = _train_loss(cfg, {"moe_scatter_dispatch": True})
+        np.testing.assert_allclose(l1, l0, rtol=1e-5)
+        for a, b in zip(jax.tree_util.tree_leaves(g0),
+                        jax.tree_util.tree_leaves(g1)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=5e-4, atol=1e-5)

@@ -1,0 +1,79 @@
+"""Workload-descriptor tests: the co-design loop's inputs.
+
+Cross-checks the analytical FLOPs accounting (configs/base.py) against
+the *compiled* model (while-aware HLO dot census) — the same numbers feed
+both the Chiplet-Gym objective and the roofline's MODEL_FLOPS.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import hlo as H
+from repro.configs import ARCH_REGISTRY
+from repro.core import workload as wl
+from repro.models import model as M
+
+
+class TestMLPerfTable7:
+    def test_all_five_present(self):
+        assert set(wl.MLPERF) == {"resnet50", "efficientdet", "maskrcnn",
+                                  "3dunet", "bert"}
+
+    def test_flops_match_paper(self):
+        # Table 7 FLOPs/forward-pass (MACs = FLOPs / 2)
+        expect = {"resnet50": 4.0, "efficientdet": 410.0,
+                  "maskrcnn": 447.0, "3dunet": 947.0, "bert": 32.0}
+        for name, gflops in expect.items():
+            w = wl.MLPERF[name]
+            assert float(w.gemm_ops) == pytest.approx(gflops * 1e9 / 2)
+
+
+class TestArchWorkloads:
+    def test_decode_streams_active_params(self):
+        cfg = ARCH_REGISTRY["llama3-8b"]
+        w = wl.from_arch_config(cfg, "decode")
+        assert float(w.hbm_bytes) >= 2.0 * cfg.active_param_count()
+
+    def test_moe_uses_active_not_total(self):
+        cfg = ARCH_REGISTRY["qwen3-moe-235b-a22b"]
+        w = wl.from_arch_config(cfg, "decode")
+        # 22B active, not 235B total
+        assert float(w.gemm_ops) < 0.2 * cfg.param_count()
+
+    def test_train_is_3x_forward(self):
+        cfg = ARCH_REGISTRY["qwen2-0.5b"]
+        fwd = wl.from_arch_config(cfg, "prefill")
+        train = wl.from_arch_config(cfg, "train")
+        np.testing.assert_allclose(float(train.gemm_ops),
+                                   3.0 * float(fwd.gemm_ops), rtol=1e-6)
+
+    def test_registry_includes_archs(self):
+        reg = wl.registry()
+        assert "llama3-8b:train" in reg and "bert" in reg
+
+
+class TestAnalyticalVsCompiled:
+    @pytest.mark.parametrize("name", ["qwen2-0.5b", "llama3-8b"])
+    def test_config_flops_vs_hlo(self, name):
+        """flops_per_token (analytical) vs compiled forward (HLO census)
+        on the reduced config — must agree within 25 % (analytical model
+        skips norms/rotary and counts GQA approximately)."""
+        cfg = ARCH_REGISTRY[name].reduced()
+        params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+        bsz, seq = 2, 64
+
+        def fwd(params, tokens):
+            hidden, _ = M.backbone(params, cfg, tokens)
+            return M._unembed_chunk(params, cfg, hidden)
+
+        tokens = jax.ShapeDtypeStruct((bsz, seq), jnp.int32)
+        params_sds = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+        txt = jax.jit(fwd).lower(params_sds, tokens).compile().as_text()
+        hlo_flops = H.program_costs(txt).flops
+
+        analytical = cfg.flops_per_token(seq) * bsz * seq
+        assert hlo_flops == pytest.approx(analytical, rel=0.25), \
+            (hlo_flops, analytical)
