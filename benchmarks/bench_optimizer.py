@@ -1,10 +1,18 @@
 """Fig. 9-11 + Table 6 reproduction: SA vs RL convergence over seeds for
 case (i) (<=64 chiplets) and case (ii) (<=128 chiplets), optimized design
 point, and optimizer runtime (paper: SA 500k iters <1 min; PPO 250k steps
-<20 min; our jitted versions are ~2 orders faster)."""
+<20 min; our jitted versions are ~2 orders faster).
+
+Also the portfolio-engine benchmark: sequential per-agent PPO loop vs the
+vmapped ``ppo.train_population`` (one XLA program for all seeds), plus a
+scenario-suite smoke run. ``python benchmarks/bench_optimizer.py --smoke``
+writes the measured record to ``benchmarks/BENCH_optimizer.json``.
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import time
 
@@ -63,7 +71,79 @@ def run_rl_case(cap: int, seeds: int):
     return np.asarray(vals), np.asarray(flats)
 
 
+def bench_portfolio_engine(n_rl: int, rl_cfg: ppo.PPOConfig,
+                           timesteps: int) -> dict:
+    """Sequential per-agent loop vs vmapped train_population, same seeds.
+
+    This is the refactor the portfolio optimizer rides on: the old
+    ``optimize`` trained its RL agents in a Python loop; the new one runs
+    them as a single vmapped XLA program. Returns the measured record.
+    """
+    key = jax.random.PRNGKey(7)
+    keys = jax.random.split(key, n_rl)
+
+    t0 = time.time()
+    seq_rewards = []
+    for i in range(n_rl):
+        res = ppo.train(keys[i], cfg=rl_cfg, total_timesteps=timesteps)
+        seq_rewards.append(float(res.best_reward))
+    seq_s = time.time() - t0
+
+    t0 = time.time()
+    pop = ppo.train_population(key, n_rl, cfg=rl_cfg,
+                               total_timesteps=timesteps)
+    jax.block_until_ready(pop)
+    vec_s = time.time() - t0
+    pop_rewards = np.asarray(pop.best_reward)
+
+    return {
+        "n_rl": n_rl,
+        "n_steps": rl_cfg.n_steps,
+        "n_envs": rl_cfg.n_envs,
+        "timesteps_per_agent": timesteps,
+        "sequential_wall_s": round(seq_s, 3),
+        "vectorized_wall_s": round(vec_s, 3),
+        "speedup": round(seq_s / max(vec_s, 1e-9), 2),
+        "sequential_agents_per_s": round(n_rl / max(seq_s, 1e-9), 3),
+        "vectorized_agents_per_s": round(n_rl / max(vec_s, 1e-9), 3),
+        "best_reward_sequential": round(max(seq_rewards), 2),
+        "best_reward_vectorized": round(float(pop_rewards.max()), 2),
+    }
+
+
+def bench_scenario_suite(smoke: bool = True) -> dict:
+    """Time one scenario-batched suite (5 MLPerf workloads x 3 weights)."""
+    from repro.optimizer import scenario as suite
+
+    cfg = suite.SMOKE_SUITE if smoke else suite.SuiteConfig()
+    res = suite.run_suite(jax.random.PRNGKey(0), cfg)
+    return {
+        "n_scenarios": len(res.outcomes),
+        "n_pareto": len(res.pareto),
+        "wall_time_s": round(res.wall_time_s, 3),
+        "scenarios_per_s": round(
+            len(res.outcomes) / max(res.wall_time_s, 1e-9), 3),
+    }
+
+
+def _engine_config(smoke: bool):
+    """(n_rl, PPOConfig, timesteps) for the engine bench at either scale."""
+    if smoke:
+        return 8, ppo.PPOConfig(n_steps=64, n_envs=4, batch_size=64), 64 * 4 * 4
+    return 16, ppo.PPOConfig(n_steps=256, n_envs=8, batch_size=64), 256 * 8 * 8
+
+
 def run(report):
+    engine = bench_portfolio_engine(*_engine_config(smoke=not FULL))
+    n_rl = engine["n_rl"]
+    report("portfolio_rl_sequential",
+           engine["sequential_wall_s"] * 1e6 / n_rl,
+           f"agents_per_s={engine['sequential_agents_per_s']}")
+    report("portfolio_rl_vectorized",
+           engine["vectorized_wall_s"] * 1e6 / n_rl,
+           f"agents_per_s={engine['vectorized_agents_per_s']};"
+           f"speedup={engine['speedup']}x")
+
     for case, cap in (("case_i", 64), ("case_ii", 128)):
         t0 = time.time()
         sa_vals, sa_flats = run_sa_case(cap, N_SEEDS)
@@ -90,3 +170,44 @@ def run(report):
                f"chiplets={int(m.n_dies)};hbm={int(m.n_hbm)};"
                f"mesh={int(m.mesh_m)}x{int(m.mesh_n)};"
                f"u_sys={float(m.u_sys):.2f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: small agent count / iterations")
+    ap.add_argument("--n-rl", type=int, default=None,
+                    help="RL population size (default: 8 smoke / 16 full)")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "BENCH_optimizer.json"))
+    args = ap.parse_args()
+
+    n_rl, rl_cfg, timesteps = _engine_config(smoke=args.smoke)
+    if args.n_rl:
+        n_rl = args.n_rl
+
+    print(f"[bench] portfolio engine: {n_rl} agents x {timesteps} steps, "
+          f"sequential loop vs vmapped train_population ...")
+    engine = bench_portfolio_engine(n_rl, rl_cfg, timesteps)
+    print(f"[bench]   sequential {engine['sequential_wall_s']}s "
+          f"({engine['sequential_agents_per_s']} agents/s)")
+    print(f"[bench]   vectorized {engine['vectorized_wall_s']}s "
+          f"({engine['vectorized_agents_per_s']} agents/s)  "
+          f"-> {engine['speedup']}x")
+
+    print("[bench] scenario suite (5 MLPerf workloads x 3 weightings) ...")
+    suite = bench_scenario_suite(smoke=args.smoke)
+    suite["mode"] = "smoke" if args.smoke else "full"
+    print(f"[bench]   {suite['n_scenarios']} scenarios in "
+          f"{suite['wall_time_s']}s, {suite['n_pareto']} on the frontier")
+
+    record = {"mode": "smoke" if args.smoke else "full",
+              "portfolio_engine": engine, "scenario_suite": suite}
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"[bench] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,9 +8,17 @@ model, then the Chiplet-Gym portfolio finds the PPAC-optimal chiplet
 system for decode-serving that model.
 
     PYTHONPATH=src python examples/codesign_workload.py --arch llama3-8b
+
+With ``--suite``, all requested archs and a reward-weight grid run as ONE
+scenario-batched engine (vmapped SA + vmapped PPO across every scenario)
+and the report includes the cross-scenario Pareto frontier:
+
+    PYTHONPATH=src python examples/codesign_workload.py \
+        --arch llama3-8b,mamba2-130m --suite
 """
 
 import argparse
+import dataclasses
 
 import jax
 
@@ -20,8 +28,23 @@ from repro.core import env as chipenv
 from repro.core import params as ps
 from repro.core import workload as wl
 from repro.optimizer import portfolio
+from repro.optimizer import scenario as suite
 from repro.rl import ppo
 from repro.sa import annealing as sa
+
+
+def run_suite(args):
+    if args.mode == "prefill":
+        raise SystemExit("--suite sweeps the registry, which names "
+                         "decode/train workloads; use --mode decode|train")
+    workloads = tuple(f"{n}:{args.mode}" for n in args.arch.split(","))
+    cfg = dataclasses.replace(suite.SMOKE_SUITE, workloads=workloads)
+    print(f"[suite] smoke scale (n_sa={cfg.n_sa}, n_rl={cfg.n_rl}, "
+          f"sa_iters={cfg.sa.n_iters}) — for full-scale search use "
+          f"`python -m repro.launch.train --arch scenario-suite`")
+    res = suite.run_suite(jax.random.PRNGKey(0), cfg, verbose=True)
+    print()
+    print(suite.format_report(res))
 
 
 def main():
@@ -29,7 +52,14 @@ def main():
     ap.add_argument("--arch", default="llama3-8b,mamba2-130m")
     ap.add_argument("--mode", default="decode",
                     choices=["decode", "prefill", "train"])
+    ap.add_argument("--suite", action="store_true",
+                    help="scenario-batched run over all archs x a "
+                         "reward-weight grid, with Pareto report")
     args = ap.parse_args()
+
+    if args.suite:
+        run_suite(args)
+        return
 
     for name in args.arch.split(","):
         arch = ARCH_REGISTRY[name]

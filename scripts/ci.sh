@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# CI entrypoint: tier-1 tests + the portfolio-engine smoke benchmark.
+#
+#   bash scripts/ci.sh
+#
+# Mirrors ROADMAP.md's tier-1 verify command. hypothesis is optional
+# (tests/test_properties.py skips itself when it is missing).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== tier-1: pytest ==="
+python -m pytest -q
+
+echo "=== smoke: portfolio engine benchmark ==="
+python benchmarks/bench_optimizer.py --smoke

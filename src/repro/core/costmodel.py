@@ -243,6 +243,30 @@ class RewardWeights(NamedTuple):
     gamma: jnp.ndarray = jnp.float32(0.1)
 
 
+def make_weights(alpha: float, beta: float, gamma: float) -> RewardWeights:
+    return RewardWeights(alpha=jnp.float32(alpha), beta=jnp.float32(beta),
+                         gamma=jnp.float32(gamma))
+
+
+class Scenario(NamedTuple):
+    """One optimization scenario: what to run x how to trade off PPAC.
+
+    A pure pytree of arrays, so a *batch* of scenarios (every leaf carrying
+    a leading scenario axis) is a first-class traced argument: one compiled
+    program can evaluate a (design x workload x reward-weight) grid, and
+    ``sa.run`` / ``ppo.train`` vmap over it.
+    """
+
+    workload: Workload = GENERIC_WORKLOAD
+    weights: RewardWeights = RewardWeights()
+
+
+def stack_scenarios(scenarios) -> Scenario:
+    """Stack a sequence of scalar Scenarios into one batched Scenario."""
+    import jax
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *scenarios)
+
+
 def evaluate(dp: ps.DesignPoint,
              workload: Workload = GENERIC_WORKLOAD,
              weights: RewardWeights = RewardWeights(),
@@ -423,3 +447,46 @@ def reward_only(dp: ps.DesignPoint,
                 cfg: hw.HWConfig = hw.DEFAULT_HW) -> jnp.ndarray:
     """Cheap scalar objective for the optimizers."""
     return evaluate(dp, workload, weights, cfg).reward
+
+
+def evaluate_scenario(dp: ps.DesignPoint, scenario: Scenario = Scenario(),
+                      cfg: hw.HWConfig = hw.DEFAULT_HW) -> Metrics:
+    """`evaluate` keyed by a Scenario pytree (vmap over it for batches)."""
+    return evaluate(dp, scenario.workload, scenario.weights, cfg)
+
+
+def evaluate_scenarios(dp: ps.DesignPoint, scenarios: Scenario,
+                       cfg: hw.HWConfig = hw.DEFAULT_HW,
+                       paired: bool = None) -> Metrics:
+    """Evaluate design point(s) under a *batch* of scenarios.
+
+    ``scenarios`` carries a leading scenario axis S on every leaf. ``dp``
+    is one of:
+      - a single design -> Metrics (S, ...): the design under each scenario,
+      - a design batch with leading axis exactly S -> Metrics (S, ...):
+        design i paired with scenario i,
+      - any other design batch shape B -> Metrics (S, *B, ...): the full
+        cross product (every design under every scenario).
+    A B == S batch defaults to *paired*; pass ``paired=False`` to force
+    the cross product (or ``paired=True`` to assert pairing was intended).
+    One compiled program for the whole (design x workload x weights) grid.
+    """
+    import jax
+    n_scen = jnp.shape(scenarios.weights.alpha)[0]
+    shape_paired = jnp.ndim(dp.arch_type) >= 1 and (
+        jnp.shape(dp.arch_type)[0] == n_scen)
+    if paired is None:
+        paired = shape_paired
+    elif paired and not shape_paired:
+        raise ValueError(
+            f"paired=True needs a design batch with leading axis "
+            f"{n_scen}, got shape {jnp.shape(dp.arch_type)}")
+    in_axes = (0 if paired else None, 0)
+    return jax.vmap(lambda d, s: evaluate_scenario(d, s, cfg),
+                    in_axes=in_axes)(dp, scenarios)
+
+
+def reward_scenarios(dp: ps.DesignPoint, scenarios: Scenario,
+                     cfg: hw.HWConfig = hw.DEFAULT_HW) -> jnp.ndarray:
+    """Scenario-batched scalar objective (leading axis = scenario)."""
+    return evaluate_scenarios(dp, scenarios, cfg).reward

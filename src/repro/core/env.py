@@ -33,12 +33,30 @@ from repro.core import spaces
 OBS_DIM = 10
 
 
+Scenario = cm.Scenario   # re-export: the traced (workload, weights) pytree
+
+
 @dataclasses.dataclass(frozen=True)
 class EnvConfig:
+    """Static environment configuration.
+
+    ``workload`` / ``weights`` remain here as *defaults* for backwards
+    compatibility, but the traced path is the ``scenario`` argument of
+    ``reset`` / ``step``: pass a ``Scenario`` (or a vmapped batch of them)
+    to run many (workload x reward-weight) settings in one XLA program.
+    """
+
     episode_len: int = 2
     weights: cm.RewardWeights = cm.RewardWeights()
     workload: cm.Workload = cm.GENERIC_WORKLOAD
     hw: hw.HWConfig = hw.DEFAULT_HW
+
+    def scenario(self) -> cm.Scenario:
+        return cm.Scenario(workload=self.workload, weights=self.weights)
+
+
+def _resolve(scenario, cfg: EnvConfig) -> cm.Scenario:
+    return cfg.scenario() if scenario is None else scenario
 
 
 class EnvState(NamedTuple):
@@ -71,11 +89,13 @@ def _observe(metrics: cm.Metrics, t, prev_reward, cfg: EnvConfig):
     return jnp.clip(o, -10.0, 10.0)
 
 
-def reset(key, cfg: EnvConfig = EnvConfig()) -> Tuple[EnvState, jnp.ndarray]:
+def reset(key, cfg: EnvConfig = EnvConfig(),
+          scenario: cm.Scenario = None) -> Tuple[EnvState, jnp.ndarray]:
     """Start an episode from a uniformly random design point."""
+    scenario = _resolve(scenario, cfg)
     k_design, k_state = jax.random.split(key)
     design = ps.random_design(k_design)
-    metrics = cm.evaluate(design, cfg.workload, cfg.weights, cfg.hw)
+    metrics = cm.evaluate(design, scenario.workload, scenario.weights, cfg.hw)
     zero = jnp.float32(0.0)
     state = EnvState(design=design, t=jnp.int32(0), prev_reward=zero,
                      key=k_state)
@@ -83,11 +103,12 @@ def reset(key, cfg: EnvConfig = EnvConfig()) -> Tuple[EnvState, jnp.ndarray]:
 
 
 def step(state: EnvState, action: jnp.ndarray,
-         cfg: EnvConfig = EnvConfig()
+         cfg: EnvConfig = EnvConfig(), scenario: cm.Scenario = None
          ) -> Tuple[EnvState, jnp.ndarray, jnp.ndarray, jnp.ndarray, cm.Metrics]:
     """Apply a full design-point assignment; returns (state', obs, r, done, metrics)."""
+    scenario = _resolve(scenario, cfg)
     design = ps.from_flat(action)
-    metrics = cm.evaluate(design, cfg.workload, cfg.weights, cfg.hw)
+    metrics = cm.evaluate(design, scenario.workload, scenario.weights, cfg.hw)
     reward = metrics.reward
     t_next = state.t + 1
     done = t_next >= cfg.episode_len
@@ -98,11 +119,13 @@ def step(state: EnvState, action: jnp.ndarray,
 
 
 def auto_reset_step(state: EnvState, action: jnp.ndarray,
-                    cfg: EnvConfig = EnvConfig()):
+                    cfg: EnvConfig = EnvConfig(),
+                    scenario: cm.Scenario = None):
     """step() that re-seeds a fresh episode when done (for rollout scans)."""
-    new_state, obs, reward, done, metrics = step(state, action, cfg)
+    scenario = _resolve(scenario, cfg)
+    new_state, obs, reward, done, metrics = step(state, action, cfg, scenario)
     k_next, k_reset = jax.random.split(new_state.key)
-    reset_state, reset_obs = reset(k_reset, cfg)
+    reset_state, reset_obs = reset(k_reset, cfg, scenario)
     out_state = jax.tree_util.tree_map(
         lambda a, b: jnp.where(done, a, b),
         reset_state._replace(key=k_next), new_state)
@@ -113,11 +136,14 @@ def auto_reset_step(state: EnvState, action: jnp.ndarray,
 class VecEnv:
     """Convenience wrapper: N independent environments via vmap."""
 
-    def __init__(self, n_envs: int, cfg: EnvConfig = EnvConfig()):
+    def __init__(self, n_envs: int, cfg: EnvConfig = EnvConfig(),
+                 scenario: cm.Scenario = None):
         self.n_envs = n_envs
         self.cfg = cfg
-        self._reset = jax.jit(jax.vmap(lambda k: reset(k, cfg)))
-        self._step = jax.jit(jax.vmap(lambda s, a: auto_reset_step(s, a, cfg)))
+        scenario = _resolve(scenario, cfg)
+        self._reset = jax.jit(jax.vmap(lambda k: reset(k, cfg, scenario)))
+        self._step = jax.jit(
+            jax.vmap(lambda s, a: auto_reset_step(s, a, cfg, scenario)))
 
     def reset(self, key):
         return self._reset(jax.random.split(key, self.n_envs))

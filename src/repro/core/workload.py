@@ -15,7 +15,7 @@ real compiled step.
 
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Sequence, Tuple
 
 import jax.numpy as jnp
 
@@ -111,3 +111,39 @@ def registry() -> Dict[str, Workload]:
     except ImportError:  # configs not built yet (bootstrap order)
         pass
     return out
+
+
+def resolve(names: Sequence[str]) -> Tuple[Tuple[str, ...], Tuple[Workload, ...]]:
+    """Look up workloads by registry name; returns (names, workloads).
+
+    Accepts glob-ish shortcuts: ``"mlperf"`` expands to the five MLPerf
+    benchmarks, ``"archs:decode"`` / ``"archs:train"`` to every assigned
+    architecture in that mode, ``"all"`` to the whole registry.
+    """
+    reg = registry()
+    out_names = []
+    for name in names:
+        if name == "all":
+            out_names.extend(reg.keys())
+        elif name == "mlperf":
+            out_names.extend(MLPERF.keys())
+        elif name in ("archs:decode", "archs:train"):
+            mode = name.split(":")[1]
+            matched = [k for k in reg if k.endswith(f":{mode}")]
+            if not matched:
+                raise KeyError(
+                    f"group {name!r} matched no workloads (arch configs "
+                    f"unavailable?); known: {sorted(reg)}")
+            out_names.extend(matched)
+        elif name in reg:
+            out_names.append(name)
+        else:
+            raise KeyError(
+                f"unknown workload {name!r}; known: {sorted(reg)}")
+    # dedupe, order-preserving
+    seen, uniq = set(), []
+    for n in out_names:
+        if n not in seen:
+            seen.add(n)
+            uniq.append(n)
+    return tuple(uniq), tuple(reg[n] for n in uniq)

@@ -1,4 +1,5 @@
-"""Training launcher: LM training or distributed Chiplet-Gym PPO.
+"""Training launcher: LM training, distributed Chiplet-Gym PPO, or a
+scenario-suite sweep.
 
     # LM training (reduced config on CPU; full config on a pod):
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \\
@@ -7,6 +8,12 @@
     # the paper's own workload — PPO over Chiplet-Gym, data-parallel
     # across all local devices:
     PYTHONPATH=src python -m repro.launch.train --arch chipletgym --steps 5
+
+    # scenario-batched DSE: portfolio-optimize every (workload x
+    # reward-weight) scenario in one vectorized engine, report per-scenario
+    # winners + the cross-scenario Pareto frontier:
+    PYTHONPATH=src python -m repro.launch.train --arch scenario-suite \\
+        --workloads mlperf --smoke --out /tmp/suite.json
 
 On a real pod this module is the per-host entrypoint
 (jax.distributed.initialize + the same code path).
@@ -45,6 +52,38 @@ def train_chipletgym(args):
     print(ps.describe(ps.from_flat(carry.best_action)))
 
 
+def train_scenario_suite(args):
+    import dataclasses
+
+    import jax as _jax
+
+    from repro.optimizer import scenario as suite
+
+    cfg = suite.SMOKE_SUITE if args.smoke else suite.SuiteConfig()
+    workloads = tuple(args.workloads.split(","))
+    overrides = {"workloads": workloads}
+    if args.weights:
+        try:
+            grid = tuple(tuple(float(x) for x in w.split(":"))
+                         for w in args.weights.split(","))
+            if any(len(w) != 3 for w in grid):
+                raise ValueError
+        except ValueError:
+            raise SystemExit(
+                f"--weights must be a comma list of alpha:beta:gamma "
+                f"triples, e.g. 1:1:0.1,2:0.5:0.1 (got {args.weights!r})")
+        overrides["weight_grid"] = grid
+    cfg = dataclasses.replace(cfg, **overrides)
+    print(f"[suite] workloads={workloads} x {len(cfg.weight_grid)} "
+          f"weight settings, n_sa={cfg.n_sa}, n_rl={cfg.n_rl}")
+    res = suite.run_suite(_jax.random.PRNGKey(args.seed), cfg, verbose=True)
+    print()
+    print(suite.format_report(res))
+    if args.out:
+        suite.save_json(res, args.out)
+        print(f"\n[suite] wrote {args.out}")
+
+
 def train_lm(args):
     arch = ARCH_REGISTRY[args.arch]
     if args.reduced:
@@ -77,9 +116,20 @@ def main():
                     choices=["none", "int8", "topk"])
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workloads", default="mlperf",
+                    help="comma list of registry names / groups "
+                         "(mlperf, archs:decode, archs:train, all)")
+    ap.add_argument("--weights", default=None,
+                    help="comma list of alpha:beta:gamma reward weightings")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny suite scale for CI")
+    ap.add_argument("--out", default=None,
+                    help="write the scenario-suite JSON report here")
     args = ap.parse_args()
     if args.arch == "chipletgym":
         train_chipletgym(args)
+    elif args.arch == "scenario-suite":
+        train_scenario_suite(args)
     else:
         train_lm(args)
 

@@ -1,1 +1,1 @@
-"""Portfolio optimizer (paper Algorithm 1)."""
+"""Portfolio optimizer (paper Algorithm 1) + scenario-batched suite."""

@@ -16,8 +16,9 @@ few percent on top of the raw RL/SA winners.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import List, NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -51,25 +52,31 @@ class PortfolioResult(NamedTuple):
     source: str                     # 'sa' | 'rl' | 'refined'
 
 
-def _objective_fn(env_cfg):
-    def f(flat_idx):
-        return cm.reward_only(ps.from_flat(flat_idx), env_cfg.workload,
-                              env_cfg.weights, env_cfg.hw)
-    return jax.jit(f)
+@functools.partial(jax.jit, static_argnums=(2,))
+def _sweep_rewards(cands, scenario: cm.Scenario, hw_cfg):
+    """Rewards of a (K, 14) candidate batch under one scenario.
+
+    Module-level jit with the scenario as a traced argument, so the
+    compilation cache is shared across scenarios (a suite refines many
+    winners) instead of re-tracing a fresh closure per scenario.
+    """
+    return jax.vmap(
+        lambda c: cm.reward_only(ps.from_flat(c), scenario.workload,
+                                 scenario.weights, hw_cfg))(cands)
 
 
 def coordinate_refine(flat: jnp.ndarray, env_cfg: chipenv.EnvConfig,
-                      max_sweeps: int = 8):
+                      max_sweeps: int = 8, scenario: cm.Scenario = None):
     """Exhaustive per-coordinate sweep until a fixed point."""
-    obj = _objective_fn(env_cfg)
+    scenario = env_cfg.scenario() if scenario is None else scenario
     best = jnp.asarray(flat, jnp.int32)
-    best_r = float(obj(best))
+    best_r = float(_sweep_rewards(best[None], scenario, env_cfg.hw)[0])
     for _ in range(max_sweeps):
         improved = False
         for dim, head in enumerate(ps.HEAD_SIZES):
             cand = jnp.tile(best[None, :], (head, 1))
             cand = cand.at[:, dim].set(jnp.arange(head, dtype=jnp.int32))
-            rewards = jax.vmap(obj)(cand)
+            rewards = _sweep_rewards(cand, scenario, env_cfg.hw)
             idx = int(jnp.argmax(rewards))
             r = float(rewards[idx])
             if r > best_r + 1e-6:
@@ -83,34 +90,42 @@ def coordinate_refine(flat: jnp.ndarray, env_cfg: chipenv.EnvConfig,
 
 def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
              cfg: PortfolioConfig = PortfolioConfig(),
-             verbose: bool = False) -> PortfolioResult:
-    """Algorithm 1: best of {n_sa SA chains} U {n_rl RL agents} (+refine)."""
+             verbose: bool = False,
+             scenario: cm.Scenario = None) -> PortfolioResult:
+    """Algorithm 1: best of {n_sa SA chains} U {n_rl RL agents} (+refine).
+
+    Both arms are single vmapped XLA programs: ``sa.run_population`` for
+    the chains and ``ppo.train_population`` for the agents — no per-agent
+    Python loop anywhere on the hot path.
+    """
     t0 = time.time()
+    scenario = env_cfg.scenario() if scenario is None else scenario
     k_sa, k_rl = jax.random.split(key)
 
     # --- SA population (one vmapped program) -------------------------------
-    sa_res = sa.run_population(k_sa, cfg.n_sa, env_cfg, cfg.sa)
+    sa_res = sa.run_population(k_sa, cfg.n_sa, env_cfg, cfg.sa,
+                               scenario=scenario)
     sa_rewards = np.asarray(sa_res.best_reward)
     sa_flats = np.asarray(ps.to_flat(sa_res.best_design))
 
-    # --- RL agents ----------------------------------------------------------
-    rl_rewards: List[float] = []
-    rl_flats: List[np.ndarray] = []
-    rl_keys = jax.random.split(k_rl, cfg.n_rl)
-    for i in range(cfg.n_rl):
-        res = ppo.train(rl_keys[i], env_cfg, cfg.rl,
-                        total_timesteps=cfg.rl_timesteps)
-        rl_rewards.append(float(res.best_reward))
-        rl_flats.append(np.asarray(ps.to_flat(res.best_design)))
+    # --- RL population (one vmapped program, seed-compatible with the old
+    # sequential loop) ------------------------------------------------------
+    if cfg.n_rl > 0:
+        rl_res = ppo.train_population(k_rl, cfg.n_rl, env_cfg, cfg.rl,
+                                      total_timesteps=cfg.rl_timesteps,
+                                      scenario=scenario)
+        rl_rewards_arr = np.asarray(rl_res.best_reward, np.float32)
+        rl_flats = np.asarray(ps.to_flat(rl_res.best_design))   # (n_rl, 14)
         if verbose:
-            print(f"  [portfolio] RL agent {i}: best={rl_rewards[-1]:.2f}")
-    rl_rewards_arr = np.asarray(rl_rewards, np.float32)
+            for i, r in enumerate(rl_rewards_arr):
+                print(f"  [portfolio] RL agent {i}: best={float(r):.2f}")
+    else:
+        rl_rewards_arr = np.zeros((0,), np.float32)
+        rl_flats = np.zeros((0, ps.N_PARAMS), np.int32)
 
     # --- exhaustive argmax over all outcomes (Alg. 1 lines 5-11) -----------
-    all_flats = np.concatenate(
-        [sa_flats, np.stack(rl_flats)] if rl_flats else [sa_flats], axis=0)
-    all_rewards = np.concatenate([sa_rewards, rl_rewards_arr]) \
-        if rl_flats else sa_rewards
+    all_flats = np.concatenate([sa_flats, rl_flats], axis=0)
+    all_rewards = np.concatenate([sa_rewards, rl_rewards_arr])
     top = int(np.argmax(all_rewards))
     best_flat = jnp.asarray(all_flats[top], jnp.int32)
     best_r = float(all_rewards[top])
@@ -119,7 +134,7 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
     refined_r = best_r
     if cfg.refine:
         refined_flat, refined_r = coordinate_refine(
-            best_flat, env_cfg, cfg.max_refine_sweeps)
+            best_flat, env_cfg, cfg.max_refine_sweeps, scenario)
         if refined_r > best_r:
             best_flat, source = refined_flat, "refined"
 

@@ -1,0 +1,242 @@
+"""Scenario-batched design-space exploration (ScenarioSuite).
+
+The paper optimizes one accelerator for one workload under one reward
+weighting. Production co-design (cf. Monad's multi-workload specialization,
+Gemini's joint co-exploration) needs the *grid*: every workload in the
+registry x every objective trade-off. This module runs the Algorithm-1
+portfolio across a (workload x reward-weight) scenario grid where both
+arms — the SA chains and the PPO agents — execute as scenario-vmapped XLA
+programs, then reports per-scenario winners plus the cross-scenario Pareto
+frontier over (throughput, energy/task, cost).
+
+    PYTHONPATH=src python -m repro.launch.train --arch scenario-suite \
+        --workloads mlperf --smoke
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core import env as chipenv
+from repro.core import params as ps
+from repro.core import workload as wl
+from repro.optimizer import portfolio
+from repro.rl import ppo
+from repro.sa import annealing as sa
+
+# (alpha, beta, gamma) objective trade-offs swept by default (Eq. 17):
+# balanced (paper default), throughput-first, cost-first, energy-aware.
+DEFAULT_WEIGHT_GRID: Tuple[Tuple[float, float, float], ...] = (
+    (1.0, 1.0, 0.1),
+    (2.0, 0.5, 0.1),
+    (0.5, 2.0, 0.1),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SuiteConfig:
+    """One scenario-suite run: workloads x weight grid x portfolio scale."""
+
+    workloads: Tuple[str, ...] = ("mlperf",)
+    weight_grid: Tuple[Tuple[float, float, float], ...] = DEFAULT_WEIGHT_GRID
+    n_sa: int = 8
+    n_rl: int = 4
+    sa: sa.SAConfig = sa.SAConfig(n_iters=20_000)
+    rl: ppo.PPOConfig = ppo.PPOConfig(n_steps=128, n_envs=4)
+    rl_timesteps: int = 128 * 4 * 4
+    refine: bool = True
+    max_refine_sweeps: int = 2
+    env: chipenv.EnvConfig = chipenv.EnvConfig()
+
+
+SMOKE_SUITE = SuiteConfig(
+    n_sa=2, n_rl=2,
+    sa=sa.SAConfig(n_iters=2_000),
+    rl=ppo.PPOConfig(n_steps=32, n_envs=2, batch_size=32),
+    rl_timesteps=32 * 2 * 2,
+    refine=True, max_refine_sweeps=1,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioOutcome:
+    """Winner of one (workload, reward-weight) scenario."""
+
+    name: str
+    workload_name: str
+    weights: Tuple[float, float, float]
+    best_flat: np.ndarray           # (14,) int32 design indices
+    best_reward: float
+    source: str                     # 'sa' | 'rl' | 'refined'
+    tasks_per_sec: float
+    energy_per_task_j: float
+    total_cost: float
+    eff_tops: float
+
+
+@dataclasses.dataclass(frozen=True)
+class SuiteResult:
+    outcomes: List[ScenarioOutcome]
+    pareto: List[int]               # indices into outcomes, non-dominated
+    wall_time_s: float
+
+
+def build_scenarios(cfg: SuiteConfig) -> Tuple[List[str], List[str],
+                                               cm.Scenario]:
+    """Resolve the grid -> (scenario names, workload names, batched Scenario)."""
+    wl_names, workloads = wl.resolve(cfg.workloads)
+    names, wnames, scalars = [], [], []
+    for wname, workload in zip(wl_names, workloads):
+        for a, b, g in cfg.weight_grid:
+            names.append(f"{wname}|a={a:g},b={b:g},g={g:g}")
+            wnames.append(wname)
+            scalars.append(cm.Scenario(workload=workload,
+                                       weights=cm.make_weights(a, b, g)))
+    return names, wnames, cm.stack_scenarios(scalars)
+
+
+def pareto_indices(points: np.ndarray,
+                   maximize: Sequence[bool]) -> List[int]:
+    """Indices of the non-dominated rows of ``points`` (S, D)."""
+    pts = np.asarray(points, np.float64).copy()
+    for d, mx in enumerate(maximize):
+        if not mx:
+            pts[:, d] = -pts[:, d]
+    out = []
+    for i in range(pts.shape[0]):
+        dominated = np.any(
+            np.all(pts >= pts[i], axis=1) & np.any(pts > pts[i], axis=1))
+        if not dominated:
+            out.append(i)
+    return out
+
+
+def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
+              verbose: bool = False) -> SuiteResult:
+    """Portfolio-optimize every scenario in the grid; both arms vectorized.
+
+    The SA arm runs (S scenarios x n_sa chains) as one XLA program, the RL
+    arm (S scenarios x n_rl agents) as another — the only Python loop left
+    is the cheap per-winner coordinate refinement.
+    """
+    t0 = time.time()
+    names, wnames, scenarios = build_scenarios(cfg)
+    n_scen = len(names)
+    k_sa, k_rl = jax.random.split(jnp.asarray(key))
+
+    cand_rewards = []                                   # each (S, K)
+    cand_flats = []                                     # each (S, K, 14)
+    if cfg.n_sa > 0:
+        sa_res = sa.run_scenario_population(
+            k_sa, scenarios, cfg.n_sa, cfg.env, cfg.sa)
+        cand_rewards.append(np.asarray(sa_res.best_reward))
+        cand_flats.append(np.asarray(ps.to_flat(sa_res.best_design)))
+    if cfg.n_rl > 0:
+        rl_res = ppo.train_scenario_population(
+            k_rl, scenarios, cfg.n_rl, cfg.env, cfg.rl,
+            total_timesteps=cfg.rl_timesteps)
+        cand_rewards.append(np.asarray(rl_res.best_reward))
+        cand_flats.append(np.asarray(ps.to_flat(rl_res.best_design)))
+    if not cand_rewards:
+        raise ValueError("SuiteConfig needs n_sa > 0 or n_rl > 0")
+
+    n_sa = cfg.n_sa
+    rewards = np.concatenate(cand_rewards, axis=1)      # (S, n_sa + n_rl)
+    flats = np.concatenate(cand_flats, axis=1)          # (S, ..., 14)
+
+    # per-scenario argmax + refinement (host side, cheap)
+    winner_flats = np.zeros((n_scen, ps.N_PARAMS), np.int32)
+    winner_rewards = np.zeros((n_scen,), np.float64)
+    sources: List[str] = []
+    for s in range(n_scen):
+        top = int(np.argmax(rewards[s]))
+        best_flat = jnp.asarray(flats[s, top], jnp.int32)
+        best_r = float(rewards[s, top])
+        source = "sa" if top < n_sa else "rl"
+        if cfg.refine:
+            scen_s = jax.tree_util.tree_map(lambda x: x[s], scenarios)
+            refined_flat, refined_r = portfolio.coordinate_refine(
+                best_flat, cfg.env, cfg.max_refine_sweeps, scen_s)
+            if refined_r > best_r:
+                best_flat, best_r, source = refined_flat, refined_r, "refined"
+        winner_flats[s] = np.asarray(best_flat)
+        winner_rewards[s] = best_r
+        sources.append(source)
+        if verbose:
+            print(f"  [suite] {names[s]}: reward={best_r:.1f} ({source})")
+
+    # scenario-batched PPAC evaluation of all winners in one program
+    dp_batch = ps.from_flat(jnp.asarray(winner_flats))
+    metrics = cm.evaluate_scenarios(dp_batch, scenarios, cfg.env.hw)
+
+    outcomes = []
+    for s in range(n_scen):
+        outcomes.append(ScenarioOutcome(
+            name=names[s], workload_name=wnames[s],
+            weights=(float(scenarios.weights.alpha[s]),
+                     float(scenarios.weights.beta[s]),
+                     float(scenarios.weights.gamma[s])),
+            best_flat=winner_flats[s],
+            best_reward=float(winner_rewards[s]),
+            source=sources[s],
+            tasks_per_sec=float(metrics.tasks_per_sec[s]),
+            energy_per_task_j=float(metrics.energy_per_task_j[s]),
+            total_cost=float(metrics.total_cost[s]),
+            eff_tops=float(metrics.eff_tops[s]),
+        ))
+
+    triples = np.stack([
+        [o.tasks_per_sec, o.energy_per_task_j, o.total_cost]
+        for o in outcomes])
+    pareto = pareto_indices(triples, maximize=(True, False, False))
+    return SuiteResult(outcomes=outcomes, pareto=pareto,
+                       wall_time_s=time.time() - t0)
+
+
+def format_report(res: SuiteResult) -> str:
+    """Human-readable per-scenario table + Pareto frontier."""
+    lines = [f"{'scenario':<42} {'reward':>9} {'tasks/s':>12} "
+             f"{'J/task':>10} {'cost':>9} {'src':>8}"]
+    for i, o in enumerate(res.outcomes):
+        star = "*" if i in res.pareto else " "
+        lines.append(
+            f"{star}{o.name:<41} {o.best_reward:>9.1f} "
+            f"{o.tasks_per_sec:>12,.0f} {o.energy_per_task_j:>10.2e} "
+            f"{o.total_cost:>9.0f} {o.source:>8}")
+    lines.append(f"\nPareto frontier (throughput vs energy vs cost): "
+                 f"{len(res.pareto)}/{len(res.outcomes)} scenarios (*), "
+                 f"suite wall-time {res.wall_time_s:.1f}s")
+    return "\n".join(lines)
+
+
+def to_json(res: SuiteResult) -> Dict:
+    """JSON-serializable summary (per-scenario winners + frontier)."""
+    return {
+        "wall_time_s": res.wall_time_s,
+        "pareto": list(res.pareto),
+        "scenarios": [{
+            "name": o.name,
+            "workload": o.workload_name,
+            "weights": list(o.weights),
+            "design": [int(x) for x in o.best_flat],
+            "reward": o.best_reward,
+            "source": o.source,
+            "tasks_per_sec": o.tasks_per_sec,
+            "energy_per_task_j": o.energy_per_task_j,
+            "total_cost": o.total_cost,
+            "eff_tops": o.eff_tops,
+        } for o in res.outcomes],
+    }
+
+
+def save_json(res: SuiteResult, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(to_json(res), f, indent=2)

@@ -35,16 +35,19 @@ def _env_axes(mesh: Mesh) -> Tuple[str, ...]:
 
 
 def init_carry(key, mesh: Mesh, env_cfg: chipenv.EnvConfig,
-               cfg: ppo.PPOConfig, optimizer: Adam) -> ppo.TrainCarry:
+               cfg: ppo.PPOConfig, optimizer: Adam,
+               scenario: chipenv.Scenario = None) -> ppo.TrainCarry:
     """Build a TrainCarry whose env fields carry a global leading axis of
     ``n_devices * n_envs`` (sharded), params replicated."""
+    scenario = env_cfg.scenario() if scenario is None else scenario
     n_dev = mesh.devices.size
     total_envs = n_dev * cfg.n_envs
     k_init, k_env, k_train = jax.random.split(key, 3)
     params = nets.init_actor_critic(k_init, obs_dim=chipenv.OBS_DIM)
     opt_state = optimizer.init(params)
     env_keys = jax.random.split(k_env, total_envs)
-    env_states, obs = jax.vmap(lambda k: chipenv.reset(k, env_cfg))(env_keys)
+    env_states, obs = jax.vmap(
+        lambda k: chipenv.reset(k, env_cfg, scenario))(env_keys)
     keys = jax.random.split(k_train, n_dev)
     return ppo.TrainCarry(
         params=params, opt_state=opt_state, env_states=env_states, obs=obs,
@@ -68,13 +71,16 @@ def carry_specs(mesh: Mesh) -> ppo.TrainCarry:
 
 
 def make_pod_update(mesh: Mesh, env_cfg: chipenv.EnvConfig,
-                    cfg: ppo.PPOConfig, optimizer: Adam):
+                    cfg: ppo.PPOConfig, optimizer: Adam,
+                    scenario: chipenv.Scenario = None):
     """One data-parallel PPO update across the whole mesh.
 
     Returns a jit'd function carry -> (carry, log). Gradients are averaged
     over every mesh axis; the globally best design point is all-gathered
-    and argmax-selected so all replicas agree.
+    and argmax-selected so all replicas agree. ``scenario`` (replicated)
+    selects the (workload, reward-weight) setting being optimized.
     """
+    scenario = env_cfg.scenario() if scenario is None else scenario
     env_axes = _env_axes(mesh)
     grad_reduce = lambda g: jax.lax.pmean(g, env_axes)
     local_update = ppo.make_update_step(env_cfg, cfg, optimizer,
@@ -83,7 +89,7 @@ def make_pod_update(mesh: Mesh, env_cfg: chipenv.EnvConfig,
     def shard_body(carry: ppo.TrainCarry):
         # inside shard_map: env fields have their local block, key is (1,2)
         local = carry._replace(key=carry.key[0])
-        local, log = local_update(local, None)
+        local, log = local_update(local, None, scenario)
 
         # agree on the global best (reward, action) pair
         all_r = jax.lax.all_gather(local.best_reward, env_axes[0])
@@ -119,11 +125,13 @@ def make_pod_update(mesh: Mesh, env_cfg: chipenv.EnvConfig,
 def train_distributed(key, mesh: Mesh,
                       env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
                       cfg: ppo.PPOConfig = ppo.PPOConfig(),
-                      n_updates: int = 10):
+                      n_updates: int = 10,
+                      scenario: chipenv.Scenario = None):
     """Full distributed training loop (used by launch/train.py --arch chipletgym)."""
+    scenario = env_cfg.scenario() if scenario is None else scenario
     optimizer = Adam(learning_rate=cfg.learning_rate,
                      max_grad_norm=cfg.max_grad_norm)
-    carry = init_carry(key, mesh, env_cfg, cfg, optimizer)
+    carry = init_carry(key, mesh, env_cfg, cfg, optimizer, scenario)
 
     # place carry according to its (prefix) specs
     def _put(tree, spec):
@@ -134,7 +142,7 @@ def train_distributed(key, mesh: Mesh,
     carry = ppo.TrainCarry(*[
         _put(getattr(carry, f), getattr(specs, f))
         for f in ppo.TrainCarry._fields])
-    update = make_pod_update(mesh, env_cfg, cfg, optimizer)
+    update = make_pod_update(mesh, env_cfg, cfg, optimizer, scenario)
     logs = []
     for _ in range(n_updates):
         carry, log = update(carry)

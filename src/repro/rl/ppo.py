@@ -78,8 +78,10 @@ class TrainResult(NamedTuple):
     best_reward: jnp.ndarray
 
 
-def collect_rollout(params, env_states, obs, key, env_cfg, cfg: PPOConfig):
+def collect_rollout(params, env_states, obs, key, env_cfg, cfg: PPOConfig,
+                    scenario: chipenv.Scenario = None):
     """T steps of E vectorized environments under the current policy."""
+    scenario = env_cfg.scenario() if scenario is None else scenario
 
     def step_fn(carry, _):
         states, obs, key = carry
@@ -88,7 +90,7 @@ def collect_rollout(params, env_states, obs, key, env_cfg, cfg: PPOConfig):
         action = nets.sample_action(k_act, logits)          # (E, 14)
         logp = nets.log_prob(logits, action)
         states, obs_next, reward, done, _ = jax.vmap(
-            lambda s, a: chipenv.auto_reset_step(s, a, env_cfg)
+            lambda s, a: chipenv.auto_reset_step(s, a, env_cfg, scenario)
         )(states, action)
         rec = Rollout(obs=obs, actions=action, log_probs=logp,
                       values=value, rewards=reward,
@@ -141,16 +143,20 @@ def make_update_step(env_cfg: chipenv.EnvConfig, cfg: PPOConfig,
 
     ``grad_reduce`` (optional) reduces gradients across data-parallel
     devices (rl/distributed.py passes a psum-mean); identity by default.
+    The returned ``update(carry, _, scenario=None)`` takes the scenario as
+    a *traced* argument so one compiled update serves any (workload,
+    reward-weight) setting, including vmapped batches of them.
     """
     total = cfg.n_steps * cfg.n_envs
     n_minibatches = max(total // cfg.batch_size, 1)
 
-    def update(carry: TrainCarry, _):
+    def update(carry: TrainCarry, _, scenario: chipenv.Scenario = None):
+        scenario = env_cfg.scenario() if scenario is None else scenario
         params, opt_state = carry.params, carry.opt_state
         env_states, obs, key = carry.env_states, carry.obs, carry.key
 
         env_states, obs, key, traj = collect_rollout(
-            params, env_states, obs, key, env_cfg, cfg)
+            params, env_states, obs, key, env_cfg, cfg, scenario)
         _, last_value = nets.policy_value(params, obs)
         advantages, returns = compute_gae(traj, last_value, cfg)
 
@@ -217,12 +223,15 @@ def make_update_step(env_cfg: chipenv.EnvConfig, cfg: PPOConfig,
 
 def train(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
           cfg: PPOConfig = PPOConfig(),
-          total_timesteps: int = 250_000) -> TrainResult:
+          total_timesteps: int = 250_000,
+          scenario: chipenv.Scenario = None) -> TrainResult:
     """Train a PPO agent; returns final params + best design point found.
 
     The paper trains 250k timesteps in <20 min with SB3; the jitted scan
-    version runs the same budget in seconds.
+    version runs the same budget in seconds. jit/vmap-safe: ``scenario``
+    is traced, so ``train_population`` vmaps this whole function.
     """
+    scenario = env_cfg.scenario() if scenario is None else scenario
     k_init, k_env, k_train = jax.random.split(key, 3)
     params = nets.init_actor_critic(k_init, obs_dim=chipenv.OBS_DIM)
     optimizer = Adam(learning_rate=cfg.learning_rate,
@@ -230,7 +239,8 @@ def train(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
     opt_state = optimizer.init(params)
 
     env_keys = jax.random.split(k_env, cfg.n_envs)
-    env_states, obs = jax.vmap(lambda k: chipenv.reset(k, env_cfg))(env_keys)
+    env_states, obs = jax.vmap(
+        lambda k: chipenv.reset(k, env_cfg, scenario))(env_keys)
 
     n_updates = max(total_timesteps // (cfg.n_steps * cfg.n_envs), 1)
     update = make_update_step(env_cfg, cfg, optimizer)
@@ -240,17 +250,54 @@ def train(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
         key=k_train, best_reward=jnp.float32(-jnp.inf),
         best_action=jnp.zeros((ps.N_PARAMS,), jnp.int32))
 
-    carry, log = jax.lax.scan(jax.jit(update), carry, None, length=n_updates)
+    carry, log = jax.lax.scan(
+        jax.jit(lambda c, x: update(c, x, scenario)),
+        carry, None, length=n_updates)
     best_design = ps.from_flat(carry.best_action)
     return TrainResult(params=carry.params, log=log,
                        best_design=best_design,
                        best_reward=carry.best_reward)
 
 
+def train_population(key, n_agents: int,
+                     env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
+                     cfg: PPOConfig = PPOConfig(),
+                     total_timesteps: int = 250_000,
+                     scenario: chipenv.Scenario = None) -> TrainResult:
+    """N PPO agents (different seeds) trained as ONE vmapped XLA program.
+
+    Mirrors ``sa.run_population``: the Alg.-1 portfolio's RL arm stops
+    being a sequential Python loop and becomes a single compiled program,
+    amortizing compilation and batching every matmul across agents.
+
+    Key derivation matches the sequential recipe exactly — agent ``i``
+    trains with ``jax.random.split(key, n_agents)[i]`` — so results are
+    seed-for-seed identical to ``n_agents`` separate ``train`` calls.
+    Every TrainResult field gains a leading ``n_agents`` axis.
+    """
+    scenario = env_cfg.scenario() if scenario is None else scenario
+    keys = jax.random.split(key, n_agents)
+    fn = lambda k, s: train(k, env_cfg, cfg, total_timesteps, s)
+    return jax.jit(jax.vmap(fn, in_axes=(0, None)))(keys, scenario)
+
+
+def train_scenario_population(key, scenarios: chipenv.Scenario,
+                              n_agents: int,
+                              env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
+                              cfg: PPOConfig = PPOConfig(),
+                              total_timesteps: int = 250_000) -> TrainResult:
+    """S scenarios x N seeds of PPO in one program; results are (S, N, ...)."""
+    n_scen = jnp.shape(scenarios.weights.alpha)[0]
+    keys = jax.random.split(key, int(n_scen))
+    return jax.jit(jax.vmap(
+        lambda k, s: train_population(k, n_agents, env_cfg, cfg,
+                                      total_timesteps, s)))(keys, scenarios)
+
+
 def greedy_design(params: nets.ACParams, env_cfg=chipenv.EnvConfig(),
-                  key=None) -> ps.DesignPoint:
+                  key=None, scenario: chipenv.Scenario = None) -> ps.DesignPoint:
     """Run the trained policy greedily from a reset obs (inference mode)."""
     key = jax.random.PRNGKey(0) if key is None else key
-    _, obs = chipenv.reset(key, env_cfg)
+    _, obs = chipenv.reset(key, env_cfg, scenario)
     logits, _ = nets.policy_value(params, obs)
     return ps.from_flat(nets.greedy_action(logits))

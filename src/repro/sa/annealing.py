@@ -48,19 +48,27 @@ class SAResult(NamedTuple):
     history: jnp.ndarray      # (n_records,) best-so-far trace
 
 
-def _objective(x: jnp.ndarray, env_cfg: chipenv.EnvConfig) -> jnp.ndarray:
+def _objective(x: jnp.ndarray, env_cfg: chipenv.EnvConfig,
+               scenario: cm.Scenario = None) -> jnp.ndarray:
     """Evaluate a continuous index-space point (rounded to the grid)."""
+    scenario = env_cfg.scenario() if scenario is None else scenario
     idx = jnp.clip(jnp.round(x), 0.0, _HEADS - 1.0).astype(jnp.int32)
     dp = ps.from_flat(idx)
-    return cm.reward_only(dp, env_cfg.workload, env_cfg.weights, env_cfg.hw)
+    return cm.reward_only(dp, scenario.workload, scenario.weights, env_cfg.hw)
 
 
 def run(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
-        cfg: SAConfig = SAConfig(), record_every: int = 1000) -> SAResult:
-    """One SA chain (Algorithm 2). jit/vmap-safe."""
+        cfg: SAConfig = SAConfig(), record_every: int = 1000,
+        scenario: cm.Scenario = None) -> SAResult:
+    """One SA chain (Algorithm 2). jit/vmap-safe.
+
+    ``scenario`` is a traced (workload, weights) pytree; vmap over it to
+    anneal many scenarios inside one XLA program.
+    """
+    scenario = env_cfg.scenario() if scenario is None else scenario
     k_init, k_run = jax.random.split(key)
     x0 = jax.random.uniform(k_init, (ps.N_PARAMS,)) * (_HEADS - 1.0)
-    o0 = _objective(x0, env_cfg)
+    o0 = _objective(x0, env_cfg, scenario)
     state = SAState(x_curr=x0, o_curr=o0, x_best=x0, o_best=o0, key=k_run)
 
     def step(state: SAState, it):
@@ -68,7 +76,7 @@ def run(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
         delta = jax.random.uniform(
             k_prop, (ps.N_PARAMS,), minval=-1.0, maxval=1.0) * cfg.step_size
         x_cand = jnp.clip(state.x_curr + delta, 0.0, _HEADS - 1.0)
-        o_cand = _objective(x_cand, env_cfg)
+        o_cand = _objective(x_cand, env_cfg, scenario)
 
         better_best = o_cand > state.o_best
         x_best = jnp.where(better_best, x_cand, state.x_best)
@@ -93,7 +101,26 @@ def run(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
 def run_population(key, n_chains: int,
                    env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
                    cfg: SAConfig = SAConfig(),
-                   record_every: int = 1000) -> SAResult:
+                   record_every: int = 1000,
+                   scenario: cm.Scenario = None) -> SAResult:
     """N independent chains in one vmapped program; results stacked."""
+    scenario = env_cfg.scenario() if scenario is None else scenario
     keys = jax.random.split(key, n_chains)
-    return jax.jit(jax.vmap(lambda k: run(k, env_cfg, cfg, record_every)))(keys)
+    return jax.jit(jax.vmap(
+        lambda k: run(k, env_cfg, cfg, record_every, scenario)))(keys)
+
+
+def run_scenario_population(key, scenarios: cm.Scenario, n_chains: int,
+                            env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
+                            cfg: SAConfig = SAConfig(),
+                            record_every: int = 1000) -> SAResult:
+    """S scenarios x N chains as ONE vmapped XLA program.
+
+    ``scenarios`` carries a leading scenario axis S on every leaf; results
+    are stacked (S, n_chains). Each scenario gets an independent key split.
+    """
+    n_scen = jnp.shape(scenarios.weights.alpha)[0]
+    keys = jax.random.split(key, int(n_scen))
+    return jax.jit(jax.vmap(
+        lambda k, s: run_population(k, n_chains, env_cfg, cfg,
+                                    record_every, s)))(keys, scenarios)

@@ -1,0 +1,190 @@
+"""Tests for the scenario-batched DSE engine (Scenario pytrees, vmapped
+PPO population, scenario-batched evaluation, ScenarioSuite)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core import env as chipenv
+from repro.core import params as ps
+from repro.core import workload as wl
+from repro.optimizer import portfolio
+from repro.optimizer import scenario as suite
+from repro.rl import ppo
+from repro.sa import annealing as sa
+
+TINY_PPO = ppo.PPOConfig(n_steps=32, n_envs=2, batch_size=32)
+TINY_STEPS = 32 * 2 * 2
+
+
+def _scenarios(n_workloads=3):
+    names = list(wl.MLPERF)[:n_workloads]
+    scalars = [cm.Scenario(workload=wl.MLPERF[n],
+                           weights=cm.make_weights(1.0, 1.0, 0.1))
+               for n in names]
+    return names, cm.stack_scenarios(scalars)
+
+
+class TestScenarioBatchedEval:
+    def test_matches_per_scenario_scalar(self):
+        names, scen = _scenarios()
+        dp = ps.random_design(jax.random.PRNGKey(0))
+        batched = cm.evaluate_scenarios(dp, scen)
+        for i, n in enumerate(names):
+            single = cm.evaluate(dp, wl.MLPERF[n], cm.RewardWeights())
+            np.testing.assert_allclose(float(batched.reward[i]),
+                                       float(single.reward), rtol=1e-6)
+            np.testing.assert_allclose(float(batched.tasks_per_sec[i]),
+                                       float(single.tasks_per_sec), rtol=1e-6)
+
+    def test_batched_designs_pair_with_scenarios(self):
+        names, scen = _scenarios()
+        dps = ps.random_design(jax.random.PRNGKey(1), (len(names),))
+        batched = cm.evaluate_scenarios(dps, scen)
+        for i, n in enumerate(names):
+            dp_i = jax.tree_util.tree_map(lambda x: x[i], dps)
+            single = cm.evaluate(dp_i, wl.MLPERF[n], cm.RewardWeights())
+            np.testing.assert_allclose(float(batched.reward[i]),
+                                       float(single.reward), rtol=1e-6)
+
+    def test_weight_grid_changes_reward_only(self):
+        dp = ps.random_design(jax.random.PRNGKey(2))
+        scalars = [cm.Scenario(weights=cm.make_weights(a, 1.0, 0.1))
+                   for a in (0.5, 1.0, 2.0)]
+        m = cm.evaluate_scenarios(dp, cm.stack_scenarios(scalars))
+        # physics identical across weight settings, reward differs
+        assert np.ptp(np.asarray(m.tasks_per_sec)) == 0.0
+        assert np.ptp(np.asarray(m.reward)) > 0.0
+
+
+class TestEnvScenario:
+    def test_explicit_scenario_matches_config_default(self):
+        key = jax.random.PRNGKey(0)
+        cfg = chipenv.EnvConfig()
+        s1, o1 = chipenv.reset(key, cfg)
+        s2, o2 = chipenv.reset(key, cfg, cfg.scenario())
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+        a = chipenv.action_space.sample(jax.random.PRNGKey(1))
+        _, _, r1, _, _ = chipenv.step(s1, a, cfg)
+        _, _, r2, _, _ = chipenv.step(s2, a, cfg, cfg.scenario())
+        np.testing.assert_allclose(float(r1), float(r2))
+
+    def test_vmapped_scenarios_one_program(self):
+        _, scen = _scenarios()
+        keys = jax.random.split(jax.random.PRNGKey(3), 3)
+        states, obs = jax.vmap(
+            lambda k, s: chipenv.reset(k, chipenv.EnvConfig(), s)
+        )(keys, scen)
+        assert obs.shape == (3, chipenv.OBS_DIM)
+
+
+class TestTrainPopulation:
+    def test_matches_sequential_seed_for_seed(self):
+        key = jax.random.PRNGKey(5)
+        pop = ppo.train_population(key, 2, cfg=TINY_PPO,
+                                   total_timesteps=TINY_STEPS)
+        keys = jax.random.split(key, 2)
+        for i in range(2):
+            seq = ppo.train(keys[i], cfg=TINY_PPO,
+                            total_timesteps=TINY_STEPS)
+            np.testing.assert_allclose(float(pop.best_reward[i]),
+                                       float(seq.best_reward), rtol=1e-4)
+            np.testing.assert_array_equal(
+                np.asarray(ps.to_flat(pop.best_design))[i],
+                np.asarray(ps.to_flat(seq.best_design)))
+
+    def test_population_shapes(self):
+        pop = ppo.train_population(jax.random.PRNGKey(6), 3, cfg=TINY_PPO,
+                                   total_timesteps=TINY_STEPS)
+        assert pop.best_reward.shape == (3,)
+        assert ps.to_flat(pop.best_design).shape == (3, ps.N_PARAMS)
+        assert chipenv.action_space.contains(
+            np.asarray(ps.to_flat(pop.best_design))[0])
+
+    def test_scenario_population_shapes(self):
+        _, scen = _scenarios(2)
+        res = ppo.train_scenario_population(
+            jax.random.PRNGKey(7), scen, 2, cfg=TINY_PPO,
+            total_timesteps=TINY_STEPS)
+        assert res.best_reward.shape == (2, 2)
+
+
+class TestSAScenario:
+    def test_scenario_population_shapes(self):
+        _, scen = _scenarios(2)
+        res = sa.run_scenario_population(
+            jax.random.PRNGKey(8), scen, 3, cfg=sa.SAConfig(n_iters=500))
+        assert res.best_reward.shape == (2, 3)
+
+    def test_scenario_matches_env_cfg(self):
+        w = wl.MLPERF["bert"]
+        env_cfg = chipenv.EnvConfig(workload=w)
+        r1 = sa.run(jax.random.PRNGKey(9), env_cfg,
+                    sa.SAConfig(n_iters=300))
+        r2 = sa.run(jax.random.PRNGKey(9), chipenv.EnvConfig(),
+                    sa.SAConfig(n_iters=300),
+                    scenario=cm.Scenario(workload=w))
+        np.testing.assert_allclose(float(r1.best_reward),
+                                   float(r2.best_reward))
+
+
+class TestPortfolioVectorized:
+    def test_optimize_uses_population_and_refines(self):
+        cfg = portfolio.PortfolioConfig(
+            n_sa=2, n_rl=2, sa=sa.SAConfig(n_iters=1000),
+            rl=TINY_PPO, rl_timesteps=TINY_STEPS,
+            refine=True, max_refine_sweeps=1)
+        res = portfolio.optimize(jax.random.PRNGKey(0), cfg=cfg)
+        assert res.rl_rewards.shape == (2,)
+        assert res.best_reward >= max(res.sa_rewards.max(),
+                                      res.rl_rewards.max()) - 1e-5
+
+    def test_coordinate_refine_never_decreases_with_scenario(self):
+        flat = jnp.zeros((ps.N_PARAMS,), jnp.int32)
+        env_cfg = chipenv.EnvConfig()
+        scen = cm.Scenario(workload=wl.MLPERF["bert"])
+        r0 = float(cm.reward_only(ps.from_flat(flat), scen.workload,
+                                  scen.weights))
+        _, r1 = portfolio.coordinate_refine(flat, env_cfg, max_sweeps=1,
+                                            scenario=scen)
+        assert r1 >= r0
+
+
+class TestSuite:
+    def test_pareto_indices(self):
+        pts = np.array([[10.0, 1.0, 5.0],    # frontier
+                        [5.0, 1.0, 5.0],     # dominated by row 0
+                        [10.0, 0.5, 9.0],    # frontier (better energy)
+                        [1.0, 2.0, 9.0]])    # dominated by row 0
+        idx = suite.pareto_indices(pts, maximize=(True, False, False))
+        assert idx == [0, 2]
+
+    def test_build_scenarios_grid(self):
+        cfg = dataclasses.replace(
+            suite.SMOKE_SUITE, workloads=("resnet50", "bert"),
+            weight_grid=((1, 1, 0.1), (2, 1, 0.1), (1, 2, 0.1)))
+        names, wnames, scen = suite.build_scenarios(cfg)
+        assert len(names) == 6
+        assert scen.weights.alpha.shape == (6,)
+        assert wnames[0] == wnames[1] == wnames[2] == "resnet50"
+
+    def test_run_suite_smoke(self):
+        cfg = dataclasses.replace(
+            suite.SMOKE_SUITE, workloads=("resnet50", "bert"),
+            weight_grid=((1.0, 1.0, 0.1), (2.0, 0.5, 0.1)),
+            n_sa=2, n_rl=1, sa=sa.SAConfig(n_iters=500),
+            rl=TINY_PPO, rl_timesteps=TINY_STEPS,
+            refine=True, max_refine_sweeps=1)
+        res = suite.run_suite(jax.random.PRNGKey(0), cfg)
+        assert len(res.outcomes) == 4
+        assert 1 <= len(res.pareto) <= 4
+        for o in res.outcomes:
+            assert np.isfinite(o.best_reward)
+            assert chipenv.action_space.contains(o.best_flat)
+        report = suite.format_report(res)
+        assert "Pareto" in report
+        js = suite.to_json(res)
+        assert len(js["scenarios"]) == 4
