@@ -1,0 +1,83 @@
+"""Cost-model evaluation throughput: the DSE hot loop, before/after the
+pairwise-traffic placement refactor.
+
+``python benchmarks/bench_costmodel.py`` measures jitted
+``costmodel.evaluate`` throughput on a 64k design batch for (a) the
+default canonical-placement path and (b) an explicit-placement batch
+(which additionally evaluates the canonical baseline for the congestion /
+per-hop-energy normalization), and records the result next to the
+pre-refactor reference point in ``benchmarks/BENCH_costmodel.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costmodel as cm
+from repro.core import params as ps
+from repro.core import placement as pm
+
+# Measured on this 2-core CPU container at the PR-1 tree (worst-hop model,
+# no placement threading), same batch/protocol as below.
+BEFORE = {"designs_per_s": 113208.0, "batch": 65536,
+          "model": "worst-hop scalar (pre-placement refactor)"}
+
+
+def _throughput(fn, arg, iters=5):
+    fn(arg).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        fn(arg).block_until_ready()
+    return (time.time() - t0) / iters
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=65536)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "BENCH_costmodel.json"))
+    args = ap.parse_args()
+
+    n = args.batch
+    dp = ps.random_design(jax.random.PRNGKey(0), (n,))
+
+    canon_fn = jax.jit(lambda d: cm.evaluate(d).reward)
+    dt_canon = _throughput(canon_fn, dp)
+
+    v = ps.decode(dp)
+    m, mesh_n = cm.mesh_dims(cm.footprint_positions(v))
+    plc = pm.canonical(m, mesh_n, v.hbm_mask, v.arch_type)
+    plc_fn = jax.jit(lambda a: cm.evaluate(a[0], placement=a[1]).reward)
+    dt_plc = _throughput(plc_fn, (dp, plc))
+
+    record = {
+        "batch": n,
+        "before": BEFORE,
+        "after_canonical": {
+            "designs_per_s": round(n / dt_canon, 1),
+            "wall_s": round(dt_canon, 4),
+            "model": "pairwise-traffic NoP, canonical placement",
+        },
+        "after_explicit_placement": {
+            "designs_per_s": round(n / dt_plc, 1),
+            "wall_s": round(dt_plc, 4),
+            "model": "pairwise-traffic NoP + canonical baseline pass",
+        },
+    }
+    print(f"[bench] canonical: {n/dt_canon:,.0f} designs/s "
+          f"(before: {BEFORE['designs_per_s']:,.0f})")
+    print(f"[bench] explicit placement: {n/dt_plc:,.0f} designs/s")
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"[bench] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

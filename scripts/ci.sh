@@ -10,8 +10,19 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "=== tier-1: pytest ==="
-python -m pytest -q
+echo "=== tier-1: pytest (kernel parity runs as its own stage below) ==="
+python -m pytest -q --ignore=tests/test_kernels.py
+
+echo "=== kernel parity: Pallas interpret mode vs jnp oracles ==="
+# CPU-only runners still verify the TPU kernels (incl. the extended
+# chiplet_eval placement metrics) — interpret=True throughout.
+python -m pytest -q tests/test_kernels.py
 
 echo "=== smoke: portfolio engine benchmark ==="
 python benchmarks/bench_optimizer.py --smoke
+
+echo "=== smoke: cost-model eval throughput ==="
+# CI-scale smoke run; the committed BENCH_costmodel.json before/after
+# record is produced by the default full-batch invocation.
+python benchmarks/bench_costmodel.py --batch 16384 \
+    --out "${TMPDIR:-/tmp}/bench_costmodel_ci.json"

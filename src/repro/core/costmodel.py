@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core import hw_constants as hw
 from repro.core import params as ps
+from repro.core import placement as pm
 
 _MAX_MESH_DIM = 16        # m, n <= 12 for P <= 128; 16 gives headroom
 _TERA = 1e12
@@ -77,7 +78,14 @@ _GRID_I, _GRID_J = jnp.meshgrid(
 
 
 def hbm_worst_hops(m, n, hbm_mask, arch_type):
-    """max over AI chiplets of min over placed HBMs of mesh hop distance.
+    """Legacy Fig.-4 worst-hop scan (kept as the regression oracle).
+
+    The evaluate() path now derives hop counts from an explicit
+    ``placement.Placement`` via the pairwise-traffic NoP model; under the
+    canonical row-major placement that model reproduces this function
+    exactly (asserted by tests/test_placement.py).
+
+    max over AI chiplets of min over placed HBMs of mesh hop distance.
 
     Location semantics (paper Fig. 4): edge HBMs sit adjacent to the middle
     of their edge (1 hop to the nearest chiplet); 'middle' occupies the
@@ -204,9 +212,13 @@ class Metrics(NamedTuple):
     sram_mb_per_die: jnp.ndarray
     n_hbm: jnp.ndarray
     hbm_capacity_gb: jnp.ndarray
-    # latency / bandwidth
-    hops_ai_ai: jnp.ndarray
-    hops_hbm_ai: jnp.ndarray
+    # latency / bandwidth (pairwise-traffic NoP model)
+    hops_ai_ai: jnp.ndarray            # worst over the spanned mesh region
+    hops_hbm_ai: jnp.ndarray           # worst router -> nearest-HBM hops
+    hops_ai_mean: jnp.ndarray          # traffic-weighted mean (occupied)
+    hops_hbm_mean: jnp.ndarray         # mean chiplet -> nearest-HBM hops
+    link_contention: jnp.ndarray       # operand-streams x hops per NoP link
+    nop_congestion: jnp.ndarray        # bw factor vs canonical floorplan
     lat_ai_ai_ns: jnp.ndarray
     lat_hbm_ai_ns: jnp.ndarray
     cycles_per_op: jnp.ndarray
@@ -267,11 +279,27 @@ def stack_scenarios(scenarios) -> Scenario:
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *scenarios)
 
 
+def footprint_positions(v: ps.DesignValues) -> jnp.ndarray:
+    """Number of interposer footprint slots (logic-on-logic stacks pair up)."""
+    is_lol = (v.arch_type == ps.ARCH_LOGIC_ON_LOGIC).astype(jnp.float32)
+    return jnp.where(is_lol > 0, jnp.ceil(v.n_chiplets / 2.0), v.n_chiplets)
+
+
 def evaluate(dp: ps.DesignPoint,
              workload: Workload = GENERIC_WORKLOAD,
              weights: RewardWeights = RewardWeights(),
-             cfg: hw.HWConfig = hw.DEFAULT_HW) -> Metrics:
-    """Evaluate a (batch of) design point(s) -> full PPAC metrics."""
+             cfg: hw.HWConfig = hw.DEFAULT_HW,
+             placement: pm.Placement = None) -> Metrics:
+    """Evaluate a (batch of) design point(s) -> full PPAC metrics.
+
+    ``placement`` optionally places every chiplet slot / HBM stack on the
+    16x16 interposer grid; ``None`` uses the canonical Fig.-4 floorplan
+    (row-major chiplets, edge/middle HBM anchors), under which the
+    pairwise-traffic NoP model reproduces the legacy worst-hop numbers
+    exactly. The interposer geometry (die area, package cost) stays keyed
+    to the design's m x n footprint; placement steers the NoP hop/traffic
+    reduction.
+    """
     v = ps.decode(dp)
     arch = v.arch_type
     is_lol = (arch == ps.ARCH_LOGIC_ON_LOGIC).astype(jnp.float32)   # pairs
@@ -280,7 +308,7 @@ def evaluate(dp: ps.DesignPoint,
 
     # ---- geometry ---------------------------------------------------------
     n_dies = v.n_chiplets
-    n_positions = jnp.where(is_lol > 0, jnp.ceil(n_dies / 2.0), n_dies)
+    n_positions = footprint_positions(v)
     m, n = mesh_dims(n_positions)
 
     n_hbm = ps.hbm_count(v.hbm_mask)
@@ -315,9 +343,36 @@ def evaluate(dp: ps.DesignPoint,
     reuse_comm = (reuse_mem if cfg.comm_reuse_systolic
                   else jnp.ones_like(reuse_mem))
 
-    # ---- NoP latency (Eqs. 10-11) ----------------------------------------
-    h_ai = m + n - 2.0
-    h_hbm = hbm_worst_hops(m, n, v.hbm_mask, arch)
+    # ---- NoP latency (Eqs. 10-11, pairwise-traffic placement model) -------
+    # contention is normalized per link of the canonical m x n fabric (the
+    # NoP the design pays for), so sprawling a placement cannot mint links
+    mesh_edges = m * (n - 1.0) + n * (m - 1.0)
+    if placement is None:
+        placement = pm.canonical(m, n, v.hbm_mask, arch)
+        nop = pm.nop_stats(placement, n_positions, v.hbm_mask, arch,
+                           mesh_edges)
+        nop_canon = nop             # same object -> congestion exactly 1
+    else:
+        nop = pm.nop_stats(placement, n_positions, v.hbm_mask, arch,
+                           mesh_edges)
+        canon = pm.canonical(m, n, v.hbm_mask, arch)
+        nop_canon = pm.nop_stats(canon, n_positions, v.hbm_mask, arch,
+                                 mesh_edges)
+    h_ai = nop.hops_ai_worst
+    h_hbm = nop.hops_hbm_worst
+    # delivered 2.5D link bandwidth scales with channel load relative to
+    # the canonical floorplan (see HWConfig.nop_congestion_exp)
+    congestion = ((nop_canon.link_contention + 1e-6)
+                  / (nop.link_contention + 1e-6)) ** cfg.nop_congestion_exp
+    congestion = jnp.clip(congestion, 0.1, 10.0)
+    # per-bit interconnect energy is per *hop* in a mesh (every hop
+    # re-drives the wire + router); the Table-4 E_bit figures correspond to
+    # the canonical floorplan's traffic-weighted mean hop counts, so the
+    # energy terms scale with the mean-hop ratio (exactly 1 at canonical).
+    e_hop_hbm = jnp.clip((nop.hops_hbm_mean + 1e-6)
+                         / (nop_canon.hops_hbm_mean + 1e-6), 0.1, 10.0)
+    e_hop_ai = jnp.clip((nop.hops_ai_mean + 1e-6)
+                        / (nop_canon.hops_ai_mean + 1e-6), 0.1, 10.0)
     wire_ai = cfg.wire_delay_ps_2p5d * v.ai_trace_2p5d / 1000.0     # ns/hop
     wire_hbm = cfg.wire_delay_ps_2p5d * v.hbm_trace_2p5d / 1000.0
     fixed = cfg.contention_delay_ns + cfg.serialization_delay_ns
@@ -340,13 +395,13 @@ def evaluate(dp: ps.DesignPoint,
                     * ops_per_die / reuse_comm) / _GIGA
     bw_req_hbm = 4.0 * operand_gbps                    # Eq. 13 (src = HBM)
     bw_req_ai = 1.0 * operand_gbps                     # Eq. 13 (src = AI)
-    link_bw_hbm = v.hbm_dr_2p5d * v.hbm_links_2p5d
+    link_bw_hbm = v.hbm_dr_2p5d * v.hbm_links_2p5d * congestion
     if cfg.hbm_peak_cap:
         bw_act_hbm = jnp.minimum(link_bw_hbm,
                                  hw.HBM_BANDWIDTH_GBPS_PER_STACK)
     else:
         bw_act_hbm = link_bw_hbm
-    bw_act_ai = v.ai_dr_2p5d * v.ai_links_2p5d
+    bw_act_ai = v.ai_dr_2p5d * v.ai_links_2p5d * congestion
     bw_act_3d = v.ai_dr_3d * v.ai_links_3d
 
     u_hbm = jnp.minimum(1.0, bw_act_hbm / jnp.maximum(bw_req_hbm, 1e-6))
@@ -365,8 +420,8 @@ def evaluate(dp: ps.DesignPoint,
     tasks_per_sec = eff_ops / jnp.maximum(ops_per_task, 1.0)  # Eqs. 1-2
 
     # ---- energy (Eqs. 6-7, 15) --------------------------------------------
-    e_link_hbm = e_bit_2p5d(v.hbm_ic_2p5d, v.hbm_trace_2p5d)
-    e_link_ai = e_bit_2p5d(v.ai_ic_2p5d, v.ai_trace_2p5d)
+    e_link_hbm = e_bit_2p5d(v.hbm_ic_2p5d, v.hbm_trace_2p5d) * e_hop_hbm
+    e_link_ai = e_bit_2p5d(v.ai_ic_2p5d, v.ai_trace_2p5d) * e_hop_ai
     e_link_3d = e_bit_3d(v.ai_ic_3d)
     bits_per_op_hbm = cfg.n_operands * cfg.data_width_bits / reuse_comm
     # half of the operand traffic is forwarded chiplet-to-chiplet (Fig. 5
@@ -385,8 +440,11 @@ def evaluate(dp: ps.DesignPoint,
     die_cost = n_dies * die_cost_physical(die_area, cfg)
     die_cost_paper = n_dies * die_cost_taylor(die_area, cfg)
 
-    mesh_edges = m * (n - 1.0) + n * (m - 1.0)
-    l_2p5d_ai = v.ai_links_2p5d * mesh_edges
+    # package link cost is charged for wiring the *spanned* mesh region
+    # (== the canonical m x n mesh under the canonical placement); a
+    # compacted placement of a partially-filled grid needs fewer link
+    # lanes, a sprawled one pays for every extra edge it routes across
+    l_2p5d_ai = v.ai_links_2p5d * nop.region_edges
     l_2p5d_hbm = v.hbm_links_2p5d * n_hbm_2p5d
     n_pairs = jnp.where(is_lol > 0, jnp.floor(n_dies / 2.0), 0.0)
     l_3d = v.ai_links_3d * n_pairs + v.ai_links_3d * uses_3d_mem
@@ -427,6 +485,8 @@ def evaluate(dp: ps.DesignPoint,
         pes_per_die=pes_per_die, sram_mb_per_die=sram_mb,
         n_hbm=n_hbm, hbm_capacity_gb=n_hbm * hw.HBM_CAPACITY_GB,
         hops_ai_ai=h_ai, hops_hbm_ai=h_hbm,
+        hops_ai_mean=nop.hops_ai_mean, hops_hbm_mean=nop.hops_hbm_mean,
+        link_contention=nop.link_contention, nop_congestion=congestion,
         lat_ai_ai_ns=lat_ai, lat_hbm_ai_ns=lat_hbm,
         cycles_per_op=cycles_per_op,
         bw_req_hbm_gbps=bw_req_hbm, bw_act_hbm_gbps=bw_act_hbm,
@@ -444,20 +504,23 @@ def evaluate(dp: ps.DesignPoint,
 def reward_only(dp: ps.DesignPoint,
                 workload: Workload = GENERIC_WORKLOAD,
                 weights: RewardWeights = RewardWeights(),
-                cfg: hw.HWConfig = hw.DEFAULT_HW) -> jnp.ndarray:
+                cfg: hw.HWConfig = hw.DEFAULT_HW,
+                placement: pm.Placement = None) -> jnp.ndarray:
     """Cheap scalar objective for the optimizers."""
-    return evaluate(dp, workload, weights, cfg).reward
+    return evaluate(dp, workload, weights, cfg, placement).reward
 
 
 def evaluate_scenario(dp: ps.DesignPoint, scenario: Scenario = Scenario(),
-                      cfg: hw.HWConfig = hw.DEFAULT_HW) -> Metrics:
+                      cfg: hw.HWConfig = hw.DEFAULT_HW,
+                      placement: pm.Placement = None) -> Metrics:
     """`evaluate` keyed by a Scenario pytree (vmap over it for batches)."""
-    return evaluate(dp, scenario.workload, scenario.weights, cfg)
+    return evaluate(dp, scenario.workload, scenario.weights, cfg, placement)
 
 
 def evaluate_scenarios(dp: ps.DesignPoint, scenarios: Scenario,
                        cfg: hw.HWConfig = hw.DEFAULT_HW,
-                       paired: bool = None) -> Metrics:
+                       paired: bool = None,
+                       placements: pm.Placement = None) -> Metrics:
     """Evaluate design point(s) under a *batch* of scenarios.
 
     ``scenarios`` carries a leading scenario axis S on every leaf. ``dp``
@@ -469,6 +532,8 @@ def evaluate_scenarios(dp: ps.DesignPoint, scenarios: Scenario,
         cross product (every design under every scenario).
     A B == S batch defaults to *paired*; pass ``paired=False`` to force
     the cross product (or ``paired=True`` to assert pairing was intended).
+    ``placements`` (optional, leading axis S, paired mode only) evaluates
+    design i under scenario i with its own explicit placement.
     One compiled program for the whole (design x workload x weights) grid.
     """
     import jax
@@ -481,9 +546,11 @@ def evaluate_scenarios(dp: ps.DesignPoint, scenarios: Scenario,
         raise ValueError(
             f"paired=True needs a design batch with leading axis "
             f"{n_scen}, got shape {jnp.shape(dp.arch_type)}")
-    in_axes = (0 if paired else None, 0)
-    return jax.vmap(lambda d, s: evaluate_scenario(d, s, cfg),
-                    in_axes=in_axes)(dp, scenarios)
+    if placements is not None and not paired:
+        raise ValueError("placements requires paired design/scenario axes")
+    in_axes = (0 if paired else None, 0, None if placements is None else 0)
+    return jax.vmap(lambda d, s, p: evaluate_scenario(d, s, cfg, p),
+                    in_axes=in_axes)(dp, scenarios, placements)
 
 
 def reward_scenarios(dp: ps.DesignPoint, scenarios: Scenario,

@@ -15,6 +15,14 @@ Semantics follow the paper:
     policy network with the episode step index and previous reward,
   - reward is Eq. 17,
   - episodes are ``episode_len`` steps (paper default 2, Fig. 7).
+
+Beyond the paper: with ``EnvConfig(placement_actions=True)`` the action
+gains the four ``params.PLACEMENT_HEAD_SIZES`` heads — a placement
+mutation (relocate one chiplet slot, re-anchor one HBM stack) applied on
+top of the canonical Fig.-4 floorplan of the design the action selects —
+and the observation gains the pairwise-NoP diagnostics (mean HBM hops,
+mean forwarding hops, link contention). The default (14-head) space is
+bit-identical to the paper's environment.
 """
 
 from __future__ import annotations
@@ -28,9 +36,11 @@ import jax.numpy as jnp
 from repro.core import costmodel as cm
 from repro.core import hw_constants as hw
 from repro.core import params as ps
+from repro.core import placement as pm
 from repro.core import spaces
 
 OBS_DIM = 10
+OBS_DIM_PLACEMENT = 13   # + [hops_hbm_mean, hops_ai_mean, link_contention]
 
 
 Scenario = cm.Scenario   # re-export: the traced (workload, weights) pytree
@@ -50,6 +60,7 @@ class EnvConfig:
     weights: cm.RewardWeights = cm.RewardWeights()
     workload: cm.Workload = cm.GENERIC_WORKLOAD
     hw: hw.HWConfig = hw.DEFAULT_HW
+    placement_actions: bool = False   # extend actions/obs with placement
 
     def scenario(self) -> cm.Scenario:
         return cm.Scenario(workload=self.workload, weights=self.weights)
@@ -57,6 +68,19 @@ class EnvConfig:
 
 def _resolve(scenario, cfg: EnvConfig) -> cm.Scenario:
     return cfg.scenario() if scenario is None else scenario
+
+
+def head_sizes(cfg: EnvConfig) -> Tuple[int, ...]:
+    """Action head sizes for this config (14 Table-1 heads, +4 placement)."""
+    return ps.EXT_HEAD_SIZES if cfg.placement_actions else ps.HEAD_SIZES
+
+
+def action_dim(cfg: EnvConfig) -> int:
+    return len(head_sizes(cfg))
+
+
+def obs_dim(cfg: EnvConfig) -> int:
+    return OBS_DIM_PLACEMENT if cfg.placement_actions else OBS_DIM
 
 
 class EnvState(NamedTuple):
@@ -67,12 +91,20 @@ class EnvState(NamedTuple):
 
 
 action_space = spaces.MultiDiscrete(ps.HEAD_SIZES)
+ext_action_space = action_space.concat(
+    spaces.MultiDiscrete(ps.PLACEMENT_HEAD_SIZES))
+# the placement-mutation heads alone (sample these to perturb a fixed
+# design's floorplan without touching the Table-1 assignment)
+placement_action_space = ext_action_space.subspace(ps.N_PARAMS,
+                                                   ps.N_EXT_PARAMS)
 observation_space = spaces.Box(-10.0, 10.0, (OBS_DIM,))
+ext_observation_space = spaces.Box(-10.0, 10.0, (OBS_DIM_PLACEMENT,))
 
 
 def _observe(metrics: cm.Metrics, t, prev_reward, cfg: EnvConfig):
-    """10-dim normalized observation (see module docstring)."""
-    o = jnp.stack([
+    """Normalized observation; 10-dim, +3 NoP diagnostics when the
+    placement extension is on (see module docstring)."""
+    cols = [
         jnp.broadcast_to(jnp.float32(cfg.hw.package_area_mm2 / 1000.0),
                          jnp.shape(metrics.die_area_mm2)),
         jnp.broadcast_to(jnp.float32(cfg.hw.max_chiplet_area_mm2 / 400.0),
@@ -85,8 +117,36 @@ def _observe(metrics: cm.Metrics, t, prev_reward, cfg: EnvConfig):
         metrics.eff_tops / 1000.0,
         jnp.asarray(t, jnp.float32) / jnp.float32(cfg.episode_len),
         jnp.asarray(prev_reward, jnp.float32) / 200.0,
-    ], axis=-1)
-    return jnp.clip(o, -10.0, 10.0)
+    ]
+    if cfg.placement_actions:
+        cols += [
+            metrics.hops_hbm_mean / 8.0,
+            metrics.hops_ai_mean / 8.0,
+            metrics.link_contention / 50.0,
+        ]
+    return jnp.clip(jnp.stack(cols, axis=-1), -10.0, 10.0)
+
+
+def _design_and_placement(action: jnp.ndarray, cfg: EnvConfig):
+    """Split an action into (DesignPoint, Placement-or-None).
+
+    Placement-extended actions mutate the canonical floorplan of the
+    design they select: one chiplet relocation (with swap) + one HBM
+    re-anchor. Unbatched for the extended path (the env vmaps).
+    """
+    design = ps.from_flat(action[..., : ps.N_PARAMS])
+    if not cfg.placement_actions or action.shape[-1] == ps.N_PARAMS:
+        return design, None
+    if action.ndim > 1:
+        raise ValueError(
+            "placement-extended actions are single-design; vmap step() "
+            f"over the batch instead (got action shape {action.shape})")
+    v = ps.decode(design)
+    n_pos = cm.footprint_positions(v)
+    m, n = cm.mesh_dims(n_pos)
+    base = pm.canonical(m, n, v.hbm_mask, v.arch_type)
+    plc = pm.apply_action(base, action[..., ps.N_PARAMS:], n_pos)
+    return design, plc
 
 
 def reset(key, cfg: EnvConfig = EnvConfig(),
@@ -107,8 +167,9 @@ def step(state: EnvState, action: jnp.ndarray,
          ) -> Tuple[EnvState, jnp.ndarray, jnp.ndarray, jnp.ndarray, cm.Metrics]:
     """Apply a full design-point assignment; returns (state', obs, r, done, metrics)."""
     scenario = _resolve(scenario, cfg)
-    design = ps.from_flat(action)
-    metrics = cm.evaluate(design, scenario.workload, scenario.weights, cfg.hw)
+    design, placement = _design_and_placement(action, cfg)
+    metrics = cm.evaluate(design, scenario.workload, scenario.weights, cfg.hw,
+                          placement)
     reward = metrics.reward
     t_next = state.t + 1
     done = t_next >= cfg.episode_len

@@ -197,6 +197,15 @@ class HWConfig:
     # The paper sizes bandwidth purely by links x data-rate; disable to
     # reproduce its headline utilization numbers.
     hbm_peak_cap: bool = True
+    # NoP congestion sensitivity of the pairwise-traffic placement model:
+    # delivered 2.5D link bandwidth scales with
+    # (canonical_link_contention / link_contention) ** nop_congestion_exp,
+    # i.e. a placement that lowers the traffic-weighted channel load below
+    # the canonical Fig.-4 floorplan's sustains proportionally more
+    # concurrent operand streams (and vice versa). The factor is exactly 1
+    # under the canonical placement, preserving every paper number; 0
+    # disables the channel entirely.
+    nop_congestion_exp: float = 1.0
 
 
 DEFAULT_HW = HWConfig()

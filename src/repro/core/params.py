@@ -78,6 +78,13 @@ TOTAL_LOGITS = sum(HEAD_SIZES)        # 591 (paper: 810 with an unstated
                                       # discretization; see DESIGN.md §8)
 DESIGN_SPACE_SIZE = float(np.prod([float(h) for h in HEAD_SIZES]))
 
+# Placement-mutation action heads (core/placement.py): relocate one chiplet
+# slot to a 16x16 grid cell (swapping with any occupant) and re-anchor one
+# HBM stack. Appended to HEAD_SIZES when EnvConfig.placement_actions is on.
+PLACEMENT_HEAD_SIZES = (128, 256, 6, 256)   # slot, cell, hbm bit, hbm cell
+EXT_HEAD_SIZES = HEAD_SIZES + PLACEMENT_HEAD_SIZES
+N_EXT_PARAMS = len(EXT_HEAD_SIZES)
+
 
 class DesignValues(NamedTuple):
     """Physical values decoded from a DesignPoint (float32 throughout)."""

@@ -1,0 +1,319 @@
+"""Explicit interposer placement and the pairwise-traffic NoP model.
+
+The paper's design space is "resource allocation, placement, and packaging
+architecture", but the original model collapses placement into a 6-bit HBM
+location mask plus a worst-case hop scalar. This module makes placement a
+first-class, optimizable layer of the DSE engine:
+
+  - ``Placement`` — a pure pytree assigning every chiplet footprint slot a
+    cell of the 16x16 interposer routing grid, and every HBM stack a
+    (possibly fractional) grid coordinate. Fractional HBM coordinates are
+    what make the paper's Fig.-4 anchors exactly representable (an edge
+    stack sits adjacent to the *middle* of its edge, which is between two
+    rows when the row count is even).
+  - ``canonical`` — the paper's Fig.-4 floorplan: chiplets fill the m x n
+    footprint grid row-major, HBM stacks sit at the six canonical anchors
+    (left / right / top / bottom / middle / 3D-stacked).
+  - ``nop_stats`` — the pairwise-traffic NoP reduction: a Manhattan hop
+    matrix between chiplet cells and HBM anchors, contracted against the
+    Fig.-5 dataflow traffic pattern (4 operand streams pulled from the
+    nearest HBM per chiplet, 1 forwarded chiplet-to-chiplet stream fanning
+    out from the array's traffic centroid), reduced to worst / mean hop
+    counts and a per-link contention figure.
+
+Worst-case figures reduce over the *spanned mesh region* (the bounding box
+of occupied cells): NoP routers exist at every cell of the floorplan, and
+the worst transfer is the worst router-to-endpoint path — exactly the
+paper's Fig.-4 convention. This is what makes the model degrade *exactly*
+to the legacy ``hbm_worst_hops`` / ``m + n - 2`` numbers under the
+canonical placement (``tests/test_placement.py`` brute-forces the
+equivalence over every footprint count and HBM mask). Mean latency and
+contention are traffic-weighted over the occupied cells only, so they do
+respond to intra-box relocations.
+
+Everything is branchless jnp: every function accepts arbitrary (identical)
+batch shapes on all arguments and is jit/vmap-safe. This module must not
+import ``costmodel`` (costmodel imports us); mesh dims are passed in.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import params as ps
+
+GRID = 16                      # interposer routing grid is GRID x GRID
+N_CELLS = GRID * GRID          # 256 cells
+MAX_SLOTS = 128                # chiplet footprint slots (Table 1: <=128)
+N_HBM = ps.N_HBM_LOCATIONS     # 6 stacks, one per location bit
+
+_BIG = jnp.float32(1e9)
+
+# Flat encoding layout (serialization + kernel packing):
+#   [0:MAX_SLOTS)                  chiplet cell ids (int-valued)
+#   [MAX_SLOTS:MAX_SLOTS+2*N_HBM)  hbm (i0, j0, i1, j1, ...) coordinates
+FLAT_DIM = MAX_SLOTS + 2 * N_HBM
+
+
+class Placement(NamedTuple):
+    """Grid-cell assignment for chiplet slots + HBM stacks.
+
+    ``chiplet_cell[s] = i * GRID + j`` places footprint slot ``s`` at grid
+    cell (i, j); only the first ``n_positions`` slots of a design are
+    active. ``hbm_ij[b]`` is the (i, j) coordinate of the HBM stack for
+    location bit ``b`` (only bits set in the design's mask matter);
+    fractional and just-off-grid values (the edge anchors sit at row/col
+    -1 or m/n) are legal.
+    """
+
+    chiplet_cell: jnp.ndarray   # (..., MAX_SLOTS) int32
+    hbm_ij: jnp.ndarray         # (..., N_HBM, 2) float32
+
+
+class NoPStats(NamedTuple):
+    """Pairwise-traffic NoP reduction of one placement.
+
+    Worst figures reduce over the spanned mesh region (router-worst, the
+    Fig.-4 convention); mean figures are traffic-weighted over occupied
+    chiplet cells; ``link_contention`` is operand-streams x hops per mesh
+    link (a uniform-load channel proxy) — by default per link of the
+    spanned region, or of an explicitly provided fabric (costmodel passes
+    the canonical m x n mesh, the fabric the design actually pays for, so
+    sprawling a placement cannot mint free links). ``region_edges`` is
+    the link count needed to wire the spanned region (drives the package
+    link cost; equals the canonical mesh edge count under the canonical
+    placement).
+    """
+
+    hops_ai_worst: jnp.ndarray
+    hops_ai_mean: jnp.ndarray
+    hops_hbm_worst: jnp.ndarray
+    hops_hbm_mean: jnp.ndarray
+    link_contention: jnp.ndarray
+    region_edges: jnp.ndarray
+
+
+def cell_ij(cell: jnp.ndarray):
+    """Split cell ids into float (i, j) grid coordinates."""
+    c = jnp.asarray(cell, jnp.int32)
+    return (c // GRID).astype(jnp.float32), (c % GRID).astype(jnp.float32)
+
+
+def canonical(m, n, hbm_mask, arch_type) -> Placement:
+    """The paper's Fig.-4 floorplan as an explicit ``Placement``.
+
+    Chiplet slot ``s`` occupies cell (s // n, s % n) — row-major over the
+    m x n footprint grid. HBM anchors: edge stacks adjacent to the middle
+    of their edge (one hop off-grid), 'middle' and '3D-stacked' at the
+    array center. ``m``/``n`` may carry any batch shape.
+    """
+    m = jnp.asarray(m, jnp.float32)
+    n = jnp.asarray(n, jnp.float32)
+    del hbm_mask, arch_type   # anchors exist for all six bits; the mask
+    #                           and arch select/clamp them in nop_stats
+    slot = jnp.arange(MAX_SLOTS, dtype=jnp.int32)
+    n_i = jnp.maximum(n.astype(jnp.int32), 1)[..., None]
+    i = jnp.minimum(slot // n_i, GRID - 1)
+    j = jnp.minimum(slot % n_i, GRID - 1)
+    cells = i * GRID + j                              # (..., 128)
+
+    mc, nc = (m - 1.0) / 2.0, (n - 1.0) / 2.0
+    anchors = jnp.stack([
+        jnp.stack([mc, jnp.full_like(nc, -1.0)], axis=-1),   # left
+        jnp.stack([mc, n], axis=-1),                         # right
+        jnp.stack([jnp.full_like(mc, -1.0), nc], axis=-1),   # top
+        jnp.stack([m, nc], axis=-1),                         # bottom
+        jnp.stack([mc, nc], axis=-1),                        # middle
+        jnp.stack([mc, nc], axis=-1),                        # 3D-stacked
+    ], axis=-2)                                       # (..., 6, 2)
+    return Placement(chiplet_cell=cells, hbm_ij=anchors)
+
+
+def hbm_floors(hbm_mask, arch_type) -> jnp.ndarray:
+    """Per-anchor minimum hop count (..., 6).
+
+    Every stack is at least one mesh hop away from any chiplet it feeds,
+    except a 3D stack (bit 5) under a 3D-capable architecture, which sits
+    directly above the chiplet at its coordinate (the vertical hop is
+    folded into the 3D wire delay). A pure-2.5D design degrades the 3D bit
+    to a regular ('middle'-like) stack.
+    """
+    del hbm_mask
+    arch = jnp.asarray(arch_type, jnp.float32)
+    floor3d = jnp.where(arch >= 1.0, 0.0, 1.0)
+    ones = jnp.ones_like(arch)
+    return jnp.stack([ones, ones, ones, ones, ones, floor3d], axis=-1)
+
+
+def nop_stats(placement: Placement, n_positions, hbm_mask,
+              arch_type, mesh_edges=None) -> NoPStats:
+    """Reduce (hop matrix x Fig.-5 traffic) -> worst/mean latency terms.
+
+    All arguments may carry an identical batch shape; placement leaves
+    carry it too (before the slot / anchor axes). ``mesh_edges``
+    optionally fixes the contention denominator to a given NoP fabric
+    size (defaults to the spanned region's own edge count).
+    """
+    n_pos = jnp.asarray(n_positions, jnp.float32)
+    mask = jnp.asarray(hbm_mask, jnp.int32)
+
+    ci, cj = cell_ij(placement.chiplet_cell)          # (..., 128)
+    slot = jnp.arange(MAX_SLOTS, dtype=jnp.float32)
+    active = (slot < n_pos[..., None]).astype(jnp.float32)
+
+    # ---- spanned mesh region (bounding box of occupied cells) -------------
+    i_max = jnp.max(jnp.where(active > 0, ci, -_BIG), axis=-1)
+    i_min = jnp.min(jnp.where(active > 0, ci, _BIG), axis=-1)
+    j_max = jnp.max(jnp.where(active > 0, cj, -_BIG), axis=-1)
+    j_min = jnp.min(jnp.where(active > 0, cj, _BIG), axis=-1)
+    hops_ai_worst = (i_max - i_min) + (j_max - j_min)   # region diameter
+
+    # ---- chiplet -> nearest-HBM hop counts --------------------------------
+    hi = placement.hbm_ij[..., 0][..., None]          # (..., 6, 1)
+    hj = placement.hbm_ij[..., 1][..., None]
+    floors = hbm_floors(mask, arch_type)[..., None]   # (..., 6, 1)
+    bits = jnp.stack([(mask >> b) & 1 for b in range(N_HBM)],
+                     axis=-1).astype(jnp.float32)[..., None]
+
+    # per occupied slot: min over placed stacks (the Fig.-5 dataflow pulls
+    # operands from the nearest stack)
+    d_slot = jnp.abs(ci[..., None, :] - hi) + jnp.abs(cj[..., None, :] - hj)
+    d_slot = jnp.maximum(d_slot, floors)
+    d_hbm = jnp.min(jnp.where(bits > 0, d_slot, _BIG), axis=-2)  # (..., 128)
+    hops_hbm_mean = jnp.sum(active * d_hbm, axis=-1) / jnp.maximum(n_pos, 1.0)
+
+    # worst over every router of the spanned region (2 x 128 cell scan of
+    # the 16x16 grid, masked to the bounding box) — the Fig.-4 convention,
+    # and the exact-degradation anchor to the legacy model.
+    cell = jnp.arange(N_CELLS, dtype=jnp.float32)
+    gi, gj = jnp.floor(cell / GRID), cell % GRID      # (256,)
+    in_box = ((gi >= i_min[..., None]) & (gi <= i_max[..., None])
+              & (gj >= j_min[..., None]) & (gj <= j_max[..., None]))
+    d_cell = jnp.abs(gi[..., None, :] - hi) + jnp.abs(gj[..., None, :] - hj)
+    d_cell = jnp.maximum(d_cell, floors)
+    d_cell = jnp.min(jnp.where(bits > 0, d_cell, _BIG), axis=-2)  # (..., 256)
+    hops_hbm_worst = jnp.max(jnp.where(in_box, d_cell, -_BIG), axis=-1)
+
+    # ---- chiplet-to-chiplet forwarding (broadcast from the centroid) ------
+    cent_i = jnp.sum(active * ci, axis=-1) / jnp.maximum(n_pos, 1.0)
+    cent_j = jnp.sum(active * cj, axis=-1) / jnp.maximum(n_pos, 1.0)
+    d_cent = (jnp.abs(ci - cent_i[..., None])
+              + jnp.abs(cj - cent_j[..., None]))
+    hops_ai_mean = jnp.sum(active * d_cent, axis=-1) / jnp.maximum(n_pos, 1.0)
+
+    # ---- per-link contention: operand-streams x hops per mesh link --------
+    # 4 HBM-sourced streams per chiplet (Eq. 13) + 1 forwarded AI stream.
+    bm = i_max - i_min + 1.0
+    bn = j_max - j_min + 1.0
+    region_edges = bm * (bn - 1.0) + bn * (bm - 1.0)
+    edges = region_edges if mesh_edges is None else jnp.asarray(
+        mesh_edges, jnp.float32)
+    stream_hops = (4.0 * jnp.sum(active * d_hbm, axis=-1)
+                   + jnp.sum(active * d_cent, axis=-1))
+    link_contention = stream_hops / jnp.maximum(edges, 1.0)
+
+    return NoPStats(hops_ai_worst=hops_ai_worst, hops_ai_mean=hops_ai_mean,
+                    hops_hbm_worst=hops_hbm_worst, hops_hbm_mean=hops_hbm_mean,
+                    link_contention=link_contention,
+                    region_edges=region_edges)
+
+
+# ---------------------------------------------------------------------------
+# Mutations (env/PPO actions) and random placements (SA moves)
+# ---------------------------------------------------------------------------
+
+def relocate_chiplet(placement: Placement, slot, target_cell,
+                     n_positions) -> Placement:
+    """Move one active slot to ``target_cell`` (swap with any occupant).
+
+    ``slot`` is reduced mod ``n_positions`` so every action index maps to
+    an active slot. If another active slot already occupies the target
+    cell, the two swap cells, keeping the placement collision-free.
+    Unbatched (vmap for batches).
+    """
+    cells = placement.chiplet_cell
+    n_pos = jnp.maximum(jnp.asarray(n_positions, jnp.int32), 1)
+    s = jnp.mod(jnp.asarray(slot, jnp.int32), n_pos)
+    tgt = jnp.clip(jnp.asarray(target_cell, jnp.int32), 0, N_CELLS - 1)
+
+    idx = jnp.arange(MAX_SLOTS, dtype=jnp.int32)
+    occupied = (cells == tgt) & (idx < n_pos)
+    occ_slot = jnp.argmax(occupied)                   # first occupant if any
+    has_occ = jnp.any(occupied)
+
+    old = cells[s]
+    cells = cells.at[s].set(tgt)
+    # swap: the displaced occupant takes the moved slot's old cell
+    swap_to = jnp.where(has_occ & (occ_slot != s), old, cells[occ_slot])
+    cells = cells.at[occ_slot].set(swap_to)
+    return placement._replace(chiplet_cell=cells)
+
+
+def move_hbm(placement: Placement, hbm_idx, target_cell) -> Placement:
+    """Re-anchor one HBM stack at an (integer) grid cell. Unbatched."""
+    b = jnp.clip(jnp.asarray(hbm_idx, jnp.int32), 0, N_HBM - 1)
+    tgt = jnp.clip(jnp.asarray(target_cell, jnp.int32), 0, N_CELLS - 1)
+    ti, tj = cell_ij(tgt)
+    new = jnp.stack([ti, tj], axis=-1)
+    return placement._replace(hbm_ij=placement.hbm_ij.at[b].set(new))
+
+
+def apply_action(placement: Placement, pl_action, n_positions) -> Placement:
+    """Apply one 4-head placement-mutation action (env/PPO extension).
+
+    ``pl_action`` = [slot, target_cell, hbm_idx, hbm_target_cell] indices
+    (the ``PLACEMENT_HEAD_SIZES`` heads). Both mutations apply each step;
+    the policy can make either a no-op by targeting the current cell.
+    Unbatched (the env vmaps).
+    """
+    a = jnp.asarray(pl_action, jnp.int32)
+    placement = relocate_chiplet(placement, a[..., 0], a[..., 1], n_positions)
+    return move_hbm(placement, a[..., 2], a[..., 3])
+
+
+def random_cell_in_box(key, m, n):
+    """Uniform random cell id inside the m x n footprint box."""
+    ku, kv = jax.random.split(key)
+    i = jnp.floor(jax.random.uniform(ku) * m).astype(jnp.int32)
+    j = jnp.floor(jax.random.uniform(kv) * n).astype(jnp.int32)
+    return jnp.clip(i, 0, GRID - 1) * GRID + jnp.clip(j, 0, GRID - 1)
+
+
+def random_hbm_anchor(key, m, n):
+    """Uniform random continuous anchor in [-1, m] x [-1, n]."""
+    ku, kv = jax.random.split(key)
+    i = -1.0 + jax.random.uniform(ku) * (m + 1.0)
+    j = -1.0 + jax.random.uniform(kv) * (n + 1.0)
+    return jnp.stack([i, j], axis=-1)
+
+
+def select_placed_bit(key, hbm_mask):
+    """Uniformly choose one *set* bit of the HBM mask (for SA moves)."""
+    mask = jnp.asarray(hbm_mask, jnp.int32)
+    bits = jnp.stack([(mask >> b) & 1 for b in range(N_HBM)],
+                     axis=-1).astype(jnp.float32)
+    n_set = jnp.maximum(jnp.sum(bits, axis=-1), 1.0)
+    k = jnp.floor(jax.random.uniform(key) * n_set) + 1.0    # 1..n_set
+    cum = jnp.cumsum(bits, axis=-1)
+    return jnp.argmax((cum >= k).astype(jnp.int32), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Flat codec (serialization, kernel packing)
+# ---------------------------------------------------------------------------
+
+def to_flat(placement: Placement) -> jnp.ndarray:
+    """(..., FLAT_DIM) float32: [cells | hbm i/j interleaved]."""
+    cells = jnp.asarray(placement.chiplet_cell, jnp.float32)
+    hbm = placement.hbm_ij.reshape(*placement.hbm_ij.shape[:-2], 2 * N_HBM)
+    return jnp.concatenate([cells, hbm], axis=-1)
+
+
+def from_flat(flat: jnp.ndarray) -> Placement:
+    """Inverse of :func:`to_flat`."""
+    cells = jnp.asarray(flat[..., :MAX_SLOTS], jnp.int32)
+    hbm = flat[..., MAX_SLOTS:FLAT_DIM].reshape(*flat.shape[:-1], N_HBM, 2)
+    return Placement(chiplet_cell=cells, hbm_ij=jnp.asarray(hbm, jnp.float32))

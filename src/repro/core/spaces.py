@@ -47,6 +47,15 @@ class MultiDiscrete:
         hi = (x < np.asarray(self.nvec)).all()
         return bool(lo and hi)
 
+    def subspace(self, start: int, stop: int) -> "MultiDiscrete":
+        """The MultiDiscrete over heads [start, stop) — used to split the
+        extended Chiplet-Gym action into its design / placement parts."""
+        return MultiDiscrete(self.nvec[start:stop])
+
+    def concat(self, other: "MultiDiscrete") -> "MultiDiscrete":
+        """Cartesian product with another MultiDiscrete (head-wise append)."""
+        return MultiDiscrete(self.nvec + other.nvec)
+
     def __repr__(self):
         return f"MultiDiscrete({list(self.nvec)})"
 

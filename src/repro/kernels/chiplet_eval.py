@@ -6,16 +6,25 @@ The kernel evaluates a VMEM-resident tile of design points entirely on the
 VPU:
 
   layout:  a tile of ``BLOCK_N`` design points occupies the sublane axis;
-           the 16x16 placement grid (the Fig.-4 max-min hop reduction) and
-           the 14 design fields live on the 128-lane axis. The mesh-dims
-           lookup (the Table of near-square factorizations) is a one-hot
-           matmul — TPU-native, no gather.
+           the 128 chiplet placement slots, the 16x16 routing-grid scan
+           (2 x 128 lanes) and the 14 design fields live on the 128-lane
+           axis. The mesh-dims lookup (the Table of near-square
+           factorizations) is a one-hot matmul — TPU-native, no gather.
 
-  inputs:  designs  f32 (N, 128)   — cols 0..13 = Table-1 grid indices
+  inputs:  designs  f32 (N, 128)   — cols 0..13 = Table-1 grid indices,
+                                     cols 14..25 = HBM anchor (i, j) pairs
+           cells    f32 (N, 128)   — placement cell id per chiplet slot
            mesh_tab f32 (256, 128) — col 0 = m, col 1 = n, row = #positions
-  output:  metrics  f32 (N, 128)   — cols 0..7 =
+  output:  metrics  f32 (N, 128)   — cols 0..11 =
            [reward, eff_tops, e_comm_pj, pkg_cost, die_cost, u_sys,
-            lat_hbm_ns, lat_ai_ns]
+            lat_hbm_ns, lat_ai_ns, hops_hbm_mean, hops_ai_mean,
+            link_contention, hops_hbm_worst]
+
+The NoP section implements the pairwise-traffic placement model of
+``core/placement.py``: worst-case hops reduce over the spanned mesh
+region, means and contention are traffic-weighted over the occupied
+slots — all on the lane axis. ``pad_designs`` / ``pad_cells`` build the
+canonical Fig.-4 floorplan when no explicit placement is given.
 
 The arithmetic mirrors ``repro.core.costmodel.evaluate`` term by term;
 ``tests/test_kernels.py`` sweeps shapes and asserts allclose against the
@@ -35,11 +44,15 @@ from jax.experimental import pallas as pl
 from repro.core import costmodel as cm
 from repro.core import hw_constants as hw
 from repro.core import params as ps
+from repro.core import placement as pm
 
 BLOCK_N = 256
 LANES = 128
-N_OUT = 8
+N_OUT = 12
 _GRID = 16          # 16x16 placement grid = 256 cells = 2 x 128 lanes
+_HBM_COL = 14       # designs cols 14..25 hold the 6 HBM (i, j) anchors
+_CANON_COL = 26     # cols 26..28: canonical-floorplan link contention,
+#                     mean HBM hops, mean AI hops (host-computed baselines)
 
 
 def _mesh_tables() -> np.ndarray:
@@ -56,7 +69,7 @@ def _bit(x, b):
     return jnp.floor(x / (2.0 ** b)) % 2.0
 
 
-def _kernel(design_ref, mesh_ref, out_ref, *,
+def _kernel(design_ref, cells_ref, mesh_ref, out_ref, *,
             workload_vals: Tuple[float, float, float, float],
             weight_vals: Tuple[float, float, float],
             cfg: hw.HWConfig):
@@ -114,30 +127,79 @@ def _kernel(design_ref, mesh_ref, out_ref, *,
     reuse_mem = jnp.sqrt(jnp.maximum(sram_mb * 1e6 / (3.0 * dw_bytes), 1.0))
     reuse_comm = reuse_mem if cfg.comm_reuse_systolic else jnp.ones_like(reuse_mem)
 
-    # ---- worst-case HBM->AI hops over the 16x16 grid (2 x 128 lanes) ------
+    # ---- pairwise-traffic NoP reduction (core/placement.py, lane axis) ----
     lane = jax.lax.broadcasted_iota(jnp.float32, (b, LANES), 1)
+    big = jnp.float32(1e9)
 
-    def cell_minmax(cell_idx):
+    cells = cells_ref[...].astype(jnp.float32)         # (B, 128) cell ids
+    ci = jnp.floor(cells / _GRID)
+    cj = cells - jnp.floor(cells / _GRID) * _GRID
+    active = lane < n_pos[:, None]
+
+    # spanned mesh region (bounding box of occupied cells)
+    i_max = jnp.max(jnp.where(active, ci, -big), axis=1)
+    i_min = jnp.min(jnp.where(active, ci, big), axis=1)
+    j_max = jnp.max(jnp.where(active, cj, -big), axis=1)
+    j_min = jnp.min(jnp.where(active, cj, big), axis=1)
+    h_ai = (i_max - i_min) + (j_max - j_min)
+
+    # HBM anchors (cols 14..25) + per-anchor hop floors
+    anchors = []
+    for bi in range(6):
+        hi = raw[:, _HBM_COL + 2 * bi]
+        hj = raw[:, _HBM_COL + 2 * bi + 1]
+        floor = (jnp.where(arch >= 1.0, 0.0, 1.0) if bi == 5
+                 else jnp.ones_like(arch))
+        anchors.append((hi, hj, floor))
+
+    def min_anchor_dist(i, j):
+        dmin = jnp.full_like(i, big)
+        for bit, (hi, hj, floor) in zip(bits, anchors):
+            d = jnp.maximum(jnp.abs(i - hi[:, None]) + jnp.abs(j - hj[:, None]),
+                            floor[:, None])
+            dmin = jnp.minimum(dmin, jnp.where(bit[:, None] > 0, d, big))
+        return dmin
+
+    # per occupied slot -> nearest stack (traffic-weighted mean)
+    d_hbm = min_anchor_dist(ci, cj)                    # (B, 128)
+    inv_pos = 1.0 / jnp.maximum(n_pos, 1.0)
+    sum_hbm = jnp.sum(jnp.where(active, d_hbm, 0.0), axis=1)
+    h_hbm_mean = sum_hbm * inv_pos
+
+    # worst router of the spanned region (16x16 grid scan, 2 x 128 lanes)
+    def cell_worst(cell_idx):
         i = jnp.floor(cell_idx / _GRID)
         j = cell_idx % _GRID
-        mc = (m[:, None] - 1.0) / 2.0
-        nc = (n[:, None] - 1.0) / 2.0
-        valid = (i < m[:, None]) & (j < n[:, None])
-        d_l = jnp.abs(i - mc) + (j + 1.0)
-        d_r = jnp.abs(i - mc) + (n[:, None] - j)
-        d_t = (i + 1.0) + jnp.abs(j - nc)
-        d_b = (m[:, None] - i) + jnp.abs(j - nc)
-        d_m = jnp.maximum(jnp.abs(i - mc) + jnp.abs(j - nc), 1.0)
-        d_s3 = jnp.abs(i - mc) + jnp.abs(j - nc)
-        d_s = jnp.where(arch[:, None] >= 1.0, d_s3, d_m)
-        big = jnp.float32(1e9)
-        dmin = jnp.full_like(d_l, big)
-        for bit, d in zip(bits, (d_l, d_r, d_t, d_b, d_m, d_s)):
-            dmin = jnp.minimum(dmin, jnp.where(bit[:, None] > 0, d, big))
-        return jnp.max(jnp.where(valid, dmin, -big), axis=1)
+        in_box = ((i >= i_min[:, None]) & (i <= i_max[:, None])
+                  & (j >= j_min[:, None]) & (j <= j_max[:, None]))
+        return jnp.max(jnp.where(in_box, min_anchor_dist(i, j), -big), axis=1)
 
-    h_hbm = jnp.maximum(cell_minmax(lane), cell_minmax(lane + LANES))
-    h_ai = m + n - 2.0
+    h_hbm = jnp.maximum(cell_worst(lane), cell_worst(lane + LANES))
+
+    # chiplet-to-chiplet forwarding fans out from the traffic centroid
+    cent_i = jnp.sum(jnp.where(active, ci, 0.0), axis=1) * inv_pos
+    cent_j = jnp.sum(jnp.where(active, cj, 0.0), axis=1) * inv_pos
+    d_cent = (jnp.abs(ci - cent_i[:, None]) + jnp.abs(cj - cent_j[:, None]))
+    sum_cent = jnp.sum(jnp.where(active, d_cent, 0.0), axis=1)
+    h_ai_mean = sum_cent * inv_pos
+
+    # per-link contention over the canonical m x n fabric (the NoP the
+    # design pays for); delivered 2.5D bandwidth scales vs the canonical
+    # floorplan's channel load
+    bm = i_max - i_min + 1.0
+    bn = j_max - j_min + 1.0
+    box_edges = bm * (bn - 1.0) + bn * (bm - 1.0)
+    mesh_edges = m * (n - 1.0) + n * (m - 1.0)
+    contention = (4.0 * sum_hbm + sum_cent) / jnp.maximum(mesh_edges, 1.0)
+    canon_contention = raw[:, _CANON_COL]
+    congestion = ((canon_contention + 1e-6)
+                  / (contention + 1e-6)) ** cfg.nop_congestion_exp
+    congestion = jnp.clip(congestion, 0.1, 10.0)
+    # per-hop interconnect energy ratios vs the canonical floorplan
+    e_hop_hbm = jnp.clip((h_hbm_mean + 1e-6)
+                         / (raw[:, _CANON_COL + 1] + 1e-6), 0.1, 10.0)
+    e_hop_ai = jnp.clip((h_ai_mean + 1e-6)
+                        / (raw[:, _CANON_COL + 2] + 1e-6), 0.1, 10.0)
 
     # ---- latency (Eqs. 10-11) ---------------------------------------------
     wire_ai = cfg.wire_delay_ps_2p5d * ai_trace / 1000.0
@@ -157,11 +219,12 @@ def _kernel(design_ref, mesh_ref, out_ref, *,
                     * ops_per_die / reuse_comm) / 1e9
     bw_req_hbm = 4.0 * operand_gbps
     bw_req_ai = operand_gbps
-    link_bw_hbm = hbm_dr * hbm_links
+    link_bw_hbm = hbm_dr * hbm_links * congestion
     bw_act_hbm = (jnp.minimum(link_bw_hbm, hw.HBM_BANDWIDTH_GBPS_PER_STACK)
                   if cfg.hbm_peak_cap else link_bw_hbm)
     u_hbm = jnp.minimum(1.0, bw_act_hbm / jnp.maximum(bw_req_hbm, 1e-6))
-    u_ai = jnp.minimum(1.0, ai_dr * ai_links / jnp.maximum(bw_req_ai, 1e-6))
+    u_ai = jnp.minimum(1.0, ai_dr * ai_links * congestion
+                       / jnp.maximum(bw_req_ai, 1e-6))
     u_3d = jnp.minimum(1.0, dr3d * links3d / jnp.maximum(bw_req_ai, 1e-6))
     u_sys = jnp.minimum(u_hbm, u_ai)
     u_sys = jnp.where(is_lol > 0, jnp.minimum(u_sys, u_3d), u_sys)
@@ -178,11 +241,13 @@ def _kernel(design_ref, mesh_ref, out_ref, *,
     e_hbm_link = lerp(jnp.where(hbm_ic < 0.5, hw.E_BIT_PJ_2P5D_MIN[0],
                                 hw.E_BIT_PJ_2P5D_MIN[1]),
                       jnp.where(hbm_ic < 0.5, hw.E_BIT_PJ_2P5D_MAX[0],
-                                hw.E_BIT_PJ_2P5D_MAX[1]), hbm_trace)
+                                hw.E_BIT_PJ_2P5D_MAX[1]),
+                      hbm_trace) * e_hop_hbm
     e_ai_link = lerp(jnp.where(ai_ic < 0.5, hw.E_BIT_PJ_2P5D_MIN[0],
                                hw.E_BIT_PJ_2P5D_MIN[1]),
                      jnp.where(ai_ic < 0.5, hw.E_BIT_PJ_2P5D_MAX[0],
-                               hw.E_BIT_PJ_2P5D_MAX[1]), ai_trace)
+                               hw.E_BIT_PJ_2P5D_MAX[1]),
+                     ai_trace) * e_hop_ai
     e_3d = jnp.where(ic3d < 0.5, hw.E_BIT_PJ_3D[0], hw.E_BIT_PJ_3D[1])
     bits_hbm = cfg.n_operands * cfg.data_width_bits / reuse_comm
     bits_ai = 0.5 * bits_hbm
@@ -196,8 +261,8 @@ def _kernel(design_ref, mesh_ref, out_ref, *,
     die_cost = (n_dies * cfg.wafer_price_per_mm2 * die_area / y_die
                 * (1.0 + hw.KGD_TEST_COST_FRAC))
 
-    mesh_edges = m * (n - 1.0) + n * (m - 1.0)
-    l_ai = ai_links * mesh_edges
+    # package link cost wires the *spanned* mesh region (== m x n canonical)
+    l_ai = ai_links * box_edges
     l_hbm = hbm_links * n_hbm_2p5d
     n_pairs = jnp.where(is_lol > 0, jnp.floor(n_dies / 2.0), 0.0)
     l_3d = links3d * n_pairs + links3d * uses_3d_mem
@@ -229,7 +294,8 @@ def _kernel(design_ref, mesh_ref, out_ref, *,
     reward = w_alpha * r_t - w_beta * r_c - w_gamma * r_e
 
     out = jnp.stack([reward, eff_tops, e_comm, pkg_cost, die_cost,
-                     u_sys, lat_hbm, lat_ai], axis=-1)       # (B, 8)
+                     u_sys, lat_hbm, lat_ai, h_hbm_mean, h_ai_mean,
+                     contention, h_hbm], axis=-1)            # (B, 12)
     pad = jnp.zeros((b, LANES - N_OUT), jnp.float32)
     out_ref[...] = jnp.concatenate([out, pad], axis=-1)
 
@@ -237,14 +303,20 @@ def _kernel(design_ref, mesh_ref, out_ref, *,
 @functools.partial(jax.jit, static_argnames=("workload_vals", "weight_vals",
                                              "cfg", "interpret", "block_n"))
 def evaluate_batch(designs_padded: jnp.ndarray,
+                   cells_padded: jnp.ndarray,
                    workload_vals: Tuple[float, float, float, float],
                    weight_vals: Tuple[float, float, float],
                    cfg: hw.HWConfig = hw.DEFAULT_HW,
                    interpret: bool = True,
                    block_n: int = BLOCK_N) -> jnp.ndarray:
-    """Run the kernel on (N, 128) padded designs; returns (N, 8) metrics."""
+    """Run the kernel on padded (designs, cells); returns (N, 12) metrics.
+
+    ``designs_padded`` / ``cells_padded`` come from :func:`pad_designs` /
+    :func:`pad_cells` (which default to the canonical Fig.-4 floorplan).
+    """
     n = designs_padded.shape[0]
     assert n % block_n == 0, f"batch {n} must be a multiple of {block_n}"
+    assert cells_padded.shape == designs_padded.shape
     mesh_tab = jnp.asarray(_mesh_tables())
     kernel = functools.partial(_kernel, workload_vals=workload_vals,
                                weight_vals=weight_vals, cfg=cfg)
@@ -253,19 +325,54 @@ def evaluate_batch(designs_padded: jnp.ndarray,
         grid=(n // block_n,),
         in_specs=[
             pl.BlockSpec((block_n, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, LANES), lambda i: (i, 0)),
             pl.BlockSpec((256, LANES), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((block_n, LANES), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, LANES), jnp.float32),
         interpret=interpret,
-    )(designs_padded.astype(jnp.float32), mesh_tab)
+    )(designs_padded.astype(jnp.float32), cells_padded.astype(jnp.float32),
+      mesh_tab)
     return out[:, :N_OUT]
 
 
-def pad_designs(dp: ps.DesignPoint, block_n: int = BLOCK_N) -> jnp.ndarray:
-    """(B,)-batched DesignPoint -> (N_padded, 128) f32 kernel input."""
+def _design_placement(dp: ps.DesignPoint, placement: pm.Placement = None):
+    """Resolve (placement, canonical NoP baselines) for a design batch."""
+    v = ps.decode(dp)
+    n_pos = cm.footprint_positions(v)
+    m, n = cm.mesh_dims(n_pos)
+    canon = pm.canonical(m, n, v.hbm_mask, v.arch_type)
+    canon_stats = pm.nop_stats(canon, n_pos, v.hbm_mask, v.arch_type)
+    return (canon if placement is None else placement), canon_stats
+
+
+def pad_designs(dp: ps.DesignPoint, placement: pm.Placement = None,
+                block_n: int = BLOCK_N, _resolved=None) -> jnp.ndarray:
+    """(B,)-batched DesignPoint -> (N_padded, 128) f32 kernel input.
+
+    Cols 0..13 carry the Table-1 indices, cols 14..25 the six HBM anchor
+    (i, j) coordinates of ``placement`` (canonical when None), col 26 the
+    canonical floorplan's link contention (the congestion baseline).
+    ``_resolved`` lets callers pass a precomputed ``_design_placement``
+    result to avoid re-running the canonical baseline (ops.chiplet_eval).
+    """
+    placement, canon = (_design_placement(dp, placement)
+                        if _resolved is None else _resolved)
     flat = ps.to_flat(dp).astype(jnp.float32)          # (B, 14)
+    hbm = placement.hbm_ij.reshape(flat.shape[0], 2 * pm.N_HBM)
+    flat = jnp.concatenate([
+        flat, hbm, canon.link_contention[:, None],
+        canon.hops_hbm_mean[:, None], canon.hops_ai_mean[:, None]], axis=-1)
     n = flat.shape[0]
     n_pad = (-n) % block_n
-    flat = jnp.pad(flat, ((0, n_pad), (0, LANES - ps.N_PARAMS)))
-    return flat
+    return jnp.pad(flat, ((0, n_pad), (0, LANES - flat.shape[1])))
+
+
+def pad_cells(dp: ps.DesignPoint, placement: pm.Placement = None,
+              block_n: int = BLOCK_N) -> jnp.ndarray:
+    """(B,)-batched placement -> (N_padded, 128) f32 chiplet cell ids."""
+    if placement is None:
+        placement, _ = _design_placement(dp, None)
+    cells = jnp.asarray(placement.chiplet_cell, jnp.float32)   # (B, 128)
+    n_pad = (-cells.shape[0]) % block_n
+    return jnp.pad(cells, ((0, n_pad), (0, 0)))

@@ -74,21 +74,30 @@ def chiplet_eval(dp: ps.DesignPoint,
                  workload: cm.Workload = cm.GENERIC_WORKLOAD,
                  weights: cm.RewardWeights = cm.RewardWeights(),
                  cfg: hw.HWConfig = hw.DEFAULT_HW,
-                 backend: str = "auto") -> jnp.ndarray:
-    """Evaluate a batch of design points -> (N, 8) metric matrix:
+                 backend: str = "auto",
+                 placement=None) -> jnp.ndarray:
+    """Evaluate a batch of design points -> (N, 12) metric matrix:
     [reward, eff_tops, e_comm_pj, pkg_cost, die_cost, u_sys,
-     lat_hbm_ns, lat_ai_ns]."""
+     lat_hbm_ns, lat_ai_ns, hops_hbm_mean, hops_ai_mean,
+     link_contention, hops_hbm_worst].
+
+    ``placement`` is an optional batched ``placement.Placement``; None
+    evaluates the canonical Fig.-4 floorplan."""
+    from repro.core import placement as _pm
     flat = ps.to_flat(dp)
     n = flat.shape[0]
     wl_vals = (float(workload.gemm_ops), float(workload.nongemm_ops),
                float(workload.hbm_bytes), float(workload.mapping_eff))
     w_vals = (float(weights.alpha), float(weights.beta), float(weights.gamma))
     if backend == "pallas" or (backend == "auto" and _on_tpu()):
-        padded = _ce.pad_designs(dp)
-        out = _ce.evaluate_batch(padded, wl_vals, w_vals, cfg,
+        resolved = _ce._design_placement(dp, placement)
+        padded = _ce.pad_designs(dp, _resolved=resolved)
+        cells = _ce.pad_cells(dp, resolved[0])
+        out = _ce.evaluate_batch(padded, cells, wl_vals, w_vals, cfg,
                                  interpret=not _on_tpu())
         return out[:n]
-    return _ref.chiplet_eval_reference(flat, wl_vals, w_vals, cfg)
+    pflat = None if placement is None else _pm.to_flat(placement)
+    return _ref.chiplet_eval_reference(flat, wl_vals, w_vals, cfg, pflat)
 
 
 def decode_attention(q, k, v, pos, scale=None, window: int = 0,

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.core import costmodel as cm
 from repro.core import hw_constants as hw
 from repro.core import params as ps
+from repro.core import placement as pm
 
 _NEG_INF = -1e30
 
@@ -129,8 +130,16 @@ def ssd_decode_step(h, x_t, dt_t, a, b_t, c_t):
 def chiplet_eval_reference(designs_flat: jnp.ndarray,
                            workload_vals: Tuple[float, float, float, float],
                            weight_vals: Tuple[float, float, float],
-                           cfg: hw.HWConfig = hw.DEFAULT_HW) -> jnp.ndarray:
-    """(N, >=14) index array -> (N, 8) metrics matching the Pallas kernel."""
+                           cfg: hw.HWConfig = hw.DEFAULT_HW,
+                           placement_flat: jnp.ndarray | None = None
+                           ) -> jnp.ndarray:
+    """(N, >=14) index array -> (N, 12) metrics matching the Pallas kernel.
+
+    Columns: [reward, eff_tops, e_comm_pj, pkg_cost, die_cost, u_sys,
+    lat_hbm_ns, lat_ai_ns, hops_hbm_mean, hops_ai_mean, link_contention,
+    hops_hbm_worst]. ``placement_flat`` is an optional (N, pm.FLAT_DIM)
+    ``placement.to_flat`` batch; None evaluates the canonical floorplan.
+    """
     dp = ps.from_flat(designs_flat[:, : ps.N_PARAMS].astype(jnp.int32))
     workload = cm.Workload(
         gemm_ops=jnp.float32(workload_vals[0]),
@@ -140,9 +149,13 @@ def chiplet_eval_reference(designs_flat: jnp.ndarray,
     weights = cm.RewardWeights(alpha=jnp.float32(weight_vals[0]),
                                beta=jnp.float32(weight_vals[1]),
                                gamma=jnp.float32(weight_vals[2]))
-    m = cm.evaluate(dp, workload, weights, cfg)
+    placement = (None if placement_flat is None
+                 else pm.from_flat(placement_flat))
+    m = cm.evaluate(dp, workload, weights, cfg, placement)
     return jnp.stack([m.reward, m.eff_tops, m.e_comm_pj_per_op, m.pkg_cost,
-                      m.die_cost, m.u_sys, m.lat_hbm_ai_ns, m.lat_ai_ai_ns],
+                      m.die_cost, m.u_sys, m.lat_hbm_ai_ns, m.lat_ai_ai_ns,
+                      m.hops_hbm_mean, m.hops_ai_mean, m.link_contention,
+                      m.hops_hbm_ai],
                      axis=-1)
 
 

@@ -35,11 +35,15 @@ from repro.sa import annealing as sa
 class PortfolioConfig:
     n_sa: int = 20
     n_rl: int = 20
+    refine: bool = True
+    max_refine_sweeps: int = 8
+    refine_placement: bool = True
+    # NOTE: placement_sa must precede the `sa` field — that field shadows
+    # the annealing module for later annotations in this class body.
+    placement_sa: sa.PlacementSAConfig = sa.PlacementSAConfig()
     sa: sa.SAConfig = sa.SAConfig(n_iters=100_000)
     rl: ppo.PPOConfig = ppo.PPOConfig()
     rl_timesteps: int = 250_000
-    refine: bool = True
-    max_refine_sweeps: int = 8
 
 
 class PortfolioResult(NamedTuple):
@@ -50,6 +54,8 @@ class PortfolioResult(NamedTuple):
     refined_reward: float
     wall_time_s: float
     source: str                     # 'sa' | 'rl' | 'refined'
+    placement: object = None        # placement.Placement of the winner
+    placement_reward: float = None  # >= best_reward by construction
 
 
 @functools.partial(jax.jit, static_argnums=(2,))
@@ -88,6 +94,58 @@ def coordinate_refine(flat: jnp.ndarray, env_cfg: chipenv.EnvConfig,
     return best, best_r
 
 
+@functools.partial(jax.jit, static_argnums=(2,))
+def _sweep_all_scenarios(flats, scenarios: cm.Scenario, hw_cfg):
+    """ONE full coordinate sweep for every scenario winner in lockstep.
+
+    ``flats`` is (S, 14) — winner i refined under scenario i. For each of
+    the 14 dims the whole Table-1 grid is evaluated for *all* scenarios in
+    a single (S, head) vmapped batch; no host loop over winners.
+    Returns (flats', rewards') after one sweep.
+    """
+    def reward_sc(c, s):
+        return cm.reward_only(ps.from_flat(c), s.workload, s.weights, hw_cfg)
+
+    cur_r = jax.vmap(reward_sc)(flats, scenarios)                 # (S,)
+    for dim, head in enumerate(ps.HEAD_SIZES):
+        cand = jnp.tile(flats[:, None, :], (1, head, 1))          # (S, H, 14)
+        cand = cand.at[:, :, dim].set(jnp.arange(head, dtype=jnp.int32))
+        rewards = jax.vmap(lambda c, s: jax.vmap(
+            lambda cc: reward_sc(cc, s))(c))(cand, scenarios)     # (S, H)
+        idx = jnp.argmax(rewards, axis=1)
+        best_r = jnp.take_along_axis(rewards, idx[:, None], axis=1)[:, 0]
+        best_c = jnp.take_along_axis(
+            cand, idx[:, None, None], axis=1)[:, 0, :]
+        improved = best_r > cur_r + 1e-6
+        flats = jnp.where(improved[:, None], best_c, flats)
+        cur_r = jnp.where(improved, best_r, cur_r)
+    return flats, cur_r
+
+
+def coordinate_refine_batch(flats, scenarios: cm.Scenario,
+                            env_cfg: chipenv.EnvConfig,
+                            max_sweeps: int = 8):
+    """Batched :func:`coordinate_refine`: all S scenario winners sweep as
+    one jitted vmapped program per sweep, stopping when no winner moves.
+
+    Returns (flats (S, 14) int32, rewards (S,) float) as numpy arrays.
+    """
+    flats = jnp.asarray(flats, jnp.int32)
+    rewards = None
+    for _ in range(max_sweeps):
+        new_flats, rewards = _sweep_all_scenarios(flats, scenarios,
+                                                  env_cfg.hw)
+        if bool(jnp.all(new_flats == flats)):
+            flats = new_flats
+            break
+        flats = new_flats
+    if rewards is None:
+        rewards = jax.vmap(lambda c, s: cm.reward_only(
+            ps.from_flat(c), s.workload, s.weights, env_cfg.hw))(
+                flats, scenarios)
+    return np.asarray(flats), np.asarray(rewards)
+
+
 def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
              cfg: PortfolioConfig = PortfolioConfig(),
              verbose: bool = False,
@@ -116,12 +174,14 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
                                       scenario=scenario)
         rl_rewards_arr = np.asarray(rl_res.best_reward, np.float32)
         rl_flats = np.asarray(ps.to_flat(rl_res.best_design))   # (n_rl, 14)
+        rl_actions = np.asarray(rl_res.best_action)   # incl. placement heads
         if verbose:
             for i, r in enumerate(rl_rewards_arr):
                 print(f"  [portfolio] RL agent {i}: best={float(r):.2f}")
     else:
         rl_rewards_arr = np.zeros((0,), np.float32)
         rl_flats = np.zeros((0, ps.N_PARAMS), np.int32)
+        rl_actions = np.zeros((0, chipenv.action_dim(env_cfg)), np.int32)
 
     # --- exhaustive argmax over all outcomes (Alg. 1 lines 5-11) -----------
     all_flats = np.concatenate([sa_flats, rl_flats], axis=0)
@@ -138,12 +198,31 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
         if refined_r > best_r:
             best_flat, source = refined_flat, "refined"
 
+    best_design = ps.from_flat(best_flat)
+    # an RL winner trained with placement actions achieved its reward
+    # *with* a placement mutation — recover it so the returned
+    # (design, placement, placement_reward) triple stays reproducible
+    init_plc = None
+    if (env_cfg.placement_actions and source == "rl"
+            and rl_actions.shape[1] > ps.N_PARAMS):
+        win_act = jnp.asarray(rl_actions[top - len(sa_rewards)], jnp.int32)
+        _, init_plc = chipenv._design_and_placement(win_act, env_cfg)
+    placement, placement_r = init_plc, max(best_r, refined_r)
+    if cfg.refine_placement:
+        pres = sa.refine_placement(
+            jax.random.fold_in(key, 2), best_design, env_cfg,
+            cfg.placement_sa, scenario, init_placement=init_plc)
+        placement = pres.best_placement
+        placement_r = float(pres.best_reward)
+
     return PortfolioResult(
-        best_design=ps.from_flat(best_flat),
+        best_design=best_design,
         best_reward=max(best_r, refined_r),
         sa_rewards=sa_rewards,
         rl_rewards=rl_rewards_arr,
         refined_reward=refined_r,
         wall_time_s=time.time() - t0,
         source=source,
+        placement=placement,
+        placement_reward=placement_r,
     )

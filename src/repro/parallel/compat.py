@@ -1,0 +1,17 @@
+"""jax version compatibility shims shared by the sharded modules.
+
+jax >= 0.5 exposes ``jax.shard_map`` (kw ``check_vma``); 0.4.x only has
+``jax.experimental.shard_map.shard_map`` (kw ``check_rep``). Resolve once
+here so every call site stays in sync when the API moves again.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+    SHARD_MAP_UNCHECKED_KW = {"check_vma": False}
+except AttributeError:
+    from jax.experimental.shard_map import shard_map       # noqa: F401
+    SHARD_MAP_UNCHECKED_KW = {"check_rep": False}

@@ -22,6 +22,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel.compat import SHARD_MAP_UNCHECKED_KW as _SHARD_MAP_KW
+from repro.parallel.compat import shard_map as _shard_map
+
 
 def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
     return (n_stages - 1) / (n_microbatches + n_stages - 1)
@@ -80,8 +83,8 @@ def pipelined_forward(mesh: Mesh, stage_axis: str,
 
     other_axes = tuple(a for a in mesh.axis_names if a != stage_axis)
     del other_axes
-    return jax.shard_map(
+    return _shard_map(
         body, mesh=mesh,
         in_specs=(P(stage_axis), P()),
         out_specs=P(),
-        check_vma=False)
+        **_SHARD_MAP_KW)

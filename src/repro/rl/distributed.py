@@ -24,6 +24,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import env as chipenv
 from repro.core import params as ps
+from repro.parallel.compat import SHARD_MAP_UNCHECKED_KW as _SHARD_MAP_KW
+from repro.parallel.compat import shard_map as _shard_map
 from repro.rl import networks as nets
 from repro.rl import ppo
 from repro.training.optim import Adam
@@ -43,7 +45,8 @@ def init_carry(key, mesh: Mesh, env_cfg: chipenv.EnvConfig,
     n_dev = mesh.devices.size
     total_envs = n_dev * cfg.n_envs
     k_init, k_env, k_train = jax.random.split(key, 3)
-    params = nets.init_actor_critic(k_init, obs_dim=chipenv.OBS_DIM)
+    params = nets.init_actor_critic(k_init, obs_dim=chipenv.obs_dim(env_cfg),
+                                    head_sizes=chipenv.head_sizes(env_cfg))
     opt_state = optimizer.init(params)
     env_keys = jax.random.split(k_env, total_envs)
     env_states, obs = jax.vmap(
@@ -53,7 +56,7 @@ def init_carry(key, mesh: Mesh, env_cfg: chipenv.EnvConfig,
         params=params, opt_state=opt_state, env_states=env_states, obs=obs,
         key=keys,                                  # (n_dev, 2) one per shard
         best_reward=jnp.float32(-jnp.inf),
-        best_action=jnp.zeros((ps.N_PARAMS,), jnp.int32))
+        best_action=jnp.zeros((chipenv.action_dim(env_cfg),), jnp.int32))
 
 
 def carry_specs(mesh: Mesh) -> ppo.TrainCarry:
@@ -82,6 +85,7 @@ def make_pod_update(mesh: Mesh, env_cfg: chipenv.EnvConfig,
     """
     scenario = env_cfg.scenario() if scenario is None else scenario
     env_axes = _env_axes(mesh)
+    n_act = chipenv.action_dim(env_cfg)
     grad_reduce = lambda g: jax.lax.pmean(g, env_axes)
     local_update = ppo.make_update_step(env_cfg, cfg, optimizer,
                                         grad_reduce=grad_reduce)
@@ -96,9 +100,9 @@ def make_pod_update(mesh: Mesh, env_cfg: chipenv.EnvConfig,
         all_a = jax.lax.all_gather(local.best_action, env_axes[0])
         for ax in env_axes[1:]:
             all_r = jax.lax.all_gather(all_r, ax).reshape(-1)
-            all_a = jax.lax.all_gather(all_a, ax).reshape(-1, ps.N_PARAMS)
+            all_a = jax.lax.all_gather(all_a, ax).reshape(-1, n_act)
         all_r = all_r.reshape(-1)
-        all_a = all_a.reshape(-1, ps.N_PARAMS)
+        all_a = all_a.reshape(-1, n_act)
         idx = jnp.argmax(all_r)
         best_r, best_a = all_r[idx], all_a[idx]
 
@@ -116,10 +120,48 @@ def make_pod_update(mesh: Mesh, env_cfg: chipenv.EnvConfig,
 
     specs = carry_specs(mesh)
     log_specs = ppo.TrainLog(*([P()] * len(ppo.TrainLog._fields)))
-    sharded = jax.shard_map(shard_body, mesh=mesh,
-                            in_specs=(specs,), out_specs=(specs, log_specs),
-                            check_vma=False)
+    sharded = _shard_map(shard_body, mesh=mesh,
+                         in_specs=(specs,), out_specs=(specs, log_specs),
+                         **_SHARD_MAP_KW)
     return jax.jit(sharded)
+
+
+def train_scenario_population_sharded(key, scenarios: chipenv.Scenario,
+                                      n_agents: int, mesh: Mesh,
+                                      env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
+                                      cfg: ppo.PPOConfig = ppo.PPOConfig(),
+                                      total_timesteps: int = 250_000,
+                                      axis_name: str = None) -> ppo.TrainResult:
+    """``ppo.train_scenario_population`` with the scenario axis sharded.
+
+    Each device of the mesh axis owns ``S / n_shards`` scenarios and runs
+    the (scenario x seed)-vmapped PPO population on its shard — the whole
+    suite trains as one shard_mapped XLA program. Key derivation matches
+    the unsharded function exactly (``split(key, S)`` then scenario i gets
+    key i), so results are seed-for-seed identical to
+    ``ppo.train_scenario_population`` — verified by the CPU smoke test in
+    tests/test_distributed.py. Every TrainResult leaf keeps its leading
+    scenario axis (sharded over the mesh).
+    """
+    axis_name = mesh.axis_names[0] if axis_name is None else axis_name
+    n_scen = int(jnp.shape(scenarios.weights.alpha)[0])
+    n_shards = int(mesh.shape[axis_name])
+    if n_scen % n_shards:
+        raise ValueError(f"scenario count {n_scen} must divide over "
+                         f"mesh axis {axis_name!r} ({n_shards} shards)")
+    keys = jax.random.split(key, n_scen)
+
+    def shard_body(keys_local, scen_local):
+        return jax.vmap(
+            lambda k, s: ppo.train_population(k, n_agents, env_cfg, cfg,
+                                              total_timesteps, s)
+        )(keys_local, scen_local)
+
+    spec = P(axis_name)
+    sharded = _shard_map(shard_body, mesh=mesh,
+                         in_specs=(spec, spec), out_specs=spec,
+                         **_SHARD_MAP_KW)
+    return jax.jit(sharded)(keys, scenarios)
 
 
 def train_distributed(key, mesh: Mesh,

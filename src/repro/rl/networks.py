@@ -1,8 +1,13 @@
 """Actor-critic MLPs for Chiplet-Gym PPO (paper §5.2.1).
 
-Policy network  [obs_dim, 64, 64, sum(HEAD_SIZES)]  (MultiDiscrete heads)
+Policy network  [obs_dim, 64, 64, sum(head_sizes)]  (MultiDiscrete heads)
 Value network   [obs_dim, 64, 64, 1]
 tanh activations, orthogonal init (SB3 defaults, which the paper uses).
+
+Every head-structured function takes an optional ``head_sizes`` so the
+same networks serve both the paper's 14 Table-1 heads (the default) and
+the placement-extended 18-head action space
+(``env.EnvConfig(placement_actions=True)``).
 """
 
 from __future__ import annotations
@@ -55,38 +60,46 @@ def apply_mlp(p: MLPParams, x: jnp.ndarray) -> jnp.ndarray:
 
 
 def init_actor_critic(key, obs_dim: int = 10,
-                      hidden: Tuple[int, int] = (64, 64)) -> ACParams:
+                      hidden: Tuple[int, int] = (64, 64),
+                      head_sizes: Sequence[int] = None) -> ACParams:
+    hs = ps.HEAD_SIZES if head_sizes is None else tuple(head_sizes)
     kp, kv = jax.random.split(key)
-    policy = init_mlp(kp, (obs_dim, *hidden, ps.TOTAL_LOGITS), out_scale=0.01)
+    policy = init_mlp(kp, (obs_dim, *hidden, sum(hs)), out_scale=0.01)
     value = init_mlp(kv, (obs_dim, *hidden, 1), out_scale=1.0)
     return ACParams(policy=policy, value=value)
 
 
-# --- MultiDiscrete categorical over the 14 Table-1 heads -------------------
+# --- MultiDiscrete categorical over the action heads -----------------------
+# (default: the 14 Table-1 heads; pass env.head_sizes(cfg) for the
+# placement-extended space)
 
-_HEAD_OFFSETS = []
-_off = 0
-for _h in ps.HEAD_SIZES:
-    _HEAD_OFFSETS.append(_off)
-    _off += _h
-
-
-def split_logits(logits: jnp.ndarray) -> List[jnp.ndarray]:
-    return [logits[..., o:o + h]
-            for o, h in zip(_HEAD_OFFSETS, ps.HEAD_SIZES)]
+def _offsets(head_sizes) -> Tuple[int, ...]:
+    out, off = [], 0
+    for h in head_sizes:
+        out.append(off)
+        off += h
+    return tuple(out)
 
 
-def sample_action(key, logits: jnp.ndarray) -> jnp.ndarray:
-    """Sample one index per head; returns (..., 14) int32."""
-    heads = split_logits(logits)
+def split_logits(logits: jnp.ndarray,
+                 head_sizes: Sequence[int] = None) -> List[jnp.ndarray]:
+    hs = ps.HEAD_SIZES if head_sizes is None else tuple(head_sizes)
+    return [logits[..., o:o + h] for o, h in zip(_offsets(hs), hs)]
+
+
+def sample_action(key, logits: jnp.ndarray,
+                  head_sizes: Sequence[int] = None) -> jnp.ndarray:
+    """Sample one index per head; returns (..., n_heads) int32."""
+    heads = split_logits(logits, head_sizes)
     keys = jax.random.split(key, len(heads))
     idx = [jax.random.categorical(k, h) for k, h in zip(keys, heads)]
     return jnp.stack(idx, axis=-1).astype(jnp.int32)
 
 
-def log_prob(logits: jnp.ndarray, action: jnp.ndarray) -> jnp.ndarray:
-    """Joint log-probability of a (..., 14) MultiDiscrete action."""
-    heads = split_logits(logits)
+def log_prob(logits: jnp.ndarray, action: jnp.ndarray,
+             head_sizes: Sequence[int] = None) -> jnp.ndarray:
+    """Joint log-probability of a (..., n_heads) MultiDiscrete action."""
+    heads = split_logits(logits, head_sizes)
     total = 0.0
     for i, h in enumerate(heads):
         logp = jax.nn.log_softmax(h, axis=-1)
@@ -95,9 +108,10 @@ def log_prob(logits: jnp.ndarray, action: jnp.ndarray) -> jnp.ndarray:
     return total
 
 
-def entropy(logits: jnp.ndarray) -> jnp.ndarray:
+def entropy(logits: jnp.ndarray,
+            head_sizes: Sequence[int] = None) -> jnp.ndarray:
     """Sum of per-head categorical entropies."""
-    heads = split_logits(logits)
+    heads = split_logits(logits, head_sizes)
     total = 0.0
     for h in heads:
         logp = jax.nn.log_softmax(h, axis=-1)
@@ -105,8 +119,9 @@ def entropy(logits: jnp.ndarray) -> jnp.ndarray:
     return total
 
 
-def greedy_action(logits: jnp.ndarray) -> jnp.ndarray:
-    heads = split_logits(logits)
+def greedy_action(logits: jnp.ndarray,
+                  head_sizes: Sequence[int] = None) -> jnp.ndarray:
+    heads = split_logits(logits, head_sizes)
     return jnp.stack([jnp.argmax(h, axis=-1) for h in heads],
                      axis=-1).astype(jnp.int32)
 

@@ -76,19 +76,21 @@ class TrainResult(NamedTuple):
     log: TrainLog                # stacked over updates
     best_design: ps.DesignPoint
     best_reward: jnp.ndarray
+    best_action: jnp.ndarray     # full action incl. any placement heads
 
 
 def collect_rollout(params, env_states, obs, key, env_cfg, cfg: PPOConfig,
                     scenario: chipenv.Scenario = None):
     """T steps of E vectorized environments under the current policy."""
     scenario = env_cfg.scenario() if scenario is None else scenario
+    heads = chipenv.head_sizes(env_cfg)
 
     def step_fn(carry, _):
         states, obs, key = carry
         key, k_act = jax.random.split(key)
         logits, value = nets.policy_value(params, obs)
-        action = nets.sample_action(k_act, logits)          # (E, 14)
-        logp = nets.log_prob(logits, action)
+        action = nets.sample_action(k_act, logits, heads)   # (E, n_heads)
+        logp = nets.log_prob(logits, action, heads)
         states, obs_next, reward, done, _ = jax.vmap(
             lambda s, a: chipenv.auto_reset_step(s, a, env_cfg, scenario)
         )(states, action)
@@ -120,10 +122,10 @@ def compute_gae(traj: Rollout, last_value, cfg: PPOConfig):
     return advantages, returns
 
 
-def ppo_loss(params, batch, cfg: PPOConfig):
+def ppo_loss(params, batch, cfg: PPOConfig, head_sizes=None):
     obs, actions, old_logp, advantages, returns = batch
     logits, value = nets.policy_value(params, obs)
-    logp = nets.log_prob(logits, actions)
+    logp = nets.log_prob(logits, actions, head_sizes)
     ratio = jnp.exp(logp - old_logp)
 
     adv = (advantages - advantages.mean()) / (advantages.std() + 1e-8)
@@ -132,7 +134,7 @@ def ppo_loss(params, batch, cfg: PPOConfig):
     policy_loss = -jnp.mean(jnp.minimum(unclipped, clipped))
 
     value_loss = 0.5 * jnp.mean(jnp.square(returns - value))
-    ent = jnp.mean(nets.entropy(logits))
+    ent = jnp.mean(nets.entropy(logits, head_sizes))
     total = (policy_loss + cfg.vf_coef * value_loss - cfg.ent_coef * ent)
     return total, (policy_loss, value_loss, ent)
 
@@ -149,6 +151,8 @@ def make_update_step(env_cfg: chipenv.EnvConfig, cfg: PPOConfig,
     """
     total = cfg.n_steps * cfg.n_envs
     n_minibatches = max(total // cfg.batch_size, 1)
+    heads = chipenv.head_sizes(env_cfg)
+    n_act = len(heads)
 
     def update(carry: TrainCarry, _, scenario: chipenv.Scenario = None):
         scenario = env_cfg.scenario() if scenario is None else scenario
@@ -162,7 +166,7 @@ def make_update_step(env_cfg: chipenv.EnvConfig, cfg: PPOConfig,
 
         # track the best design point ever visited (Alg. 1 exhaustive pick)
         flat_rewards = traj.rewards.reshape(-1)
-        flat_actions = traj.actions.reshape(-1, ps.N_PARAMS)
+        flat_actions = traj.actions.reshape(-1, n_act)
         idx = jnp.argmax(flat_rewards)
         cand_r, cand_a = flat_rewards[idx], flat_actions[idx]
         better = cand_r > carry.best_reward
@@ -172,7 +176,7 @@ def make_update_step(env_cfg: chipenv.EnvConfig, cfg: PPOConfig,
         # flatten (T, E) -> (N,)
         data = (
             traj.obs.reshape(-1, traj.obs.shape[-1]),
-            traj.actions.reshape(-1, ps.N_PARAMS),
+            traj.actions.reshape(-1, n_act),
             traj.log_probs.reshape(-1),
             advantages.reshape(-1),
             returns.reshape(-1),
@@ -191,7 +195,7 @@ def make_update_step(env_cfg: chipenv.EnvConfig, cfg: PPOConfig,
             def mb_fn(mb_carry, batch):
                 params, opt_state = mb_carry
                 (loss, aux), grads = jax.value_and_grad(
-                    ppo_loss, has_aux=True)(params, batch, cfg)
+                    ppo_loss, has_aux=True)(params, batch, cfg, heads)
                 if grad_reduce is not None:
                     grads = grad_reduce(grads)
                 updates, opt_state = optimizer.update(grads, opt_state, params)
@@ -233,7 +237,8 @@ def train(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
     """
     scenario = env_cfg.scenario() if scenario is None else scenario
     k_init, k_env, k_train = jax.random.split(key, 3)
-    params = nets.init_actor_critic(k_init, obs_dim=chipenv.OBS_DIM)
+    params = nets.init_actor_critic(k_init, obs_dim=chipenv.obs_dim(env_cfg),
+                                    head_sizes=chipenv.head_sizes(env_cfg))
     optimizer = Adam(learning_rate=cfg.learning_rate,
                      max_grad_norm=cfg.max_grad_norm)
     opt_state = optimizer.init(params)
@@ -248,15 +253,16 @@ def train(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
     carry = TrainCarry(
         params=params, opt_state=opt_state, env_states=env_states, obs=obs,
         key=k_train, best_reward=jnp.float32(-jnp.inf),
-        best_action=jnp.zeros((ps.N_PARAMS,), jnp.int32))
+        best_action=jnp.zeros((chipenv.action_dim(env_cfg),), jnp.int32))
 
     carry, log = jax.lax.scan(
         jax.jit(lambda c, x: update(c, x, scenario)),
         carry, None, length=n_updates)
-    best_design = ps.from_flat(carry.best_action)
+    best_design = ps.from_flat(carry.best_action[: ps.N_PARAMS])
     return TrainResult(params=carry.params, log=log,
                        best_design=best_design,
-                       best_reward=carry.best_reward)
+                       best_reward=carry.best_reward,
+                       best_action=carry.best_action)
 
 
 def train_population(key, n_agents: int,
@@ -300,4 +306,5 @@ def greedy_design(params: nets.ACParams, env_cfg=chipenv.EnvConfig(),
     key = jax.random.PRNGKey(0) if key is None else key
     _, obs = chipenv.reset(key, env_cfg, scenario)
     logits, _ = nets.policy_value(params, obs)
-    return ps.from_flat(nets.greedy_action(logits))
+    action = nets.greedy_action(logits, chipenv.head_sizes(env_cfg))
+    return ps.from_flat(action[..., : ps.N_PARAMS])

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from repro.core import costmodel as cm
 from repro.core import env as chipenv
 from repro.core import params as ps
+from repro.core import placement as pm
 
 _HEADS = jnp.asarray(ps.HEAD_SIZES, jnp.float32)
 
@@ -124,3 +125,114 @@ def run_scenario_population(key, scenarios: cm.Scenario, n_chains: int,
     return jax.jit(jax.vmap(
         lambda k, s: run_population(k, n_chains, env_cfg, cfg,
                                     record_every, s)))(keys, scenarios)
+
+
+# ---------------------------------------------------------------------------
+# Placement refinement (swap / relocate / HBM re-anchor annealing)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PlacementSAConfig:
+    """SA over the placement of a *fixed* design (core/placement.py)."""
+
+    n_iters: int = 3000
+    temperature: float = 20.0
+    p_hbm: float = 0.5            # fraction of moves that re-anchor a stack
+
+
+class PlacementResult(NamedTuple):
+    best_placement: pm.Placement
+    best_reward: jnp.ndarray
+    canonical_reward: jnp.ndarray    # reward under the Fig.-4 floorplan
+
+
+def refine_placement(key, design: ps.DesignPoint,
+                     env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
+                     cfg: PlacementSAConfig = PlacementSAConfig(),
+                     scenario: cm.Scenario = None,
+                     init_placement: pm.Placement = None) -> PlacementResult:
+    """Anneal the placement of one design under one scenario.
+
+    Moves: relocate one active chiplet slot to a random cell of the m x n
+    footprint box (swapping with any occupant), or re-anchor one *placed*
+    HBM stack at a random continuous coordinate in [-1, m] x [-1, n].
+    The incumbent starts at ``init_placement`` when given (e.g. the
+    placement that produced an RL winner's reward), else at the canonical
+    floorplan; the best-so-far covers both, so the result is never worse
+    than either. jit/vmap-safe: vmap over a scenario axis (and a paired
+    design axis) to refine a whole suite in one program.
+    """
+    scenario = env_cfg.scenario() if scenario is None else scenario
+    v = ps.decode(design)
+    n_pos = cm.footprint_positions(v)
+    m, n = cm.mesh_dims(n_pos)
+    base = pm.canonical(m, n, v.hbm_mask, v.arch_type)
+
+    def objective(plc: pm.Placement) -> jnp.ndarray:
+        return cm.reward_only(design, scenario.workload, scenario.weights,
+                              env_cfg.hw, plc)
+
+    r0 = objective(base)
+    if init_placement is None:
+        start, r_start = base, r0
+    else:
+        r_init = objective(init_placement)
+        better = r_init > r0
+        start = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(better, a, b), init_placement, base)
+        r_start = jnp.maximum(r_init, r0)
+
+    def step(state, it):
+        plc, r_curr, best, r_best, key = state
+        key, k_kind, k_slot, k_cell, k_bit, k_anchor, k_acc = (
+            jax.random.split(key, 7))
+
+        # chiplet relocate / swap proposal
+        slot = jax.random.randint(k_slot, (), 0, pm.MAX_SLOTS)
+        cell = pm.random_cell_in_box(k_cell, m, n)
+        cand_c = pm.relocate_chiplet(plc, slot, cell, n_pos)
+        # HBM re-anchor proposal (uniform over the placed stacks)
+        bit = pm.select_placed_bit(k_bit, v.hbm_mask)
+        anchor = pm.random_hbm_anchor(k_anchor, m, n)
+        cand_h = plc._replace(hbm_ij=plc.hbm_ij.at[bit].set(anchor))
+
+        use_hbm = jax.random.uniform(k_kind) < cfg.p_hbm
+        cand = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(use_hbm, a, b), cand_h, cand_c)
+        r_cand = objective(cand)
+
+        better_best = r_cand > r_best
+        best = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(better_best, a, b), cand, best)
+        r_best = jnp.where(better_best, r_cand, r_best)
+
+        t = cfg.temperature / (it + 1.0)
+        accept = (r_cand > r_curr) | (jax.random.uniform(k_acc) < t)
+        plc = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(accept, a, b), cand, plc)
+        r_curr = jnp.where(accept, r_cand, r_curr)
+        return (plc, r_curr, best, r_best, key), None
+
+    state = (start, r_start, start, r_start, key)
+    iters = jnp.arange(cfg.n_iters, dtype=jnp.float32)
+    (plc, _, best, r_best, _), _ = jax.lax.scan(step, state, iters)
+    return PlacementResult(best_placement=best, best_reward=r_best,
+                           canonical_reward=r0)
+
+
+def refine_placement_scenarios(key, designs: ps.DesignPoint,
+                               scenarios: cm.Scenario,
+                               env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
+                               cfg: PlacementSAConfig = PlacementSAConfig()
+                               ) -> PlacementResult:
+    """Placement-refine S suite winners as ONE vmapped XLA program.
+
+    ``designs`` carries a leading axis S paired with ``scenarios`` (the
+    per-scenario winners); swap/relocate/re-anchor chains run batched over
+    the scenario axis — no host loop per winner.
+    """
+    n_scen = jnp.shape(scenarios.weights.alpha)[0]
+    keys = jax.random.split(key, int(n_scen))
+    return jax.jit(jax.vmap(
+        lambda k, d, s: refine_placement(k, d, env_cfg, cfg, s)))(
+            keys, designs, scenarios)

@@ -1,0 +1,306 @@
+"""Placement subsystem tests (core/placement.py + the threaded layers).
+
+Covers the ISSUE-2 acceptance criteria:
+  - brute-force numpy oracle for the pairwise hop model on small m x n
+    grids, and exact agreement of the canonical placement with the legacy
+    ``hbm_worst_hops`` / ``m + n - 2`` scan,
+  - canonical-placement regression: evaluate() matches the recorded
+    pre-refactor latency/reward values to 1e-5 on a random design batch,
+  - mutation semantics (relocate/swap, HBM re-anchor),
+  - placement SA refinement never worse than canonical (single + batched
+    over scenarios),
+  - the placement-extended env/PPO action space.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core import env as chipenv
+from repro.core import params as ps
+from repro.core import placement as pm
+from repro.core import workload as wl
+from repro.rl import ppo
+from repro.sa import annealing as sa
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def _canonical_for(dp: ps.DesignPoint):
+    v = ps.decode(dp)
+    n_pos = cm.footprint_positions(v)
+    m, n = cm.mesh_dims(n_pos)
+    return pm.canonical(m, n, v.hbm_mask, v.arch_type), n_pos, m, n, v
+
+
+class TestBruteForceOracle:
+    """Enumerate small grids in numpy; the vectorized model must match."""
+
+    @staticmethod
+    def _numpy_nop(cells, n_pos, hbm_ij, mask, arch):
+        """Straight-line python/numpy re-derivation of nop_stats."""
+        occ = [(c // pm.GRID, c % pm.GRID) for c in cells[:n_pos]]
+        i_min = min(i for i, _ in occ)
+        i_max = max(i for i, _ in occ)
+        j_min = min(j for _, j in occ)
+        j_max = max(j for _, j in occ)
+
+        def dmin(i, j):
+            best = 1e9
+            for b in range(6):
+                if mask >> b & 1:
+                    d = abs(i - hbm_ij[b][0]) + abs(j - hbm_ij[b][1])
+                    floor = 0.0 if (b == 5 and arch >= 1) else 1.0
+                    best = min(best, max(d, floor))
+            return best
+
+        box = [(i, j) for i in range(i_min, i_max + 1)
+               for j in range(j_min, j_max + 1)]
+        worst_hbm = max(dmin(i, j) for i, j in box)
+        mean_hbm = sum(dmin(i, j) for i, j in occ) / n_pos
+        ci = sum(i for i, _ in occ) / n_pos
+        cj = sum(j for _, j in occ) / n_pos
+        d_cent = [abs(i - ci) + abs(j - cj) for i, j in occ]
+        mean_ai = sum(d_cent) / n_pos
+        worst_ai = (i_max - i_min) + (j_max - j_min)
+        bm, bn = i_max - i_min + 1, j_max - j_min + 1
+        edges = max(bm * (bn - 1) + bn * (bm - 1), 1)
+        cont = (4 * sum(dmin(i, j) for i, j in occ) + sum(d_cent)) / edges
+        return worst_ai, mean_ai, worst_hbm, mean_hbm, cont
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_random_small_grids(self, seed):
+        rng = np.random.RandomState(seed)
+        for _ in range(20):
+            n_pos = rng.randint(1, 13)
+            cells = rng.choice(36, size=n_pos, replace=False)      # 6x6 area
+            cells = np.concatenate([
+                (cells // 6) * pm.GRID + cells % 6,
+                rng.randint(0, pm.N_CELLS, pm.MAX_SLOTS - n_pos)])
+            mask = rng.randint(1, 64)
+            arch = rng.randint(0, 3)
+            hbm_ij = rng.uniform(-1, 7, (6, 2)).round(1)
+            plc = pm.Placement(chiplet_cell=jnp.asarray(cells, jnp.int32),
+                               hbm_ij=jnp.asarray(hbm_ij, jnp.float32))
+            stats = pm.nop_stats(plc, jnp.float32(n_pos), jnp.int32(mask),
+                                 jnp.float32(arch))
+            expect = self._numpy_nop(cells, n_pos, hbm_ij, mask, arch)
+            got = (float(stats.hops_ai_worst), float(stats.hops_ai_mean),
+                   float(stats.hops_hbm_worst), float(stats.hops_hbm_mean),
+                   float(stats.link_contention))
+            np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-5)
+
+    def test_canonical_reproduces_legacy_worst_hops(self):
+        """For EVERY footprint count and HBM mask, the canonical placement's
+        pairwise reduction equals the legacy Fig.-4 grid scan."""
+        for arch in (0, 2):
+            p = jnp.arange(1, 129, dtype=jnp.int32)
+            m, n = cm.mesh_dims(p)
+            for mask in range(1, 64, 5):
+                mask_a = jnp.full_like(p, mask)
+                arch_a = jnp.full(p.shape, float(arch), jnp.float32)
+                plc = pm.canonical(m, n, mask_a, arch_a)
+                stats = pm.nop_stats(plc, p.astype(jnp.float32), mask_a,
+                                     arch_a)
+                legacy = cm.hbm_worst_hops(m, n, mask_a, arch_a)
+                np.testing.assert_allclose(np.asarray(stats.hops_hbm_worst),
+                                           np.asarray(legacy), rtol=0,
+                                           atol=0, err_msg=f"mask={mask}")
+                np.testing.assert_allclose(np.asarray(stats.hops_ai_worst),
+                                           np.asarray(m + n - 2.0),
+                                           rtol=0, atol=0)
+
+
+class TestCanonicalRegression:
+    """evaluate() under canonical placement == pre-refactor values."""
+
+    def test_matches_recorded_prerefactor_metrics(self):
+        with open(os.path.join(_HERE,
+                               "data_placement_regression.json")) as f:
+            ref = json.load(f)
+        dp = ps.random_design(jax.random.PRNGKey(ref["seed"]),
+                              (ref["batch"],))
+        m = cm.evaluate(dp)
+        for field in ("reward", "lat_hbm_ai_ns", "lat_ai_ai_ns",
+                      "hops_hbm_ai", "hops_ai_ai"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(m, field), np.float64),
+                np.asarray(ref[field]), rtol=1e-5, atol=1e-5,
+                err_msg=field)
+
+    def test_congestion_and_hop_ratios_are_one_at_canonical(self):
+        dp = ps.random_design(jax.random.PRNGKey(7), (128,))
+        m = cm.evaluate(dp)
+        np.testing.assert_array_equal(np.asarray(m.nop_congestion), 1.0)
+
+    def test_explicit_canonical_equals_default(self):
+        dp = ps.random_design(jax.random.PRNGKey(11), (32,))
+        plc, _, _, _, _ = _canonical_for(dp)
+        a = cm.evaluate(dp)
+        b = cm.evaluate(dp, placement=plc)
+        np.testing.assert_allclose(np.asarray(a.reward),
+                                   np.asarray(b.reward), rtol=1e-6)
+
+
+class TestMutations:
+    def test_relocate_swaps_occupant(self):
+        dp = ps.random_design(jax.random.PRNGKey(0))
+        plc, n_pos, _, _, _ = _canonical_for(dp)
+        cells0 = np.asarray(plc.chiplet_cell)
+        # move slot 0 onto slot 1's cell -> they must swap
+        out = pm.relocate_chiplet(plc, 0, int(cells0[1]), n_pos)
+        cells1 = np.asarray(out.chiplet_cell)
+        assert cells1[0] == cells0[1]
+        assert cells1[1] == cells0[0]
+        # no duplicate cells among active slots
+        act = int(n_pos)
+        assert len(set(cells1[:act])) == act
+
+    def test_relocate_to_free_cell(self):
+        dp = ps.random_design(jax.random.PRNGKey(1))
+        plc, n_pos, _, _, _ = _canonical_for(dp)
+        free = 15 * pm.GRID + 15          # corner cell, never canonical
+        out = pm.relocate_chiplet(plc, 0, free, n_pos)
+        cells = np.asarray(out.chiplet_cell)
+        assert cells[0] == free
+        act = int(n_pos)
+        assert len(set(cells[:act])) == act
+
+    def test_move_hbm(self):
+        dp = ps.random_design(jax.random.PRNGKey(2))
+        plc, _, _, _, _ = _canonical_for(dp)
+        out = pm.move_hbm(plc, 3, 2 * pm.GRID + 5)
+        np.testing.assert_allclose(np.asarray(out.hbm_ij)[3], [2.0, 5.0])
+
+    def test_flat_roundtrip(self):
+        dp = ps.random_design(jax.random.PRNGKey(3), (4,))
+        plc, _, _, _, _ = _canonical_for(dp)
+        back = pm.from_flat(pm.to_flat(plc))
+        np.testing.assert_array_equal(np.asarray(back.chiplet_cell),
+                                      np.asarray(plc.chiplet_cell))
+        np.testing.assert_allclose(np.asarray(back.hbm_ij),
+                                   np.asarray(plc.hbm_ij))
+
+
+class TestPlacementSA:
+    def test_never_worse_than_canonical(self):
+        dp = ps.random_design(jax.random.PRNGKey(4))
+        res = sa.refine_placement(jax.random.PRNGKey(5), dp,
+                                  chipenv.EnvConfig(),
+                                  sa.PlacementSAConfig(n_iters=300))
+        assert float(res.best_reward) >= float(res.canonical_reward)
+
+    def test_scenario_batched(self):
+        scen = cm.stack_scenarios([
+            cm.Scenario(workload=wl.MLPERF[n]) for n in ("resnet50", "bert")])
+        dps = ps.random_design(jax.random.PRNGKey(6), (2,))
+        res = sa.refine_placement_scenarios(
+            jax.random.PRNGKey(7), dps, scen, chipenv.EnvConfig(),
+            sa.PlacementSAConfig(n_iters=200))
+        assert res.best_reward.shape == (2,)
+        assert (np.asarray(res.best_reward)
+                >= np.asarray(res.canonical_reward)).all()
+
+    def test_congestion_channel_moves_reward(self):
+        """A deliberately bad placement must score below canonical (the
+        congestion + per-hop-energy channels are live, not cosmetic)."""
+        dp = ps.random_design(jax.random.PRNGKey(8), (64,))
+        plc, n_pos, m, n, v = _canonical_for(dp)
+        # sprawl: push slot 0 of every design to the far grid corner
+        cells = jnp.asarray(plc.chiplet_cell)
+        cells = cells.at[:, 0].set(pm.N_CELLS - 1)
+        bad = plc._replace(chiplet_cell=cells)
+        a = cm.evaluate(dp)
+        b = cm.evaluate(dp, placement=bad)
+        # multi-chiplet designs spread traffic over a 16x16 bounding box:
+        # strictly more hops -> reward strictly drops for most designs
+        multi = np.asarray(n_pos) > 2
+        assert (np.asarray(b.reward)[multi]
+                <= np.asarray(a.reward)[multi] + 1e-5).all()
+        assert (np.asarray(b.reward)[multi]
+                < np.asarray(a.reward)[multi] - 1e-4).any()
+
+
+class TestExtendedEnv:
+    def test_ext_action_space_shapes(self):
+        cfg = chipenv.EnvConfig(placement_actions=True)
+        assert chipenv.action_dim(cfg) == ps.N_EXT_PARAMS
+        assert chipenv.obs_dim(cfg) == chipenv.OBS_DIM_PLACEMENT
+        a = chipenv.ext_action_space.sample(jax.random.PRNGKey(0))
+        assert a.shape == (ps.N_EXT_PARAMS,)
+        assert chipenv.ext_action_space.contains(np.asarray(a))
+        # the subspace of the 4 mutation heads composes with the design
+        # space back to the extended space
+        assert (chipenv.placement_action_space.nvec
+                == ps.PLACEMENT_HEAD_SIZES)
+        pa = chipenv.placement_action_space.sample(jax.random.PRNGKey(1))
+        assert chipenv.ext_action_space.contains(
+            np.concatenate([np.asarray(chipenv.action_space.sample(
+                jax.random.PRNGKey(2))), np.asarray(pa)]))
+
+    def test_step_with_placement_action(self):
+        cfg = chipenv.EnvConfig(placement_actions=True)
+        state, obs = chipenv.reset(jax.random.PRNGKey(0), cfg)
+        assert obs.shape == (chipenv.OBS_DIM_PLACEMENT,)
+        a = chipenv.ext_action_space.sample(jax.random.PRNGKey(1))
+        _, obs2, r, done, _ = chipenv.step(state, a, cfg)
+        assert obs2.shape == (chipenv.OBS_DIM_PLACEMENT,)
+        assert np.isfinite(float(r))
+
+    def test_noop_mutation_matches_design_only(self):
+        """A placement action that relocates a slot onto its own cell and
+        re-anchors an unplaced stack is a reward no-op."""
+        cfg = chipenv.EnvConfig(placement_actions=True)
+        key = jax.random.PRNGKey(2)
+        design_a = chipenv.action_space.sample(key)
+        dp = ps.from_flat(design_a)
+        plc, n_pos, _, _, v = _canonical_for(dp)
+        mask = int(np.asarray(v.hbm_mask))
+        unplaced = next(b for b in range(6) if not mask >> b & 1) \
+            if mask != 63 else None
+        if unplaced is None:
+            pytest.skip("all stacks placed for this sample")
+        noop = jnp.asarray(
+            [0, int(np.asarray(plc.chiplet_cell)[0]), unplaced, 0], jnp.int32)
+        state, _ = chipenv.reset(jax.random.PRNGKey(3), cfg)
+        _, _, r_ext, _, _ = chipenv.step(
+            state, jnp.concatenate([design_a, noop]), cfg)
+        expect = cm.reward_only(dp)
+        np.testing.assert_allclose(float(r_ext), float(expect), rtol=1e-6)
+
+
+class TestExtendedPPO:
+    def test_train_with_placement_heads(self):
+        cfg_env = chipenv.EnvConfig(placement_actions=True)
+        cfg = ppo.PPOConfig(n_steps=32, n_envs=2, batch_size=32)
+        res = ppo.train(jax.random.PRNGKey(0), cfg_env, cfg,
+                        total_timesteps=32 * 2 * 2)
+        assert res.best_action.shape == (ps.N_EXT_PARAMS,)
+        assert np.isfinite(float(res.best_reward))
+        flat = np.asarray(ps.to_flat(res.best_design))
+        assert chipenv.action_space.contains(flat)
+
+    def test_batched_placement_action_rejected(self):
+        cfg = chipenv.EnvConfig(placement_actions=True)
+        state, _ = chipenv.reset(jax.random.PRNGKey(0), cfg)
+        batch = chipenv.ext_action_space.sample(jax.random.PRNGKey(1), (4,))
+        with pytest.raises(ValueError, match="vmap"):
+            chipenv.step(state, batch, cfg)
+
+    def test_portfolio_placement_reward_consistent(self):
+        """optimize() with placement actions must return placement_reward
+        >= best_reward (the RL winner's placement is not discarded)."""
+        from repro.optimizer import portfolio
+        env_cfg = chipenv.EnvConfig(placement_actions=True)
+        cfg = portfolio.PortfolioConfig(
+            n_sa=1, n_rl=2, sa=sa.SAConfig(n_iters=200),
+            rl=ppo.PPOConfig(n_steps=32, n_envs=2, batch_size=32),
+            rl_timesteps=32 * 2 * 2, refine=False,
+            placement_sa=sa.PlacementSAConfig(n_iters=100))
+        res = portfolio.optimize(jax.random.PRNGKey(1), env_cfg, cfg)
+        assert res.placement_reward >= res.best_reward - 1e-4

@@ -181,10 +181,16 @@ class TestSuite:
         res = suite.run_suite(jax.random.PRNGKey(0), cfg)
         assert len(res.outcomes) == 4
         assert 1 <= len(res.pareto) <= 4
+        assert 1 <= len(res.pareto_normalized) <= 4
         for o in res.outcomes:
             assert np.isfinite(o.best_reward)
             assert chipenv.action_space.contains(o.best_flat)
+            # ISSUE-2 acceptance: placement-refined winners never score
+            # below the canonical floorplan on any scenario
+            assert o.best_reward >= o.reward_canonical - 1e-5
+            assert o.placement_cells is not None
         report = suite.format_report(res)
         assert "Pareto" in report
         js = suite.to_json(res)
         assert len(js["scenarios"]) == 4
+        assert js["scenarios"][0]["placement_cells"] is not None
