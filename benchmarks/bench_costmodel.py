@@ -1,12 +1,26 @@
-"""Cost-model evaluation throughput: the DSE hot loop, before/after the
-pairwise-traffic placement refactor.
+"""Cost-model evaluation throughput: the DSE hot loop across NoP tiers.
 
 ``python benchmarks/bench_costmodel.py`` measures jitted
-``costmodel.evaluate`` throughput on a 64k design batch for (a) the
-default canonical-placement path and (b) an explicit-placement batch
-(which additionally evaluates the canonical baseline for the congestion /
-per-hop-energy normalization), and records the result next to the
-pre-refactor reference point in ``benchmarks/BENCH_costmodel.json``.
+``costmodel.evaluate`` throughput on a 64k design batch for
+
+  - the **fast tier** (``nop_fidelity='auto'``, canonical floorplan via
+    the closed-form ``placement.nop_stats_fast`` — the default hot path),
+  - the **full tier** on the same canonical floorplan
+    (``nop_fidelity='full'``, pairwise-traffic reduction),
+  - the full tier with an **explicit placement** batch (which adds the
+    fast-tier canonical baseline pass for the congestion normalization),
+
+and records the results next to the pre-refactor (PR-1) and PR-2
+reference points in ``benchmarks/BENCH_costmodel.json``.
+
+``--smoke --assert-min-ratio 1.8`` is the CI throughput guard: the run
+fails unless the fast tier delivers at least that multiple of the full
+tier's designs/s (measured in the same invocation, same batch — the
+committed JSON records the full-batch numbers the ratio protects).
+``--placement-gain`` additionally sweeps the placement-SA reward gain
+under the default vs the placement-sensitive HW preset
+(``optimizer/scenario.HW_PRESETS``), exercising the congestion /
+per-hop-energy channels where they bite.
 """
 
 from __future__ import annotations
@@ -14,19 +28,23 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import costmodel as cm
 from repro.core import params as ps
 from repro.core import placement as pm
 
-# Measured on this 2-core CPU container at the PR-1 tree (worst-hop model,
-# no placement threading), same batch/protocol as below.
+# Measured on this 2-core CPU container, same batch/protocol as below.
 BEFORE = {"designs_per_s": 113208.0, "batch": 65536,
-          "model": "worst-hop scalar (pre-placement refactor)"}
+          "model": "worst-hop scalar (pre-placement refactor, PR 1)"}
+PR2 = {"designs_per_s": 51260.2, "batch": 65536,
+       "model": "pairwise-traffic NoP, canonical placement (PR 2, "
+                "single-tier)"}
 
 
 def _throughput(fn, arg, iters=5):
@@ -37,46 +55,103 @@ def _throughput(fn, arg, iters=5):
     return (time.time() - t0) / iters
 
 
+def _placement_gain_sweep(n_designs: int, n_iters: int) -> dict:
+    """Mean/max placement-SA reward gain vs canonical, per HW preset."""
+    from repro.core import env as chipenv
+    from repro.optimizer import scenario as suite
+    from repro.sa import annealing as sa
+
+    dps = ps.random_design(jax.random.PRNGKey(11), (n_designs,))
+    out = {}
+    for name, hw_cfg in suite.HW_PRESETS.items():
+        env_cfg = chipenv.EnvConfig(hw=hw_cfg)
+        cfg = sa.PlacementSAConfig(n_iters=n_iters)
+        keys = jax.random.split(jax.random.PRNGKey(12), n_designs)
+        res = jax.jit(jax.vmap(
+            lambda k, d: sa.refine_placement(k, d, env_cfg, cfg)))(keys, dps)
+        gain = np.asarray(res.best_reward) - np.asarray(res.canonical_reward)
+        out[name] = {"mean_gain": round(float(gain.mean()), 4),
+                     "max_gain": round(float(gain.max()), 4),
+                     "n_designs": n_designs, "sa_iters": n_iters}
+        print(f"[bench] placement gain ({name}): mean {gain.mean():+.4f}, "
+              f"max {gain.max():+.4f} over {n_designs} designs")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=65536)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: 16k batch, 3 timing iters")
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--assert-min-ratio", type=float, default=None,
+                    help="fail unless fast-tier designs/s >= RATIO x "
+                         "full-tier designs/s (CI throughput guard)")
+    ap.add_argument("--placement-gain", action="store_true",
+                    help="also sweep placement-SA gain per HW preset")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.abspath(__file__)), "BENCH_costmodel.json"))
     args = ap.parse_args()
 
-    n = args.batch
+    n = args.batch if not args.smoke else min(args.batch, 16384)
+    iters = args.iters if not args.smoke else 3
     dp = ps.random_design(jax.random.PRNGKey(0), (n,))
 
-    canon_fn = jax.jit(lambda d: cm.evaluate(d).reward)
-    dt_canon = _throughput(canon_fn, dp)
+    fast_fn = jax.jit(lambda d: cm.evaluate(d).reward)
+    dt_fast = _throughput(fast_fn, dp, iters)
+
+    full_fn = jax.jit(lambda d: cm.evaluate(d, nop_fidelity="full").reward)
+    dt_full = _throughput(full_fn, dp, iters)
 
     v = ps.decode(dp)
     m, mesh_n = cm.mesh_dims(cm.footprint_positions(v))
     plc = pm.canonical(m, mesh_n, v.hbm_mask, v.arch_type)
     plc_fn = jax.jit(lambda a: cm.evaluate(a[0], placement=a[1]).reward)
-    dt_plc = _throughput(plc_fn, (dp, plc))
+    dt_plc = _throughput(plc_fn, (dp, plc), iters)
 
     record = {
         "batch": n,
         "before": BEFORE,
-        "after_canonical": {
-            "designs_per_s": round(n / dt_canon, 1),
-            "wall_s": round(dt_canon, 4),
-            "model": "pairwise-traffic NoP, canonical placement",
+        "pr2_single_tier": PR2,
+        "fast_tier": {
+            "designs_per_s": round(n / dt_fast, 1),
+            "wall_s": round(dt_fast, 4),
+            "model": "closed-form canonical NoP (nop_fidelity=auto/fast)",
         },
-        "after_explicit_placement": {
+        "full_tier_canonical": {
+            "designs_per_s": round(n / dt_full, 1),
+            "wall_s": round(dt_full, 4),
+            "model": "pairwise-traffic NoP, canonical placement "
+                     "(nop_fidelity=full)",
+        },
+        "full_tier_explicit_placement": {
             "designs_per_s": round(n / dt_plc, 1),
             "wall_s": round(dt_plc, 4),
-            "model": "pairwise-traffic NoP + canonical baseline pass",
+            "model": "pairwise-traffic NoP + fast-tier canonical baseline",
         },
     }
-    print(f"[bench] canonical: {n/dt_canon:,.0f} designs/s "
-          f"(before: {BEFORE['designs_per_s']:,.0f})")
-    print(f"[bench] explicit placement: {n/dt_plc:,.0f} designs/s")
+    ratio = dt_full / dt_fast
+    print(f"[bench] fast tier:      {n/dt_fast:,.0f} designs/s "
+          f"(before refactor: {BEFORE['designs_per_s']:,.0f}, "
+          f"PR-2 single tier: {PR2['designs_per_s']:,.0f})")
+    print(f"[bench] full tier:      {n/dt_full:,.0f} designs/s (canonical)")
+    print(f"[bench] full+placement: {n/dt_plc:,.0f} designs/s")
+    print(f"[bench] fast/full ratio: {ratio:.2f}x")
+
+    if args.placement_gain:
+        record["placement_gain"] = _placement_gain_sweep(
+            n_designs=8 if args.smoke else 16,
+            n_iters=200 if args.smoke else 1000)
+
     with open(args.out, "w") as f:
         json.dump(record, f, indent=2)
         f.write("\n")
     print(f"[bench] wrote {args.out}")
+
+    if args.assert_min_ratio is not None and ratio < args.assert_min_ratio:
+        print(f"[bench] FAIL: fast/full throughput ratio {ratio:.2f}x "
+              f"< required {args.assert_min_ratio:.2f}x", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -10,19 +10,27 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "=== tier-1: pytest (kernel parity runs as its own stage below) ==="
-python -m pytest -q --ignore=tests/test_kernels.py
+echo "=== tier-1 fast lane: pytest -m 'not slow' ==="
+# the ~2-min-each multi-device subprocess cases (tests/test_distributed.py)
+# are marked slow and run in their own stage below, keeping this loop fast
+python -m pytest -q -m "not slow" --ignore=tests/test_kernels.py
 
 echo "=== kernel parity: Pallas interpret mode vs jnp oracles ==="
-# CPU-only runners still verify the TPU kernels (incl. the extended
-# chiplet_eval placement metrics) — interpret=True throughout.
+# CPU-only runners still verify the TPU kernels (incl. the fast-tier and
+# full-tier chiplet_eval NoP paths) — interpret=True throughout.
 python -m pytest -q tests/test_kernels.py
+
+echo "=== slow lane: multi-device subprocess tests ==="
+python -m pytest -q -m slow
 
 echo "=== smoke: portfolio engine benchmark ==="
 python benchmarks/bench_optimizer.py --smoke
 
-echo "=== smoke: cost-model eval throughput ==="
-# CI-scale smoke run; the committed BENCH_costmodel.json before/after
-# record is produced by the default full-batch invocation.
-python benchmarks/bench_costmodel.py --batch 16384 \
+echo "=== smoke: cost-model eval throughput (fast-tier guard) ==="
+# CI-scale smoke run with the two-tier throughput guard: fails if the
+# closed-form fast tier drops below 1.8x the full pairwise tier's
+# designs/s (the committed BENCH_costmodel.json records the full-batch
+# fast/full numbers this ratio protects). The committed record is
+# produced by the default full-batch invocation.
+python benchmarks/bench_costmodel.py --smoke --assert-min-ratio 1.8 \
     --out "${TMPDIR:-/tmp}/bench_costmodel_ci.json"

@@ -285,11 +285,15 @@ def footprint_positions(v: ps.DesignValues) -> jnp.ndarray:
     return jnp.where(is_lol > 0, jnp.ceil(v.n_chiplets / 2.0), v.n_chiplets)
 
 
+NOP_FIDELITIES = ("auto", "fast", "full")
+
+
 def evaluate(dp: ps.DesignPoint,
              workload: Workload = GENERIC_WORKLOAD,
              weights: RewardWeights = RewardWeights(),
              cfg: hw.HWConfig = hw.DEFAULT_HW,
-             placement: pm.Placement = None) -> Metrics:
+             placement: pm.Placement = None,
+             nop_fidelity: str = "auto") -> Metrics:
     """Evaluate a (batch of) design point(s) -> full PPAC metrics.
 
     ``placement`` optionally places every chiplet slot / HBM stack on the
@@ -299,7 +303,28 @@ def evaluate(dp: ps.DesignPoint,
     exactly. The interposer geometry (die area, package cost) stays keyed
     to the design's m x n footprint; placement steers the NoP hop/traffic
     reduction.
+
+    ``nop_fidelity`` statically selects the NoP evaluation tier:
+
+      - ``'auto'`` (default): the closed-form **fast tier**
+        (``placement.nop_stats_fast`` — one 256-cell scan, no per-slot
+        pass, pre-PR-2 throughput) when ``placement`` is None, the full
+        pairwise tier otherwise.
+      - ``'fast'``: force the fast tier; rejects an explicit placement.
+      - ``'full'``: force the full pairwise tier even for the canonical
+        floorplan (materializes the canonical ``Placement``) — the two
+        tiers agree on every NoP figure (tests/test_placement.py).
+
+    With an explicit placement the canonical *baseline* pass (the
+    congestion / per-hop-energy normalizer) always uses the fast tier.
     """
+    if nop_fidelity not in NOP_FIDELITIES:
+        raise ValueError(f"nop_fidelity must be one of {NOP_FIDELITIES}, "
+                         f"got {nop_fidelity!r}")
+    if nop_fidelity == "fast" and placement is not None:
+        raise ValueError(
+            "nop_fidelity='fast' evaluates the canonical floorplan only; "
+            "drop the explicit placement or use 'auto'/'full'")
     v = ps.decode(dp)
     arch = v.arch_type
     is_lol = (arch == ps.ARCH_LOGIC_ON_LOGIC).astype(jnp.float32)   # pairs
@@ -347,7 +372,12 @@ def evaluate(dp: ps.DesignPoint,
     # contention is normalized per link of the canonical m x n fabric (the
     # NoP the design pays for), so sprawling a placement cannot mint links
     mesh_edges = m * (n - 1.0) + n * (m - 1.0)
-    if placement is None:
+    if placement is None and nop_fidelity != "full":
+        # fast tier: closed-form canonical stats, no Placement materialized
+        nop = pm.nop_stats_fast(m, n, n_positions, v.hbm_mask, arch,
+                                mesh_edges)
+        nop_canon = nop             # same object -> congestion exactly 1
+    elif placement is None:
         placement = pm.canonical(m, n, v.hbm_mask, arch)
         nop = pm.nop_stats(placement, n_positions, v.hbm_mask, arch,
                            mesh_edges)
@@ -355,9 +385,8 @@ def evaluate(dp: ps.DesignPoint,
     else:
         nop = pm.nop_stats(placement, n_positions, v.hbm_mask, arch,
                            mesh_edges)
-        canon = pm.canonical(m, n, v.hbm_mask, arch)
-        nop_canon = pm.nop_stats(canon, n_positions, v.hbm_mask, arch,
-                                 mesh_edges)
+        nop_canon = pm.nop_stats_fast(m, n, n_positions, v.hbm_mask, arch,
+                                      mesh_edges)
     h_ai = nop.hops_ai_worst
     h_hbm = nop.hops_hbm_worst
     # delivered 2.5D link bandwidth scales with channel load relative to
@@ -505,22 +534,27 @@ def reward_only(dp: ps.DesignPoint,
                 workload: Workload = GENERIC_WORKLOAD,
                 weights: RewardWeights = RewardWeights(),
                 cfg: hw.HWConfig = hw.DEFAULT_HW,
-                placement: pm.Placement = None) -> jnp.ndarray:
+                placement: pm.Placement = None,
+                nop_fidelity: str = "auto") -> jnp.ndarray:
     """Cheap scalar objective for the optimizers."""
-    return evaluate(dp, workload, weights, cfg, placement).reward
+    return evaluate(dp, workload, weights, cfg, placement,
+                    nop_fidelity).reward
 
 
 def evaluate_scenario(dp: ps.DesignPoint, scenario: Scenario = Scenario(),
                       cfg: hw.HWConfig = hw.DEFAULT_HW,
-                      placement: pm.Placement = None) -> Metrics:
+                      placement: pm.Placement = None,
+                      nop_fidelity: str = "auto") -> Metrics:
     """`evaluate` keyed by a Scenario pytree (vmap over it for batches)."""
-    return evaluate(dp, scenario.workload, scenario.weights, cfg, placement)
+    return evaluate(dp, scenario.workload, scenario.weights, cfg, placement,
+                    nop_fidelity)
 
 
 def evaluate_scenarios(dp: ps.DesignPoint, scenarios: Scenario,
                        cfg: hw.HWConfig = hw.DEFAULT_HW,
                        paired: bool = None,
-                       placements: pm.Placement = None) -> Metrics:
+                       placements: pm.Placement = None,
+                       nop_fidelity: str = "auto") -> Metrics:
     """Evaluate design point(s) under a *batch* of scenarios.
 
     ``scenarios`` carries a leading scenario axis S on every leaf. ``dp``
@@ -549,11 +583,14 @@ def evaluate_scenarios(dp: ps.DesignPoint, scenarios: Scenario,
     if placements is not None and not paired:
         raise ValueError("placements requires paired design/scenario axes")
     in_axes = (0 if paired else None, 0, None if placements is None else 0)
-    return jax.vmap(lambda d, s, p: evaluate_scenario(d, s, cfg, p),
-                    in_axes=in_axes)(dp, scenarios, placements)
+    return jax.vmap(
+        lambda d, s, p: evaluate_scenario(d, s, cfg, p, nop_fidelity),
+        in_axes=in_axes)(dp, scenarios, placements)
 
 
 def reward_scenarios(dp: ps.DesignPoint, scenarios: Scenario,
-                     cfg: hw.HWConfig = hw.DEFAULT_HW) -> jnp.ndarray:
+                     cfg: hw.HWConfig = hw.DEFAULT_HW,
+                     nop_fidelity: str = "auto") -> jnp.ndarray:
     """Scenario-batched scalar objective (leading axis = scenario)."""
-    return evaluate_scenarios(dp, scenarios, cfg).reward
+    return evaluate_scenarios(dp, scenarios, cfg,
+                              nop_fidelity=nop_fidelity).reward

@@ -61,6 +61,10 @@ class EnvConfig:
     workload: cm.Workload = cm.GENERIC_WORKLOAD
     hw: hw.HWConfig = hw.DEFAULT_HW
     placement_actions: bool = False   # extend actions/obs with placement
+    # NoP evaluation tier (costmodel.evaluate): 'auto' takes the closed-
+    # form fast tier whenever a step carries no explicit placement
+    # mutation; 'full' forces the pairwise tier everywhere.
+    nop_fidelity: str = "auto"
 
     def scenario(self) -> cm.Scenario:
         return cm.Scenario(workload=self.workload, weights=self.weights)
@@ -155,7 +159,8 @@ def reset(key, cfg: EnvConfig = EnvConfig(),
     scenario = _resolve(scenario, cfg)
     k_design, k_state = jax.random.split(key)
     design = ps.random_design(k_design)
-    metrics = cm.evaluate(design, scenario.workload, scenario.weights, cfg.hw)
+    metrics = cm.evaluate(design, scenario.workload, scenario.weights, cfg.hw,
+                          nop_fidelity=cfg.nop_fidelity)
     zero = jnp.float32(0.0)
     state = EnvState(design=design, t=jnp.int32(0), prev_reward=zero,
                      key=k_state)
@@ -168,8 +173,12 @@ def step(state: EnvState, action: jnp.ndarray,
     """Apply a full design-point assignment; returns (state', obs, r, done, metrics)."""
     scenario = _resolve(scenario, cfg)
     design, placement = _design_and_placement(action, cfg)
+    # a placement mutation always needs the full pairwise tier; plain
+    # design-only actions take whatever tier the config asks for
+    fid = ("auto" if placement is not None and cfg.nop_fidelity == "fast"
+           else cfg.nop_fidelity)
     metrics = cm.evaluate(design, scenario.workload, scenario.weights, cfg.hw,
-                          placement)
+                          placement, nop_fidelity=fid)
     reward = metrics.reward
     t_next = state.t + 1
     done = t_next >= cfg.episode_len

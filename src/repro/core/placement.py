@@ -102,6 +102,25 @@ def cell_ij(cell: jnp.ndarray):
     return (c // GRID).astype(jnp.float32), (c % GRID).astype(jnp.float32)
 
 
+def canonical_anchors(m, n) -> jnp.ndarray:
+    """The Fig.-4 HBM anchor coordinates, (..., 6, 2).
+
+    Edge stacks sit adjacent to the middle of their edge (one hop
+    off-grid), 'middle' and '3D-stacked' at the array center.
+    """
+    m = jnp.asarray(m, jnp.float32)
+    n = jnp.asarray(n, jnp.float32)
+    mc, nc = (m - 1.0) / 2.0, (n - 1.0) / 2.0
+    return jnp.stack([
+        jnp.stack([mc, jnp.full_like(nc, -1.0)], axis=-1),   # left
+        jnp.stack([mc, n], axis=-1),                         # right
+        jnp.stack([jnp.full_like(mc, -1.0), nc], axis=-1),   # top
+        jnp.stack([m, nc], axis=-1),                         # bottom
+        jnp.stack([mc, nc], axis=-1),                        # middle
+        jnp.stack([mc, nc], axis=-1),                        # 3D-stacked
+    ], axis=-2)                                       # (..., 6, 2)
+
+
 def canonical(m, n, hbm_mask, arch_type) -> Placement:
     """The paper's Fig.-4 floorplan as an explicit ``Placement``.
 
@@ -119,17 +138,7 @@ def canonical(m, n, hbm_mask, arch_type) -> Placement:
     i = jnp.minimum(slot // n_i, GRID - 1)
     j = jnp.minimum(slot % n_i, GRID - 1)
     cells = i * GRID + j                              # (..., 128)
-
-    mc, nc = (m - 1.0) / 2.0, (n - 1.0) / 2.0
-    anchors = jnp.stack([
-        jnp.stack([mc, jnp.full_like(nc, -1.0)], axis=-1),   # left
-        jnp.stack([mc, n], axis=-1),                         # right
-        jnp.stack([jnp.full_like(mc, -1.0), nc], axis=-1),   # top
-        jnp.stack([m, nc], axis=-1),                         # bottom
-        jnp.stack([mc, nc], axis=-1),                        # middle
-        jnp.stack([mc, nc], axis=-1),                        # 3D-stacked
-    ], axis=-2)                                       # (..., 6, 2)
-    return Placement(chiplet_cell=cells, hbm_ij=anchors)
+    return Placement(chiplet_cell=cells, hbm_ij=canonical_anchors(m, n))
 
 
 def hbm_floors(hbm_mask, arch_type) -> jnp.ndarray:
@@ -146,6 +155,28 @@ def hbm_floors(hbm_mask, arch_type) -> jnp.ndarray:
     floor3d = jnp.where(arch >= 1.0, 0.0, 1.0)
     ones = jnp.ones_like(arch)
     return jnp.stack([ones, ones, ones, ones, ones, floor3d], axis=-1)
+
+
+def _nearest_stack_cells(hbm_ij, floors, bits):
+    """Nearest-placed-stack distance at every router of the 16x16 grid.
+
+    Returns (gi, gj, d_cell): the (256,) cell coordinates and the
+    (..., 256) floored min-over-placed-stacks distance, computed as a
+    chained 6-anchor minimum so no (..., 6, 256) broadcast is ever
+    materialized — this is where both NoP tiers' throughput comes from.
+    """
+    cell = jnp.arange(N_CELLS, dtype=jnp.float32)
+    gi, gj = jnp.floor(cell / GRID), cell % GRID      # (256,)
+    d_cell = jnp.broadcast_to(_BIG, jnp.broadcast_shapes(
+        hbm_ij.shape[:-2], floors.shape[:-1], bits.shape[:-1]) + (N_CELLS,))
+    for b in range(N_HBM):
+        hi = hbm_ij[..., b, 0][..., None]
+        hj = hbm_ij[..., b, 1][..., None]
+        db = jnp.maximum(jnp.abs(gi - hi) + jnp.abs(gj - hj),
+                         floors[..., b][..., None])
+        d_cell = jnp.minimum(
+            d_cell, jnp.where(bits[..., b][..., None] > 0, db, _BIG))
+    return gi, gj, d_cell
 
 
 def nop_stats(placement: Placement, n_positions, hbm_mask,
@@ -172,29 +203,26 @@ def nop_stats(placement: Placement, n_positions, hbm_mask,
     hops_ai_worst = (i_max - i_min) + (j_max - j_min)   # region diameter
 
     # ---- chiplet -> nearest-HBM hop counts --------------------------------
-    hi = placement.hbm_ij[..., 0][..., None]          # (..., 6, 1)
-    hj = placement.hbm_ij[..., 1][..., None]
-    floors = hbm_floors(mask, arch_type)[..., None]   # (..., 6, 1)
+    floors = hbm_floors(mask, arch_type)              # (..., 6)
     bits = jnp.stack([(mask >> b) & 1 for b in range(N_HBM)],
-                     axis=-1).astype(jnp.float32)[..., None]
+                     axis=-1).astype(jnp.float32)
+
+    # one fused router scan, then per-slot distances are *gathered* from
+    # it (chiplet cells are integer grid cells) instead of recomputed —
+    # the fast-path fusion of the two-tier NoP refactor.
+    gi, gj, d_cell = _nearest_stack_cells(placement.hbm_ij, floors, bits)
 
     # per occupied slot: min over placed stacks (the Fig.-5 dataflow pulls
-    # operands from the nearest stack)
-    d_slot = jnp.abs(ci[..., None, :] - hi) + jnp.abs(cj[..., None, :] - hj)
-    d_slot = jnp.maximum(d_slot, floors)
-    d_hbm = jnp.min(jnp.where(bits > 0, d_slot, _BIG), axis=-2)  # (..., 128)
+    # operands from the nearest stack), gathered from the cell scan
+    d_hbm = jnp.take_along_axis(
+        d_cell, jnp.asarray(placement.chiplet_cell, jnp.int32), axis=-1)
     hops_hbm_mean = jnp.sum(active * d_hbm, axis=-1) / jnp.maximum(n_pos, 1.0)
 
-    # worst over every router of the spanned region (2 x 128 cell scan of
-    # the 16x16 grid, masked to the bounding box) — the Fig.-4 convention,
-    # and the exact-degradation anchor to the legacy model.
-    cell = jnp.arange(N_CELLS, dtype=jnp.float32)
-    gi, gj = jnp.floor(cell / GRID), cell % GRID      # (256,)
+    # worst over every router of the spanned region (masked to the
+    # bounding box) — the Fig.-4 convention, and the exact-degradation
+    # anchor to the legacy model.
     in_box = ((gi >= i_min[..., None]) & (gi <= i_max[..., None])
               & (gj >= j_min[..., None]) & (gj <= j_max[..., None]))
-    d_cell = jnp.abs(gi[..., None, :] - hi) + jnp.abs(gj[..., None, :] - hj)
-    d_cell = jnp.maximum(d_cell, floors)
-    d_cell = jnp.min(jnp.where(bits > 0, d_cell, _BIG), axis=-2)  # (..., 256)
     hops_hbm_worst = jnp.max(jnp.where(in_box, d_cell, -_BIG), axis=-1)
 
     # ---- chiplet-to-chiplet forwarding (broadcast from the centroid) ------
@@ -215,6 +243,61 @@ def nop_stats(placement: Placement, n_positions, hbm_mask,
                    + jnp.sum(active * d_cent, axis=-1))
     link_contention = stream_hops / jnp.maximum(edges, 1.0)
 
+    return NoPStats(hops_ai_worst=hops_ai_worst, hops_ai_mean=hops_ai_mean,
+                    hops_hbm_worst=hops_hbm_worst, hops_hbm_mean=hops_hbm_mean,
+                    link_contention=link_contention,
+                    region_edges=region_edges)
+
+
+def nop_stats_fast(m, n, n_positions, hbm_mask, arch_type,
+                   mesh_edges=None) -> NoPStats:
+    """Closed-form fast tier: canonical-floorplan NoP stats.
+
+    Equals ``nop_stats(canonical(m, n, ...), ...)`` on every field (the
+    canonical row-major fill is derived analytically: cell (i, j) is
+    occupied iff ``j < n`` and ``i * n + j < n_positions``, and the fill
+    spans the full m x n box for every ``mesh_dims`` factorization), but
+    skips the 128-slot pass and never materializes a ``Placement`` —
+    one 256-cell scan total, the pre-PR-2 evaluation cost. This is the
+    ``nop_fidelity='fast'`` tier of ``costmodel.evaluate``.
+    """
+    m = jnp.asarray(m, jnp.float32)
+    n = jnp.asarray(n, jnp.float32)
+    n_pos = jnp.asarray(n_positions, jnp.float32)
+    mask = jnp.asarray(hbm_mask, jnp.int32)
+
+    anchors = canonical_anchors(m, n)                 # (..., 6, 2)
+    floors = hbm_floors(mask, arch_type)              # (..., 6)
+    bits = jnp.stack([(mask >> b) & 1 for b in range(N_HBM)],
+                     axis=-1).astype(jnp.float32)
+    gi, gj, d_cell = _nearest_stack_cells(anchors, floors, bits)
+
+    mb, nb, pb = m[..., None], n[..., None], n_pos[..., None]
+    in_box = (gi < mb) & (gj < nb)
+    occ = ((gj < nb) & (gi * nb + gj < pb)).astype(jnp.float32)
+
+    inv = 1.0 / jnp.maximum(n_pos, 1.0)
+    hops_hbm_worst = jnp.max(jnp.where(in_box, d_cell, -_BIG), axis=-1)
+    sum_hbm = jnp.sum(occ * d_cell, axis=-1)
+    hops_hbm_mean = sum_hbm * inv
+
+    # centroid of the canonical row-major fill, closed form: f full rows
+    # of n cells plus k leftover cells in row f (sums of integer ranges,
+    # exactly representable -> bit-equal to the full tier's slot sums)
+    f = jnp.floor(n_pos / jnp.maximum(n, 1.0))
+    k = n_pos - f * n
+    cent_i = (n * f * (f - 1.0) / 2.0 + k * f) * inv
+    cent_j = (f * n * (n - 1.0) / 2.0 + k * (k - 1.0) / 2.0) * inv
+    d_cent = (jnp.abs(gi - cent_i[..., None])
+              + jnp.abs(gj - cent_j[..., None]))
+    sum_cent = jnp.sum(occ * d_cent, axis=-1)
+    hops_ai_mean = sum_cent * inv
+
+    hops_ai_worst = (m - 1.0) + (n - 1.0)
+    region_edges = m * (n - 1.0) + n * (m - 1.0)
+    edges = region_edges if mesh_edges is None else jnp.asarray(
+        mesh_edges, jnp.float32)
+    link_contention = (4.0 * sum_hbm + sum_cent) / jnp.maximum(edges, 1.0)
     return NoPStats(hops_ai_worst=hops_ai_worst, hops_ai_mean=hops_ai_mean,
                     hops_hbm_worst=hops_hbm_worst, hops_hbm_mean=hops_hbm_mean,
                     link_contention=link_contention,
@@ -287,6 +370,69 @@ def random_hbm_anchor(key, m, n):
     ku, kv = jax.random.split(key)
     i = -1.0 + jax.random.uniform(ku) * (m + 1.0)
     j = -1.0 + jax.random.uniform(kv) * (n + 1.0)
+    return jnp.stack([i, j], axis=-1)
+
+
+def _active_centroid(chiplet_cell, n_positions):
+    """(i, j) centroid of the active slots' cells. Batch-generic."""
+    n_pos = jnp.asarray(n_positions, jnp.float32)
+    ci, cj = cell_ij(chiplet_cell)
+    slot = jnp.arange(MAX_SLOTS, dtype=jnp.float32)
+    active = (slot < n_pos[..., None]).astype(jnp.float32)
+    inv = 1.0 / jnp.maximum(n_pos, 1.0)
+    return (jnp.sum(active * ci, axis=-1) * inv,
+            jnp.sum(active * cj, axis=-1) * inv)
+
+
+def traffic_attractor(placement: Placement, n_positions, hbm_mask):
+    """(i, j) of the placement's traffic centroid.
+
+    The Fig.-5 dataflow pulls 4 operand streams from the nearest HBM
+    stack and fans 1 forwarded stream out from the chiplet centroid, so
+    the traffic-optimal neighbourhood is between the active-slot centroid
+    and the placed stack nearest to it — this returns their midpoint.
+    Batch-generic on all arguments.
+    """
+    cent_i, cent_j = _active_centroid(placement.chiplet_cell, n_positions)
+
+    mask = jnp.asarray(hbm_mask, jnp.int32)
+    bits = jnp.stack([(mask >> b) & 1 for b in range(N_HBM)],
+                     axis=-1).astype(jnp.float32)
+    d = (jnp.abs(placement.hbm_ij[..., 0] - cent_i[..., None])
+         + jnp.abs(placement.hbm_ij[..., 1] - cent_j[..., None]))
+    b = jnp.argmin(jnp.where(bits > 0, d, _BIG), axis=-1)
+    hi = jnp.take_along_axis(placement.hbm_ij[..., 0], b[..., None],
+                             axis=-1)[..., 0]
+    hj = jnp.take_along_axis(placement.hbm_ij[..., 1], b[..., None],
+                             axis=-1)[..., 0]
+    return 0.5 * (cent_i + hi), 0.5 * (cent_j + hj)
+
+
+def guided_cell(key, placement: Placement, n_positions, hbm_mask, m, n,
+                sigma=1.25):
+    """Profile-guided relocate target: a cell near the traffic attractor.
+
+    Gaussian jitter (``sigma`` in hops) around :func:`traffic_attractor`,
+    rounded and clipped to the m x n footprint box. Unbatched (SA vmaps).
+    """
+    ai, aj = traffic_attractor(placement, n_positions, hbm_mask)
+    di, dj = sigma * jax.random.normal(key, (2,))
+    i = jnp.clip(jnp.round(ai + di), 0.0, m - 1.0).astype(jnp.int32)
+    j = jnp.clip(jnp.round(aj + dj), 0.0, n - 1.0).astype(jnp.int32)
+    return i * GRID + j
+
+
+def guided_anchor(key, placement: Placement, n_positions, m, n, sigma=1.25):
+    """Profile-guided HBM re-anchor: near the active-chiplet centroid.
+
+    A stack serves every chiplet, so its traffic-optimal anchor tracks
+    the centroid of the occupied cells (continuous coordinates, clipped
+    to the legal [-1, m] x [-1, n] band). Unbatched (SA vmaps).
+    """
+    cent_i, cent_j = _active_centroid(placement.chiplet_cell, n_positions)
+    di, dj = sigma * jax.random.normal(key, (2,))
+    i = jnp.clip(cent_i + di, -1.0, m)
+    j = jnp.clip(cent_j + dj, -1.0, n)
     return jnp.stack([i, j], axis=-1)
 
 

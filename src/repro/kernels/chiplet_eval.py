@@ -72,7 +72,8 @@ def _bit(x, b):
 def _kernel(design_ref, cells_ref, mesh_ref, out_ref, *,
             workload_vals: Tuple[float, float, float, float],
             weight_vals: Tuple[float, float, float],
-            cfg: hw.HWConfig):
+            cfg: hw.HWConfig,
+            nop_fidelity: str = "full"):
     gemm_ops, nongemm_ops, _hbm_bytes, mapping_eff = workload_vals
     w_alpha, w_beta, w_gamma = weight_vals
 
@@ -131,75 +132,139 @@ def _kernel(design_ref, cells_ref, mesh_ref, out_ref, *,
     lane = jax.lax.broadcasted_iota(jnp.float32, (b, LANES), 1)
     big = jnp.float32(1e9)
 
-    cells = cells_ref[...].astype(jnp.float32)         # (B, 128) cell ids
-    ci = jnp.floor(cells / _GRID)
-    cj = cells - jnp.floor(cells / _GRID) * _GRID
-    active = lane < n_pos[:, None]
+    if nop_fidelity == "fast":
+        # fast tier: the canonical Fig.-4 floorplan derived analytically
+        # on the lane axis (cell (i, j) occupied iff j < n and
+        # i*n + j < n_pos) — no cells input, no host-side canonical
+        # baseline columns, congestion / per-hop-energy ratios exactly 1.
+        mc, ncc = (m - 1.0) / 2.0, (n - 1.0) / 2.0
+        neg1 = jnp.full_like(m, -1.0)
+        fast_anchors = [(mc, neg1), (mc, n), (neg1, ncc), (m, ncc),
+                        (mc, ncc), (mc, ncc)]
+        floor_3d = jnp.where(arch >= 1.0, 0.0, 1.0)
 
-    # spanned mesh region (bounding box of occupied cells)
-    i_max = jnp.max(jnp.where(active, ci, -big), axis=1)
-    i_min = jnp.min(jnp.where(active, ci, big), axis=1)
-    j_max = jnp.max(jnp.where(active, cj, -big), axis=1)
-    j_min = jnp.min(jnp.where(active, cj, big), axis=1)
-    h_ai = (i_max - i_min) + (j_max - j_min)
+        def min_anchor_dist_fast(i, j):
+            dmin = jnp.full_like(i, big)
+            for bi, (hi, hj) in enumerate(fast_anchors):
+                floor = floor_3d if bi == 5 else jnp.ones_like(arch)
+                d = jnp.maximum(jnp.abs(i - hi[:, None])
+                                + jnp.abs(j - hj[:, None]), floor[:, None])
+                dmin = jnp.minimum(dmin,
+                                   jnp.where(bits[bi][:, None] > 0, d, big))
+            return dmin
 
-    # HBM anchors (cols 14..25) + per-anchor hop floors
-    anchors = []
-    for bi in range(6):
-        hi = raw[:, _HBM_COL + 2 * bi]
-        hj = raw[:, _HBM_COL + 2 * bi + 1]
-        floor = (jnp.where(arch >= 1.0, 0.0, 1.0) if bi == 5
-                 else jnp.ones_like(arch))
-        anchors.append((hi, hj, floor))
+        def half_stats(cell_idx):
+            i = jnp.floor(cell_idx / _GRID)
+            j = cell_idx % _GRID
+            occ = ((j < n[:, None])
+                   & (i * n[:, None] + j < n_pos[:, None])).astype(
+                       jnp.float32)
+            in_box = (i < m[:, None]) & (j < n[:, None])
+            return i, j, occ, in_box, min_anchor_dist_fast(i, j)
 
-    def min_anchor_dist(i, j):
-        dmin = jnp.full_like(i, big)
-        for bit, (hi, hj, floor) in zip(bits, anchors):
-            d = jnp.maximum(jnp.abs(i - hi[:, None]) + jnp.abs(j - hj[:, None]),
-                            floor[:, None])
-            dmin = jnp.minimum(dmin, jnp.where(bit[:, None] > 0, d, big))
-        return dmin
+        halves = [half_stats(lane), half_stats(lane + LANES)]
+        inv_pos = 1.0 / jnp.maximum(n_pos, 1.0)
+        sum_hbm = sum(jnp.sum(occ * d, axis=1)
+                      for _, _, occ, _, d in halves)
+        h_hbm = jnp.maximum(
+            *[jnp.max(jnp.where(in_box, d, -big), axis=1)
+              for _, _, _, in_box, d in halves])
+        h_hbm_mean = sum_hbm * inv_pos
 
-    # per occupied slot -> nearest stack (traffic-weighted mean)
-    d_hbm = min_anchor_dist(ci, cj)                    # (B, 128)
-    inv_pos = 1.0 / jnp.maximum(n_pos, 1.0)
-    sum_hbm = jnp.sum(jnp.where(active, d_hbm, 0.0), axis=1)
-    h_hbm_mean = sum_hbm * inv_pos
+        # canonical row-major centroid, closed form: f full rows of n
+        # cells plus k leftover cells in row f
+        f_rows = jnp.floor(n_pos / jnp.maximum(n, 1.0))
+        k_rem = n_pos - f_rows * n
+        cent_i = (n * f_rows * (f_rows - 1.0) / 2.0
+                  + k_rem * f_rows) * inv_pos
+        cent_j = (f_rows * n * (n - 1.0) / 2.0
+                  + k_rem * (k_rem - 1.0) / 2.0) * inv_pos
+        sum_cent = sum(
+            jnp.sum(occ * (jnp.abs(i - cent_i[:, None])
+                           + jnp.abs(j - cent_j[:, None])), axis=1)
+            for i, j, occ, _, _ in halves)
+        h_ai_mean = sum_cent * inv_pos
 
-    # worst router of the spanned region (16x16 grid scan, 2 x 128 lanes)
-    def cell_worst(cell_idx):
-        i = jnp.floor(cell_idx / _GRID)
-        j = cell_idx % _GRID
-        in_box = ((i >= i_min[:, None]) & (i <= i_max[:, None])
-                  & (j >= j_min[:, None]) & (j <= j_max[:, None]))
-        return jnp.max(jnp.where(in_box, min_anchor_dist(i, j), -big), axis=1)
+        h_ai = (m - 1.0) + (n - 1.0)
+        mesh_edges = m * (n - 1.0) + n * (m - 1.0)
+        box_edges = mesh_edges
+        contention = (4.0 * sum_hbm + sum_cent) / jnp.maximum(mesh_edges,
+                                                              1.0)
+        congestion = jnp.ones_like(m)
+        e_hop_hbm = jnp.ones_like(m)
+        e_hop_ai = jnp.ones_like(m)
+    else:
+        cells = cells_ref[...].astype(jnp.float32)     # (B, 128) cell ids
+        ci = jnp.floor(cells / _GRID)
+        cj = cells - jnp.floor(cells / _GRID) * _GRID
+        active = lane < n_pos[:, None]
 
-    h_hbm = jnp.maximum(cell_worst(lane), cell_worst(lane + LANES))
+        # spanned mesh region (bounding box of occupied cells)
+        i_max = jnp.max(jnp.where(active, ci, -big), axis=1)
+        i_min = jnp.min(jnp.where(active, ci, big), axis=1)
+        j_max = jnp.max(jnp.where(active, cj, -big), axis=1)
+        j_min = jnp.min(jnp.where(active, cj, big), axis=1)
+        h_ai = (i_max - i_min) + (j_max - j_min)
 
-    # chiplet-to-chiplet forwarding fans out from the traffic centroid
-    cent_i = jnp.sum(jnp.where(active, ci, 0.0), axis=1) * inv_pos
-    cent_j = jnp.sum(jnp.where(active, cj, 0.0), axis=1) * inv_pos
-    d_cent = (jnp.abs(ci - cent_i[:, None]) + jnp.abs(cj - cent_j[:, None]))
-    sum_cent = jnp.sum(jnp.where(active, d_cent, 0.0), axis=1)
-    h_ai_mean = sum_cent * inv_pos
+        # HBM anchors (cols 14..25) + per-anchor hop floors
+        anchors = []
+        for bi in range(6):
+            hi = raw[:, _HBM_COL + 2 * bi]
+            hj = raw[:, _HBM_COL + 2 * bi + 1]
+            floor = (jnp.where(arch >= 1.0, 0.0, 1.0) if bi == 5
+                     else jnp.ones_like(arch))
+            anchors.append((hi, hj, floor))
 
-    # per-link contention over the canonical m x n fabric (the NoP the
-    # design pays for); delivered 2.5D bandwidth scales vs the canonical
-    # floorplan's channel load
-    bm = i_max - i_min + 1.0
-    bn = j_max - j_min + 1.0
-    box_edges = bm * (bn - 1.0) + bn * (bm - 1.0)
-    mesh_edges = m * (n - 1.0) + n * (m - 1.0)
-    contention = (4.0 * sum_hbm + sum_cent) / jnp.maximum(mesh_edges, 1.0)
-    canon_contention = raw[:, _CANON_COL]
-    congestion = ((canon_contention + 1e-6)
-                  / (contention + 1e-6)) ** cfg.nop_congestion_exp
-    congestion = jnp.clip(congestion, 0.1, 10.0)
-    # per-hop interconnect energy ratios vs the canonical floorplan
-    e_hop_hbm = jnp.clip((h_hbm_mean + 1e-6)
-                         / (raw[:, _CANON_COL + 1] + 1e-6), 0.1, 10.0)
-    e_hop_ai = jnp.clip((h_ai_mean + 1e-6)
-                        / (raw[:, _CANON_COL + 2] + 1e-6), 0.1, 10.0)
+        def min_anchor_dist(i, j):
+            dmin = jnp.full_like(i, big)
+            for bit, (hi, hj, floor) in zip(bits, anchors):
+                d = jnp.maximum(jnp.abs(i - hi[:, None])
+                                + jnp.abs(j - hj[:, None]), floor[:, None])
+                dmin = jnp.minimum(dmin, jnp.where(bit[:, None] > 0, d, big))
+            return dmin
+
+        # per occupied slot -> nearest stack (traffic-weighted mean)
+        d_hbm = min_anchor_dist(ci, cj)                # (B, 128)
+        inv_pos = 1.0 / jnp.maximum(n_pos, 1.0)
+        sum_hbm = jnp.sum(jnp.where(active, d_hbm, 0.0), axis=1)
+        h_hbm_mean = sum_hbm * inv_pos
+
+        # worst router of the spanned region (16x16 grid, 2 x 128 lanes)
+        def cell_worst(cell_idx):
+            i = jnp.floor(cell_idx / _GRID)
+            j = cell_idx % _GRID
+            in_box = ((i >= i_min[:, None]) & (i <= i_max[:, None])
+                      & (j >= j_min[:, None]) & (j <= j_max[:, None]))
+            return jnp.max(jnp.where(in_box, min_anchor_dist(i, j), -big),
+                           axis=1)
+
+        h_hbm = jnp.maximum(cell_worst(lane), cell_worst(lane + LANES))
+
+        # chiplet-to-chiplet forwarding fans out from the traffic centroid
+        cent_i = jnp.sum(jnp.where(active, ci, 0.0), axis=1) * inv_pos
+        cent_j = jnp.sum(jnp.where(active, cj, 0.0), axis=1) * inv_pos
+        d_cent = (jnp.abs(ci - cent_i[:, None])
+                  + jnp.abs(cj - cent_j[:, None]))
+        sum_cent = jnp.sum(jnp.where(active, d_cent, 0.0), axis=1)
+        h_ai_mean = sum_cent * inv_pos
+
+        # per-link contention over the canonical m x n fabric (the NoP the
+        # design pays for); delivered 2.5D bandwidth scales vs the
+        # canonical floorplan's channel load
+        bm = i_max - i_min + 1.0
+        bn = j_max - j_min + 1.0
+        box_edges = bm * (bn - 1.0) + bn * (bm - 1.0)
+        mesh_edges = m * (n - 1.0) + n * (m - 1.0)
+        contention = (4.0 * sum_hbm + sum_cent) / jnp.maximum(mesh_edges, 1.0)
+        canon_contention = raw[:, _CANON_COL]
+        congestion = ((canon_contention + 1e-6)
+                      / (contention + 1e-6)) ** cfg.nop_congestion_exp
+        congestion = jnp.clip(congestion, 0.1, 10.0)
+        # per-hop interconnect energy ratios vs the canonical floorplan
+        e_hop_hbm = jnp.clip((h_hbm_mean + 1e-6)
+                             / (raw[:, _CANON_COL + 1] + 1e-6), 0.1, 10.0)
+        e_hop_ai = jnp.clip((h_ai_mean + 1e-6)
+                            / (raw[:, _CANON_COL + 2] + 1e-6), 0.1, 10.0)
 
     # ---- latency (Eqs. 10-11) ---------------------------------------------
     wire_ai = cfg.wire_delay_ps_2p5d * ai_trace / 1000.0
@@ -301,53 +366,75 @@ def _kernel(design_ref, cells_ref, mesh_ref, out_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("workload_vals", "weight_vals",
-                                             "cfg", "interpret", "block_n"))
+                                             "cfg", "interpret", "block_n",
+                                             "nop_fidelity"))
 def evaluate_batch(designs_padded: jnp.ndarray,
                    cells_padded: jnp.ndarray,
                    workload_vals: Tuple[float, float, float, float],
                    weight_vals: Tuple[float, float, float],
                    cfg: hw.HWConfig = hw.DEFAULT_HW,
                    interpret: bool = True,
-                   block_n: int = BLOCK_N) -> jnp.ndarray:
+                   block_n: int = BLOCK_N,
+                   nop_fidelity: str = "full") -> jnp.ndarray:
     """Run the kernel on padded (designs, cells); returns (N, 12) metrics.
 
     ``designs_padded`` / ``cells_padded`` come from :func:`pad_designs` /
     :func:`pad_cells` (which default to the canonical Fig.-4 floorplan).
+    ``nop_fidelity='fast'`` statically selects the closed-form canonical
+    NoP tier: the kernel derives the Fig.-4 floorplan analytically on the
+    lane axis, the host-side canonical-baseline columns are unused, and
+    ``cells_padded`` may be None (no cells operand is even streamed).
     """
     n = designs_padded.shape[0]
     assert n % block_n == 0, f"batch {n} must be a multiple of {block_n}"
-    assert cells_padded.shape == designs_padded.shape
     mesh_tab = jnp.asarray(_mesh_tables())
     kernel = functools.partial(_kernel, workload_vals=workload_vals,
-                               weight_vals=weight_vals, cfg=cfg)
-    out = pl.pallas_call(
-        kernel,
+                               weight_vals=weight_vals, cfg=cfg,
+                               nop_fidelity=nop_fidelity)
+    design_spec = pl.BlockSpec((block_n, LANES), lambda i: (i, 0))
+    mesh_spec = pl.BlockSpec((256, LANES), lambda i: (0, 0))
+    out_kw = dict(
         grid=(n // block_n,),
-        in_specs=[
-            pl.BlockSpec((block_n, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_n, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((256, LANES), lambda i: (0, 0)),
-        ],
         out_specs=pl.BlockSpec((block_n, LANES), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, LANES), jnp.float32),
         interpret=interpret,
-    )(designs_padded.astype(jnp.float32), cells_padded.astype(jnp.float32),
-      mesh_tab)
+    )
+    if nop_fidelity == "fast":
+        # fast tier never reads cells_ref — drop the operand entirely
+        # instead of DMA-ing a dead (N, 128) array through the grid
+        def kernel_fast(design_ref, mesh_ref, out_ref):
+            kernel(design_ref, None, mesh_ref, out_ref)
+
+        out = pl.pallas_call(
+            kernel_fast, in_specs=[design_spec, mesh_spec], **out_kw,
+        )(designs_padded.astype(jnp.float32), mesh_tab)
+    else:
+        assert cells_padded.shape == designs_padded.shape
+        out = pl.pallas_call(
+            kernel, in_specs=[design_spec, design_spec, mesh_spec], **out_kw,
+        )(designs_padded.astype(jnp.float32),
+          cells_padded.astype(jnp.float32), mesh_tab)
     return out[:, :N_OUT]
 
 
 def _design_placement(dp: ps.DesignPoint, placement: pm.Placement = None):
-    """Resolve (placement, canonical NoP baselines) for a design batch."""
+    """Resolve (placement, canonical NoP baselines) for a design batch.
+
+    The canonical baselines come from the closed-form fast tier (no
+    canonical ``Placement`` is reduced), matching what
+    ``costmodel.evaluate`` normalizes against on its full-tier path.
+    """
     v = ps.decode(dp)
     n_pos = cm.footprint_positions(v)
     m, n = cm.mesh_dims(n_pos)
     canon = pm.canonical(m, n, v.hbm_mask, v.arch_type)
-    canon_stats = pm.nop_stats(canon, n_pos, v.hbm_mask, v.arch_type)
+    canon_stats = pm.nop_stats_fast(m, n, n_pos, v.hbm_mask, v.arch_type)
     return (canon if placement is None else placement), canon_stats
 
 
 def pad_designs(dp: ps.DesignPoint, placement: pm.Placement = None,
-                block_n: int = BLOCK_N, _resolved=None) -> jnp.ndarray:
+                block_n: int = BLOCK_N, _resolved=None,
+                nop_fidelity: str = "full") -> jnp.ndarray:
     """(B,)-batched DesignPoint -> (N_padded, 128) f32 kernel input.
 
     Cols 0..13 carry the Table-1 indices, cols 14..25 the six HBM anchor
@@ -355,14 +442,18 @@ def pad_designs(dp: ps.DesignPoint, placement: pm.Placement = None,
     canonical floorplan's link contention (the congestion baseline).
     ``_resolved`` lets callers pass a precomputed ``_design_placement``
     result to avoid re-running the canonical baseline (ops.chiplet_eval).
+    ``nop_fidelity='fast'`` skips the anchor/baseline resolution entirely
+    (the fast-tier kernel derives the canonical floorplan itself).
     """
-    placement, canon = (_design_placement(dp, placement)
-                        if _resolved is None else _resolved)
     flat = ps.to_flat(dp).astype(jnp.float32)          # (B, 14)
-    hbm = placement.hbm_ij.reshape(flat.shape[0], 2 * pm.N_HBM)
-    flat = jnp.concatenate([
-        flat, hbm, canon.link_contention[:, None],
-        canon.hops_hbm_mean[:, None], canon.hops_ai_mean[:, None]], axis=-1)
+    if nop_fidelity != "fast":
+        placement, canon = (_design_placement(dp, placement)
+                            if _resolved is None else _resolved)
+        hbm = placement.hbm_ij.reshape(flat.shape[0], 2 * pm.N_HBM)
+        flat = jnp.concatenate([
+            flat, hbm, canon.link_contention[:, None],
+            canon.hops_hbm_mean[:, None], canon.hops_ai_mean[:, None]],
+            axis=-1)
     n = flat.shape[0]
     n_pad = (-n) % block_n
     return jnp.pad(flat, ((0, n_pad), (0, LANES - flat.shape[1])))

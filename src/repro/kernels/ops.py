@@ -75,29 +75,48 @@ def chiplet_eval(dp: ps.DesignPoint,
                  weights: cm.RewardWeights = cm.RewardWeights(),
                  cfg: hw.HWConfig = hw.DEFAULT_HW,
                  backend: str = "auto",
-                 placement=None) -> jnp.ndarray:
+                 placement=None,
+                 nop_fidelity: str = "auto") -> jnp.ndarray:
     """Evaluate a batch of design points -> (N, 12) metric matrix:
     [reward, eff_tops, e_comm_pj, pkg_cost, die_cost, u_sys,
      lat_hbm_ns, lat_ai_ns, hops_hbm_mean, hops_ai_mean,
      link_contention, hops_hbm_worst].
 
     ``placement`` is an optional batched ``placement.Placement``; None
-    evaluates the canonical Fig.-4 floorplan."""
+    evaluates the canonical Fig.-4 floorplan. ``nop_fidelity`` picks the
+    NoP tier (see ``costmodel.evaluate``): 'auto' takes the closed-form
+    fast tier whenever ``placement`` is None — on the Pallas path that
+    also skips the host-side canonical-baseline resolution entirely."""
     from repro.core import placement as _pm
+    if nop_fidelity not in cm.NOP_FIDELITIES:
+        raise ValueError(f"nop_fidelity must be one of {cm.NOP_FIDELITIES}, "
+                         f"got {nop_fidelity!r}")
+    if nop_fidelity == "fast" and placement is not None:
+        raise ValueError(
+            "nop_fidelity='fast' evaluates the canonical floorplan only; "
+            "drop the explicit placement or use 'auto'/'full'")
+    fast = placement is None and nop_fidelity != "full"
     flat = ps.to_flat(dp)
     n = flat.shape[0]
     wl_vals = (float(workload.gemm_ops), float(workload.nongemm_ops),
                float(workload.hbm_bytes), float(workload.mapping_eff))
     w_vals = (float(weights.alpha), float(weights.beta), float(weights.gamma))
     if backend == "pallas" or (backend == "auto" and _on_tpu()):
-        resolved = _ce._design_placement(dp, placement)
-        padded = _ce.pad_designs(dp, _resolved=resolved)
-        cells = _ce.pad_cells(dp, resolved[0])
-        out = _ce.evaluate_batch(padded, cells, wl_vals, w_vals, cfg,
-                                 interpret=not _on_tpu())
+        if fast:
+            padded = _ce.pad_designs(dp, nop_fidelity="fast")
+            out = _ce.evaluate_batch(padded, None, wl_vals, w_vals, cfg,
+                                     interpret=not _on_tpu(),
+                                     nop_fidelity="fast")
+        else:
+            resolved = _ce._design_placement(dp, placement)
+            padded = _ce.pad_designs(dp, _resolved=resolved)
+            cells = _ce.pad_cells(dp, resolved[0])
+            out = _ce.evaluate_batch(padded, cells, wl_vals, w_vals, cfg,
+                                     interpret=not _on_tpu())
         return out[:n]
     pflat = None if placement is None else _pm.to_flat(placement)
-    return _ref.chiplet_eval_reference(flat, wl_vals, w_vals, cfg, pflat)
+    return _ref.chiplet_eval_reference(flat, wl_vals, w_vals, cfg, pflat,
+                                       nop_fidelity)
 
 
 def decode_attention(q, k, v, pos, scale=None, window: int = 0,

@@ -131,8 +131,8 @@ def chiplet_eval_reference(designs_flat: jnp.ndarray,
                            workload_vals: Tuple[float, float, float, float],
                            weight_vals: Tuple[float, float, float],
                            cfg: hw.HWConfig = hw.DEFAULT_HW,
-                           placement_flat: jnp.ndarray | None = None
-                           ) -> jnp.ndarray:
+                           placement_flat: jnp.ndarray | None = None,
+                           nop_fidelity: str = "auto") -> jnp.ndarray:
     """(N, >=14) index array -> (N, 12) metrics matching the Pallas kernel.
 
     Columns: [reward, eff_tops, e_comm_pj, pkg_cost, die_cost, u_sys,
@@ -151,7 +151,7 @@ def chiplet_eval_reference(designs_flat: jnp.ndarray,
                                gamma=jnp.float32(weight_vals[2]))
     placement = (None if placement_flat is None
                  else pm.from_flat(placement_flat))
-    m = cm.evaluate(dp, workload, weights, cfg, placement)
+    m = cm.evaluate(dp, workload, weights, cfg, placement, nop_fidelity)
     return jnp.stack([m.reward, m.eff_tops, m.e_comm_pj_per_op, m.pkg_cost,
                       m.die_cost, m.u_sys, m.lat_hbm_ai_ns, m.lat_ai_ai_ns,
                       m.hops_hbm_mean, m.hops_ai_mean, m.link_contention,

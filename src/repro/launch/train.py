@@ -74,8 +74,10 @@ def train_scenario_suite(args):
                 f"triples, e.g. 1:1:0.1,2:0.5:0.1 (got {args.weights!r})")
         overrides["weight_grid"] = grid
     cfg = dataclasses.replace(cfg, **overrides)
+    cfg = suite.with_hw_preset(cfg, args.hw_preset)
     print(f"[suite] workloads={workloads} x {len(cfg.weight_grid)} "
-          f"weight settings, n_sa={cfg.n_sa}, n_rl={cfg.n_rl}")
+          f"weight settings, n_sa={cfg.n_sa}, n_rl={cfg.n_rl}, "
+          f"hw-preset={args.hw_preset}")
     res = suite.run_suite(_jax.random.PRNGKey(args.seed), cfg, verbose=True)
     print()
     print(suite.format_report(res))
@@ -123,6 +125,11 @@ def main():
                     help="comma list of alpha:beta:gamma reward weightings")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny suite scale for CI")
+    ap.add_argument("--hw-preset", default="default",
+                    choices=["default", "placement-sensitive"],
+                    help="scenario-suite HW calibration preset "
+                         "(placement-sensitive: paper-literal Eq.-13 "
+                         "traffic + amortization exponent 1)")
     ap.add_argument("--out", default=None,
                     help="write the scenario-suite JSON report here")
     args = ap.parse_args()

@@ -58,8 +58,9 @@ class PortfolioResult(NamedTuple):
     placement_reward: float = None  # >= best_reward by construction
 
 
-@functools.partial(jax.jit, static_argnums=(2,))
-def _sweep_rewards(cands, scenario: cm.Scenario, hw_cfg):
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def _sweep_rewards(cands, scenario: cm.Scenario, hw_cfg,
+                   nop_fidelity: str = "auto"):
     """Rewards of a (K, 14) candidate batch under one scenario.
 
     Module-level jit with the scenario as a traced argument, so the
@@ -68,21 +69,23 @@ def _sweep_rewards(cands, scenario: cm.Scenario, hw_cfg):
     """
     return jax.vmap(
         lambda c: cm.reward_only(ps.from_flat(c), scenario.workload,
-                                 scenario.weights, hw_cfg))(cands)
+                                 scenario.weights, hw_cfg,
+                                 nop_fidelity=nop_fidelity))(cands)
 
 
 def coordinate_refine(flat: jnp.ndarray, env_cfg: chipenv.EnvConfig,
                       max_sweeps: int = 8, scenario: cm.Scenario = None):
     """Exhaustive per-coordinate sweep until a fixed point."""
     scenario = env_cfg.scenario() if scenario is None else scenario
+    fid = env_cfg.nop_fidelity
     best = jnp.asarray(flat, jnp.int32)
-    best_r = float(_sweep_rewards(best[None], scenario, env_cfg.hw)[0])
+    best_r = float(_sweep_rewards(best[None], scenario, env_cfg.hw, fid)[0])
     for _ in range(max_sweeps):
         improved = False
         for dim, head in enumerate(ps.HEAD_SIZES):
             cand = jnp.tile(best[None, :], (head, 1))
             cand = cand.at[:, dim].set(jnp.arange(head, dtype=jnp.int32))
-            rewards = _sweep_rewards(cand, scenario, env_cfg.hw)
+            rewards = _sweep_rewards(cand, scenario, env_cfg.hw, fid)
             idx = int(jnp.argmax(rewards))
             r = float(rewards[idx])
             if r > best_r + 1e-6:
@@ -94,8 +97,9 @@ def coordinate_refine(flat: jnp.ndarray, env_cfg: chipenv.EnvConfig,
     return best, best_r
 
 
-@functools.partial(jax.jit, static_argnums=(2,))
-def _sweep_all_scenarios(flats, scenarios: cm.Scenario, hw_cfg):
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def _sweep_all_scenarios(flats, scenarios: cm.Scenario, hw_cfg,
+                         nop_fidelity: str = "auto"):
     """ONE full coordinate sweep for every scenario winner in lockstep.
 
     ``flats`` is (S, 14) — winner i refined under scenario i. For each of
@@ -104,7 +108,8 @@ def _sweep_all_scenarios(flats, scenarios: cm.Scenario, hw_cfg):
     Returns (flats', rewards') after one sweep.
     """
     def reward_sc(c, s):
-        return cm.reward_only(ps.from_flat(c), s.workload, s.weights, hw_cfg)
+        return cm.reward_only(ps.from_flat(c), s.workload, s.weights, hw_cfg,
+                              nop_fidelity=nop_fidelity)
 
     cur_r = jax.vmap(reward_sc)(flats, scenarios)                 # (S,)
     for dim, head in enumerate(ps.HEAD_SIZES):
@@ -134,15 +139,16 @@ def coordinate_refine_batch(flats, scenarios: cm.Scenario,
     rewards = None
     for _ in range(max_sweeps):
         new_flats, rewards = _sweep_all_scenarios(flats, scenarios,
-                                                  env_cfg.hw)
+                                                  env_cfg.hw,
+                                                  env_cfg.nop_fidelity)
         if bool(jnp.all(new_flats == flats)):
             flats = new_flats
             break
         flats = new_flats
     if rewards is None:
         rewards = jax.vmap(lambda c, s: cm.reward_only(
-            ps.from_flat(c), s.workload, s.weights, env_cfg.hw))(
-                flats, scenarios)
+            ps.from_flat(c), s.workload, s.weights, env_cfg.hw,
+            nop_fidelity=env_cfg.nop_fidelity))(flats, scenarios)
     return np.asarray(flats), np.asarray(rewards)
 
 

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core import costmodel as cm
 from repro.core import env as chipenv
+from repro.core import hw_constants as hw
 from repro.core import monolithic as mono
 from repro.core import params as ps
 from repro.core import workload as wl
@@ -40,6 +41,30 @@ DEFAULT_WEIGHT_GRID: Tuple[Tuple[float, float, float], ...] = (
     (2.0, 0.5, 0.1),
     (0.5, 2.0, 0.1),
 )
+
+# Under the default calibration most winners are compute-bound and
+# latency is amortized over reuse^2, so the placement channels (NoP
+# congestion, per-hop energy) barely move the reward. The
+# placement-sensitive regime charges the paper-literal Eq.-13 operand
+# traffic (no systolic reuse amortization) and per-operand-row latency
+# (amortization exponent 1), which is where explicit placement
+# co-optimization actually bites (ROADMAP PR-2 follow-up).
+PLACEMENT_SENSITIVE_HW = dataclasses.replace(
+    hw.DEFAULT_HW, comm_reuse_systolic=False, latency_amort_exp=1.0)
+
+HW_PRESETS = {
+    "default": hw.DEFAULT_HW,
+    "placement-sensitive": PLACEMENT_SENSITIVE_HW,
+}
+
+
+def with_hw_preset(cfg: "SuiteConfig", preset: str) -> "SuiteConfig":
+    """Re-key a suite config onto one of the named HW presets."""
+    if preset not in HW_PRESETS:
+        raise ValueError(f"unknown HW preset {preset!r}; "
+                         f"choose from {sorted(HW_PRESETS)}")
+    return dataclasses.replace(
+        cfg, env=dataclasses.replace(cfg.env, hw=HW_PRESETS[preset]))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +95,11 @@ SMOKE_SUITE = SuiteConfig(
     refine=True, max_refine_sweeps=1,
     placement_sa=sa.PlacementSAConfig(n_iters=500),
 )
+
+# the same grids re-keyed onto the regime where placement co-optimization
+# has leverage (see PLACEMENT_SENSITIVE_HW above)
+PLACEMENT_SENSITIVE_SUITE = with_hw_preset(SuiteConfig(), "placement-sensitive")
+PLACEMENT_SENSITIVE_SMOKE = with_hw_preset(SMOKE_SUITE, "placement-sensitive")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -55,7 +55,8 @@ def _objective(x: jnp.ndarray, env_cfg: chipenv.EnvConfig,
     scenario = env_cfg.scenario() if scenario is None else scenario
     idx = jnp.clip(jnp.round(x), 0.0, _HEADS - 1.0).astype(jnp.int32)
     dp = ps.from_flat(idx)
-    return cm.reward_only(dp, scenario.workload, scenario.weights, env_cfg.hw)
+    return cm.reward_only(dp, scenario.workload, scenario.weights, env_cfg.hw,
+                          nop_fidelity=env_cfg.nop_fidelity)
 
 
 def run(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
@@ -133,17 +134,30 @@ def run_scenario_population(key, scenarios: cm.Scenario, n_chains: int,
 
 @dataclasses.dataclass(frozen=True)
 class PlacementSAConfig:
-    """SA over the placement of a *fixed* design (core/placement.py)."""
+    """SA over the placement of a *fixed* design (core/placement.py).
+
+    ``profile_guided`` biases proposal moves toward the placement's
+    traffic centroid (midpoint of the active-chiplet centroid and the
+    nearest placed HBM stack, ``placement.traffic_attractor``) instead of
+    uniform random cells: a fraction ``p_guided`` of the moves samples a
+    Gaussian (std ``guide_sigma`` hops) around the attractor, the rest
+    stay uniform to keep the chain ergodic.
+    """
 
     n_iters: int = 3000
     temperature: float = 20.0
     p_hbm: float = 0.5            # fraction of moves that re-anchor a stack
+    profile_guided: bool = True   # bias moves toward the traffic centroid
+    p_guided: float = 0.5         # fraction of guided (vs uniform) moves
+    guide_sigma: float = 1.25     # Gaussian jitter of guided moves (hops)
+    record_every: int = 50        # best-so-far history stride
 
 
 class PlacementResult(NamedTuple):
     best_placement: pm.Placement
     best_reward: jnp.ndarray
     canonical_reward: jnp.ndarray    # reward under the Fig.-4 floorplan
+    history: jnp.ndarray = None      # best-so-far, every record_every iters
 
 
 def refine_placement(key, design: ps.DesignPoint,
@@ -153,14 +167,17 @@ def refine_placement(key, design: ps.DesignPoint,
                      init_placement: pm.Placement = None) -> PlacementResult:
     """Anneal the placement of one design under one scenario.
 
-    Moves: relocate one active chiplet slot to a random cell of the m x n
-    footprint box (swapping with any occupant), or re-anchor one *placed*
-    HBM stack at a random continuous coordinate in [-1, m] x [-1, n].
-    The incumbent starts at ``init_placement`` when given (e.g. the
-    placement that produced an RL winner's reward), else at the canonical
-    floorplan; the best-so-far covers both, so the result is never worse
-    than either. jit/vmap-safe: vmap over a scenario axis (and a paired
-    design axis) to refine a whole suite in one program.
+    Moves: relocate one active chiplet slot (swapping with any occupant)
+    to either a profile-guided cell near the traffic attractor or a
+    uniform random cell of the m x n footprint box (see
+    ``PlacementSAConfig.profile_guided``), or re-anchor one *placed* HBM
+    stack (guided: near the chiplet centroid; uniform: anywhere in
+    [-1, m] x [-1, n]). The incumbent starts at ``init_placement`` when
+    given (e.g. the placement that produced an RL winner's reward), else
+    at the canonical floorplan; the best-so-far covers both, so the
+    result is never worse than either. jit/vmap-safe: vmap over a
+    scenario axis (and a paired design axis) to refine a whole suite in
+    one program.
     """
     scenario = env_cfg.scenario() if scenario is None else scenario
     v = ps.decode(design)
@@ -172,7 +189,9 @@ def refine_placement(key, design: ps.DesignPoint,
         return cm.reward_only(design, scenario.workload, scenario.weights,
                               env_cfg.hw, plc)
 
-    r0 = objective(base)
+    # canonical baseline through the closed-form fast tier (no Placement)
+    r0 = cm.reward_only(design, scenario.workload, scenario.weights,
+                        env_cfg.hw, nop_fidelity=env_cfg.nop_fidelity)
     if init_placement is None:
         start, r_start = base, r0
     else:
@@ -184,16 +203,24 @@ def refine_placement(key, design: ps.DesignPoint,
 
     def step(state, it):
         plc, r_curr, best, r_best, key = state
-        key, k_kind, k_slot, k_cell, k_bit, k_anchor, k_acc = (
-            jax.random.split(key, 7))
+        key, k_kind, k_slot, k_cell, k_bit, k_anchor, k_acc, k_mix = (
+            jax.random.split(key, 8))
 
         # chiplet relocate / swap proposal
         slot = jax.random.randint(k_slot, (), 0, pm.MAX_SLOTS)
         cell = pm.random_cell_in_box(k_cell, m, n)
+        anchor = pm.random_hbm_anchor(k_anchor, m, n)
+        if cfg.profile_guided:
+            guided = jax.random.uniform(k_mix) < cfg.p_guided
+            g_cell = pm.guided_cell(k_cell, plc, n_pos, v.hbm_mask, m, n,
+                                    cfg.guide_sigma)
+            g_anchor = pm.guided_anchor(k_anchor, plc, n_pos, m, n,
+                                        cfg.guide_sigma)
+            cell = jnp.where(guided, g_cell, cell)
+            anchor = jnp.where(guided, g_anchor, anchor)
         cand_c = pm.relocate_chiplet(plc, slot, cell, n_pos)
         # HBM re-anchor proposal (uniform over the placed stacks)
         bit = pm.select_placed_bit(k_bit, v.hbm_mask)
-        anchor = pm.random_hbm_anchor(k_anchor, m, n)
         cand_h = plc._replace(hbm_ij=plc.hbm_ij.at[bit].set(anchor))
 
         use_hbm = jax.random.uniform(k_kind) < cfg.p_hbm
@@ -211,13 +238,16 @@ def refine_placement(key, design: ps.DesignPoint,
         plc = jax.tree_util.tree_map(
             lambda a, b: jnp.where(accept, a, b), cand, plc)
         r_curr = jnp.where(accept, r_cand, r_curr)
-        return (plc, r_curr, best, r_best, key), None
+        return (plc, r_curr, best, r_best, key), r_best
 
     state = (start, r_start, start, r_start, key)
     iters = jnp.arange(cfg.n_iters, dtype=jnp.float32)
-    (plc, _, best, r_best, _), _ = jax.lax.scan(step, state, iters)
+    (plc, _, best, r_best, _), trace = jax.lax.scan(step, state, iters)
+    # strided best-so-far trace + the final value (the stride rarely lands
+    # on the last iteration, and history[-1] must equal best_reward)
+    history = jnp.concatenate([trace[:: cfg.record_every], trace[-1:]])
     return PlacementResult(best_placement=best, best_reward=r_best,
-                           canonical_reward=r0)
+                           canonical_reward=r0, history=history)
 
 
 def refine_placement_scenarios(key, designs: ps.DesignPoint,

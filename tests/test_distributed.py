@@ -9,6 +9,11 @@ import sys
 
 import pytest
 
+# every case here spawns a fresh 8-virtual-device python subprocess
+# (~2 min each on the 2-core CI container) — keep them out of the
+# tier-1 fast lane (scripts/ci.sh runs `-m slow` as its own stage)
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -201,6 +201,48 @@ class TestChipletEval:
         np.testing.assert_allclose(np.asarray(b), np.asarray(c),
                                    rtol=1e-5, atol=1e-5)
 
+    @pytest.mark.parametrize("n", [256, 512])
+    def test_fast_tier_matches_oracle(self, n):
+        """nop_fidelity='fast': the kernel derives the canonical floorplan
+        analytically (no cells input, no baseline columns) and must match
+        the jnp fast tier AND the full-tier kernel on all 12 columns."""
+        dp = ps.random_design(jax.random.PRNGKey(n + 3), (n,))
+        wl_vals = (1e9, 2e7, 25e6, 0.85)
+        w_vals = (1.0, 1.0, 0.1)
+        padded = ce.pad_designs(dp, nop_fidelity="fast")
+        out = ce.evaluate_batch(padded, None, wl_vals, w_vals,
+                                interpret=True, nop_fidelity="fast")[:n]
+        expect = ref.chiplet_eval_reference(ps.to_flat(dp), wl_vals, w_vals,
+                                            nop_fidelity="fast")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-4, atol=1e-4)
+        full = ce.evaluate_batch(ce.pad_designs(dp), ce.pad_cells(dp),
+                                 wl_vals, w_vals, interpret=True)[:n]
+        np.testing.assert_allclose(np.asarray(out), np.asarray(full),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_fast_tier_ops_dispatch(self):
+        """ops.chiplet_eval fidelity threading: fast == full == default
+        across both backends on canonical floorplans."""
+        dp = ps.random_design(jax.random.PRNGKey(13), (256,))
+        a = ops.chiplet_eval(dp, backend="pallas")            # auto -> fast
+        b = ops.chiplet_eval(dp, backend="pallas", nop_fidelity="full")
+        c = ops.chiplet_eval(dp, backend="ref", nop_fidelity="fast")
+        d = ops.chiplet_eval(dp, backend="ref", nop_fidelity="full")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(d),
+                                   rtol=1e-4, atol=1e-4)
+        from repro.core import placement as pm
+        vv = ps.decode(dp)
+        m, n = cm.mesh_dims(cm.footprint_positions(vv))
+        plc = pm.canonical(m, n, vv.hbm_mask, vv.arch_type)
+        with pytest.raises(ValueError, match="fast"):
+            ops.chiplet_eval(dp, backend="ref", placement=plc,
+                             nop_fidelity="fast")
+
     def test_paper_case_design(self):
         """Kernel reproduces the Table-6 case-(i) reward."""
         import sys

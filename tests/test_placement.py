@@ -226,6 +226,185 @@ class TestPlacementSA:
                 < np.asarray(a.reward)[multi] - 1e-4).any()
 
 
+class TestFastTier:
+    """Two-tier NoP dispatch: fast (closed-form canonical) vs full
+    (pairwise) — the ISSUE-3 tentpole parity criteria."""
+
+    def test_nop_stats_fast_equals_full_on_canonical(self):
+        """nop_stats_fast == nop_stats(canonical(...)) on every field,
+        for every footprint count / a sweep of HBM masks / all archs."""
+        for arch in (0, 1, 2):
+            p = jnp.arange(1, 129, dtype=jnp.int32)
+            m, n = cm.mesh_dims(p)
+            for mask in range(1, 64, 7):
+                mask_a = jnp.full_like(p, mask)
+                arch_a = jnp.full(p.shape, float(arch), jnp.float32)
+                plc = pm.canonical(m, n, mask_a, arch_a)
+                full = pm.nop_stats(plc, p.astype(jnp.float32), mask_a,
+                                    arch_a)
+                fast = pm.nop_stats_fast(m, n, p.astype(jnp.float32),
+                                         mask_a, arch_a)
+                for field in pm.NoPStats._fields:
+                    np.testing.assert_allclose(
+                        np.asarray(getattr(fast, field)),
+                        np.asarray(getattr(full, field)),
+                        rtol=1e-5, atol=1e-5,
+                        err_msg=f"{field} mask={mask} arch={arch}")
+
+    def test_evaluate_fidelity_tiers_agree(self):
+        """evaluate(auto) == evaluate(full) == evaluate(fast) on a random
+        design batch (canonical floorplan), allclose 1e-5."""
+        dp = ps.random_design(jax.random.PRNGKey(21), (256,))
+        auto = cm.evaluate(dp)
+        full = cm.evaluate(dp, nop_fidelity="full")
+        fast = cm.evaluate(dp, nop_fidelity="fast")
+        for field in ("reward", "lat_hbm_ai_ns", "lat_ai_ai_ns",
+                      "hops_hbm_ai", "hops_ai_ai", "hops_hbm_mean",
+                      "hops_ai_mean", "link_contention", "eff_tops",
+                      "pkg_cost", "energy_per_task_j"):
+            a = np.asarray(getattr(auto, field), np.float64)
+            np.testing.assert_allclose(a, np.asarray(getattr(full, field),
+                                                     np.float64),
+                                       rtol=1e-5, atol=1e-5, err_msg=field)
+            np.testing.assert_array_equal(a, np.asarray(getattr(fast, field),
+                                                        np.float64),
+                                          err_msg=field)
+
+    def test_fast_rejects_explicit_placement(self):
+        dp = ps.random_design(jax.random.PRNGKey(22))
+        plc, _, _, _, _ = _canonical_for(dp)
+        with pytest.raises(ValueError, match="fast"):
+            cm.evaluate(dp, placement=plc, nop_fidelity="fast")
+        with pytest.raises(ValueError, match="nop_fidelity"):
+            cm.evaluate(dp, nop_fidelity="bogus")
+
+    def test_full_tier_explicit_still_matches_oracle_numbers(self):
+        """The full tier's explicit-placement path (now normalized against
+        the fast-tier canonical baseline) still scores the canonical
+        placement identically to the default path."""
+        dp = ps.random_design(jax.random.PRNGKey(23), (64,))
+        plc, _, _, _, _ = _canonical_for(dp)
+        a = cm.evaluate(dp)
+        b = cm.evaluate(dp, placement=plc)
+        np.testing.assert_allclose(np.asarray(a.reward), np.asarray(b.reward),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(a.nop_congestion),
+                                   np.asarray(b.nop_congestion),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_env_threads_fidelity(self):
+        """EnvConfig(nop_fidelity=...) reaches costmodel.evaluate: every
+        tier produces the same rewards for design-only actions."""
+        a = chipenv.action_space.sample(jax.random.PRNGKey(1))
+        rs = []
+        for fid in ("auto", "fast", "full"):
+            cfg = chipenv.EnvConfig(nop_fidelity=fid)
+            state, _ = chipenv.reset(jax.random.PRNGKey(0), cfg)
+            _, _, r, _, _ = chipenv.step(state, a, cfg)
+            rs.append(float(r))
+        np.testing.assert_allclose(rs, rs[0], rtol=1e-5)
+
+
+class TestNoPInvariantsSeeded:
+    """Deterministic, hypothesis-free mirror of the TestNoPProperties
+    invariants in tests/test_properties.py, so the NoP contracts stay
+    enforced on containers without `hypothesis` installed."""
+
+    def test_randomized_invariants(self):
+        rng0 = np.random.RandomState(0)
+        for _ in range(20):
+            n_pos = rng0.randint(1, 129)
+            mask = rng0.randint(1, 64)
+            arch = rng0.randint(0, 3)
+            rng = np.random.RandomState(rng0.randint(0, 2**31 - 1))
+            cells = rng.choice(pm.N_CELLS, size=n_pos, replace=False)
+            cells = np.concatenate(
+                [cells, rng.randint(0, pm.N_CELLS, pm.MAX_SLOTS - n_pos)])
+            hbm_ij = rng.uniform(-1.0, 16.0, (pm.N_HBM, 2)).astype(np.float32)
+            plc = pm.Placement(chiplet_cell=jnp.asarray(cells, jnp.int32),
+                               hbm_ij=jnp.asarray(hbm_ij))
+            stats = pm.nop_stats(plc, jnp.float32(n_pos), jnp.int32(mask),
+                                 jnp.float32(arch))
+
+            # slot-relabeling permutation invariance
+            perm = np.arange(pm.MAX_SLOTS)
+            perm[:n_pos] = rng.permutation(n_pos)
+            permuted = pm.nop_stats(
+                plc._replace(chiplet_cell=plc.chiplet_cell[perm]),
+                jnp.float32(n_pos), jnp.int32(mask), jnp.float32(arch))
+            for field in pm.NoPStats._fields:
+                np.testing.assert_allclose(
+                    float(getattr(stats, field)),
+                    float(getattr(permuted, field)),
+                    rtol=1e-5, atol=1e-5, err_msg=field)
+
+            # hbm_floors respected; worst >= mean; contention >= 0
+            floors = np.asarray(pm.hbm_floors(jnp.int32(mask),
+                                              jnp.float32(arch)))
+            placed = np.asarray(
+                [(mask >> b) & 1 for b in range(pm.N_HBM)]) > 0
+            min_floor = floors[placed].min()
+            assert float(stats.hops_hbm_mean) >= min_floor - 1e-6
+            assert float(stats.hops_hbm_worst) >= min_floor - 1e-6
+            assert (float(stats.hops_hbm_worst)
+                    >= float(stats.hops_hbm_mean) - 1e-5)
+            assert (float(stats.hops_ai_worst)
+                    >= float(stats.hops_ai_mean) - 1e-5)
+            assert float(stats.link_contention) >= 0.0
+            assert float(stats.region_edges) >= 0.0
+
+
+class TestProfileGuidedSA:
+    """ISSUE-3 satellite: profile-guided placement SA regression."""
+
+    NAMES = ("resnet50", "bert", "maskrcnn", "3dunet")
+
+    def _run(self, profile_guided):
+        from repro.optimizer import scenario as suite
+        env_cfg = chipenv.EnvConfig(hw=suite.PLACEMENT_SENSITIVE_HW)
+        scen = cm.stack_scenarios([
+            cm.Scenario(workload=wl.MLPERF[n]) for n in self.NAMES])
+        dps = ps.random_design(jax.random.PRNGKey(42), (len(self.NAMES),))
+        cfg = sa.PlacementSAConfig(n_iters=600, profile_guided=profile_guided,
+                                   p_guided=0.5, guide_sigma=1.25,
+                                   record_every=20)
+        return sa.refine_placement_scenarios(
+            jax.random.PRNGKey(7), dps, scen, env_cfg, cfg)
+
+    def test_guided_never_worse_and_converges_no_slower(self):
+        """On a fixed seeded scenario batch under the placement-sensitive
+        preset, the profile-guided proposer (a) never scores below the
+        canonical floorplan, (b) ends at least as high as the uniform
+        proposer, and (c) reaches the uniform proposer's final level in
+        no more moves than the uniform proposer itself needed."""
+        guided = self._run(True)
+        uniform = self._run(False)
+        g_best = np.asarray(guided.best_reward, np.float64)
+        u_best = np.asarray(uniform.best_reward, np.float64)
+        canon = np.asarray(guided.canonical_reward, np.float64)
+        assert (g_best >= canon - 1e-6).all()
+        assert (g_best >= u_best - 1e-6).all()
+
+        gh = np.asarray(guided.history, np.float64)    # (S, n_records)
+        uh = np.asarray(uniform.history, np.float64)
+        assert gh.shape == uh.shape and gh.shape[0] == len(self.NAMES)
+        for s in range(gh.shape[0]):
+            target = uh[s, -1] - 1e-6
+            reached = gh[s] >= target
+            assert reached.any(), f"scenario {s}: guided never reached " \
+                                  f"the uniform proposer's final reward"
+            t_guided = int(np.argmax(reached))
+            t_uniform = int(np.argmax(uh[s] >= target))
+            assert t_guided <= t_uniform, (
+                f"scenario {s}: guided needed {t_guided} records vs "
+                f"uniform's {t_uniform}")
+
+    def test_history_is_monotone_best_so_far(self):
+        res = self._run(True)
+        h = np.asarray(res.history)
+        assert (np.diff(h, axis=-1) >= -1e-6).all()
+
+
 class TestExtendedEnv:
     def test_ext_action_space_shapes(self):
         cfg = chipenv.EnvConfig(placement_actions=True)

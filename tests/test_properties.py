@@ -11,6 +11,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.analysis import hlo as hlo_lib
 from repro.core import costmodel as cm
 from repro.core import params as ps
+from repro.core import placement as pm
 from repro.data.pipeline import DataConfig, synthetic_batch
 from repro.training import compression as comp
 
@@ -67,6 +68,89 @@ class TestCostModelProperties:
         assert 0.0 < y <= 1.0
         y2 = float(cm.die_yield(jnp.float32(area * 2), d))
         assert y2 < y                      # strictly worse at larger area
+
+
+class TestNoPProperties:
+    """Invariants of the pairwise-traffic NoP reduction and its two-tier
+    dispatch (core/placement.py), over randomized placements/designs."""
+
+    @staticmethod
+    def _random_placement(rng, n_pos):
+        cells = rng.choice(pm.N_CELLS, size=n_pos, replace=False)
+        cells = np.concatenate(
+            [cells, rng.randint(0, pm.N_CELLS, pm.MAX_SLOTS - n_pos)])
+        hbm_ij = rng.uniform(-1.0, 16.0, (pm.N_HBM, 2)).astype(np.float32)
+        return pm.Placement(chiplet_cell=jnp.asarray(cells, jnp.int32),
+                            hbm_ij=jnp.asarray(hbm_ij))
+
+    @given(st.integers(1, 128), st.integers(1, 63), st.integers(0, 2),
+           st.integers(0, 2**31 - 1))
+    @settings(**_SETTINGS)
+    def test_mean_hops_invariant_under_slot_relabeling(
+            self, n_pos, mask, arch, seed):
+        """Permuting which slot index sits on which cell must not change
+        any traffic-weighted statistic (the traffic model is anonymous)."""
+        rng = np.random.RandomState(seed)
+        plc = self._random_placement(rng, n_pos)
+        perm = np.arange(pm.MAX_SLOTS)
+        perm[:n_pos] = rng.permutation(n_pos)
+        plc_p = plc._replace(chiplet_cell=plc.chiplet_cell[perm])
+        a = pm.nop_stats(plc, jnp.float32(n_pos), jnp.int32(mask),
+                         jnp.float32(arch))
+        b = pm.nop_stats(plc_p, jnp.float32(n_pos), jnp.int32(mask),
+                         jnp.float32(arch))
+        for field in pm.NoPStats._fields:
+            np.testing.assert_allclose(
+                float(getattr(a, field)), float(getattr(b, field)),
+                rtol=1e-5, atol=1e-5, err_msg=field)
+
+    @given(st.integers(1, 128), st.integers(1, 63), st.integers(0, 2),
+           st.integers(0, 2**31 - 1))
+    @settings(**_SETTINGS)
+    def test_floors_worst_mean_contention(self, n_pos, mask, arch, seed):
+        """hbm_floors respected; worst >= mean; contention >= 0."""
+        rng = np.random.RandomState(seed)
+        plc = self._random_placement(rng, n_pos)
+        stats = pm.nop_stats(plc, jnp.float32(n_pos), jnp.int32(mask),
+                             jnp.float32(arch))
+        floors = np.asarray(pm.hbm_floors(jnp.int32(mask),
+                                          jnp.float32(arch)))
+        placed = np.asarray([(mask >> b) & 1 for b in range(pm.N_HBM)]) > 0
+        min_floor = floors[placed].min()
+        assert float(stats.hops_hbm_mean) >= min_floor - 1e-6
+        assert float(stats.hops_hbm_worst) >= min_floor - 1e-6
+        assert (float(stats.hops_hbm_worst)
+                >= float(stats.hops_hbm_mean) - 1e-5)
+        assert (float(stats.hops_ai_worst)
+                >= float(stats.hops_ai_mean) - 1e-5)
+        assert float(stats.link_contention) >= 0.0
+        assert float(stats.region_edges) >= 0.0
+
+    @given(st.integers(1, 128), st.integers(1, 63), st.integers(0, 2))
+    @settings(**_SETTINGS)
+    def test_fast_tier_equals_full_tier_on_canonical(self, n_pos, mask,
+                                                     arch):
+        """nop_stats_fast(m, n, ...) == nop_stats(canonical(m, n, ...))
+        for randomized (m, n, hbm_mask, arch_type)."""
+        m, n = cm.mesh_dims(jnp.int32(n_pos))
+        plc = pm.canonical(m, n, jnp.int32(mask), jnp.float32(arch))
+        full = pm.nop_stats(plc, jnp.float32(n_pos), jnp.int32(mask),
+                            jnp.float32(arch))
+        fast = pm.nop_stats_fast(m, n, jnp.float32(n_pos), jnp.int32(mask),
+                                 jnp.float32(arch))
+        for field in pm.NoPStats._fields:
+            np.testing.assert_allclose(
+                float(getattr(fast, field)), float(getattr(full, field)),
+                rtol=1e-5, atol=1e-5, err_msg=field)
+
+    @given(design_strategy())
+    @settings(**_SETTINGS)
+    def test_evaluate_tiers_agree(self, idx):
+        """The dispatching evaluate(): fast == full reward to 1e-5."""
+        dp = ps.from_flat(jnp.asarray(idx, jnp.int32))
+        r_fast = float(cm.evaluate(dp, nop_fidelity="fast").reward)
+        r_full = float(cm.evaluate(dp, nop_fidelity="full").reward)
+        np.testing.assert_allclose(r_fast, r_full, rtol=1e-5, atol=1e-4)
 
 
 class TestCompressionProperties:
