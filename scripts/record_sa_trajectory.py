@@ -1,0 +1,98 @@
+"""Record the placement-SA best-so-far trajectory as a regression oracle.
+
+Writes ``tests/data_sa_trajectory.json``: the full ``PlacementResult``
+history of ``sa.refine_placement[_scenarios]`` on two fixed protocols
+(one scenario-batched run under the placement-sensitive preset, one
+single-design run at default calibration). ``tests/test_placement_delta.py``
+asserts the delta-evaluated SA reproduces these trajectories bit-for-bit
+— re-run this script only when the accept/reject semantics are
+*intentionally* changed (and say so in the PR).
+
+    PYTHONPATH=src python scripts/record_sa_trajectory.py
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core import env as chipenv
+from repro.core import params as ps
+from repro.core import workload as wl
+from repro.sa import annealing as sa
+
+_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                    os.pardir, "tests", "data_sa_trajectory.json")
+
+# Protocol constants — mirrored by tests/test_placement_delta.py.
+SUITE_WORKLOADS = ("resnet50", "bert", "maskrcnn", "3dunet")
+SUITE_DESIGN_SEED, SUITE_KEY_SEED = 42, 7
+SINGLE_DESIGN_SEED, SINGLE_KEY_SEED = 4, 5
+N_ITERS, RECORD_EVERY = 400, 20
+
+
+def _sa_cfg(**kw):
+    # the oracle is the FULL-recompute trajectory (the semantic
+    # definition); the delta path must reproduce it bit-for-bit
+    return sa.PlacementSAConfig(n_iters=N_ITERS, record_every=RECORD_EVERY,
+                                delta_eval=False, **kw)
+
+
+def main():
+    from repro.optimizer import scenario as suite
+
+    # --- scenario-batched, placement-sensitive preset ----------------------
+    env_sens = chipenv.EnvConfig(hw=suite.PLACEMENT_SENSITIVE_HW)
+    scen = cm.stack_scenarios([
+        cm.Scenario(workload=wl.MLPERF[n]) for n in SUITE_WORKLOADS])
+    dps = ps.random_design(jax.random.PRNGKey(SUITE_DESIGN_SEED),
+                           (len(SUITE_WORKLOADS),))
+    res = sa.refine_placement_scenarios(
+        jax.random.PRNGKey(SUITE_KEY_SEED), dps, scen, env_sens, _sa_cfg())
+
+    # --- single design, default calibration --------------------------------
+    dp1 = ps.random_design(jax.random.PRNGKey(SINGLE_DESIGN_SEED))
+    res1 = sa.refine_placement(
+        jax.random.PRNGKey(SINGLE_KEY_SEED), dp1, chipenv.EnvConfig(),
+        _sa_cfg())
+
+    record = {
+        "n_iters": N_ITERS,
+        "record_every": RECORD_EVERY,
+        "suite": {
+            "workloads": list(SUITE_WORKLOADS),
+            "design_seed": SUITE_DESIGN_SEED,
+            "key_seed": SUITE_KEY_SEED,
+            "history": np.asarray(res.history, np.float64).tolist(),
+            "best_reward": np.asarray(res.best_reward, np.float64).tolist(),
+            "canonical_reward": np.asarray(res.canonical_reward,
+                                           np.float64).tolist(),
+            "best_cells": np.asarray(
+                res.best_placement.chiplet_cell).tolist(),
+            "best_hbm_ij": np.asarray(res.best_placement.hbm_ij,
+                                      np.float64).tolist(),
+        },
+        "single": {
+            "design_seed": SINGLE_DESIGN_SEED,
+            "key_seed": SINGLE_KEY_SEED,
+            "history": np.asarray(res1.history, np.float64).tolist(),
+            "best_reward": float(res1.best_reward),
+            "canonical_reward": float(res1.canonical_reward),
+            "best_cells": np.asarray(
+                res1.best_placement.chiplet_cell).tolist(),
+            "best_hbm_ij": np.asarray(res1.best_placement.hbm_ij,
+                                      np.float64).tolist(),
+        },
+    }
+    with open(_OUT, "w") as f:
+        json.dump(record, f)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(_OUT)}")
+    print(f"suite best: {record['suite']['best_reward']}")
+    print(f"single best: {record['single']['best_reward']:.6f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -288,43 +288,37 @@ def footprint_positions(v: ps.DesignValues) -> jnp.ndarray:
 NOP_FIDELITIES = ("auto", "fast", "full")
 
 
-def evaluate(dp: ps.DesignPoint,
-             workload: Workload = GENERIC_WORKLOAD,
-             weights: RewardWeights = RewardWeights(),
-             cfg: hw.HWConfig = hw.DEFAULT_HW,
-             placement: pm.Placement = None,
-             nop_fidelity: str = "auto") -> Metrics:
-    """Evaluate a (batch of) design point(s) -> full PPAC metrics.
+class EvalPrefix(NamedTuple):
+    """Placement-independent intermediates of :func:`evaluate`.
 
-    ``placement`` optionally places every chiplet slot / HBM stack on the
-    16x16 interposer grid; ``None`` uses the canonical Fig.-4 floorplan
-    (row-major chiplets, edge/middle HBM anchors), under which the
-    pairwise-traffic NoP model reproduces the legacy worst-hop numbers
-    exactly. The interposer geometry (die area, package cost) stays keyed
-    to the design's m x n footprint; placement steers the NoP hop/traffic
-    reduction.
-
-    ``nop_fidelity`` statically selects the NoP evaluation tier:
-
-      - ``'auto'`` (default): the closed-form **fast tier**
-        (``placement.nop_stats_fast`` — one 256-cell scan, no per-slot
-        pass, pre-PR-2 throughput) when ``placement`` is None, the full
-        pairwise tier otherwise.
-      - ``'fast'``: force the fast tier; rejects an explicit placement.
-      - ``'full'``: force the full pairwise tier even for the canonical
-        floorplan (materializes the canonical ``Placement``) — the two
-        tiers agree on every NoP figure (tests/test_placement.py).
-
-    With an explicit placement the canonical *baseline* pass (the
-    congestion / per-hop-energy normalizer) always uses the fast tier.
+    Everything up to (but excluding) the NoP tier dispatch: decoded
+    design values, interposer geometry, compute/SRAM sizing, reuse
+    factors, and the canonical mesh edge count. A pure pytree — built
+    once per design by :func:`placement_ctx` and reused across every
+    move evaluation of the placement SA, whose candidates differ only in
+    their ``NoPStats``.
     """
-    if nop_fidelity not in NOP_FIDELITIES:
-        raise ValueError(f"nop_fidelity must be one of {NOP_FIDELITIES}, "
-                         f"got {nop_fidelity!r}")
-    if nop_fidelity == "fast" and placement is not None:
-        raise ValueError(
-            "nop_fidelity='fast' evaluates the canonical floorplan only; "
-            "drop the explicit placement or use 'auto'/'full'")
+
+    v: ps.DesignValues
+    is_lol: jnp.ndarray
+    uses_3d_mem: jnp.ndarray
+    n_dies: jnp.ndarray
+    n_positions: jnp.ndarray
+    mesh_m: jnp.ndarray
+    mesh_n: jnp.ndarray
+    die_area: jnp.ndarray
+    logic_area: jnp.ndarray
+    pes_per_die: jnp.ndarray
+    sram_mb: jnp.ndarray
+    reuse: jnp.ndarray
+    reuse_comm: jnp.ndarray
+    n_hbm: jnp.ndarray
+    n_hbm_2p5d: jnp.ndarray
+    mesh_edges: jnp.ndarray
+
+
+def _eval_prefix(dp: ps.DesignPoint, cfg: hw.HWConfig) -> EvalPrefix:
+    """Decode + geometry + compute sizing (everything placement-free)."""
     v = ps.decode(dp)
     arch = v.arch_type
     is_lol = (arch == ps.ARCH_LOGIC_ON_LOGIC).astype(jnp.float32)   # pairs
@@ -368,25 +362,37 @@ def evaluate(dp: ps.DesignPoint,
     reuse_comm = (reuse_mem if cfg.comm_reuse_systolic
                   else jnp.ones_like(reuse_mem))
 
-    # ---- NoP latency (Eqs. 10-11, pairwise-traffic placement model) -------
     # contention is normalized per link of the canonical m x n fabric (the
     # NoP the design pays for), so sprawling a placement cannot mint links
     mesh_edges = m * (n - 1.0) + n * (m - 1.0)
-    if placement is None and nop_fidelity != "full":
-        # fast tier: closed-form canonical stats, no Placement materialized
-        nop = pm.nop_stats_fast(m, n, n_positions, v.hbm_mask, arch,
-                                mesh_edges)
-        nop_canon = nop             # same object -> congestion exactly 1
-    elif placement is None:
-        placement = pm.canonical(m, n, v.hbm_mask, arch)
-        nop = pm.nop_stats(placement, n_positions, v.hbm_mask, arch,
-                           mesh_edges)
-        nop_canon = nop             # same object -> congestion exactly 1
-    else:
-        nop = pm.nop_stats(placement, n_positions, v.hbm_mask, arch,
-                           mesh_edges)
-        nop_canon = pm.nop_stats_fast(m, n, n_positions, v.hbm_mask, arch,
-                                      mesh_edges)
+    return EvalPrefix(
+        v=v, is_lol=is_lol, uses_3d_mem=uses_3d_mem, n_dies=n_dies,
+        n_positions=n_positions, mesh_m=m, mesh_n=n, die_area=die_area,
+        logic_area=logic_area, pes_per_die=pes_per_die, sram_mb=sram_mb,
+        reuse=reuse, reuse_comm=reuse_comm, n_hbm=n_hbm,
+        n_hbm_2p5d=n_hbm_2p5d, mesh_edges=mesh_edges)
+
+
+def _metrics_from_nop(pre: EvalPrefix, workload: Workload,
+                      weights: RewardWeights, cfg: hw.HWConfig,
+                      nop: pm.NoPStats, nop_canon: pm.NoPStats) -> Metrics:
+    """NoP stats -> full PPAC metric bundle (Eqs. 10-17 suffix).
+
+    The placement-dependent half of :func:`evaluate`: everything the NoP
+    reduction feeds — latency, bandwidth/utilization, throughput, energy,
+    package cost, reward. Shared verbatim between the tiered
+    ``evaluate`` paths and the delta-evaluated placement SA
+    (:func:`reward_from_nop`), so both score a placement identically.
+    """
+    v = pre.v
+    is_lol, uses_3d_mem = pre.is_lol, pre.uses_3d_mem
+    n_dies, n_positions = pre.n_dies, pre.n_positions
+    m, n = pre.mesh_m, pre.mesh_n
+    die_area, n_hbm, n_hbm_2p5d = pre.die_area, pre.n_hbm, pre.n_hbm_2p5d
+    reuse, reuse_comm, pes_per_die = pre.reuse, pre.reuse_comm, pre.pes_per_die
+    logic_area, sram_mb = pre.logic_area, pre.sram_mb
+
+    # ---- NoP latency (Eqs. 10-11, pairwise-traffic placement model) -------
     h_ai = nop.hops_ai_worst
     h_hbm = nop.hops_hbm_worst
     # delivered 2.5D link bandwidth scales with channel load relative to
@@ -528,6 +534,131 @@ def evaluate(dp: ps.DesignPoint,
         pkg_cost=pkg_cost, total_cost=total_cost,
         reward_t=r_t, reward_c=r_c, reward_e=r_e, reward=reward,
     )
+
+
+def evaluate(dp: ps.DesignPoint,
+             workload: Workload = GENERIC_WORKLOAD,
+             weights: RewardWeights = RewardWeights(),
+             cfg: hw.HWConfig = hw.DEFAULT_HW,
+             placement: pm.Placement = None,
+             nop_fidelity: str = "auto") -> Metrics:
+    """Evaluate a (batch of) design point(s) -> full PPAC metrics.
+
+    ``placement`` optionally places every chiplet slot / HBM stack on the
+    16x16 interposer grid; ``None`` uses the canonical Fig.-4 floorplan
+    (row-major chiplets, edge/middle HBM anchors), under which the
+    pairwise-traffic NoP model reproduces the legacy worst-hop numbers
+    exactly. The interposer geometry (die area, package cost) stays keyed
+    to the design's m x n footprint; placement steers the NoP hop/traffic
+    reduction.
+
+    ``nop_fidelity`` statically selects the NoP evaluation tier:
+
+      - ``'auto'`` (default): the closed-form **fast tier**
+        (``placement.nop_stats_fast`` — one 256-cell scan, no per-slot
+        pass, pre-PR-2 throughput) when ``placement`` is None, the full
+        pairwise tier otherwise.
+      - ``'fast'``: force the fast tier; rejects an explicit placement.
+      - ``'full'``: force the full pairwise tier even for the canonical
+        floorplan (materializes the canonical ``Placement``) — the two
+        tiers agree on every NoP figure (tests/test_placement.py).
+
+    With an explicit placement the canonical *baseline* pass (the
+    congestion / per-hop-energy normalizer) always uses the fast tier.
+
+    Cached/delta evaluation: only the **full** pairwise tier can be
+    served from a ``placement.PlacementEvalCache`` — its ``stats`` field
+    is bit-identical to this function's explicit-placement ``nop``, so
+    ``reward_from_nop(placement_ctx(...), cache.stats)`` equals
+    ``evaluate(..., placement=...).reward`` exactly. The **fast** tier
+    is closed-form (no per-slot state exists to cache) and is itself the
+    cached canonical baseline (``PlacementCtx.nop_canon``); ``'auto'``
+    without a placement resolves to the fast tier and therefore cannot
+    consume a cache either.
+    """
+    if nop_fidelity not in NOP_FIDELITIES:
+        raise ValueError(f"nop_fidelity must be one of {NOP_FIDELITIES}, "
+                         f"got {nop_fidelity!r}")
+    if nop_fidelity == "fast" and placement is not None:
+        raise ValueError(
+            "nop_fidelity='fast' evaluates the canonical floorplan only; "
+            "drop the explicit placement or use 'auto'/'full'")
+    pre = _eval_prefix(dp, cfg)
+    v, m, n = pre.v, pre.mesh_m, pre.mesh_n
+    if placement is None and nop_fidelity != "full":
+        # fast tier: closed-form canonical stats, no Placement materialized
+        nop = pm.nop_stats_fast(m, n, pre.n_positions, v.hbm_mask,
+                                v.arch_type, pre.mesh_edges)
+        nop_canon = nop             # same object -> congestion exactly 1
+    elif placement is None:
+        placement = pm.canonical(m, n, v.hbm_mask, v.arch_type)
+        nop = pm.nop_stats(placement, pre.n_positions, v.hbm_mask,
+                           v.arch_type, pre.mesh_edges)
+        nop_canon = nop             # same object -> congestion exactly 1
+    else:
+        nop = pm.nop_stats(placement, pre.n_positions, v.hbm_mask,
+                           v.arch_type, pre.mesh_edges)
+        nop_canon = pm.nop_stats_fast(m, n, pre.n_positions, v.hbm_mask,
+                                      v.arch_type, pre.mesh_edges)
+    return _metrics_from_nop(pre, workload, weights, cfg, nop, nop_canon)
+
+
+class PlacementCtx(NamedTuple):
+    """Placement-independent evaluation state for the delta-evaluated SA.
+
+    Everything :func:`evaluate` computes that a placement move cannot
+    change: the :class:`EvalPrefix`, the scenario (workload + weights),
+    and the fast-tier canonical baseline the congestion / per-hop-energy
+    channels normalize against. Built once per (design, scenario) by
+    :func:`placement_ctx`; each SA step then costs one
+    ``placement.nop_stats_delta`` + :func:`reward_from_nop` instead of a
+    full ``evaluate``.
+    """
+
+    prefix: EvalPrefix
+    workload: Workload
+    weights: RewardWeights
+    nop_canon: pm.NoPStats
+
+
+def placement_ctx(dp: ps.DesignPoint,
+                  workload: Workload = GENERIC_WORKLOAD,
+                  weights: RewardWeights = RewardWeights(),
+                  cfg: hw.HWConfig = hw.DEFAULT_HW) -> PlacementCtx:
+    """Precompute the placement-independent half of :func:`evaluate`."""
+    pre = _eval_prefix(dp, cfg)
+    nop_canon = pm.nop_stats_fast(pre.mesh_m, pre.mesh_n, pre.n_positions,
+                                  pre.v.hbm_mask, pre.v.arch_type,
+                                  pre.mesh_edges)
+    return PlacementCtx(prefix=pre, workload=workload, weights=weights,
+                        nop_canon=nop_canon)
+
+
+def metrics_from_nop(ctx: PlacementCtx, nop: pm.NoPStats,
+                     cfg: hw.HWConfig) -> Metrics:
+    """Full metrics of cached/delta NoP stats under a precomputed ctx.
+
+    ``cfg`` is deliberately required (no ``DEFAULT_HW`` fallback): it
+    MUST be the HWConfig ``ctx`` was built with — a mismatch would
+    silently score the suffix against the wrong calibration while the
+    cached canonical baseline still reflects the right one. With
+    ``nop = placement.nop_stats_cache(...).stats`` (or any chain of
+    ``nop_stats_delta`` updates of it) this equals
+    ``evaluate(dp, ..., placement=...)`` bit-for-bit.
+    """
+    return _metrics_from_nop(ctx.prefix, ctx.workload, ctx.weights, cfg,
+                             nop, ctx.nop_canon)
+
+
+def reward_from_nop(ctx: PlacementCtx, nop: pm.NoPStats,
+                    cfg: hw.HWConfig) -> jnp.ndarray:
+    """Scalar objective of cached/delta NoP stats (the SA hot path).
+
+    ``cfg`` must match the ctx (see :func:`metrics_from_nop`). Only the
+    reward is consumed, so XLA dead-code-eliminates the unused metric
+    branches (die cost, yield, ...) from the compiled SA step.
+    """
+    return metrics_from_nop(ctx, nop, cfg).reward
 
 
 def reward_only(dp: ps.DesignPoint,

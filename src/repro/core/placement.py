@@ -141,6 +141,13 @@ def canonical(m, n, hbm_mask, arch_type) -> Placement:
     return Placement(chiplet_cell=cells, hbm_ij=canonical_anchors(m, n))
 
 
+def _mask_bits(hbm_mask) -> jnp.ndarray:
+    """HBM location mask -> (..., 6) float 0/1 indicator per bit."""
+    mask = jnp.asarray(hbm_mask, jnp.int32)
+    return jnp.stack([(mask >> b) & 1 for b in range(N_HBM)],
+                     axis=-1).astype(jnp.float32)
+
+
 def hbm_floors(hbm_mask, arch_type) -> jnp.ndarray:
     """Per-anchor minimum hop count (..., 6).
 
@@ -179,19 +186,20 @@ def _nearest_stack_cells(hbm_ij, floors, bits):
     return gi, gj, d_cell
 
 
-def nop_stats(placement: Placement, n_positions, hbm_mask,
-              arch_type, mesh_edges=None) -> NoPStats:
-    """Reduce (hop matrix x Fig.-5 traffic) -> worst/mean latency terms.
+def _stats_tail(chiplet_cell, d_cell, d_hbm, n_positions, mesh_edges=None):
+    """Per-slot/per-link reduction shared by the full tier and the delta
+    path: (cells, router distances, per-slot distances) -> NoPStats.
 
-    All arguments may carry an identical batch shape; placement leaves
-    carry it too (before the slot / anchor axes). ``mesh_edges``
-    optionally fixes the contention denominator to a given NoP fabric
-    size (defaults to the spanned region's own edge count).
+    Returns ``(stats, sum_ci, sum_cj)`` — the active-cell coordinate sums
+    are exact in float32 (cells are small integers), so the delta path
+    caches them and serves the profile-guided proposal centroid without
+    re-reducing the slot axis. Every op here matches the pre-delta
+    ``nop_stats`` body exactly; the delta path inherits bit-identical
+    stats from sharing it.
     """
     n_pos = jnp.asarray(n_positions, jnp.float32)
-    mask = jnp.asarray(hbm_mask, jnp.int32)
 
-    ci, cj = cell_ij(placement.chiplet_cell)          # (..., 128)
+    ci, cj = cell_ij(chiplet_cell)                    # (..., 128)
     slot = jnp.arange(MAX_SLOTS, dtype=jnp.float32)
     active = (slot < n_pos[..., None]).astype(jnp.float32)
 
@@ -202,32 +210,22 @@ def nop_stats(placement: Placement, n_positions, hbm_mask,
     j_min = jnp.min(jnp.where(active > 0, cj, _BIG), axis=-1)
     hops_ai_worst = (i_max - i_min) + (j_max - j_min)   # region diameter
 
-    # ---- chiplet -> nearest-HBM hop counts --------------------------------
-    floors = hbm_floors(mask, arch_type)              # (..., 6)
-    bits = jnp.stack([(mask >> b) & 1 for b in range(N_HBM)],
-                     axis=-1).astype(jnp.float32)
-
-    # one fused router scan, then per-slot distances are *gathered* from
-    # it (chiplet cells are integer grid cells) instead of recomputed —
-    # the fast-path fusion of the two-tier NoP refactor.
-    gi, gj, d_cell = _nearest_stack_cells(placement.hbm_ij, floors, bits)
-
-    # per occupied slot: min over placed stacks (the Fig.-5 dataflow pulls
-    # operands from the nearest stack), gathered from the cell scan
-    d_hbm = jnp.take_along_axis(
-        d_cell, jnp.asarray(placement.chiplet_cell, jnp.int32), axis=-1)
     hops_hbm_mean = jnp.sum(active * d_hbm, axis=-1) / jnp.maximum(n_pos, 1.0)
 
     # worst over every router of the spanned region (masked to the
     # bounding box) — the Fig.-4 convention, and the exact-degradation
     # anchor to the legacy model.
+    cell = jnp.arange(N_CELLS, dtype=jnp.float32)
+    gi, gj = jnp.floor(cell / GRID), cell % GRID      # (256,)
     in_box = ((gi >= i_min[..., None]) & (gi <= i_max[..., None])
               & (gj >= j_min[..., None]) & (gj <= j_max[..., None]))
     hops_hbm_worst = jnp.max(jnp.where(in_box, d_cell, -_BIG), axis=-1)
 
     # ---- chiplet-to-chiplet forwarding (broadcast from the centroid) ------
-    cent_i = jnp.sum(active * ci, axis=-1) / jnp.maximum(n_pos, 1.0)
-    cent_j = jnp.sum(active * cj, axis=-1) / jnp.maximum(n_pos, 1.0)
+    sum_ci = jnp.sum(active * ci, axis=-1)
+    sum_cj = jnp.sum(active * cj, axis=-1)
+    cent_i = sum_ci / jnp.maximum(n_pos, 1.0)
+    cent_j = sum_cj / jnp.maximum(n_pos, 1.0)
     d_cent = (jnp.abs(ci - cent_i[..., None])
               + jnp.abs(cj - cent_j[..., None]))
     hops_ai_mean = jnp.sum(active * d_cent, axis=-1) / jnp.maximum(n_pos, 1.0)
@@ -243,10 +241,39 @@ def nop_stats(placement: Placement, n_positions, hbm_mask,
                    + jnp.sum(active * d_cent, axis=-1))
     link_contention = stream_hops / jnp.maximum(edges, 1.0)
 
-    return NoPStats(hops_ai_worst=hops_ai_worst, hops_ai_mean=hops_ai_mean,
-                    hops_hbm_worst=hops_hbm_worst, hops_hbm_mean=hops_hbm_mean,
-                    link_contention=link_contention,
-                    region_edges=region_edges)
+    stats = NoPStats(hops_ai_worst=hops_ai_worst, hops_ai_mean=hops_ai_mean,
+                     hops_hbm_worst=hops_hbm_worst,
+                     hops_hbm_mean=hops_hbm_mean,
+                     link_contention=link_contention,
+                     region_edges=region_edges)
+    return stats, sum_ci, sum_cj
+
+
+def nop_stats(placement: Placement, n_positions, hbm_mask,
+              arch_type, mesh_edges=None) -> NoPStats:
+    """Reduce (hop matrix x Fig.-5 traffic) -> worst/mean latency terms.
+
+    All arguments may carry an identical batch shape; placement leaves
+    carry it too (before the slot / anchor axes). ``mesh_edges``
+    optionally fixes the contention denominator to a given NoP fabric
+    size (defaults to the spanned region's own edge count).
+    """
+    mask = jnp.asarray(hbm_mask, jnp.int32)
+    floors = hbm_floors(mask, arch_type)              # (..., 6)
+    bits = _mask_bits(mask)
+
+    # one fused router scan, then per-slot distances are *gathered* from
+    # it (chiplet cells are integer grid cells) instead of recomputed —
+    # the fast-path fusion of the two-tier NoP refactor.
+    _, _, d_cell = _nearest_stack_cells(placement.hbm_ij, floors, bits)
+
+    # per occupied slot: min over placed stacks (the Fig.-5 dataflow pulls
+    # operands from the nearest stack), gathered from the cell scan
+    d_hbm = jnp.take_along_axis(
+        d_cell, jnp.asarray(placement.chiplet_cell, jnp.int32), axis=-1)
+    stats, _, _ = _stats_tail(placement.chiplet_cell, d_cell, d_hbm,
+                              n_positions, mesh_edges)
+    return stats
 
 
 def nop_stats_fast(m, n, n_positions, hbm_mask, arch_type,
@@ -268,8 +295,7 @@ def nop_stats_fast(m, n, n_positions, hbm_mask, arch_type,
 
     anchors = canonical_anchors(m, n)                 # (..., 6, 2)
     floors = hbm_floors(mask, arch_type)              # (..., 6)
-    bits = jnp.stack([(mask >> b) & 1 for b in range(N_HBM)],
-                     axis=-1).astype(jnp.float32)
+    bits = _mask_bits(mask)
     gi, gj, d_cell = _nearest_stack_cells(anchors, floors, bits)
 
     mb, nb, pb = m[..., None], n[..., None], n_pos[..., None]
@@ -373,31 +399,41 @@ def random_hbm_anchor(key, m, n):
     return jnp.stack([i, j], axis=-1)
 
 
-def _active_centroid(chiplet_cell, n_positions):
-    """(i, j) centroid of the active slots' cells. Batch-generic."""
+def _active_centroid(chiplet_cell, n_positions, cell_sums=None):
+    """(i, j) centroid of the active slots' cells. Batch-generic.
+
+    ``cell_sums`` optionally supplies precomputed ``(sum_ci, sum_cj)``
+    active-coordinate sums (e.g. from a ``PlacementEvalCache``) — cells
+    are small integers, so the sums are exact in float32 and the cached
+    value is bit-identical to re-reducing the slot axis here.
+    """
     n_pos = jnp.asarray(n_positions, jnp.float32)
-    ci, cj = cell_ij(chiplet_cell)
-    slot = jnp.arange(MAX_SLOTS, dtype=jnp.float32)
-    active = (slot < n_pos[..., None]).astype(jnp.float32)
     inv = 1.0 / jnp.maximum(n_pos, 1.0)
-    return (jnp.sum(active * ci, axis=-1) * inv,
-            jnp.sum(active * cj, axis=-1) * inv)
+    if cell_sums is None:
+        ci, cj = cell_ij(chiplet_cell)
+        slot = jnp.arange(MAX_SLOTS, dtype=jnp.float32)
+        active = (slot < n_pos[..., None]).astype(jnp.float32)
+        cell_sums = (jnp.sum(active * ci, axis=-1),
+                     jnp.sum(active * cj, axis=-1))
+    return cell_sums[0] * inv, cell_sums[1] * inv
 
 
-def traffic_attractor(placement: Placement, n_positions, hbm_mask):
+def traffic_attractor(placement: Placement, n_positions, hbm_mask,
+                      cell_sums=None):
     """(i, j) of the placement's traffic centroid.
 
     The Fig.-5 dataflow pulls 4 operand streams from the nearest HBM
     stack and fans 1 forwarded stream out from the chiplet centroid, so
     the traffic-optimal neighbourhood is between the active-slot centroid
     and the placed stack nearest to it — this returns their midpoint.
-    Batch-generic on all arguments.
+    Batch-generic on all arguments. ``cell_sums`` as in
+    :func:`_active_centroid`.
     """
-    cent_i, cent_j = _active_centroid(placement.chiplet_cell, n_positions)
+    cent_i, cent_j = _active_centroid(placement.chiplet_cell, n_positions,
+                                      cell_sums)
 
     mask = jnp.asarray(hbm_mask, jnp.int32)
-    bits = jnp.stack([(mask >> b) & 1 for b in range(N_HBM)],
-                     axis=-1).astype(jnp.float32)
+    bits = _mask_bits(mask)
     d = (jnp.abs(placement.hbm_ij[..., 0] - cent_i[..., None])
          + jnp.abs(placement.hbm_ij[..., 1] - cent_j[..., None]))
     b = jnp.argmin(jnp.where(bits > 0, d, _BIG), axis=-1)
@@ -409,27 +445,31 @@ def traffic_attractor(placement: Placement, n_positions, hbm_mask):
 
 
 def guided_cell(key, placement: Placement, n_positions, hbm_mask, m, n,
-                sigma=1.25):
+                sigma=1.25, cell_sums=None):
     """Profile-guided relocate target: a cell near the traffic attractor.
 
     Gaussian jitter (``sigma`` in hops) around :func:`traffic_attractor`,
     rounded and clipped to the m x n footprint box. Unbatched (SA vmaps).
+    ``cell_sums`` as in :func:`_active_centroid`.
     """
-    ai, aj = traffic_attractor(placement, n_positions, hbm_mask)
+    ai, aj = traffic_attractor(placement, n_positions, hbm_mask, cell_sums)
     di, dj = sigma * jax.random.normal(key, (2,))
     i = jnp.clip(jnp.round(ai + di), 0.0, m - 1.0).astype(jnp.int32)
     j = jnp.clip(jnp.round(aj + dj), 0.0, n - 1.0).astype(jnp.int32)
     return i * GRID + j
 
 
-def guided_anchor(key, placement: Placement, n_positions, m, n, sigma=1.25):
+def guided_anchor(key, placement: Placement, n_positions, m, n, sigma=1.25,
+                  cell_sums=None):
     """Profile-guided HBM re-anchor: near the active-chiplet centroid.
 
     A stack serves every chiplet, so its traffic-optimal anchor tracks
     the centroid of the occupied cells (continuous coordinates, clipped
     to the legal [-1, m] x [-1, n] band). Unbatched (SA vmaps).
+    ``cell_sums`` as in :func:`_active_centroid`.
     """
-    cent_i, cent_j = _active_centroid(placement.chiplet_cell, n_positions)
+    cent_i, cent_j = _active_centroid(placement.chiplet_cell, n_positions,
+                                      cell_sums)
     di, dj = sigma * jax.random.normal(key, (2,))
     i = jnp.clip(cent_i + di, -1.0, m)
     j = jnp.clip(cent_j + dj, -1.0, n)
@@ -439,12 +479,183 @@ def guided_anchor(key, placement: Placement, n_positions, m, n, sigma=1.25):
 def select_placed_bit(key, hbm_mask):
     """Uniformly choose one *set* bit of the HBM mask (for SA moves)."""
     mask = jnp.asarray(hbm_mask, jnp.int32)
-    bits = jnp.stack([(mask >> b) & 1 for b in range(N_HBM)],
-                     axis=-1).astype(jnp.float32)
+    bits = _mask_bits(mask)
     n_set = jnp.maximum(jnp.sum(bits, axis=-1), 1.0)
     k = jnp.floor(jax.random.uniform(key) * n_set) + 1.0    # 1..n_set
     cum = jnp.cumsum(bits, axis=-1)
     return jnp.argmax((cum >= k).astype(jnp.int32), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Delta evaluation (incremental NoP stats for the placement SA inner loop)
+# ---------------------------------------------------------------------------
+
+class PlacementMove(NamedTuple):
+    """One SA/env placement mutation, as data (ISSUE-4 tentpole).
+
+    ``kind`` selects the branch: 0 relocates/swaps chiplet slot ``slot``
+    to cell ``cell`` (exact :func:`relocate_chiplet` semantics, slot
+    reduced mod n_positions, occupant swapped out), 1 re-anchors HBM
+    stack ``hbm`` at the continuous coordinate ``anchor``. The unused
+    half of the move is ignored. Unbatched (the SA chain vmaps).
+    """
+
+    kind: jnp.ndarray       # () int32: 0 = chiplet move, 1 = HBM re-anchor
+    slot: jnp.ndarray       # () int32
+    cell: jnp.ndarray       # () int32 target cell id
+    hbm: jnp.ndarray        # () int32 stack bit
+    anchor: jnp.ndarray     # (2,) float32 target anchor (i, j)
+
+
+class PlacementEvalCache(NamedTuple):
+    """Cached per-slot / per-link state of one full NoP evaluation.
+
+    Carried through the placement-SA ``lax.scan`` so a candidate move is
+    scored by *delta* — only the state the move touches is recomputed:
+
+      - ``d_cell``: the hop row reduced over the placed stacks (nearest
+        placed-stack distance per router of the 16x16 grid) — the full
+        tier's expensive six-anchor scan. A chiplet move reuses it
+        verbatim; only an HBM re-anchor rebuilds it.
+      - ``d_hbm``: the per-slot gather of ``d_cell`` (each slot's operand
+        hop count — the per-slot latency/energy contribution).
+      - ``sum_ci``/``sum_cj``: active-cell coordinate sums (exact in
+        float32 — integer-valued), serving the profile-guided proposal
+        centroid without re-reducing the slot axis.
+      - ``stats``: the current placement's :class:`NoPStats` (incl. the
+        per-link contention the congestion channel reads).
+
+    Deliberately O(cells), not O(stacks x cells): an earlier fat variant
+    cached all six per-stack rows, but selecting/carrying a (6, 256)
+    array per accept cost more memory traffic than the one fused scan it
+    saved. Every field is reduced with the same ops as a fresh
+    :func:`nop_stats`, so cached and recomputed stats agree bit-for-bit
+    (the differential-oracle contract of tests/test_placement_delta.py).
+    """
+
+    placement: Placement
+    d_cell: jnp.ndarray         # (N_CELLS,)
+    d_hbm: jnp.ndarray          # (MAX_SLOTS,)
+    sum_ci: jnp.ndarray         # ()
+    sum_cj: jnp.ndarray         # ()
+    stats: NoPStats
+
+
+def nop_stats_cache(placement: Placement, n_positions, hbm_mask,
+                    arch_type, mesh_edges=None) -> PlacementEvalCache:
+    """Full evaluation that also returns the cached per-slot/per-link
+    state :func:`nop_stats_delta` updates incrementally.
+
+    ``cache.stats`` equals ``nop_stats(placement, ...)`` bit-for-bit.
+    Unbatched (vmap for batches).
+    """
+    mask = jnp.asarray(hbm_mask, jnp.int32)
+    floors = hbm_floors(mask, arch_type)
+    bits = _mask_bits(mask)
+    _, _, d_cell = _nearest_stack_cells(placement.hbm_ij, floors, bits)
+    d_hbm = jnp.take_along_axis(
+        d_cell, jnp.asarray(placement.chiplet_cell, jnp.int32), axis=-1)
+    stats, sum_ci, sum_cj = _stats_tail(placement.chiplet_cell, d_cell,
+                                        d_hbm, n_positions, mesh_edges)
+    return PlacementEvalCache(placement=placement, d_cell=d_cell,
+                              d_hbm=d_hbm, sum_ci=sum_ci, sum_cj=sum_cj,
+                              stats=stats)
+
+
+def apply_move(placement: Placement, move: PlacementMove,
+               n_positions) -> Placement:
+    """Apply one :class:`PlacementMove` (the oracle-side mirror of what
+    :func:`nop_stats_delta` does to its cached placement). Unbatched."""
+    cells_c = relocate_chiplet(placement, move.slot, move.cell,
+                               n_positions).chiplet_cell
+    b = jnp.clip(jnp.asarray(move.hbm, jnp.int32), 0, N_HBM - 1)
+    hbm_h = placement.hbm_ij.at[b].set(
+        jnp.asarray(move.anchor, jnp.float32))
+    is_hbm = jnp.asarray(move.kind, jnp.int32) > 0
+    return Placement(
+        chiplet_cell=jnp.where(is_hbm, placement.chiplet_cell, cells_c),
+        hbm_ij=jnp.where(is_hbm, hbm_h, placement.hbm_ij))
+
+
+def nop_stats_delta(cache: PlacementEvalCache, move: PlacementMove,
+                    n_positions, hbm_mask, arch_type, mesh_edges=None,
+                    move_kinds: str = "mixed") -> PlacementEvalCache:
+    """Post-move NoP stats by incremental update — O(slots) per move.
+
+    A chiplet relocate/swap leaves the router scan ``d_cell`` untouched:
+    only the moved/swapped slots' gathered distances and the slot-axis
+    reductions change, so the six-anchor row scan — the full tier's
+    dominant cost — is skipped entirely. An HBM re-anchor rebuilds
+    ``d_cell`` with one fused :func:`_nearest_stack_cells` scan over the
+    candidate anchors; the slot geometry is reused. Both branches end in
+    the shared :func:`_stats_tail`, so the returned ``cache.stats``
+    equals a fresh ``nop_stats(apply_move(...), ...)`` bit-for-bit while
+    also — via ``costmodel.reward_from_nop`` — skipping the whole
+    placement-independent cost-model prefix and the per-move canonical
+    baseline.
+
+    ``move_kinds`` statically prunes the dead branch: ``'chiplet'``
+    promises ``move.kind == 0`` for every move (no anchor scan is even
+    traced — the cheapest path, used by ``PlacementSAConfig(p_hbm=0)``
+    relocation-only annealing), ``'hbm'`` promises ``kind == 1``, and
+    ``'mixed'`` (default) handles both branchlessly. Unbatched (the SA
+    chain vmaps).
+    """
+    if move_kinds not in ("mixed", "chiplet", "hbm"):
+        raise ValueError(f"move_kinds must be 'mixed', 'chiplet' or "
+                         f"'hbm', got {move_kinds!r}")
+    plc = cache.placement
+    mask = jnp.asarray(hbm_mask, jnp.int32)
+    is_hbm = jnp.asarray(move.kind, jnp.int32) > 0
+
+    # -- chiplet relocate/swap branch: cells change, d_cell reused ---------
+    if move_kinds != "hbm":
+        cells_c = relocate_chiplet(plc, move.slot, move.cell,
+                                   n_positions).chiplet_cell
+
+    # -- HBM re-anchor branch: anchors change, cells reused ----------------
+    # (one-hot select, not an .at[] scatter: a vmapped dynamic-index
+    # scatter is a serial gather/scatter pair on CPU XLA and was slower
+    # than the full recompute it replaced; the select vectorizes)
+    if move_kinds != "chiplet":
+        floors = hbm_floors(mask, arch_type)
+        bits = _mask_bits(mask)
+        b = jnp.clip(jnp.asarray(move.hbm, jnp.int32), 0, N_HBM - 1)
+        onehot = jnp.arange(N_HBM, dtype=jnp.int32) == b      # (6,)
+        anchor = jnp.asarray(move.anchor, jnp.float32)
+        hbm_h = jnp.where(onehot[..., None], anchor[..., None, :],
+                          plc.hbm_ij)
+        _, _, d_cell_h = _nearest_stack_cells(hbm_h, floors, bits)
+
+    # -- branchless select + shared reduction tail -------------------------
+    if move_kinds == "chiplet":
+        cells_new, hbm_new, d_cell_new = cells_c, plc.hbm_ij, cache.d_cell
+    elif move_kinds == "hbm":
+        cells_new, hbm_new, d_cell_new = plc.chiplet_cell, hbm_h, d_cell_h
+    else:
+        cells_new = jnp.where(is_hbm, plc.chiplet_cell, cells_c)
+        hbm_new = jnp.where(is_hbm, hbm_h, plc.hbm_ij)
+        d_cell_new = jnp.where(is_hbm, d_cell_h, cache.d_cell)
+    d_hbm_new = jnp.take_along_axis(
+        d_cell_new, jnp.asarray(cells_new, jnp.int32), axis=-1)
+    stats, sum_ci, sum_cj = _stats_tail(cells_new, d_cell_new, d_hbm_new,
+                                        n_positions, mesh_edges)
+    return PlacementEvalCache(
+        placement=Placement(chiplet_cell=cells_new, hbm_ij=hbm_new),
+        d_cell=d_cell_new, d_hbm=d_hbm_new,
+        sum_ci=sum_ci, sum_cj=sum_cj, stats=stats)
+
+
+def commit_move(cache: PlacementEvalCache, cand: PlacementEvalCache,
+                accept) -> PlacementEvalCache:
+    """Accept/reject select: keep the candidate cache iff ``accept``.
+
+    A plain elementwise select over the O(cells) cache pytree — the SA
+    step's only per-accept cost. Unbatched (vmap for batches).
+    """
+    acc = jnp.asarray(accept)
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(acc, a, b), cand, cache)
 
 
 # ---------------------------------------------------------------------------

@@ -99,24 +99,47 @@ def coordinate_refine(flat: jnp.ndarray, env_cfg: chipenv.EnvConfig,
 
 @functools.partial(jax.jit, static_argnums=(2, 3))
 def _sweep_all_scenarios(flats, scenarios: cm.Scenario, hw_cfg,
-                         nop_fidelity: str = "auto"):
+                         nop_fidelity: str = "auto", placements=None):
     """ONE full coordinate sweep for every scenario winner in lockstep.
 
     ``flats`` is (S, 14) — winner i refined under scenario i. For each of
     the 14 dims the whole Table-1 grid is evaluated for *all* scenarios in
     a single (S, head) vmapped batch; no host loop over winners.
+    ``placements`` (optional, leading axis S) scores every candidate
+    design under scenario i's *refined floorplan* instead of the
+    canonical one — the post-placement design re-sweep of
+    ``scenario.run_suite`` (placement-aware candidates share the
+    fast-tier canonical baseline exactly like ``costmodel.evaluate``).
     Returns (flats', rewards') after one sweep.
     """
-    def reward_sc(c, s):
-        return cm.reward_only(ps.from_flat(c), s.workload, s.weights, hw_cfg,
-                              nop_fidelity=nop_fidelity)
+    # an explicit placement needs the full pairwise tier (mirrors env.step)
+    fid = ("auto" if placements is not None and nop_fidelity == "fast"
+           else nop_fidelity)
+    # a placement annealed for design i is only collision-free over that
+    # design's active slots; a candidate with MORE footprint slots would
+    # activate stale (possibly overlapping) cells and mint a bogus
+    # 0-hop reward — reject any candidate that grows the footprint
+    n_pos_cap = (None if placements is None else
+                 cm.footprint_positions(ps.decode(ps.from_flat(flats))))
 
-    cur_r = jax.vmap(reward_sc)(flats, scenarios)                 # (S,)
+    def reward_sc(c, s, p, cap):
+        r = cm.reward_only(ps.from_flat(c), s.workload, s.weights, hw_cfg,
+                           p, nop_fidelity=fid)
+        if cap is None:
+            return r
+        n_pos_c = cm.footprint_positions(ps.decode(ps.from_flat(c)))
+        return jnp.where(n_pos_c <= cap, r, jnp.float32(-1e30))
+
+    p_axis = None if placements is None else 0
+    cur_r = jax.vmap(reward_sc, in_axes=(0, 0, p_axis, p_axis))(
+        flats, scenarios, placements, n_pos_cap)                  # (S,)
     for dim, head in enumerate(ps.HEAD_SIZES):
         cand = jnp.tile(flats[:, None, :], (1, head, 1))          # (S, H, 14)
         cand = cand.at[:, :, dim].set(jnp.arange(head, dtype=jnp.int32))
-        rewards = jax.vmap(lambda c, s: jax.vmap(
-            lambda cc: reward_sc(cc, s))(c))(cand, scenarios)     # (S, H)
+        rewards = jax.vmap(lambda c, s, p, cap: jax.vmap(
+            lambda cc: reward_sc(cc, s, p, cap))(c),
+            in_axes=(0, 0, p_axis, p_axis))(
+                cand, scenarios, placements, n_pos_cap)           # (S, H)
         idx = jnp.argmax(rewards, axis=1)
         best_r = jnp.take_along_axis(rewards, idx[:, None], axis=1)[:, 0]
         best_c = jnp.take_along_axis(
@@ -129,10 +152,17 @@ def _sweep_all_scenarios(flats, scenarios: cm.Scenario, hw_cfg,
 
 def coordinate_refine_batch(flats, scenarios: cm.Scenario,
                             env_cfg: chipenv.EnvConfig,
-                            max_sweeps: int = 8):
+                            max_sweeps: int = 8, placements=None):
     """Batched :func:`coordinate_refine`: all S scenario winners sweep as
     one jitted vmapped program per sweep, stopping when no winner moves.
 
+    With ``placements`` (a ``placement.Placement`` batch, leading axis S)
+    the lockstep sweep co-optimizes the *design* grid under each
+    winner's refined floorplan — candidate rewards are evaluated with
+    the explicit placement threaded through ``costmodel.evaluate``.
+    Candidates that *grow* the footprint are rejected in-place (the
+    annealed placement is only collision-free over the slots the design
+    it was annealed for actually uses); shrinking stays legal.
     Returns (flats (S, 14) int32, rewards (S,) float) as numpy arrays.
     """
     flats = jnp.asarray(flats, jnp.int32)
@@ -140,7 +170,8 @@ def coordinate_refine_batch(flats, scenarios: cm.Scenario,
     for _ in range(max_sweeps):
         new_flats, rewards = _sweep_all_scenarios(flats, scenarios,
                                                   env_cfg.hw,
-                                                  env_cfg.nop_fidelity)
+                                                  env_cfg.nop_fidelity,
+                                                  placements)
         if bool(jnp.all(new_flats == flats)):
             flats = new_flats
             break

@@ -1,0 +1,473 @@
+"""Delta-evaluated placement SA: oracle-backed differential suite (ISSUE 4).
+
+The contract under test: ``placement.nop_stats_delta`` (incremental,
+O(slots)-per-move) must match a fresh ``placement.nop_stats`` recompute on
+every stats/metrics field for every move kind — swap, relocate, HBM
+re-anchor — including 50-move chains; and ``sa.refine_placement`` with
+``delta_eval`` must reproduce the PR-3 full-recompute accept/reject
+trajectory bit-for-bit (recorded oracle in tests/data_sa_trajectory.json,
+re-recordable via scripts/record_sa_trajectory.py).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core import env as chipenv
+from repro.core import hw_constants as hw
+from repro.core import params as ps
+from repro.core import placement as pm
+from repro.core import workload as wl
+from repro.sa import annealing as sa
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def _design_geometry(seed):
+    dp = ps.random_design(jax.random.PRNGKey(seed))
+    v = ps.decode(dp)
+    n_pos = cm.footprint_positions(v)
+    m, n = cm.mesh_dims(n_pos)
+    return dp, v, n_pos, m, n
+
+
+def _random_placement(rng, n_pos):
+    """Collision-free random placement (mirrors test_properties)."""
+    cells = rng.choice(pm.N_CELLS, size=n_pos, replace=False)
+    cells = np.concatenate(
+        [cells, rng.randint(0, pm.N_CELLS, pm.MAX_SLOTS - n_pos)])
+    hbm_ij = rng.uniform(-1.0, 16.0, (pm.N_HBM, 2)).astype(np.float32)
+    return pm.Placement(chiplet_cell=jnp.asarray(cells, jnp.int32),
+                        hbm_ij=jnp.asarray(hbm_ij))
+
+
+def _move(kind, slot=0, cell=0, hbm=0, anchor=(0.0, 0.0)):
+    return pm.PlacementMove(kind=jnp.int32(kind), slot=jnp.int32(slot),
+                            cell=jnp.int32(cell), hbm=jnp.int32(hbm),
+                            anchor=jnp.asarray(anchor, jnp.float32))
+
+
+def _moves_of_each_kind(rng, cells, n_pos):
+    """One swap, one relocate-to-free-cell, one re-anchor move."""
+    act = int(n_pos)
+    occupied = set(int(c) for c in cells[:act])
+    free = [c for c in range(pm.N_CELLS) if c not in occupied]
+    s = rng.randint(0, act)
+    swap_tgt = int(cells[rng.randint(0, act)])          # occupied -> swap
+    reloc_tgt = int(free[rng.randint(0, len(free))])    # free -> relocate
+    anchor = rng.uniform(-1.0, 16.0, 2)
+    return {
+        "swap": _move(0, slot=s, cell=swap_tgt),
+        "relocate": _move(0, slot=s, cell=reloc_tgt),
+        "reanchor": _move(1, hbm=rng.randint(0, pm.N_HBM), anchor=anchor),
+    }
+
+
+class TestDeltaOracle:
+    """nop_stats_delta == fresh nop_stats on every field, all move kinds."""
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_single_moves_all_kinds(self, seed):
+        rng = np.random.RandomState(seed)
+        dp, v, n_pos, m, n = _design_geometry(seed)
+        mesh_edges = m * (n - 1.0) + n * (m - 1.0)
+        plc = _random_placement(rng, int(n_pos))
+        cache = pm.nop_stats_cache(plc, n_pos, v.hbm_mask, v.arch_type,
+                                   mesh_edges)
+        for name, mv in _moves_of_each_kind(
+                rng, np.asarray(plc.chiplet_cell), n_pos).items():
+            cand = pm.nop_stats_delta(cache, mv, n_pos, v.hbm_mask,
+                                      v.arch_type, mesh_edges)
+            applied = pm.apply_move(plc, mv, n_pos)
+            np.testing.assert_array_equal(
+                np.asarray(cand.placement.chiplet_cell),
+                np.asarray(applied.chiplet_cell), err_msg=name)
+            np.testing.assert_array_equal(
+                np.asarray(cand.placement.hbm_ij),
+                np.asarray(applied.hbm_ij), err_msg=name)
+            fresh = pm.nop_stats(applied, n_pos, v.hbm_mask, v.arch_type,
+                                 mesh_edges)
+            for field in pm.NoPStats._fields:
+                np.testing.assert_allclose(
+                    float(getattr(cand.stats, field)),
+                    float(getattr(fresh, field)),
+                    rtol=1e-5, atol=1e-5, err_msg=f"{name}:{field}")
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_chained_50_moves(self, seed):
+        """Apply 50 random moves through the cache; after EVERY move the
+        cached stats must equal a fresh full recompute to 1e-5."""
+        rng = np.random.RandomState(100 + seed)
+        dp, v, n_pos, m, n = _design_geometry(seed)
+        mesh_edges = m * (n - 1.0) + n * (m - 1.0)
+        plc = _random_placement(rng, int(n_pos))
+        cache = pm.nop_stats_cache(plc, n_pos, v.hbm_mask, v.arch_type,
+                                   mesh_edges)
+
+        @jax.jit
+        def delta_step(cache, mv):
+            cand = pm.nop_stats_delta(cache, mv, n_pos, v.hbm_mask,
+                                      v.arch_type, mesh_edges)
+            return pm.commit_move(cache, cand, True)
+
+        @jax.jit
+        def fresh_stats(placement):
+            return pm.nop_stats(placement, n_pos, v.hbm_mask, v.arch_type,
+                                mesh_edges)
+
+        for step in range(50):
+            mv = _move(kind=rng.randint(2), slot=rng.randint(pm.MAX_SLOTS),
+                       cell=rng.randint(pm.N_CELLS),
+                       hbm=rng.randint(pm.N_HBM),
+                       anchor=rng.uniform(-1.0, 16.0, 2))
+            cache = delta_step(cache, mv)
+            plc = pm.apply_move(plc, mv, n_pos)
+            np.testing.assert_array_equal(
+                np.asarray(cache.placement.chiplet_cell),
+                np.asarray(plc.chiplet_cell), err_msg=f"step {step}")
+            fresh = fresh_stats(plc)
+            for field in pm.NoPStats._fields:
+                np.testing.assert_allclose(
+                    float(getattr(cache.stats, field)),
+                    float(getattr(fresh, field)), rtol=1e-5, atol=1e-5,
+                    err_msg=f"step {step}: {field}")
+
+    def test_commit_reject_is_identity(self):
+        rng = np.random.RandomState(7)
+        dp, v, n_pos, m, n = _design_geometry(7)
+        plc = _random_placement(rng, int(n_pos))
+        cache = pm.nop_stats_cache(plc, n_pos, v.hbm_mask, v.arch_type)
+        mv = _move(1, hbm=2, anchor=(3.5, -0.5))
+        cand = pm.nop_stats_delta(cache, mv, n_pos, v.hbm_mask, v.arch_type)
+        kept = pm.commit_move(cache, cand, False)
+        for a, b in zip(jax.tree_util.tree_leaves(kept),
+                        jax.tree_util.tree_leaves(cache)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_move_kinds_specialization(self):
+        """The statically pruned 'chiplet'/'hbm' paths equal 'mixed' for
+        pinned-kind moves; an unknown mode raises."""
+        rng = np.random.RandomState(9)
+        dp, v, n_pos, m, n = _design_geometry(9)
+        plc = _random_placement(rng, int(n_pos))
+        cache = pm.nop_stats_cache(plc, n_pos, v.hbm_mask, v.arch_type)
+        moves = _moves_of_each_kind(rng, np.asarray(plc.chiplet_cell), n_pos)
+        for name, mode in (("relocate", "chiplet"), ("reanchor", "hbm")):
+            a = pm.nop_stats_delta(cache, moves[name], n_pos, v.hbm_mask,
+                                   v.arch_type, move_kinds=mode)
+            b = pm.nop_stats_delta(cache, moves[name], n_pos, v.hbm_mask,
+                                   v.arch_type, move_kinds="mixed")
+            for field in pm.NoPStats._fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(a.stats, field)),
+                    np.asarray(getattr(b.stats, field)),
+                    err_msg=f"{mode}:{field}")
+        with pytest.raises(ValueError, match="move_kinds"):
+            pm.nop_stats_delta(cache, moves["swap"], n_pos, v.hbm_mask,
+                               v.arch_type, move_kinds="bogus")
+
+
+class TestDeltaRewardPath:
+    """costmodel.placement_ctx + reward/metrics_from_nop vs evaluate."""
+
+    @pytest.mark.parametrize("seed", [3, 11, 23])
+    def test_metrics_from_nop_matches_evaluate_every_field(self, seed):
+        """Every Metrics field of the cached/delta path equals the
+        explicit-placement evaluate() to 1e-5 (oracle acceptance)."""
+        rng = np.random.RandomState(seed)
+        dp, v, n_pos, m, n = _design_geometry(seed)
+        plc = _random_placement(rng, int(n_pos))
+        ctx = cm.placement_ctx(dp)
+        cache = pm.nop_stats_cache(plc, n_pos, v.hbm_mask, v.arch_type,
+                                   ctx.prefix.mesh_edges)
+        mv = _move(kind=rng.randint(2), slot=rng.randint(pm.MAX_SLOTS),
+                   cell=rng.randint(pm.N_CELLS), hbm=rng.randint(pm.N_HBM),
+                   anchor=rng.uniform(-1.0, 16.0, 2))
+        cand = pm.nop_stats_delta(cache, mv, n_pos, v.hbm_mask,
+                                  v.arch_type, ctx.prefix.mesh_edges)
+        got = cm.metrics_from_nop(ctx, cand.stats, hw.DEFAULT_HW)
+        want = cm.evaluate(dp, placement=pm.apply_move(plc, mv, n_pos))
+        for field in cm.Metrics._fields:
+            np.testing.assert_allclose(
+                np.asarray(getattr(got, field), np.float64),
+                np.asarray(getattr(want, field), np.float64),
+                rtol=1e-5, atol=1e-5, err_msg=field)
+
+    def test_reward_from_nop_is_bitwise_equal(self):
+        """The SA hot path must be *bit*-identical to evaluate().reward
+        (this is what makes the trajectory regression possible)."""
+        rng = np.random.RandomState(31)
+        dp, v, n_pos, m, n = _design_geometry(31)
+        plc = _random_placement(rng, int(n_pos))
+        ctx = cm.placement_ctx(dp)
+        cache = pm.nop_stats_cache(plc, n_pos, v.hbm_mask, v.arch_type,
+                                   ctx.prefix.mesh_edges)
+        r_ctx = cm.reward_from_nop(ctx, cache.stats, hw.DEFAULT_HW)
+        r_full = cm.evaluate(dp, placement=plc).reward
+        assert float(r_ctx) == float(r_full)
+
+    def test_cache_stats_equal_nop_stats_bitwise(self):
+        rng = np.random.RandomState(37)
+        dp, v, n_pos, m, n = _design_geometry(37)
+        mesh_edges = m * (n - 1.0) + n * (m - 1.0)
+        plc = _random_placement(rng, int(n_pos))
+        cache = pm.nop_stats_cache(plc, n_pos, v.hbm_mask, v.arch_type,
+                                   mesh_edges)
+        fresh = pm.nop_stats(plc, n_pos, v.hbm_mask, v.arch_type, mesh_edges)
+        for field in pm.NoPStats._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(cache.stats, field)),
+                np.asarray(getattr(fresh, field)), err_msg=field)
+
+
+class TestSATrajectoryRegression:
+    """refine_placement(delta_eval) == the recorded PR-3 trajectory."""
+
+    @pytest.fixture(scope="class")
+    def ref(self):
+        with open(os.path.join(_HERE, "data_sa_trajectory.json")) as f:
+            return json.load(f)
+
+    def _suite_run(self, ref, delta):
+        from repro.optimizer import scenario as suite
+        env_cfg = chipenv.EnvConfig(hw=suite.PLACEMENT_SENSITIVE_HW)
+        scen = cm.stack_scenarios([
+            cm.Scenario(workload=wl.MLPERF[n])
+            for n in ref["suite"]["workloads"]])
+        dps = ps.random_design(
+            jax.random.PRNGKey(ref["suite"]["design_seed"]),
+            (len(ref["suite"]["workloads"]),))
+        cfg = sa.PlacementSAConfig(n_iters=ref["n_iters"],
+                                   record_every=ref["record_every"],
+                                   delta_eval=delta)
+        return sa.refine_placement_scenarios(
+            jax.random.PRNGKey(ref["suite"]["key_seed"]), dps, scen,
+            env_cfg, cfg)
+
+    @pytest.mark.parametrize("delta", [True, False])
+    def test_suite_trajectory_bit_for_bit(self, ref, delta):
+        res = self._suite_run(ref, delta)
+        np.testing.assert_array_equal(
+            np.asarray(res.history, np.float64),
+            np.asarray(ref["suite"]["history"]))
+        np.testing.assert_array_equal(
+            np.asarray(res.best_reward, np.float64),
+            np.asarray(ref["suite"]["best_reward"]))
+        np.testing.assert_array_equal(
+            np.asarray(res.best_placement.chiplet_cell),
+            np.asarray(ref["suite"]["best_cells"]))
+        np.testing.assert_array_equal(
+            np.asarray(res.best_placement.hbm_ij, np.float64),
+            np.asarray(ref["suite"]["best_hbm_ij"]))
+
+    @pytest.mark.parametrize("delta", [True, False])
+    def test_single_trajectory_bit_for_bit(self, ref, delta):
+        dp = ps.random_design(
+            jax.random.PRNGKey(ref["single"]["design_seed"]))
+        cfg = sa.PlacementSAConfig(n_iters=ref["n_iters"],
+                                   record_every=ref["record_every"],
+                                   delta_eval=delta)
+        res = sa.refine_placement(
+            jax.random.PRNGKey(ref["single"]["key_seed"]), dp,
+            chipenv.EnvConfig(), cfg)
+        np.testing.assert_array_equal(
+            np.asarray(res.history, np.float64),
+            np.asarray(ref["single"]["history"]))
+        assert float(res.best_reward) == ref["single"]["best_reward"]
+        np.testing.assert_array_equal(
+            np.asarray(res.best_placement.chiplet_cell),
+            np.asarray(ref["single"]["best_cells"]))
+
+    def test_delta_equals_full_off_protocol(self):
+        """Delta vs full on a protocol the recording never saw (odd
+        iteration count, init_placement, per-phase p_hbm).
+
+        The relocation-only phase stays bit-for-bit. The phases whose
+        candidates exercise the anchor scan + congestion pow inside a
+        *different* fusion context (p_hbm > 0 here, off the pinned
+        protocol) can pick up 1-ulp reward differences from XLA's FMA
+        contraction choices, so they get sanity bounds instead: the
+        result must still dominate the canonical floorplan and land at
+        the full path's best reward to 1%. The strict bit-for-bit
+        contract is pinned by the recorded-trajectory tests above and
+        the bench's trajectories_identical check at its own protocol.
+        """
+        dp = ps.random_design(jax.random.PRNGKey(77))
+        v = ps.decode(dp)
+        n_pos = cm.footprint_positions(v)
+        m, n = cm.mesh_dims(n_pos)
+        init = pm.canonical(m, n, v.hbm_mask, v.arch_type)
+        init = pm.relocate_chiplet(init, 0, pm.N_CELLS - 1, n_pos)
+        for p_hbm in (0.5, 0.0, 1.0):
+            cfgs = [sa.PlacementSAConfig(n_iters=257, record_every=13,
+                                         p_hbm=p_hbm, delta_eval=d)
+                    for d in (True, False)]
+            runs = [sa.refine_placement(jax.random.PRNGKey(5), dp,
+                                        chipenv.EnvConfig(), c,
+                                        init_placement=init)
+                    for c in cfgs]
+            if p_hbm == 0.0:
+                np.testing.assert_array_equal(
+                    np.asarray(runs[0].history),
+                    np.asarray(runs[1].history))
+                np.testing.assert_array_equal(
+                    np.asarray(runs[0].best_placement.chiplet_cell),
+                    np.asarray(runs[1].best_placement.chiplet_cell))
+            else:
+                for r in runs:
+                    assert (float(r.best_reward)
+                            >= float(r.canonical_reward) - 1e-6)
+                np.testing.assert_allclose(
+                    float(runs[0].best_reward), float(runs[1].best_reward),
+                    rtol=1e-2, err_msg=f"p_hbm={p_hbm}")
+
+    @pytest.mark.slow
+    def test_scaled_budget_gain_at_least_pr3(self):
+        """ISSUE-4 satellite: at the rescaled (4x) budget the mean reward
+        gain under the placement-sensitive preset must be >= the PR-3
+        +3.58 recorded baseline (measured +3.69 here).
+
+        The argument is budget monotonicity on the same seeded chains —
+        exact only while the 4000-iter chains reproduce the 1000-iter
+        prefixes bit-for-bit (a different scan length compiles a
+        different program, so an XLA change could flip an ulp and
+        re-route a chain); the small slack absorbs that without letting
+        a real regression through."""
+        import importlib.util
+        spec = importlib.util.spec_from_file_location(
+            "bench_costmodel", os.path.join(
+                _HERE, os.pardir, "benchmarks", "bench_costmodel.py"))
+        bench = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(bench)
+        out = bench._placement_gain_sweep(n_designs=16, n_iters=4000)
+        assert (out["placement-sensitive"]["mean_gain"]
+                >= bench.PR3_GAIN["placement-sensitive"] - 0.05)
+        assert (out["default"]["mean_gain"]
+                >= bench.PR3_GAIN["default"] - 0.05)
+
+
+class TestDeltaAlgebraSeeded:
+    """Deterministic mirror of tests/test_properties.TestDeltaProperties
+    (inverse-move restore, disjoint-move commutation), so the delta
+    algebra stays enforced on containers without `hypothesis`."""
+
+    @staticmethod
+    def _apply(cache, mv, n_pos, v):
+        cand = pm.nop_stats_delta(cache, mv, n_pos, v.hbm_mask, v.arch_type)
+        return pm.commit_move(cache, cand, True)
+
+    def test_inverse_and_commutation(self):
+        for seed in range(8):
+            rng = np.random.RandomState(1000 + seed)
+            dp, v, n_pos, m, n = _design_geometry(seed)
+            act = int(n_pos)
+            plc = _random_placement(rng, act)
+            cache = pm.nop_stats_cache(plc, n_pos, v.hbm_mask, v.arch_type)
+            cells = np.asarray(plc.chiplet_cell)
+            free = np.setdiff1d(np.arange(pm.N_CELLS), cells[:act])
+
+            # inverse chiplet relocate restores the cache exactly
+            s = rng.randint(0, act)
+            mv = _move(0, slot=s, cell=int(free[0]))
+            inv = _move(0, slot=s, cell=int(cells[s]))
+            restored = self._apply(self._apply(cache, mv, n_pos, v),
+                                   inv, n_pos, v)
+            for field in pm.NoPStats._fields:
+                np.testing.assert_allclose(
+                    float(getattr(restored.stats, field)),
+                    float(getattr(cache.stats, field)),
+                    rtol=1e-5, atol=1e-5, err_msg=field)
+            np.testing.assert_array_equal(
+                np.asarray(restored.placement.chiplet_cell), cells)
+
+            # inverse HBM re-anchor restores the cache exactly
+            b = rng.randint(0, pm.N_HBM)
+            old = np.asarray(plc.hbm_ij)[b]
+            mh = _move(1, hbm=b, anchor=rng.uniform(-1.0, 16.0, 2))
+            invh = _move(1, hbm=b, anchor=old)
+            restored = self._apply(self._apply(cache, mh, n_pos, v),
+                                   invh, n_pos, v)
+            for field in pm.NoPStats._fields:
+                np.testing.assert_allclose(
+                    float(getattr(restored.stats, field)),
+                    float(getattr(cache.stats, field)),
+                    rtol=1e-5, atol=1e-5, err_msg=field)
+
+            # disjoint chiplet moves + a chiplet/HBM pair commute
+            if act >= 2 and len(free) >= 2:
+                s1, s2 = rng.choice(act, size=2, replace=False)
+                m1 = _move(0, slot=int(s1), cell=int(free[0]))
+                m2 = _move(0, slot=int(s2), cell=int(free[1]))
+                for ma, mb in ((m1, m2), (m1, mh)):
+                    ab = self._apply(self._apply(cache, ma, n_pos, v),
+                                     mb, n_pos, v)
+                    ba = self._apply(self._apply(cache, mb, n_pos, v),
+                                     ma, n_pos, v)
+                    np.testing.assert_array_equal(
+                        np.asarray(ab.placement.chiplet_cell),
+                        np.asarray(ba.placement.chiplet_cell))
+                    for field in pm.NoPStats._fields:
+                        np.testing.assert_allclose(
+                            float(getattr(ab.stats, field)),
+                            float(getattr(ba.stats, field)),
+                            rtol=1e-5, atol=1e-5, err_msg=field)
+
+
+class TestBudgetRescale:
+    """ISSUE-4: default SA budgets rescaled now that steps are cheap."""
+
+    def test_placement_sa_defaults(self):
+        cfg = sa.PlacementSAConfig()
+        assert cfg.delta_eval is True
+        assert cfg.n_iters == 12_000          # 4x the PR-3 3000
+        assert cfg.record_every == 200        # history length preserved
+        assert cfg.n_iters // cfg.record_every == 3000 // 50
+
+    def test_suite_defaults(self):
+        from repro.optimizer import scenario as suite
+        cfg = suite.SuiteConfig()
+        assert cfg.placement_sa.n_iters == 8_000   # 4x the PR-3 2000
+        assert cfg.placement_sa.delta_eval is True
+        assert cfg.post_placement_sweep is True
+        # the smoke preset stays small
+        assert suite.SMOKE_SUITE.placement_sa.n_iters == 500
+
+
+class TestPlacementAwareRefineBatch:
+    """portfolio.coordinate_refine_batch with refined placements."""
+
+    def test_sweep_with_placements_never_worse(self):
+        from repro.optimizer import portfolio
+        env_cfg = chipenv.EnvConfig()
+        scen = cm.stack_scenarios([
+            cm.Scenario(workload=wl.MLPERF[n])
+            for n in ("resnet50", "bert")])
+        dps = ps.random_design(jax.random.PRNGKey(13), (2,))
+        flats = np.asarray(ps.to_flat(dps), np.int32)
+        pres = sa.refine_placement_scenarios(
+            jax.random.PRNGKey(14), dps, scen, env_cfg,
+            sa.PlacementSAConfig(n_iters=150, record_every=50))
+        placements = pres.best_placement
+        # reward of the ORIGINAL designs under their refined placements
+        base_r = np.asarray(cm.evaluate_scenarios(
+            dps, scen, env_cfg.hw, placements=placements).reward)
+        new_flats, new_r = portfolio.coordinate_refine_batch(
+            flats, scen, env_cfg, max_sweeps=1, placements=placements)
+        assert new_flats.shape == flats.shape
+        assert (new_r >= base_r - 1e-5).all()
+
+    def test_sweep_without_placements_unchanged_signature(self):
+        from repro.optimizer import portfolio
+        env_cfg = chipenv.EnvConfig()
+        scen = cm.stack_scenarios([
+            cm.Scenario(workload=wl.MLPERF["bert"])])
+        flats = np.asarray(ps.to_flat(
+            ps.random_design(jax.random.PRNGKey(15), (1,))), np.int32)
+        new_flats, new_r = portfolio.coordinate_refine_batch(
+            flats, scen, env_cfg, max_sweeps=1)
+        assert new_flats.shape == flats.shape and new_r.shape == (1,)

@@ -153,6 +153,135 @@ class TestNoPProperties:
         np.testing.assert_allclose(r_fast, r_full, rtol=1e-5, atol=1e-4)
 
 
+class TestDeltaProperties:
+    """Algebra of the delta-evaluated placement cache (ISSUE 4):
+    delta-then-inverse restores the cached stats; commuting moves on
+    disjoint slots are order-independent."""
+
+    @staticmethod
+    def _setup(design_seed, place_seed):
+        dp = ps.from_flat(jnp.asarray(design_seed, jnp.int32))
+        v = ps.decode(dp)
+        n_pos = cm.footprint_positions(v)
+        rng = np.random.RandomState(place_seed)
+        act = int(n_pos)
+        cells = rng.choice(pm.N_CELLS, size=act, replace=False)
+        cells = np.concatenate(
+            [cells, rng.randint(0, pm.N_CELLS, pm.MAX_SLOTS - act)])
+        hbm_ij = rng.uniform(-1.0, 16.0, (pm.N_HBM, 2)).astype(np.float32)
+        plc = pm.Placement(chiplet_cell=jnp.asarray(cells, jnp.int32),
+                           hbm_ij=jnp.asarray(hbm_ij))
+        cache = pm.nop_stats_cache(plc, n_pos, v.hbm_mask, v.arch_type)
+        return v, n_pos, plc, cache, rng
+
+    @staticmethod
+    def _apply(cache, mv, n_pos, v):
+        cand = pm.nop_stats_delta(cache, mv, n_pos, v.hbm_mask, v.arch_type)
+        return pm.commit_move(cache, cand, True)
+
+    @staticmethod
+    def _free_cells(cells, act, rng, k):
+        free = np.setdiff1d(np.arange(pm.N_CELLS), cells[:act])
+        return rng.choice(free, size=k, replace=False)
+
+    @given(design_strategy(), st.integers(0, 2**31 - 1),
+           st.booleans())
+    @settings(**_SETTINGS)
+    def test_inverse_move_restores_cache(self, idx, seed, use_hbm):
+        """Applying a move and then its inverse restores every cached
+        stat (and the placement) exactly."""
+        v, n_pos, plc, cache, rng = self._setup(idx, seed)
+        act = int(n_pos)
+        if use_hbm:
+            b = rng.randint(0, pm.N_HBM)
+            old_anchor = np.asarray(plc.hbm_ij)[b]
+            mv = pm.PlacementMove(
+                kind=jnp.int32(1), slot=jnp.int32(0), cell=jnp.int32(0),
+                hbm=jnp.int32(b),
+                anchor=jnp.asarray(rng.uniform(-1.0, 16.0, 2), jnp.float32))
+            inv = mv._replace(anchor=jnp.asarray(old_anchor, jnp.float32))
+        else:
+            s = rng.randint(0, act)
+            old_cell = int(np.asarray(plc.chiplet_cell)[s])
+            tgt = int(self._free_cells(
+                np.asarray(plc.chiplet_cell), act, rng, 1)[0])
+            mv = pm.PlacementMove(
+                kind=jnp.int32(0), slot=jnp.int32(s), cell=jnp.int32(tgt),
+                hbm=jnp.int32(0), anchor=jnp.zeros(2, jnp.float32))
+            inv = mv._replace(cell=jnp.int32(old_cell))
+        restored = self._apply(self._apply(cache, mv, n_pos, v),
+                               inv, n_pos, v)
+        for field in pm.NoPStats._fields:
+            np.testing.assert_allclose(
+                float(getattr(restored.stats, field)),
+                float(getattr(cache.stats, field)),
+                rtol=1e-5, atol=1e-5, err_msg=field)
+        np.testing.assert_array_equal(
+            np.asarray(restored.placement.chiplet_cell),
+            np.asarray(cache.placement.chiplet_cell))
+        np.testing.assert_allclose(
+            np.asarray(restored.placement.hbm_ij),
+            np.asarray(cache.placement.hbm_ij), rtol=0, atol=0)
+
+    @given(design_strategy(), st.integers(0, 2**31 - 1))
+    @settings(**_SETTINGS)
+    def test_disjoint_chiplet_moves_commute(self, idx, seed):
+        """Two relocations of distinct slots to distinct free cells give
+        order-independent delta evaluation."""
+        v, n_pos, plc, cache, rng = self._setup(idx, seed)
+        act = int(n_pos)
+        if act < 2:
+            return
+        s1, s2 = rng.choice(act, size=2, replace=False)
+        c1, c2 = self._free_cells(np.asarray(plc.chiplet_cell), act, rng, 2)
+        m1 = pm.PlacementMove(kind=jnp.int32(0), slot=jnp.int32(int(s1)),
+                              cell=jnp.int32(int(c1)), hbm=jnp.int32(0),
+                              anchor=jnp.zeros(2, jnp.float32))
+        m2 = pm.PlacementMove(kind=jnp.int32(0), slot=jnp.int32(int(s2)),
+                              cell=jnp.int32(int(c2)), hbm=jnp.int32(0),
+                              anchor=jnp.zeros(2, jnp.float32))
+        ab = self._apply(self._apply(cache, m1, n_pos, v), m2, n_pos, v)
+        ba = self._apply(self._apply(cache, m2, n_pos, v), m1, n_pos, v)
+        np.testing.assert_array_equal(
+            np.asarray(ab.placement.chiplet_cell),
+            np.asarray(ba.placement.chiplet_cell))
+        for field in pm.NoPStats._fields:
+            np.testing.assert_allclose(
+                float(getattr(ab.stats, field)),
+                float(getattr(ba.stats, field)),
+                rtol=1e-5, atol=1e-5, err_msg=field)
+
+    @given(design_strategy(), st.integers(0, 2**31 - 1))
+    @settings(**_SETTINGS)
+    def test_chiplet_and_hbm_moves_commute(self, idx, seed):
+        """A slot relocation and an HBM re-anchor touch disjoint state,
+        so their delta evaluations commute."""
+        v, n_pos, plc, cache, rng = self._setup(idx, seed)
+        act = int(n_pos)
+        s = rng.randint(0, act)
+        c = int(self._free_cells(np.asarray(plc.chiplet_cell), act, rng, 1)[0])
+        mc = pm.PlacementMove(kind=jnp.int32(0), slot=jnp.int32(s),
+                              cell=jnp.int32(c), hbm=jnp.int32(0),
+                              anchor=jnp.zeros(2, jnp.float32))
+        mh = pm.PlacementMove(
+            kind=jnp.int32(1), slot=jnp.int32(0), cell=jnp.int32(0),
+            hbm=jnp.int32(rng.randint(0, pm.N_HBM)),
+            anchor=jnp.asarray(rng.uniform(-1.0, 16.0, 2), jnp.float32))
+        ab = self._apply(self._apply(cache, mc, n_pos, v), mh, n_pos, v)
+        ba = self._apply(self._apply(cache, mh, n_pos, v), mc, n_pos, v)
+        np.testing.assert_array_equal(
+            np.asarray(ab.placement.chiplet_cell),
+            np.asarray(ba.placement.chiplet_cell))
+        np.testing.assert_allclose(np.asarray(ab.placement.hbm_ij),
+                                   np.asarray(ba.placement.hbm_ij),
+                                   rtol=0, atol=0)
+        for field in pm.NoPStats._fields:
+            np.testing.assert_allclose(
+                float(getattr(ab.stats, field)),
+                float(getattr(ba.stats, field)),
+                rtol=1e-5, atol=1e-5, err_msg=field)
+
+
 class TestCompressionProperties:
     @given(st.integers(0, 2**31 - 1), st.integers(4, 512))
     @settings(**_SETTINGS)
