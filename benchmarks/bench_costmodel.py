@@ -195,6 +195,72 @@ def _placement_sa_bench(smoke: bool) -> dict:
     return out
 
 
+def _placement_chains_bench(smoke: bool) -> dict:
+    """Multi-chain vs single-chain placement SA (ROADMAP PR-4 follow-up).
+
+    ``PlacementSAConfig.n_chains`` vmaps several chains per design inside
+    the same program. On this launch-bound container the extra chains
+    ride the same kernel launches, so the honest comparison is wall
+    clock for the SAME total chain count: one vmapped n_chains=4 call vs
+    4 sequential n_chains=1 calls (different keys, same compiled fn).
+    ``amortization`` is how much cheaper the vmapped form is; per-design
+    reward gain of best-of-4 over single-chain is recorded too.
+    """
+    from repro.core import env as chipenv
+    from repro.optimizer import scenario as suite
+    from repro.sa import annealing as sa
+
+    n_designs = 8 if smoke else 16
+    n_iters = 300 if smoke else 1000
+    n_chains = 4
+    env_cfg = chipenv.EnvConfig(hw=suite.PLACEMENT_SENSITIVE_HW)
+    dps = ps.random_design(jax.random.PRNGKey(11), (n_designs,))
+    keys = jax.random.split(jax.random.PRNGKey(12), n_designs)
+
+    fns, rewards = {}, {}
+    for nc in (1, n_chains):
+        cfg = sa.PlacementSAConfig(n_iters=n_iters, n_chains=nc)
+        fn = jax.jit(jax.vmap(lambda k, d: sa.refine_placement(
+            k, d, env_cfg, cfg).best_reward))
+        rewards[nc] = np.asarray(fn(keys, dps))      # compile + warm
+        fns[nc] = fn
+
+    best = {1: float("inf"), n_chains: float("inf"), "seq": float("inf")}
+    for _ in range(3):
+        t0 = time.time()
+        fns[1](keys, dps).block_until_ready()
+        best[1] = min(best[1], time.time() - t0)
+        t0 = time.time()
+        fns[n_chains](keys, dps).block_until_ready()
+        best[n_chains] = min(best[n_chains], time.time() - t0)
+        t0 = time.time()
+        for rep in range(n_chains):
+            fns[1](jax.vmap(jax.random.fold_in, (0, None))(keys, rep),
+                   dps).block_until_ready()
+        best["seq"] = min(best["seq"], time.time() - t0)
+
+    gain = rewards[n_chains] - rewards[1]
+    rec = {
+        "batch": n_designs, "sa_iters": n_iters, "n_chains": n_chains,
+        "single_chain_wall_s": round(best[1], 4),
+        "vmapped_chains_wall_s": round(best[n_chains], 4),
+        "sequential_chains_wall_s": round(best["seq"], 4),
+        # wall cost of 4x the chains inside one program vs 1 chain
+        "chains_overhead_x": round(best[n_chains] / max(best[1], 1e-9), 3),
+        # vmapped 4 chains vs the same 4 chains as sequential calls
+        "amortization_x": round(best["seq"] / max(best[n_chains], 1e-9), 3),
+        "mean_best_of_4_gain": round(float(gain.mean()), 4),
+        "max_best_of_4_gain": round(float(gain.max()), 4),
+    }
+    print(f"[bench] placement SA chains: 1 chain {best[1]:.3f}s, "
+          f"{n_chains} vmapped {best[n_chains]:.3f}s "
+          f"({rec['chains_overhead_x']}x cost for {n_chains}x chains), "
+          f"{n_chains} sequential {best['seq']:.3f}s "
+          f"-> {rec['amortization_x']}x amortization; "
+          f"best-of-{n_chains} mean gain {gain.mean():+.4f}")
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=65536)
@@ -265,6 +331,8 @@ def main():
 
     sa_rec = _placement_sa_bench(args.smoke)
     record["placement_sa_step"] = sa_rec
+
+    record["placement_sa_chains"] = _placement_chains_bench(args.smoke)
 
     if args.placement_gain:
         record["placement_gain"] = _placement_gain_sweep(

@@ -4,9 +4,12 @@ point, and optimizer runtime (paper: SA 500k iters <1 min; PPO 250k steps
 <20 min; our jitted versions are ~2 orders faster).
 
 Also the portfolio-engine benchmark: sequential per-agent PPO loop vs the
-vmapped ``ppo.train_population`` (one XLA program for all seeds), plus a
-scenario-suite smoke run. ``python benchmarks/bench_optimizer.py --smoke``
-writes the measured record to ``benchmarks/BENCH_optimizer.json``.
+vmapped ``ppo.train_population`` (one XLA program for all seeds), the
+evolutionary arm (vmapped GA islands + archive hypervolume), a
+scenario-suite smoke run, and the three-arm vs SA+RL-only archive
+comparison (``--assert-evo-hv`` turns the latter into the ISSUE-5 CI
+guard). ``python benchmarks/bench_optimizer.py --smoke`` writes the
+measured record to ``benchmarks/BENCH_optimizer.json``.
 """
 
 from __future__ import annotations
@@ -14,6 +17,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
 
 import jax
@@ -123,6 +127,91 @@ def bench_scenario_suite(smoke: bool = True) -> dict:
         "wall_time_s": round(res.wall_time_s, 3),
         "scenarios_per_s": round(
             len(res.outcomes) / max(res.wall_time_s, 1e-9), 3),
+        "archive_points": int(res.archive.n_valid),
+        "hypervolume": round(res.hypervolume, 4),
+    }
+
+
+def bench_evo_arm(smoke: bool = True) -> dict:
+    """Time the GA arm: vmapped islands, one XLA program end to end."""
+    from repro.optimizer import archive as ar
+    from repro.optimizer import evo
+
+    n_islands = 2
+    cfg = (evo.EvoConfig(pop_size=16, n_generations=12) if smoke
+           else evo.EvoConfig(pop_size=64, n_generations=60))
+    fn = jax.jit(lambda k: evo.evolve_population(k, n_islands, cfg=cfg))
+    key = jax.random.PRNGKey(9)
+    res = fn(key)
+    jax.block_until_ready(res)            # compile + first run
+    t0 = time.time()
+    res = fn(key)
+    jax.block_until_ready(res)
+    wall = time.time() - t0
+    n_evals = n_islands * cfg.pop_size * (cfg.n_generations + 1)
+    pts = res.archive.points.reshape(-1, 3)
+    val = res.archive.valid.reshape(-1)
+    flat_arc = ar.Archive(points=pts,
+                          flats=res.archive.flats.reshape(pts.shape[0], -1),
+                          reward=res.archive.reward.reshape(-1),
+                          payload=res.archive.payload.reshape(-1),
+                          valid=val)
+    hv = float(ar.hypervolume(flat_arc, ar.nadir_ref(pts, val)))
+    return {
+        "n_islands": n_islands,
+        "pop_size": cfg.pop_size,
+        "n_generations": cfg.n_generations,
+        "wall_s": round(wall, 3),
+        "evals_per_s": round(n_evals / max(wall, 1e-9), 1),
+        "best_reward": round(float(jnp.max(res.best_reward)), 2),
+        "archive_points": int(val.sum()),
+        "archive_hypervolume": round(hv, 4),
+    }
+
+
+def bench_evo_archive(smoke: bool = True) -> dict:
+    """Three-arm vs SA+RL-only: winners and archive hypervolume.
+
+    Runs the MLPerf smoke suite twice on the SAME key — once with the
+    evo arm, once without. The SA/RL key streams do not depend on
+    ``n_evo`` and every arm's best refines in one lockstep superset
+    sweep, so the three-arm winner must be >= scenario for scenario;
+    with an ample archive capacity the three-arm insert stream is a
+    strict superset too, so its hypervolume (shared nadir ref) must be
+    >= as well. Both are hard CI guards under ``--assert-evo-hv``.
+    """
+    import dataclasses
+
+    from repro.optimizer import archive as ar
+    from repro.optimizer import scenario as suite
+
+    base = dataclasses.replace(
+        suite.SMOKE_SUITE, workloads=("mlperf",),
+        weight_grid=((1.0, 1.0, 0.1),),
+        placement_refine=False,            # design-space winners only
+        archive_capacity=2048)             # no eviction: superset guard
+    cfg3 = base
+    cfg2 = dataclasses.replace(base, n_evo=0)
+    res3 = suite.run_suite(jax.random.PRNGKey(0), cfg3)
+    res2 = suite.run_suite(jax.random.PRNGKey(0), cfg2)
+    rewards3 = [o.best_reward for o in res3.outcomes]
+    rewards2 = [o.best_reward for o in res2.outcomes]
+    reward_ok = all(r3 >= r2 - 1e-6 for r3, r2 in zip(rewards3, rewards2))
+    pts = jnp.concatenate([res2.archive.points, res3.archive.points])
+    val = jnp.concatenate([res2.archive.valid, res3.archive.valid])
+    ref = ar.nadir_ref(pts, val)
+    hv2 = float(ar.hypervolume(res2.archive, ref))
+    hv3 = float(ar.hypervolume(res3.archive, ref))
+    return {
+        "n_scenarios": len(res3.outcomes),
+        "rewards_three_arm": [round(r, 2) for r in rewards3],
+        "rewards_sa_rl": [round(r, 2) for r in rewards2],
+        "per_scenario_reward_ok": reward_ok,
+        "evo_wins": sum(o.source == "evo" for o in res3.outcomes),
+        "hv_sa_rl": round(hv2, 4),
+        "hv_three_arm": round(hv3, 4),
+        "hv_ratio": round(hv3 / max(hv2, 1e-30), 4),
+        "hv_ok": hv3 >= hv2 - 1e-9,
     }
 
 
@@ -143,6 +232,13 @@ def run(report):
            engine["vectorized_wall_s"] * 1e6 / n_rl,
            f"agents_per_s={engine['vectorized_agents_per_s']};"
            f"speedup={engine['speedup']}x")
+
+    evo_rec = bench_evo_arm(smoke=not FULL)
+    report("portfolio_evo_arm",
+           evo_rec["wall_s"] * 1e6 / evo_rec["n_islands"],
+           f"evals_per_s={evo_rec['evals_per_s']};"
+           f"best={evo_rec['best_reward']};"
+           f"archive_hv={evo_rec['archive_hypervolume']}")
 
     for case, cap in (("case_i", 64), ("case_ii", 128)):
         t0 = time.time()
@@ -178,6 +274,11 @@ def main():
                     help="CI scale: small agent count / iterations")
     ap.add_argument("--n-rl", type=int, default=None,
                     help="RL population size (default: 8 smoke / 16 full)")
+    ap.add_argument("--assert-evo-hv", action="store_true",
+                    help="fail unless the three-arm suite beats or ties "
+                         "the SA+RL-only suite on every MLPerf smoke "
+                         "scenario's winner AND on archive hypervolume "
+                         "(fixed seed)")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.abspath(__file__)), "BENCH_optimizer.json"))
     args = ap.parse_args()
@@ -195,18 +296,48 @@ def main():
           f"({engine['vectorized_agents_per_s']} agents/s)  "
           f"-> {engine['speedup']}x")
 
+    print("[bench] evolutionary arm (vmapped GA islands + archive) ...")
+    evo_rec = bench_evo_arm(smoke=args.smoke)
+    print(f"[bench]   {evo_rec['n_islands']} islands x "
+          f"pop {evo_rec['pop_size']} x {evo_rec['n_generations']} gens in "
+          f"{evo_rec['wall_s']}s ({evo_rec['evals_per_s']:,.0f} evals/s), "
+          f"best {evo_rec['best_reward']}, archive "
+          f"{evo_rec['archive_points']} pts hv "
+          f"{evo_rec['archive_hypervolume']}")
+
     print("[bench] scenario suite (5 MLPerf workloads x 3 weightings) ...")
     suite = bench_scenario_suite(smoke=args.smoke)
     suite["mode"] = "smoke" if args.smoke else "full"
     print(f"[bench]   {suite['n_scenarios']} scenarios in "
-          f"{suite['wall_time_s']}s, {suite['n_pareto']} on the frontier")
+          f"{suite['wall_time_s']}s, {suite['n_pareto']} on the frontier, "
+          f"archive {suite['archive_points']} pts hv "
+          f"{suite['hypervolume']}")
+
+    print("[bench] three-arm vs SA+RL-only archive (MLPerf smoke grid) ...")
+    arc_rec = bench_evo_archive(smoke=args.smoke)
+    print(f"[bench]   winners >= on all {arc_rec['n_scenarios']} scenarios: "
+          f"{arc_rec['per_scenario_reward_ok']} (evo won "
+          f"{arc_rec['evo_wins']}); hv {arc_rec['hv_sa_rl']} -> "
+          f"{arc_rec['hv_three_arm']} ({arc_rec['hv_ratio']}x)")
 
     record = {"mode": "smoke" if args.smoke else "full",
-              "portfolio_engine": engine, "scenario_suite": suite}
+              "portfolio_engine": engine, "evo_arm": evo_rec,
+              "scenario_suite": suite, "evo_archive": arc_rec}
     with open(args.out, "w") as f:
         json.dump(record, f, indent=2)
         f.write("\n")
     print(f"[bench] wrote {args.out}")
+
+    if args.assert_evo_hv:
+        if not arc_rec["per_scenario_reward_ok"]:
+            print("[bench] FAIL: three-arm winner below SA+RL-only on some "
+                  "MLPerf smoke scenario", file=sys.stderr)
+            sys.exit(1)
+        if not arc_rec["hv_ok"]:
+            print(f"[bench] FAIL: three-arm archive hypervolume "
+                  f"{arc_rec['hv_three_arm']} < SA+RL-only "
+                  f"{arc_rec['hv_sa_rl']}", file=sys.stderr)
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -23,8 +23,15 @@ python -m pytest -q tests/test_kernels.py
 echo "=== slow lane: multi-device subprocess tests ==="
 python -m pytest -q -m slow
 
-echo "=== smoke: portfolio engine benchmark ==="
-python benchmarks/bench_optimizer.py --smoke
+echo "=== smoke: portfolio engine benchmark (+ evo-arm archive guard) ==="
+# --assert-evo-hv (ISSUE-5): on a fixed seed, the three-arm (SA+RL+evo)
+# MLPerf smoke suite must beat or tie the SA+RL-only suite on every
+# scenario's winner reward AND on the shared-ref archive hypervolume.
+# Both hold by construction (the SA/RL key streams don't depend on
+# n_evo, per-arm lockstep refinement only grows the candidate set, and
+# the bench archive capacity is large enough that no eviction occurs),
+# so a failure means the superset contract was broken.
+python benchmarks/bench_optimizer.py --smoke --assert-evo-hv
 
 echo "=== smoke: cost-model eval throughput (fast-tier + delta-SA guards) ==="
 # CI-scale smoke run with the two-tier throughput guard: fails if the

@@ -86,6 +86,46 @@ def train_scenario_suite(args):
         print(f"\n[suite] wrote {args.out}")
 
 
+def train_evo(args):
+    """Standalone evolutionary arm: one GA + live Pareto archive per
+    (workload x default weighting) scenario, all scenarios vmapped into
+    one XLA program."""
+    import jax as _jax
+    import numpy as np
+
+    from repro.core import costmodel as cm
+    from repro.core import env as chipenv
+    from repro.core import params as ps
+    from repro.core import workload as wl
+    from repro.optimizer import archive as ar
+    from repro.optimizer import evo
+    from repro.optimizer import scenario as suite
+
+    wl_names, workloads = wl.resolve(tuple(args.workloads.split(",")))
+    scenarios = cm.stack_scenarios(
+        [cm.Scenario(workload=w) for w in workloads])
+    cfg = evo.EvoConfig(pop_size=args.pop, n_generations=args.generations)
+    if args.smoke:
+        cfg = evo.EvoConfig(pop_size=8, n_generations=6,
+                            archive_capacity=32)
+    env_cfg = chipenv.EnvConfig(hw=suite.HW_PRESETS[args.hw_preset])
+    print(f"[evo] {len(wl_names)} workloads x GA(pop={cfg.pop_size}, "
+          f"generations={cfg.n_generations}), archive capacity "
+          f"{cfg.archive_capacity}, hw-preset={args.hw_preset}")
+    res = evo.evolve_scenario_population(
+        _jax.random.PRNGKey(args.seed), scenarios, 1, env_cfg, cfg)
+    for i, name in enumerate(wl_names):
+        arc = _jax.tree_util.tree_map(lambda x: x[i, 0], res.archive)
+        hv = float(ar.hypervolume(arc, ar.nadir_ref(arc.points, arc.valid)))
+        print(f"  [evo] {name}: best reward "
+              f"{float(res.best_reward[i, 0]):.1f}, archive "
+              f"{int(arc.n_valid)} points, hypervolume {hv:.4g}")
+    top = int(np.argmax(np.asarray(res.best_reward)[:, 0]))
+    print(f"\nbest design ({wl_names[top]}):")
+    print(ps.describe(_jax.tree_util.tree_map(
+        lambda x: x[top, 0], res.best_design)))
+
+
 def train_lm(args):
     arch = ARCH_REGISTRY[args.arch]
     if args.reduced:
@@ -125,6 +165,10 @@ def main():
                     help="comma list of alpha:beta:gamma reward weightings")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny suite scale for CI")
+    ap.add_argument("--pop", type=int, default=32,
+                    help="GA population size (--arch evo)")
+    ap.add_argument("--generations", type=int, default=50,
+                    help="GA generations (--arch evo)")
     ap.add_argument("--hw-preset", default="default",
                     choices=["default", "placement-sensitive"],
                     help="scenario-suite HW calibration preset "
@@ -137,6 +181,8 @@ def main():
         train_chipletgym(args)
     elif args.arch == "scenario-suite":
         train_scenario_suite(args)
+    elif args.arch == "evo":
+        train_evo(args)
     else:
         train_lm(args)
 

@@ -1,1 +1,2 @@
-"""Portfolio optimizer (paper Algorithm 1) + scenario-batched suite."""
+"""Portfolio optimizer (paper Algorithm 1, three arms: SA + PPO + GA),
+scenario-batched suite, and the JAX-resident Pareto archive."""

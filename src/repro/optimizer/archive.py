@@ -1,0 +1,259 @@
+"""Fixed-capacity JAX-resident Pareto archive over PPAC objectives.
+
+The suite's old Pareto frontier was a host-side post-hoc filter over the
+per-scenario *scalarized* winners. This module makes the non-dominated
+set a first-class on-device data structure (cf. Gemini's maintained
+co-exploration frontier, Monad's evolutionary multi-objective search):
+an :class:`Archive` is a pure pytree of fixed-shape arrays, so
+:func:`insert_batch` is jit/vmap/scan-safe — the evolutionary arm
+(optimizer/evo.py) carries one through its generation ``lax.scan``, and
+the portfolio / scenario suite feed the same structure from all three
+arms (SA chains, PPO agents, GA populations).
+
+Objective convention
+--------------------
+A point is the raw PPAC triple ``(tasks_per_sec, energy_per_task_j,
+total_cost)`` with directions :data:`MAXIMIZE` = (up, down, down).
+Internally everything is flipped to minimization via :data:`_SIGNS`;
+callers never see the flipped space.
+
+Implementation notes (PR-4 container lessons): no scatters anywhere —
+membership updates are argsort + gather (``take``) and masked
+``where`` selects, which beat vmapped dynamic ``.at[].set`` on the
+launch-bound CPU backend. Eviction beyond capacity drops the most
+crowded interior points first (NSGA-II crowding distance; boundary
+points are never evicted before interior ones).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import params as ps
+
+N_OBJ = 3
+MAXIMIZE = (True, False, False)        # tasks/s UP, J/task DOWN, cost DOWN
+_SIGNS = jnp.asarray([-1.0, 1.0, 1.0], jnp.float32)
+_BIG = jnp.float32(3.0e38)             # sentinel for invalid rows (min space)
+
+
+class Archive(NamedTuple):
+    """Fixed-capacity non-dominated store (pure pytree, all shapes static).
+
+    ``points`` rows are only meaningful where ``valid``; invalid rows are
+    filled with dominated sentinels and never win a dominance test.
+    ``flats`` carries the genome that produced each point (the 14 Table-1
+    indices, or 18 with placement genes), ``reward`` the scalarized
+    objective it scored, ``payload`` a caller-defined int tag (scenario
+    index, arm id, ...).
+    """
+
+    points: jnp.ndarray        # (C, 3) float32, raw objective convention
+    flats: jnp.ndarray         # (C, G) int32 genomes
+    reward: jnp.ndarray        # (C,)  float32
+    payload: jnp.ndarray       # (C,)  int32
+    valid: jnp.ndarray         # (C,)  bool
+
+    @property
+    def capacity(self) -> int:
+        return self.valid.shape[-1]
+
+    @property
+    def n_valid(self) -> jnp.ndarray:
+        return jnp.sum(self.valid, axis=-1)
+
+
+def empty(capacity: int, genome_dim: int = ps.N_PARAMS) -> Archive:
+    """An all-invalid archive of the given capacity."""
+    # dominated sentinel: worst value on every objective (raw convention)
+    return Archive(
+        points=jnp.broadcast_to(_BIG * _SIGNS, (capacity, N_OBJ)),
+        flats=jnp.zeros((capacity, genome_dim), jnp.int32),
+        reward=jnp.full((capacity,), -jnp.inf, jnp.float32),
+        payload=jnp.full((capacity,), -1, jnp.int32),
+        valid=jnp.zeros((capacity,), bool),
+    )
+
+
+def _to_min(points: jnp.ndarray) -> jnp.ndarray:
+    """Flip the raw convention into all-minimize space."""
+    return jnp.asarray(points, jnp.float32) * _SIGNS
+
+
+def point_from_metrics(mtr) -> jnp.ndarray:
+    """The archive objective triple of a ``costmodel.Metrics`` bundle.
+
+    Single owner of the Metrics -> point column mapping; must stay in
+    lockstep with :data:`MAXIMIZE` / :data:`_SIGNS`.
+    """
+    return jnp.stack([mtr.tasks_per_sec, mtr.energy_per_task_j,
+                      mtr.total_cost], axis=-1)
+
+
+def non_dominated_mask(points: jnp.ndarray,
+                       valid: jnp.ndarray = None) -> jnp.ndarray:
+    """Boolean mask of the non-dominated rows of ``points`` (N, 3).
+
+    Raw objective convention. A valid row is dominated iff some other
+    valid row is <= on every (minimized) objective and < on at least one.
+    """
+    pts = _to_min(points)
+    if valid is None:
+        valid = jnp.ones(pts.shape[:-1], bool)
+    pts = jnp.where(valid[..., None], pts, _BIG)
+    a, b = pts[:, None, :], pts[None, :, :]
+    dominates = ((a <= b).all(-1) & (a < b).any(-1)
+                 & valid[:, None] & valid[None, :])
+    return valid & ~dominates.any(axis=0)
+
+
+def _crowding(pts_min: jnp.ndarray, keep: jnp.ndarray) -> jnp.ndarray:
+    """NSGA-II crowding distance of the kept rows (-inf elsewhere).
+
+    Boundary points of every objective get +inf so capacity eviction
+    always drops the most crowded *interior* point first.
+    """
+    n = keep.shape[0]
+    total = jnp.sum(keep)
+    cd = jnp.zeros((n,), jnp.float32)
+    rank = jnp.arange(n)
+    for d in range(N_OBJ):
+        v = jnp.where(keep, pts_min[:, d], jnp.inf)
+        order = jnp.argsort(v)
+        vs = v[order]
+        prev = jnp.concatenate([jnp.full((1,), -jnp.inf), vs[:-1]])
+        nxt = jnp.concatenate([vs[1:], jnp.full((1,), jnp.inf)])
+        span = jnp.take(vs, jnp.clip(total - 1, 0, n - 1)) - vs[0]
+        is_boundary = (rank == 0) | (rank == total - 1)
+        contrib = jnp.where(is_boundary, jnp.inf,
+                            (nxt - prev) / jnp.maximum(span, 1e-30))
+        contrib = jnp.where(rank < total, contrib, 0.0)
+        cd = cd + jnp.take(contrib, jnp.argsort(order))
+    return jnp.where(keep, cd, -jnp.inf)
+
+
+def insert_batch(archive: Archive, points: jnp.ndarray, flats: jnp.ndarray,
+                 reward: jnp.ndarray = None, payload: jnp.ndarray = None,
+                 valid: jnp.ndarray = None) -> Archive:
+    """Insert a (B, 3) batch of points; return the updated archive.
+
+    Pure-functional and jit/scan-safe: forms the (C+B)-row union, runs
+    one masked pairwise dominance test, drops exact-duplicate points
+    (keeping the first occurrence, so re-inserting an archive's own
+    contents is a no-op), and — only when the surviving front exceeds
+    capacity — evicts by crowding distance. Order-insensitive up to
+    ties: permuting the rows of one batch changes at most which of two
+    entries with *identical objectives* survives.
+    """
+    points = jnp.asarray(points, jnp.float32)
+    b = points.shape[0]
+    flats = jnp.asarray(flats, jnp.int32)
+    if reward is None:
+        reward = jnp.full((b,), -jnp.inf, jnp.float32)
+    if payload is None:
+        payload = jnp.full((b,), -1, jnp.int32)
+    if valid is None:
+        valid = jnp.ones((b,), bool)
+    valid = valid & jnp.isfinite(points).all(-1)
+
+    pts_u = jnp.concatenate([archive.points, points])
+    flats_u = jnp.concatenate([archive.flats, flats])
+    rew_u = jnp.concatenate([archive.reward,
+                             jnp.asarray(reward, jnp.float32)])
+    pay_u = jnp.concatenate([archive.payload,
+                             jnp.asarray(payload, jnp.int32)])
+    val_u = jnp.concatenate([archive.valid, valid])
+
+    pm = jnp.where(val_u[:, None], _to_min(pts_u), _BIG)
+    a, bb = pm[:, None, :], pm[None, :, :]
+    both = val_u[:, None] & val_u[None, :]
+    dominated = ((a <= bb).all(-1) & (a < bb).any(-1) & both).any(axis=0)
+    idx = jnp.arange(pm.shape[0])
+    dup = ((a == bb).all(-1) & both & (idx[:, None] < idx[None, :])).any(0)
+    keep = val_u & ~dominated & ~dup
+
+    cap = archive.capacity
+    key = _crowding(pm, keep)
+    sel = jnp.argsort(-key)[:cap]          # stable: kept rows first
+    return Archive(points=jnp.take(pts_u, sel, axis=0),
+                   flats=jnp.take(flats_u, sel, axis=0),
+                   reward=jnp.take(rew_u, sel),
+                   payload=jnp.take(pay_u, sel),
+                   valid=jnp.take(keep, sel))
+
+
+def merge(dst: Archive, src: Archive) -> Archive:
+    """Insert every valid entry of ``src`` into ``dst``."""
+    return insert_batch(dst, src.points, src.flats, reward=src.reward,
+                        payload=src.payload, valid=src.valid)
+
+
+def hypervolume(archive: Archive, ref) -> jnp.ndarray:
+    """Exact 3-D hypervolume dominated by the archive w.r.t. ``ref``.
+
+    ``ref`` is a raw-convention triple (tasks/s lower bound, J/task and
+    cost upper bounds) that every counted point should dominate; points
+    beyond it are clipped and contribute zero volume. Exact sweep:
+    slices along the third (minimized) objective, 2-D staircase area per
+    slice — O(C^2 log C), fully vectorized (sort + cummin + vmap), no
+    host callbacks, so it can run inside a jitted program.
+    """
+    refm = _to_min(jnp.asarray(ref, jnp.float32))
+    pm = jnp.where(archive.valid[:, None],
+                   jnp.minimum(_to_min(archive.points), refm), refm)
+    order = jnp.argsort(pm[:, 2])
+    x = jnp.take(pm[:, 0], order)
+    y = jnp.take(pm[:, 1], order)
+    z = jnp.take(pm[:, 2], order)
+    heights = jnp.concatenate([z[1:], refm[2:3]]) - z
+    n = x.shape[0]
+
+    def slice_area(k):
+        active = jnp.arange(n) <= k
+        xa = jnp.where(active, x, refm[0])
+        ya = jnp.where(active, y, refm[1])
+        o = jnp.argsort(xa)
+        xs, ys = jnp.take(xa, o), jnp.take(ya, o)
+        ymin = jax.lax.cummin(ys)
+        xn = jnp.concatenate([xs[1:], refm[0:1]])
+        return jnp.sum(jnp.maximum(xn - xs, 0.0)
+                       * jnp.maximum(refm[1] - ymin, 0.0))
+
+    areas = jax.vmap(slice_area)(jnp.arange(n))
+    return jnp.sum(areas * jnp.maximum(heights, 0.0))
+
+
+def nadir_ref(points: jnp.ndarray, valid: jnp.ndarray = None,
+              margin: float = 0.1):
+    """A reference point weakly dominated by every valid point.
+
+    Raw convention in and out. The componentwise worst (nadir) of the
+    valid points, pushed ``margin`` of the objective span further, so
+    nadir points still enclose positive volume. Deterministic given the
+    points, which makes it a *shared* ref for comparing archives: pass
+    the concatenation of both archives' (points, valid).
+    """
+    pm = _to_min(points)
+    if valid is None:
+        valid = jnp.ones(pm.shape[:-1], bool)
+    any_valid = valid.any()
+    hi = jnp.max(jnp.where(valid[..., None], pm, -_BIG), axis=0)
+    lo = jnp.min(jnp.where(valid[..., None], pm, _BIG), axis=0)
+    pad = margin * jnp.maximum(hi - lo, 0.01 * jnp.abs(hi) + 1e-9)
+    refm = jnp.where(any_valid, hi + pad, jnp.ones((N_OBJ,)))
+    return refm * _SIGNS
+
+
+def contents(archive: Archive) -> dict:
+    """Host-side extraction of the valid rows (for reports / JSON)."""
+    import numpy as np
+    valid = np.asarray(archive.valid)
+    return {
+        "points": np.asarray(archive.points)[valid],
+        "flats": np.asarray(archive.flats)[valid],
+        "reward": np.asarray(archive.reward)[valid],
+        "payload": np.asarray(archive.payload)[valid],
+    }

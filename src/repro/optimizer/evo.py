@@ -1,0 +1,197 @@
+"""Evolutionary search arm: a fully vmapped genetic algorithm + archive.
+
+The paper's robustness recipe combines RL with non-RL optimizers; Monad
+(PAPERS.md) shows evolutionary multi-objective search is the natural fit
+for chiplet PPAC trade-offs. This module is the portfolio's third arm: a
+generational GA over the 14-index Table-1 design space (plus, optionally,
+the four placement-mutation genes of ``params.PLACEMENT_HEAD_SIZES``)
+with tournament selection, uniform crossover and per-index mutation.
+
+One generation — selection, crossover, mutation, the vmapped population
+evaluation, and the Pareto-archive insertion — is one step of a single
+``lax.scan``, so an entire ``evolve`` run compiles to ONE XLA program
+whose kernel count is independent of the population size (asserted by
+tests/test_evo.py); there is no per-individual dispatch anywhere.
+
+A :class:`repro.optimizer.archive.Archive` rides the scan carry: every
+individual ever evaluated competes for the non-dominated (tasks/s up,
+J/task down, cost down) front, so the multi-objective frontier is a live
+on-device by-product of the scalarized search, not a post-hoc filter.
+
+API mirrors the SA arm: :func:`evolve` ~ ``sa.run``,
+:func:`evolve_population` ~ ``sa.run_population``,
+:func:`evolve_scenario_population` ~ ``sa.run_scenario_population``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costmodel as cm
+from repro.core import env as chipenv
+from repro.core import params as ps
+from repro.core import placement as pm
+from repro.optimizer import archive as ar
+
+
+@dataclasses.dataclass(frozen=True)
+class EvoConfig:
+    """Generational GA over the Table-1 grid (+ optional placement genes).
+
+    ``placement_genes`` extends the genome with the four placement
+    heads (relocate one chiplet slot, re-anchor one HBM stack — the same
+    action-space extension ``EnvConfig(placement_actions=True)`` gives
+    the RL arm); each individual is then scored under its mutated
+    floorplan through the full pairwise NoP tier, exactly like an
+    RL placement action.
+
+    ``archive_capacity`` sizes the Pareto archive carried through the
+    generation scan; it is returned in :class:`EvoResult` and fed back
+    into the portfolio / suite shared archive.
+    """
+
+    pop_size: int = 32
+    n_generations: int = 50
+    tournament_k: int = 3
+    p_crossover: float = 0.9
+    p_mutate: float = 0.1          # per-gene uniform resample probability
+    placement_genes: bool = False
+    archive_capacity: int = 64
+
+
+class EvoResult(NamedTuple):
+    best_design: ps.DesignPoint
+    best_reward: jnp.ndarray
+    history: jnp.ndarray           # (n_generations,) best-so-far trace
+    archive: ar.Archive            # live non-dominated PPAC front
+    best_genome: jnp.ndarray       # (G,) int32 — incl. placement genes
+
+
+def genome_head_sizes(cfg: EvoConfig) -> Tuple[int, ...]:
+    """Per-gene grid sizes (14 Table-1 heads, +4 with placement genes)."""
+    return ps.EXT_HEAD_SIZES if cfg.placement_genes else ps.HEAD_SIZES
+
+
+def genome_placement(genome: jnp.ndarray):
+    """Decode an 18-gene genome -> (DesignPoint, Placement).
+
+    The placement genes mutate the canonical Fig.-4 floorplan of the
+    design the genome selects, mirroring ``env._design_and_placement``.
+    """
+    design = ps.from_flat(genome[..., : ps.N_PARAMS])
+    v = ps.decode(design)
+    n_pos = cm.footprint_positions(v)
+    m, n = cm.mesh_dims(n_pos)
+    base = pm.canonical(m, n, v.hbm_mask, v.arch_type)
+    plc = pm.apply_action(base, genome[..., ps.N_PARAMS:], n_pos)
+    return design, plc
+
+
+def _eval_genome(genome: jnp.ndarray, env_cfg: chipenv.EnvConfig,
+                 scenario: cm.Scenario, placement_genes: bool):
+    """One genome -> (reward, raw PPAC objective triple)."""
+    fid = env_cfg.nop_fidelity
+    if placement_genes:
+        design, plc = genome_placement(genome)
+        # a mutated placement always needs the full pairwise tier
+        fid = "auto" if fid == "fast" else fid
+    else:
+        design, plc = ps.from_flat(genome[..., : ps.N_PARAMS]), None
+    mtr = cm.evaluate(design, scenario.workload, scenario.weights,
+                      env_cfg.hw, plc, nop_fidelity=fid)
+    return mtr.reward, ar.point_from_metrics(mtr)
+
+
+def evolve(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
+           cfg: EvoConfig = EvoConfig(),
+           scenario: cm.Scenario = None) -> EvoResult:
+    """One GA run (single scalarized objective + live Pareto archive).
+
+    jit/vmap-safe; ``scenario`` is a traced (workload, weights) pytree —
+    vmap over it to evolve many scenarios inside one XLA program.
+    """
+    scenario = env_cfg.scenario() if scenario is None else scenario
+    heads = jnp.asarray(genome_head_sizes(cfg), jnp.int32)
+    n_genes = heads.shape[0]
+    pop_n = cfg.pop_size
+
+    def eval_pop(pop):
+        return jax.vmap(
+            lambda g: _eval_genome(g, env_cfg, scenario,
+                                   cfg.placement_genes))(pop)
+
+    k_init, k_run = jax.random.split(key)
+    pop0 = jax.random.randint(k_init, (pop_n, n_genes), 0, heads,
+                              dtype=jnp.int32)
+    fit0, obj0 = eval_pop(pop0)
+    arc0 = ar.insert_batch(ar.empty(cfg.archive_capacity, n_genes),
+                           obj0, pop0, reward=fit0)
+    i0 = jnp.argmax(fit0)
+    carry0 = (pop0, fit0, pop0[i0], fit0[i0], arc0, k_run)
+
+    def generation(carry, _):
+        pop, fit, best_g, best_r, arc, key = carry
+        key, k_ta, k_tb, k_xon, k_xmask, k_mmask, k_mval = (
+            jax.random.split(key, 7))
+
+        def tournament(k):
+            cand = jax.random.randint(k, (pop_n, cfg.tournament_k), 0, pop_n)
+            win = jnp.argmax(fit[cand], axis=1)
+            return cand[jnp.arange(pop_n), win]
+
+        pa = pop[tournament(k_ta)]
+        pb = pop[tournament(k_tb)]
+        cross = jax.random.bernoulli(k_xon, cfg.p_crossover, (pop_n, 1))
+        xmask = jax.random.bernoulli(k_xmask, 0.5, (pop_n, n_genes))
+        child = jnp.where(cross & xmask, pb, pa)
+        mmask = jax.random.bernoulli(k_mmask, cfg.p_mutate,
+                                     (pop_n, n_genes))
+        mval = jax.random.randint(k_mval, (pop_n, n_genes), 0, heads,
+                                  dtype=jnp.int32)
+        child = jnp.where(mmask, mval, child)
+        child = child.at[0].set(best_g)        # elitism (static index)
+
+        fit_c, obj_c = eval_pop(child)
+        arc = ar.insert_batch(arc, obj_c, child, reward=fit_c)
+        i = jnp.argmax(fit_c)
+        better = fit_c[i] > best_r
+        best_g = jnp.where(better, child[i], best_g)
+        best_r = jnp.where(better, fit_c[i], best_r)
+        return (child, fit_c, best_g, best_r, arc, key), best_r
+
+    (_, _, best_g, best_r, arc, _), history = jax.lax.scan(
+        generation, carry0, None, length=cfg.n_generations)
+    return EvoResult(best_design=ps.from_flat(best_g[: ps.N_PARAMS]),
+                     best_reward=best_r, history=history, archive=arc,
+                     best_genome=best_g)
+
+
+def evolve_population(key, n_islands: int,
+                      env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
+                      cfg: EvoConfig = EvoConfig(),
+                      scenario: cm.Scenario = None) -> EvoResult:
+    """N independent GA islands in one vmapped program; results stacked."""
+    scenario = env_cfg.scenario() if scenario is None else scenario
+    keys = jax.random.split(key, n_islands)
+    return jax.jit(jax.vmap(
+        lambda k: evolve(k, env_cfg, cfg, scenario)))(keys)
+
+
+def evolve_scenario_population(key, scenarios: cm.Scenario, n_islands: int,
+                               env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
+                               cfg: EvoConfig = EvoConfig()) -> EvoResult:
+    """S scenarios x N islands as ONE vmapped XLA program.
+
+    ``scenarios`` carries a leading scenario axis S on every leaf;
+    results (including the per-scenario archives) are stacked
+    (S, n_islands). Mirrors ``sa.run_scenario_population``.
+    """
+    n_scen = jnp.shape(scenarios.weights.alpha)[0]
+    keys = jax.random.split(key, int(n_scen))
+    return jax.jit(jax.vmap(
+        lambda k, s: evolve_population(k, n_islands, env_cfg, cfg, s)))(
+            keys, scenarios)

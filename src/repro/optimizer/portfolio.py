@@ -1,16 +1,25 @@
 """Portfolio optimizer (paper Algorithm 1) + local refinement.
 
-Runs ``n_sa`` SA chains and ``n_rl`` PPO agents (different seeds), then an
-exhaustive argmax across all produced design points — exactly the paper's
-robustness recipe ("we train multiple RL models and SA algorithms with
-different seed values ... perform an exhaustive search across the
-outcomes").
+Runs ``n_sa`` SA chains, ``n_rl`` PPO agents, and ``n_evo`` GA islands
+(different seeds), then an exhaustive argmax across all produced design
+points — the paper's robustness recipe ("we train multiple RL models and
+SA algorithms with different seed values ... perform an exhaustive search
+across the outcomes") extended with the evolutionary third arm
+(optimizer/evo.py).
 
-Beyond the paper: a final *coordinate-descent exhaustive refinement* —
-for each of the 14 parameters in turn, sweep its entire Table-1 grid while
-holding the others fixed (591 evaluations per sweep, vectorized) until a
-fixed point. This provably never worsens the objective and usually adds a
-few percent on top of the raw RL/SA winners.
+Beyond the paper:
+
+- a *coordinate-descent exhaustive refinement* — for each of the 14
+  parameters in turn, sweep its entire Table-1 grid while holding the
+  others fixed (591 evaluations per sweep, vectorized) until a fixed
+  point. Every arm's best candidate is refined in one lockstep batched
+  sweep, so enabling an extra arm can never lower the final reward (the
+  refine set only grows).
+- a shared :class:`repro.optimizer.archive.Archive`: every candidate any
+  arm produced (plus the GA's own generation-live archive) competes for
+  one non-dominated (tasks/s up, J/task down, cost down) front, returned
+  in :class:`PortfolioResult` — the multi-objective answer next to the
+  scalarized winner.
 """
 
 from __future__ import annotations
@@ -27,6 +36,8 @@ import numpy as np
 from repro.core import costmodel as cm
 from repro.core import env as chipenv
 from repro.core import params as ps
+from repro.optimizer import archive as ar
+from repro.optimizer import evo
 from repro.rl import ppo
 from repro.sa import annealing as sa
 
@@ -35,15 +46,18 @@ from repro.sa import annealing as sa
 class PortfolioConfig:
     n_sa: int = 20
     n_rl: int = 20
+    n_evo: int = 1                  # GA islands (0 disables the third arm)
     refine: bool = True
     max_refine_sweeps: int = 8
     refine_placement: bool = True
+    archive_capacity: int = 64      # shared Pareto archive size
     # NOTE: placement_sa must precede the `sa` field — that field shadows
     # the annealing module for later annotations in this class body.
     placement_sa: sa.PlacementSAConfig = sa.PlacementSAConfig()
     sa: sa.SAConfig = sa.SAConfig(n_iters=100_000)
     rl: ppo.PPOConfig = ppo.PPOConfig()
     rl_timesteps: int = 250_000
+    evo: evo.EvoConfig = evo.EvoConfig()
 
 
 class PortfolioResult(NamedTuple):
@@ -53,9 +67,11 @@ class PortfolioResult(NamedTuple):
     rl_rewards: np.ndarray          # (n_rl,)
     refined_reward: float
     wall_time_s: float
-    source: str                     # 'sa' | 'rl' | 'refined'
+    source: str                     # 'sa' | 'rl' | 'evo' | 'refined'
     placement: object = None        # placement.Placement of the winner
     placement_reward: float = None  # >= best_reward by construction
+    evo_rewards: np.ndarray = None  # (n_evo,)
+    archive: ar.Archive = None      # shared cross-arm Pareto archive
 
 
 @functools.partial(jax.jit, static_argnums=(2, 3))
@@ -187,15 +203,22 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
              cfg: PortfolioConfig = PortfolioConfig(),
              verbose: bool = False,
              scenario: cm.Scenario = None) -> PortfolioResult:
-    """Algorithm 1: best of {n_sa SA chains} U {n_rl RL agents} (+refine).
+    """Algorithm 1: best of {SA chains} U {RL agents} U {GA islands}.
 
-    Both arms are single vmapped XLA programs: ``sa.run_population`` for
-    the chains and ``ppo.train_population`` for the agents — no per-agent
-    Python loop anywhere on the hot path.
+    Every arm is a single vmapped XLA program (``sa.run_population``,
+    ``ppo.train_population``, ``evo.evolve_population``) — no per-agent
+    Python loop anywhere on the hot path. The best candidate of *each*
+    arm is coordinate-refined in one lockstep batched sweep, and every
+    candidate feeds the shared Pareto archive. The SA/RL key streams do
+    not depend on ``n_evo``, so enabling the third arm only ever grows
+    the candidate and refine sets: ``best_reward`` with the evo arm is
+    >= the SA+RL-only portfolio's on the same key, scenario for
+    scenario (asserted by tests/test_evo.py and the smoke bench).
     """
     t0 = time.time()
     scenario = env_cfg.scenario() if scenario is None else scenario
     k_sa, k_rl = jax.random.split(key)
+    k_evo = jax.random.fold_in(key, 3)
 
     # --- SA population (one vmapped program) -------------------------------
     sa_res = sa.run_population(k_sa, cfg.n_sa, env_cfg, cfg.sa,
@@ -220,30 +243,98 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
         rl_flats = np.zeros((0, ps.N_PARAMS), np.int32)
         rl_actions = np.zeros((0, chipenv.action_dim(env_cfg)), np.int32)
 
+    # --- GA islands (one vmapped program, archive riding the scan) ---------
+    evo_archive = None
+    if cfg.n_evo > 0:
+        evo_res = evo.evolve_population(k_evo, cfg.n_evo, env_cfg, cfg.evo,
+                                        scenario=scenario)
+        evo_rewards_arr = np.asarray(evo_res.best_reward, np.float32)
+        evo_flats = np.asarray(ps.to_flat(evo_res.best_design))
+        evo_genomes = np.asarray(evo_res.best_genome)   # incl. plc genes
+        evo_archive = evo_res.archive               # (n_evo, C, ...) stacked
+    else:
+        evo_rewards_arr = np.zeros((0,), np.float32)
+        evo_flats = np.zeros((0, ps.N_PARAMS), np.int32)
+        evo_genomes = np.zeros((0, ps.N_PARAMS), np.int32)
+
     # --- exhaustive argmax over all outcomes (Alg. 1 lines 5-11) -----------
-    all_flats = np.concatenate([sa_flats, rl_flats], axis=0)
-    all_rewards = np.concatenate([sa_rewards, rl_rewards_arr])
+    arm_segments = [("sa", sa_rewards, sa_flats),
+                    ("rl", rl_rewards_arr, rl_flats),
+                    ("evo", evo_rewards_arr, evo_flats)]
+    all_flats = np.concatenate([f for _, _, f in arm_segments], axis=0)
+    all_rewards = np.concatenate([r for _, r, _ in arm_segments])
+    labels = sum(([nm] * len(r) for nm, r, _ in arm_segments), [])
     top = int(np.argmax(all_rewards))
     best_flat = jnp.asarray(all_flats[top], jnp.int32)
     best_r = float(all_rewards[top])
-    source = "sa" if top < len(sa_rewards) else "rl"
+    source = labels[top]
 
+    # --- per-arm lockstep refinement (one batched sweep program) -----------
     refined_r = best_r
+    refine_flats = np.zeros((0, ps.N_PARAMS), np.int32)
+    refine_rewards = np.zeros((0,), np.float32)
     if cfg.refine:
-        refined_flat, refined_r = coordinate_refine(
-            best_flat, env_cfg, cfg.max_refine_sweeps, scenario)
+        arm_best = np.stack([f[np.argmax(r)] for _, r, f in arm_segments
+                             if len(r)], axis=0)
+        n_arms = arm_best.shape[0]
+        scen_rep = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(jnp.asarray(x),
+                                       (n_arms,) + jnp.shape(x)), scenario)
+        refine_flats, refine_rewards = coordinate_refine_batch(
+            arm_best, scen_rep, env_cfg, cfg.max_refine_sweeps)
+        j = int(np.argmax(refine_rewards))
+        refined_r = float(refine_rewards[j])
         if refined_r > best_r:
-            best_flat, source = refined_flat, "refined"
+            best_flat, source = jnp.asarray(refine_flats[j]), "refined"
 
     best_design = ps.from_flat(best_flat)
-    # an RL winner trained with placement actions achieved its reward
-    # *with* a placement mutation — recover it so the returned
-    # (design, placement, placement_reward) triple stays reproducible
+
+    # --- shared Pareto archive: every candidate from every arm -------------
+    arc = ar.empty(cfg.archive_capacity)
+    cand_flats = np.concatenate([all_flats, refine_flats], axis=0)
+    cand_labels = labels + ["refined"] * len(refine_rewards)
+    arm_ids = {"sa": 0, "rl": 1, "evo": 2, "refined": 3}
+    if len(cand_labels):
+        mtr = cm.evaluate(ps.from_flat(jnp.asarray(cand_flats, jnp.int32)),
+                          scenario.workload, scenario.weights, env_cfg.hw,
+                          nop_fidelity=env_cfg.nop_fidelity)
+        # reward mirrors the archived point (canonical-floorplan eval of
+        # the stored flats), NOT the arm-reported best — an RL/evo reward
+        # achieved via a placement mutation belongs to (design, placement)
+        # pairs the 14-index row can't reproduce
+        arc = ar.insert_batch(
+            arc, ar.point_from_metrics(mtr),
+            jnp.asarray(cand_flats, jnp.int32),
+            reward=mtr.reward,
+            payload=jnp.asarray([arm_ids[l] for l in cand_labels],
+                                jnp.int32))
+    if evo_archive is not None:
+        # the GA's generation-live fronts (stacked over islands): every
+        # point an island ever archived competes for the shared front too.
+        # (point, reward) pairs are as-achieved; with placement_genes the
+        # 14-index slice alone may not reproduce them — the full genome
+        # stays in EvoResult.archive.flats
+        n_pts = evo_archive.valid.size
+        arc = ar.insert_batch(
+            arc, evo_archive.points.reshape(n_pts, -1),
+            evo_archive.flats.reshape(n_pts, -1)[:, : ps.N_PARAMS],
+            reward=evo_archive.reward.reshape(n_pts),
+            payload=jnp.full((n_pts,), arm_ids["evo"], jnp.int32),
+            valid=evo_archive.valid.reshape(n_pts))
+    # an RL winner trained with placement actions (or an evo winner with
+    # placement genes) achieved its reward *with* a placement mutation —
+    # recover it so the returned (design, placement, placement_reward)
+    # triple stays reproducible and the placement stage starts from it
     init_plc = None
     if (env_cfg.placement_actions and source == "rl"
             and rl_actions.shape[1] > ps.N_PARAMS):
         win_act = jnp.asarray(rl_actions[top - len(sa_rewards)], jnp.int32)
         _, init_plc = chipenv._design_and_placement(win_act, env_cfg)
+    elif source == "evo" and cfg.evo.placement_genes:
+        win_g = jnp.asarray(
+            evo_genomes[top - len(sa_rewards) - len(rl_rewards_arr)],
+            jnp.int32)
+        _, init_plc = evo.genome_placement(win_g)
     placement, placement_r = init_plc, max(best_r, refined_r)
     if cfg.refine_placement:
         pres = sa.refine_placement(
@@ -262,4 +353,6 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
         source=source,
         placement=placement,
         placement_reward=placement_r,
+        evo_rewards=evo_rewards_arr,
+        archive=arc,
     )

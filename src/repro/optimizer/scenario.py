@@ -31,6 +31,8 @@ from repro.core import monolithic as mono
 from repro.core import params as ps
 from repro.core import placement as pm
 from repro.core import workload as wl
+from repro.optimizer import archive as ar
+from repro.optimizer import evo as evo_mod
 from repro.optimizer import portfolio
 from repro.rl import ppo
 from repro.sa import annealing as sa
@@ -76,9 +78,13 @@ class SuiteConfig:
     weight_grid: Tuple[Tuple[float, float, float], ...] = DEFAULT_WEIGHT_GRID
     n_sa: int = 8
     n_rl: int = 4
+    n_evo: int = 1                  # GA islands per scenario (third arm)
     refine: bool = True
     max_refine_sweeps: int = 2
     placement_refine: bool = True
+    # capacity of the suite-level cross-arm, cross-scenario Pareto archive
+    # (normalized objective space; see run_suite)
+    archive_capacity: int = 128
     # one extra lockstep design sweep under the refined floorplans (the
     # PlacementEvalCache-backed placement stage feeds its winners back
     # into portfolio.coordinate_refine_batch via `placements=`)
@@ -92,14 +98,17 @@ class SuiteConfig:
     sa: sa.SAConfig = sa.SAConfig(n_iters=20_000)
     rl: ppo.PPOConfig = ppo.PPOConfig(n_steps=128, n_envs=4)
     rl_timesteps: int = 128 * 4 * 4
+    evo: evo_mod.EvoConfig = evo_mod.EvoConfig(pop_size=32,
+                                               n_generations=40)
     env: chipenv.EnvConfig = chipenv.EnvConfig()
 
 
 SMOKE_SUITE = SuiteConfig(
-    n_sa=2, n_rl=2,
+    n_sa=2, n_rl=2, n_evo=1,
     sa=sa.SAConfig(n_iters=2_000),
     rl=ppo.PPOConfig(n_steps=32, n_envs=2, batch_size=32),
     rl_timesteps=32 * 2 * 2,
+    evo=evo_mod.EvoConfig(pop_size=8, n_generations=6, archive_capacity=32),
     refine=True, max_refine_sweeps=1,
     placement_sa=sa.PlacementSAConfig(n_iters=500),
 )
@@ -119,7 +128,7 @@ class ScenarioOutcome:
     weights: Tuple[float, float, float]
     best_flat: np.ndarray           # (14,) int32 design indices
     best_reward: float              # with the refined placement (if any)
-    source: str                     # 'sa' | 'rl' | 'refined' | 'placement'
+    source: str   # 'sa' | 'rl' | 'evo' | 'refined' | 'placement' | 'codesign'
     tasks_per_sec: float
     energy_per_task_j: float
     total_cost: float
@@ -138,6 +147,11 @@ class SuiteResult:
     # frontier after normalizing tasks/s and J/task by each workload's
     # monolithic baseline (the raw frontier favors light workloads)
     pareto_normalized: List[int] = dataclasses.field(default_factory=list)
+    # cross-arm, cross-scenario Pareto archive (optimizer/archive.py):
+    # every candidate any arm produced competes in monolithic-normalized
+    # objective space; both frontier index lists above are archive-backed
+    archive: ar.Archive = None
+    hypervolume: float = 0.0        # archive HV w.r.t. its nadir ref
 
 
 def build_scenarios(cfg: SuiteConfig) -> Tuple[List[str], List[str],
@@ -174,51 +188,93 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
               verbose: bool = False) -> SuiteResult:
     """Portfolio-optimize every scenario in the grid; every stage vectorized.
 
-    The SA arm runs (S scenarios x n_sa chains) as one XLA program, the RL
-    arm (S scenarios x n_rl agents) as another; coordinate refinement
-    sweeps all S winners in lockstep (one jitted program per sweep); the
-    placement-refinement stage anneals all S winners' floorplans as one
-    vmapped program. No host loop per winner anywhere.
+    The SA arm runs (S scenarios x n_sa chains) as one XLA program, the
+    RL arm (S scenarios x n_rl agents) as another, the GA arm
+    (S scenarios x n_evo islands, archive riding the generation scan) as
+    a third; coordinate refinement sweeps every arm's per-scenario best
+    in lockstep (one jitted program per sweep — the refine set grows
+    with the arms, so enabling an arm never lowers any scenario's
+    winner); the placement-refinement stage anneals all S winners'
+    floorplans as one vmapped program. No host loop per winner anywhere.
+
+    Every candidate every arm produced — plus the GA islands' own live
+    archives and the final (placement-refined) winners — feeds one
+    suite-level :class:`repro.optimizer.archive.Archive` in
+    monolithic-normalized objective space; the reported ``pareto`` /
+    ``pareto_normalized`` index lists are read back from archive
+    membership rather than a host-side filter.
     """
     t0 = time.time()
     names, wnames, scenarios = build_scenarios(cfg)
     n_scen = len(names)
     k_sa, k_rl, k_pl = jax.random.split(jnp.asarray(key), 3)
+    # folded, not split: the SA/RL streams must not depend on n_evo
+    k_evo = jax.random.fold_in(jnp.asarray(key), 4)
 
-    cand_rewards = []                                   # each (S, K)
-    cand_flats = []                                     # each (S, K, 14)
+    cand_rewards = []                                   # each (S, K_arm)
+    cand_flats = []                                     # each (S, K_arm, 14)
+    arm_slices = []                                     # (name, lo, hi)
+    evo_archives = None
     if cfg.n_sa > 0:
         sa_res = sa.run_scenario_population(
             k_sa, scenarios, cfg.n_sa, cfg.env, cfg.sa)
         cand_rewards.append(np.asarray(sa_res.best_reward))
         cand_flats.append(np.asarray(ps.to_flat(sa_res.best_design)))
+        arm_slices.append(("sa", 0, cfg.n_sa))
     if cfg.n_rl > 0:
         rl_res = ppo.train_scenario_population(
             k_rl, scenarios, cfg.n_rl, cfg.env, cfg.rl,
             total_timesteps=cfg.rl_timesteps)
         cand_rewards.append(np.asarray(rl_res.best_reward))
         cand_flats.append(np.asarray(ps.to_flat(rl_res.best_design)))
+        lo = arm_slices[-1][2] if arm_slices else 0
+        arm_slices.append(("rl", lo, lo + cfg.n_rl))
+    if cfg.n_evo > 0:
+        evo_res = evo_mod.evolve_scenario_population(
+            k_evo, scenarios, cfg.n_evo, cfg.env, cfg.evo)
+        cand_rewards.append(np.asarray(evo_res.best_reward))
+        cand_flats.append(np.asarray(ps.to_flat(evo_res.best_design)))
+        evo_archives = evo_res.archive     # leaves (S, n_evo, C, ...)
+        lo = arm_slices[-1][2] if arm_slices else 0
+        arm_slices.append(("evo", lo, lo + cfg.n_evo))
     if not cand_rewards:
-        raise ValueError("SuiteConfig needs n_sa > 0 or n_rl > 0")
+        raise ValueError("SuiteConfig needs n_sa, n_rl or n_evo > 0")
 
-    n_sa = cfg.n_sa
-    rewards = np.concatenate(cand_rewards, axis=1)      # (S, n_sa + n_rl)
-    flats = np.concatenate(cand_flats, axis=1)          # (S, ..., 14)
+    rewards = np.concatenate(cand_rewards, axis=1)      # (S, K)
+    flats = np.concatenate(cand_flats, axis=1)          # (S, K, 14)
 
-    # per-scenario argmax (host, trivial) ...
-    top = np.argmax(rewards, axis=1)                    # (S,)
-    winner_flats = flats[np.arange(n_scen), top].astype(np.int32)
-    winner_rewards = rewards[np.arange(n_scen), top].astype(np.float64)
-    sources = ["sa" if t < n_sa else "rl" for t in top]
+    # per-arm, per-scenario argmax (host, trivial) ...
+    n_arms = len(arm_slices)
+    rows = np.arange(n_scen)
+    arm_flats = np.stack(
+        [flats[rows, lo + np.argmax(rewards[:, lo:hi], axis=1)]
+         for _, lo, hi in arm_slices], axis=1)          # (S, A, 14)
+    arm_rewards = np.stack(
+        [rewards[:, lo:hi].max(axis=1) for _, lo, hi in arm_slices],
+        axis=1).astype(np.float64)                      # (S, A)
+    arm_names = [nm for nm, _, _ in arm_slices]
 
-    # ... then ONE batched coordinate sweep over all S winners at a time
+    top_arm = np.argmax(arm_rewards, axis=1)
+    winner_flats = arm_flats[rows, top_arm].astype(np.int32)
+    winner_rewards = arm_rewards[rows, top_arm]
+    sources = [arm_names[a] for a in top_arm]
+
+    # ... then ONE batched coordinate sweep over every arm's best for
+    # every scenario at a time ((S*A) rows in lockstep)
+    refined_flats = np.zeros((n_scen, 0, ps.N_PARAMS), np.int32)
     if cfg.refine:
-        refined_flats, refined_r = portfolio.coordinate_refine_batch(
-            winner_flats, scenarios, cfg.env, cfg.max_refine_sweeps)
+        rep_scen = jax.tree_util.tree_map(
+            lambda x: jnp.repeat(x, n_arms, axis=0), scenarios)
+        re_flats, re_r = portfolio.coordinate_refine_batch(
+            arm_flats.reshape(n_scen * n_arms, ps.N_PARAMS), rep_scen,
+            cfg.env, cfg.max_refine_sweeps)
+        refined_flats = re_flats.reshape(n_scen, n_arms, ps.N_PARAMS)
+        re_r = np.asarray(re_r, np.float64).reshape(n_scen, n_arms)
         for s in range(n_scen):
-            if refined_r[s] > winner_rewards[s] + 1e-6:
-                winner_flats[s] = refined_flats[s]
-                winner_rewards[s] = refined_r[s]
+            j = int(np.argmax(re_r[s]))
+            if re_r[s, j] > winner_rewards[s] + 1e-6:
+                winner_flats[s] = refined_flats[s, j]
+                winner_rewards[s] = re_r[s, j]
                 sources[s] = "refined"
 
     dp_batch = ps.from_flat(jnp.asarray(winner_flats))
@@ -311,22 +367,86 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
     triples = np.stack([
         [o.tasks_per_sec, o.energy_per_task_j, o.total_cost]
         for o in outcomes])
-    pareto = pareto_indices(triples, maximize=(True, False, False))
 
-    # per-workload-normalized frontier: tasks/s and J/task relative to the
+    # per-workload normalization: tasks/s and J/task relative to the
     # iso-node monolithic baseline evaluated on the *same* workload, so
     # heavy workloads compete on speedup rather than raw task rate
     mono_m = jax.vmap(lambda w: mono.evaluate(w, cfg.env.hw))(
         scenarios.workload)
+    mono_t = np.maximum(np.asarray(mono_m.tasks_per_sec, np.float64), 1e-30)
+    mono_j = np.maximum(np.asarray(mono_m.energy_per_task_j, np.float64),
+                        1e-30)
     norm = triples.copy()
-    norm[:, 0] = triples[:, 0] / np.maximum(
-        np.asarray(mono_m.tasks_per_sec, np.float64), 1e-30)
-    norm[:, 1] = triples[:, 1] / np.maximum(
-        np.asarray(mono_m.energy_per_task_j, np.float64), 1e-30)
-    pareto_norm = pareto_indices(norm, maximize=(True, False, False))
+    norm[:, 0] = triples[:, 0] / mono_t
+    norm[:, 1] = triples[:, 1] / mono_j
+
+    # archive-backed frontiers over the S winners: insert into a fresh
+    # fixed-capacity store, read membership back (the non-domination test
+    # lives in one code path, optimizer/archive.py). The archive collapses
+    # exact-duplicate points to one entry; the report wants every tied
+    # scenario listed, so re-expand ties against the surviving points.
+    def _front(tr: np.ndarray) -> List[int]:
+        a = ar.insert_batch(
+            ar.empty(n_scen), jnp.asarray(tr, jnp.float32),
+            jnp.asarray(winner_flats),
+            reward=jnp.asarray(winner_rewards, jnp.float32),
+            payload=jnp.arange(n_scen, dtype=jnp.int32))
+        surviving = ar.contents(a)["points"]            # (F, 3) float32
+        tr32 = np.asarray(tr, np.float32)
+        return [s for s in range(n_scen)
+                if (tr32[s] == surviving).all(axis=1).any()]
+
+    pareto = _front(triples)
+    pareto_norm = _front(norm)
+
+    # suite-level cross-arm archive (normalized space): every candidate
+    # every arm produced, every point the GA islands archived, and the
+    # final winners, competing for one bounded non-dominated store
+    suite_arc = ar.empty(cfg.archive_capacity)
+    cand_all = np.concatenate([flats, refined_flats], axis=1)  # (S, K', 14)
+    n_cand = cand_all.shape[1]
+    cand_m = cm.evaluate_scenarios(
+        ps.from_flat(jnp.asarray(cand_all, jnp.int32)), scenarios,
+        cfg.env.hw)
+    cand_pts = np.stack([
+        np.asarray(cand_m.tasks_per_sec, np.float64) / mono_t[:, None],
+        np.asarray(cand_m.energy_per_task_j, np.float64) / mono_j[:, None],
+        np.asarray(cand_m.total_cost, np.float64)], axis=-1)
+    cand_rw = np.asarray(cand_m.reward, np.float64)
+    suite_arc = ar.insert_batch(
+        suite_arc, jnp.asarray(cand_pts.reshape(-1, 3), jnp.float32),
+        jnp.asarray(cand_all.reshape(-1, ps.N_PARAMS)),
+        reward=jnp.asarray(cand_rw.reshape(-1), jnp.float32),
+        payload=jnp.repeat(jnp.arange(n_scen, dtype=jnp.int32), n_cand))
+    if evo_archives is not None:
+        # zero the invalid sentinel rows before normalizing (dividing the
+        # float32-max sentinel can overflow; the rows stay masked anyway)
+        pts = np.where(np.asarray(evo_archives.valid)[..., None],
+                       np.asarray(evo_archives.points, np.float64), 0.0)
+        pts[..., 0] /= mono_t[:, None, None]
+        pts[..., 1] /= mono_j[:, None, None]
+        n_isl, n_arc = pts.shape[1], pts.shape[2]
+        g_dim = evo_archives.flats.shape[-1]
+        suite_arc = ar.insert_batch(
+            suite_arc, jnp.asarray(pts.reshape(-1, 3), jnp.float32),
+            jnp.asarray(evo_archives.flats).reshape(
+                -1, g_dim)[:, : ps.N_PARAMS],
+            reward=jnp.asarray(evo_archives.reward).reshape(-1),
+            payload=jnp.repeat(jnp.arange(n_scen, dtype=jnp.int32),
+                               n_isl * n_arc),
+            valid=jnp.asarray(evo_archives.valid).reshape(-1))
+    suite_arc = ar.insert_batch(
+        suite_arc, jnp.asarray(norm, jnp.float32),
+        jnp.asarray(winner_flats),
+        reward=jnp.asarray(winner_rewards, jnp.float32),
+        payload=jnp.arange(n_scen, dtype=jnp.int32))
+    hv = float(ar.hypervolume(
+        suite_arc, ar.nadir_ref(suite_arc.points, suite_arc.valid)))
+
     return SuiteResult(outcomes=outcomes, pareto=pareto,
                        wall_time_s=time.time() - t0,
-                       pareto_normalized=pareto_norm)
+                       pareto_normalized=pareto_norm,
+                       archive=suite_arc, hypervolume=hv)
 
 
 def format_report(res: SuiteResult) -> str:
@@ -347,15 +467,35 @@ def format_report(res: SuiteResult) -> str:
                  f"monolithic-normalized frontier: "
                  f"{len(res.pareto_normalized)}/{len(res.outcomes)} (+); "
                  f"suite wall-time {res.wall_time_s:.1f}s")
+    if res.archive is not None:
+        lines.append(f"Cross-arm archive: {int(res.archive.n_valid)} "
+                     f"non-dominated points (capacity "
+                     f"{res.archive.capacity}), hypervolume "
+                     f"{res.hypervolume:.4g} (normalized space, nadir ref)")
     return "\n".join(lines)
 
 
 def to_json(res: SuiteResult) -> Dict:
     """JSON-serializable summary (per-scenario winners + frontiers)."""
+    arc = None
+    if res.archive is not None:
+        c = ar.contents(res.archive)
+        arc = {
+            "capacity": res.archive.capacity,
+            "n": int(c["points"].shape[0]),
+            "hypervolume": res.hypervolume,
+            # rows: (speedup vs monolithic, J/task ratio, cost $)
+            "points": [[float(x) for x in p] for p in c["points"]],
+            "reward": [float(r) for r in c["reward"]],
+            "scenario": [int(p) for p in c["payload"]],
+            "designs": [[int(x) for x in f] for f in c["flats"]],
+        }
     return {
         "wall_time_s": res.wall_time_s,
         "pareto": list(res.pareto),
         "pareto_normalized": list(res.pareto_normalized),
+        "hypervolume": res.hypervolume,
+        "archive": arc,
         "scenarios": [{
             "name": o.name,
             "workload": o.workload_name,

@@ -169,6 +169,13 @@ class PlacementSAConfig:
     guide_sigma: float = 1.25     # Gaussian jitter of guided moves (hops)
     record_every: int = 200       # best-so-far history stride
     delta_eval: bool = True       # incremental move scoring (cache carry)
+    # vmap this many independent chains per design and keep the best —
+    # on the launch-bound CI container extra chains amortize the per-step
+    # kernel launches the delta step is bottlenecked on (ROADMAP PR-4
+    # follow-up; chains-vs-single wall clock in bench_costmodel.py).
+    # n_chains=1 preserves the PR-4 key-split layout bit-for-bit (the
+    # recorded-trajectory oracle runs against it).
+    n_chains: int = 1
 
 
 class PlacementResult(NamedTuple):
@@ -205,6 +212,12 @@ def refine_placement(key, design: ps.DesignPoint,
     ``costmodel.placement_ctx`` — same accept/reject trajectory as the
     full-recompute path (bit-for-bit, tests/test_placement_delta.py) at
     a multiple of its step throughput.
+
+    ``cfg.n_chains > 1`` anneals several independent chains (same
+    incumbent, split RNG streams) vmapped inside the same program and
+    returns the best chain's result — extra chains ride the same kernel
+    launches, so on the launch-bound container they are much cheaper
+    than sequential restarts (bench_costmodel.py records the ratio).
     """
     scenario = env_cfg.scenario() if scenario is None else scenario
     v = ps.decode(design)
@@ -308,19 +321,38 @@ def refine_placement(key, design: ps.DesignPoint,
         r_curr = jnp.where(accept, r_cand, r_curr)
         return (cache, r_curr, best, r_best, key), r_best
 
-    if cfg.delta_eval:
-        cache0 = pm.nop_stats_cache(start, n_pos, v.hbm_mask, v.arch_type,
-                                    mesh_edges)
-        state = (cache0, r_start, start, r_start, key)
-        step = step_delta
+    def _chain(chain_key):
+        if cfg.delta_eval:
+            cache0 = pm.nop_stats_cache(start, n_pos, v.hbm_mask,
+                                        v.arch_type, mesh_edges)
+            state = (cache0, r_start, start, r_start, chain_key)
+            step = step_delta
+        else:
+            state = (start, r_start, start, r_start, chain_key)
+            step = step_full
+        iters = jnp.arange(cfg.n_iters, dtype=jnp.float32)
+        (_, _, best, r_best, _), trace = jax.lax.scan(step, state, iters)
+        # strided best-so-far trace + the final value (the stride rarely
+        # lands on the last iteration; history[-1] must equal best_reward)
+        history = jnp.concatenate([trace[:: cfg.record_every], trace[-1:]])
+        return best, r_best, history
+
+    if cfg.n_chains <= 1:
+        best, r_best, history = _chain(key)
     else:
-        state = (start, r_start, start, r_start, key)
-        step = step_full
-    iters = jnp.arange(cfg.n_iters, dtype=jnp.float32)
-    (_, _, best, r_best, _), trace = jax.lax.scan(step, state, iters)
-    # strided best-so-far trace + the final value (the stride rarely lands
-    # on the last iteration, and history[-1] must equal best_reward)
-    history = jnp.concatenate([trace[:: cfg.record_every], trace[-1:]])
+        # several chains per design in one program: same incumbent,
+        # independent RNG streams; keep the best chain's result. Chain 0
+        # reuses the caller's key verbatim, so n_chains > 1 reproduces
+        # the single-chain trajectory among its candidates and the
+        # result is never worse than n_chains=1 on the same key.
+        chain_keys = jnp.concatenate(
+            [key[None], jax.random.split(key, cfg.n_chains - 1)])
+        bests, r_bests, histories = jax.vmap(_chain)(chain_keys)
+        win = jnp.argmax(r_bests)
+        best = jax.tree_util.tree_map(
+            lambda x: jnp.take(x, win, axis=0), bests)
+        r_best = jnp.take(r_bests, win)
+        history = jnp.take(histories, win, axis=0)
     return PlacementResult(best_placement=best, best_reward=r_best,
                            canonical_reward=r0, history=history)
 

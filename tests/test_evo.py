@@ -1,0 +1,410 @@
+"""Evolutionary arm + Pareto archive tests (optimizer/evo.py, archive.py).
+
+The archive invariants (never holds a dominated point, order-insensitive
+insertion up to ties, idempotent re-insert, hypervolume monotone under
+insertion) run twice: as hypothesis properties when hypothesis is
+installed, and as seeded-random checks that always run (the CI container
+has no hypothesis).
+"""
+
+import dataclasses
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core import env as chipenv
+from repro.core import params as ps
+from repro.core import workload as wl
+from repro.optimizer import archive as ar
+from repro.optimizer import evo
+from repro.optimizer import portfolio
+from repro.optimizer import scenario as suite
+from repro.rl import ppo
+from repro.sa import annealing as sa
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+TINY_PPO = ppo.PPOConfig(n_steps=32, n_envs=2, batch_size=32)
+TINY_STEPS = 32 * 2 * 2
+TINY_EVO = evo.EvoConfig(pop_size=8, n_generations=5, archive_capacity=32)
+
+
+def _random_points(key, n):
+    """Raw-convention objective triples with genuine trade-offs."""
+    u = jax.random.uniform(key, (n, 3))
+    return jnp.stack([u[:, 0] * 100.0,             # tasks/s up
+                      0.01 + u[:, 1],              # J/task down
+                      10.0 + u[:, 2] * 90.0], -1)  # cost down
+
+
+def _flats(n):
+    return jnp.zeros((n, ps.N_PARAMS), jnp.int32)
+
+
+def _sorted_rows(points):
+    return np.asarray(points)[np.lexsort(np.asarray(points).T)]
+
+
+class TestArchiveInvariants:
+    def test_dominated_never_held(self):
+        """Random insertion streams: every valid entry stays mutually
+        non-dominated after every insert."""
+        key = jax.random.PRNGKey(0)
+        arc = ar.empty(16)
+        for i in range(6):
+            key, k = jax.random.split(key)
+            arc = ar.insert_batch(arc, _random_points(k, 5), _flats(5))
+            c = ar.contents(arc)
+            nd = ar.non_dominated_mask(jnp.asarray(c["points"]))
+            assert bool(np.asarray(nd).all()), f"dominated point at step {i}"
+
+    def test_insert_order_insensitive(self):
+        pts = _random_points(jax.random.PRNGKey(1), 12)
+        perm = jax.random.permutation(jax.random.PRNGKey(2), 12)
+        a = ar.insert_batch(ar.empty(16), pts, _flats(12))
+        b = ar.insert_batch(ar.empty(16), pts[perm], _flats(12))
+        np.testing.assert_allclose(_sorted_rows(ar.contents(a)["points"]),
+                                   _sorted_rows(ar.contents(b)["points"]))
+
+    def test_insert_split_vs_single_batch(self):
+        pts = _random_points(jax.random.PRNGKey(3), 10)
+        one = ar.insert_batch(ar.empty(16), pts, _flats(10))
+        two = ar.insert_batch(ar.empty(16), pts[:5], _flats(5))
+        two = ar.insert_batch(two, pts[5:], _flats(5))
+        np.testing.assert_allclose(_sorted_rows(ar.contents(one)["points"]),
+                                   _sorted_rows(ar.contents(two)["points"]))
+
+    def test_reinsert_idempotent(self):
+        pts = _random_points(jax.random.PRNGKey(4), 8)
+        arc = ar.insert_batch(ar.empty(16), pts, _flats(8))
+        before = _sorted_rows(ar.contents(arc)["points"])
+        again = ar.insert_batch(arc, pts, _flats(8))
+        np.testing.assert_allclose(
+            before, _sorted_rows(ar.contents(again)["points"]))
+        # re-inserting the archive's own contents is also a no-op
+        merged = ar.merge(arc, arc)
+        np.testing.assert_allclose(
+            before, _sorted_rows(ar.contents(merged)["points"]))
+
+    def test_hypervolume_monotone_under_insertion(self):
+        ref = (0.0, 2.0, 120.0)
+        arc = ar.empty(64)                 # ample: no eviction
+        key, last = jax.random.PRNGKey(5), 0.0
+        for _ in range(6):
+            key, k = jax.random.split(key)
+            arc = ar.insert_batch(arc, _random_points(k, 4), _flats(4))
+            hv = float(ar.hypervolume(arc, ref))
+            assert hv >= last - 1e-4
+            last = hv
+        assert last > 0.0
+
+    def test_hypervolume_exact_boxes(self):
+        arc = ar.insert_batch(ar.empty(8),
+                              jnp.asarray([[10.0, 1.0, 5.0]]), _flats(1))
+        assert float(ar.hypervolume(arc, (0.0, 2.0, 10.0))) == \
+            pytest.approx(50.0, rel=1e-5)
+        arc = ar.insert_batch(arc, jnp.asarray([[5.0, 0.5, 5.0]]), _flats(1))
+        assert float(ar.hypervolume(arc, (0.0, 2.0, 10.0))) == \
+            pytest.approx(62.5, rel=1e-5)
+        arc = ar.insert_batch(arc, jnp.asarray([[10.0, 1.0, 2.0]]), _flats(1))
+        assert float(ar.hypervolume(arc, (0.0, 2.0, 10.0))) == \
+            pytest.approx(92.5, rel=1e-5)
+
+    def test_capacity_eviction_keeps_boundaries(self):
+        t = jnp.linspace(0.0, 1.0, 12)
+        pts = jnp.stack([t * 10.0, 0.1 + 0.9 * t, jnp.full((12,), 5.0)], -1)
+        arc = ar.insert_batch(ar.empty(4), pts, _flats(12))
+        c = ar.contents(arc)
+        assert c["points"].shape[0] == 4
+        assert 0.0 in c["points"][:, 0] and 10.0 in c["points"][:, 0]
+
+    def test_payload_and_reward_ride_along(self):
+        pts = jnp.asarray([[10.0, 1.0, 5.0], [5.0, 2.0, 9.0]])  # 1 dominated
+        arc = ar.insert_batch(ar.empty(4), pts, _flats(2),
+                              reward=jnp.asarray([7.0, 1.0]),
+                              payload=jnp.asarray([42, 43]))
+        c = ar.contents(arc)
+        assert c["payload"].tolist() == [42]
+        assert c["reward"].tolist() == [7.0]
+
+    def test_insert_batch_inside_scan(self):
+        pts = _random_points(jax.random.PRNGKey(6), 8)
+
+        def body(arc, p):
+            return ar.insert_batch(arc, p[None], _flats(1)), 0
+
+        arc, _ = jax.lax.scan(body, ar.empty(8), pts)
+        scanned = _sorted_rows(ar.contents(arc)["points"])
+        direct = ar.insert_batch(ar.empty(8), pts, _flats(8))
+        np.testing.assert_allclose(scanned,
+                                   _sorted_rows(ar.contents(direct)["points"]))
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestArchiveHypothesis:
+    """The same invariants as randomized properties."""
+
+    @staticmethod
+    def _points(rows):
+        return jnp.asarray(rows, jnp.float32)
+
+    if HAVE_HYPOTHESIS:
+        point_row = st.tuples(
+            st.floats(0.1, 100.0), st.floats(0.01, 2.0),
+            st.floats(1.0, 100.0))
+        point_lists = st.lists(point_row, min_size=1, max_size=12)
+
+        @given(point_lists)
+        @settings(max_examples=25, deadline=None)
+        def test_never_holds_dominated(self, rows):
+            arc = ar.insert_batch(ar.empty(16), self._points(rows),
+                                  _flats(len(rows)))
+            c = ar.contents(arc)
+            nd = ar.non_dominated_mask(jnp.asarray(c["points"]))
+            assert bool(np.asarray(nd).all())
+
+        @given(point_lists, st.randoms(use_true_random=False))
+        @settings(max_examples=25, deadline=None)
+        def test_order_insensitive_up_to_ties(self, rows, rng):
+            shuffled = list(rows)
+            rng.shuffle(shuffled)
+            a = ar.insert_batch(ar.empty(16), self._points(rows),
+                                _flats(len(rows)))
+            b = ar.insert_batch(ar.empty(16), self._points(shuffled),
+                                _flats(len(rows)))
+            np.testing.assert_allclose(
+                _sorted_rows(ar.contents(a)["points"]),
+                _sorted_rows(ar.contents(b)["points"]), rtol=1e-6)
+
+        @given(point_lists)
+        @settings(max_examples=25, deadline=None)
+        def test_reinsert_idempotent(self, rows):
+            pts = self._points(rows)
+            arc = ar.insert_batch(ar.empty(16), pts, _flats(len(rows)))
+            before = _sorted_rows(ar.contents(arc)["points"])
+            again = ar.insert_batch(arc, pts, _flats(len(rows)))
+            np.testing.assert_allclose(
+                before, _sorted_rows(ar.contents(again)["points"]))
+
+        @given(point_lists, point_lists)
+        @settings(max_examples=25, deadline=None)
+        def test_hypervolume_monotone(self, rows_a, rows_b):
+            ref = (0.0, 3.0, 150.0)
+            arc = ar.insert_batch(ar.empty(32), self._points(rows_a),
+                                  _flats(len(rows_a)))
+            hv_a = float(ar.hypervolume(arc, ref))
+            arc = ar.insert_batch(arc, self._points(rows_b),
+                                  _flats(len(rows_b)))
+            assert float(ar.hypervolume(arc, ref)) >= hv_a - 1e-3
+
+
+def _scan_body_kernels(fn, *args):
+    """Fused-kernel count of the largest while-loop body of ``fn``."""
+    txt = fn.lower(*args).compile().as_text()
+    regions = {}
+    for m in re.finditer(r"^(%[\w\.\-]+)[^\n]*\{(.*?)\n\}", txt,
+                         re.M | re.S):
+        regions[m.group(1)] = m.group(2)
+    bodies = [regions[b] for b in re.findall(r"body=(%[\w\.\-]+)", txt)
+              if b in regions]
+    if not bodies:
+        return 0
+    return len(re.findall(r"= \S+ (?:fusion|reduce|gather|scatter|sort|dot)\(",
+                          max(bodies, key=len)))
+
+
+class TestEvolve:
+    def test_fixed_seed_deterministic(self):
+        r1 = evo.evolve(jax.random.PRNGKey(0), cfg=TINY_EVO)
+        r2 = evo.evolve(jax.random.PRNGKey(0), cfg=TINY_EVO)
+        assert float(r1.best_reward) == float(r2.best_reward)
+        np.testing.assert_array_equal(np.asarray(r1.best_genome),
+                                      np.asarray(r2.best_genome))
+        np.testing.assert_array_equal(np.asarray(r1.archive.valid),
+                                      np.asarray(r2.archive.valid))
+        np.testing.assert_allclose(np.asarray(r1.archive.points),
+                                   np.asarray(r2.archive.points))
+
+    def test_improves_and_history_monotone(self):
+        res = evo.evolve(jax.random.PRNGKey(1),
+                         cfg=evo.EvoConfig(pop_size=16, n_generations=20))
+        assert float(res.best_reward) > 150.0
+        h = np.asarray(res.history)
+        assert (np.diff(h) >= -1e-5).all()
+        flat = np.asarray(ps.to_flat(res.best_design))
+        assert chipenv.action_space.contains(flat)
+
+    def test_archive_non_dominated_and_rewards_match(self):
+        res = evo.evolve(jax.random.PRNGKey(2), cfg=TINY_EVO)
+        c = ar.contents(res.archive)
+        assert c["points"].shape[0] >= 1
+        nd = ar.non_dominated_mask(jnp.asarray(c["points"]))
+        assert bool(np.asarray(nd).all())
+        # archived reward/triple really is evaluate() of the archived flats
+        m = cm.evaluate(ps.from_flat(jnp.asarray(c["flats"])))
+        np.testing.assert_allclose(np.asarray(m.reward), c["reward"],
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(m.tasks_per_sec),
+                                   c["points"][:, 0], rtol=1e-5)
+
+    def test_generation_is_single_program_kernels_pop_invariant(self):
+        """One generation compiles to one XLA program whose kernel count
+        does not scale with the population (no per-individual dispatch):
+        the generation loop body schedules the same kernels at pop 8
+        and pop 32."""
+        counts = {}
+        for pop in (8, 32):
+            cfg = evo.EvoConfig(pop_size=pop, n_generations=3)
+            fn = jax.jit(lambda k, _cfg=cfg: evo.evolve(
+                k, cfg=_cfg).best_reward)
+            counts[pop] = _scan_body_kernels(fn, jax.random.PRNGKey(0))
+        assert counts[8] > 0
+        # identical modulo small fusion-decision jitter
+        assert abs(counts[8] - counts[32]) <= max(3, counts[8] // 10), counts
+
+    def test_placement_genes(self):
+        cfg = evo.EvoConfig(pop_size=8, n_generations=4,
+                            placement_genes=True)
+        res = evo.evolve(jax.random.PRNGKey(3), cfg=cfg)
+        assert res.best_genome.shape == (ps.N_EXT_PARAMS,)
+        assert np.isfinite(float(res.best_reward))
+        # the genome's reward is reproducible from its design + placement
+        design, plc = evo.genome_placement(res.best_genome)
+        r = cm.reward_only(design, placement=plc)
+        np.testing.assert_allclose(float(r), float(res.best_reward),
+                                   rtol=1e-5)
+
+    def test_population_and_scenario_population_shapes(self):
+        pop = evo.evolve_population(jax.random.PRNGKey(4), 2, cfg=TINY_EVO)
+        assert pop.best_reward.shape == (2,)
+        scen = cm.stack_scenarios(
+            [cm.Scenario(workload=wl.MLPERF[n])
+             for n in list(wl.MLPERF)[:2]])
+        res = evo.evolve_scenario_population(jax.random.PRNGKey(5), scen, 2,
+                                             cfg=TINY_EVO)
+        assert res.best_reward.shape == (2, 2)
+        assert res.archive.valid.shape[:2] == (2, 2)
+
+
+class TestPortfolioEvoArm:
+    CFG = dict(
+        n_sa=2, n_rl=1,
+        sa=sa.SAConfig(n_iters=1000),
+        rl=TINY_PPO, rl_timesteps=TINY_STEPS,
+        refine=True, max_refine_sweeps=1, refine_placement=False,
+        evo=TINY_EVO)
+
+    def test_three_arms_never_worse_than_two(self):
+        """ISSUE-5 acceptance: with the SA/RL key streams unchanged, the
+        evo arm only grows the candidate + refine sets, so best_reward
+        with the arm enabled is >= the SA+RL-only portfolio's."""
+        cfg3 = portfolio.PortfolioConfig(n_evo=1, **self.CFG)
+        cfg2 = portfolio.PortfolioConfig(n_evo=0, **self.CFG)
+        r3 = portfolio.optimize(jax.random.PRNGKey(0), cfg=cfg3)
+        r2 = portfolio.optimize(jax.random.PRNGKey(0), cfg=cfg2)
+        np.testing.assert_array_equal(r3.sa_rewards, r2.sa_rewards)
+        np.testing.assert_array_equal(r3.rl_rewards, r2.rl_rewards)
+        assert r3.best_reward >= r2.best_reward - 1e-6
+        assert r3.evo_rewards.shape == (1,)
+        assert r3.source in ("sa", "rl", "evo", "refined")
+
+    def test_placement_genes_winner_is_reproducible(self):
+        """An evo winner whose reward came from a placement-gene mutation
+        must hand that placement to the placement stage, keeping the
+        placement_reward >= best_reward invariant."""
+        cfg = portfolio.PortfolioConfig(
+            n_sa=1, n_rl=0, n_evo=1,
+            sa=sa.SAConfig(n_iters=300),
+            evo=evo.EvoConfig(pop_size=8, n_generations=6,
+                              placement_genes=True),
+            refine=False, refine_placement=True,
+            placement_sa=sa.PlacementSAConfig(n_iters=100))
+        res = portfolio.optimize(jax.random.PRNGKey(3), cfg=cfg)
+        assert res.placement_reward >= res.best_reward - 1e-5
+
+    def test_shared_archive_feeds_all_arms(self):
+        cfg = portfolio.PortfolioConfig(n_evo=1, **self.CFG)
+        res = portfolio.optimize(jax.random.PRNGKey(1), cfg=cfg)
+        assert res.archive is not None
+        c = ar.contents(res.archive)
+        assert c["points"].shape[0] >= 1
+        nd = ar.non_dominated_mask(jnp.asarray(c["points"]))
+        assert bool(np.asarray(nd).all())
+
+
+class TestSuiteEvoArm:
+    def _cfg(self, n_evo):
+        return dataclasses.replace(
+            suite.SMOKE_SUITE, workloads=("resnet50", "bert"),
+            weight_grid=((1.0, 1.0, 0.1),),
+            n_sa=2, n_rl=0, n_evo=n_evo, sa=sa.SAConfig(n_iters=500),
+            evo=TINY_EVO, refine=True, max_refine_sweeps=1,
+            placement_refine=False)
+
+    def test_suite_three_arm_winners_and_archive(self):
+        res = suite.run_suite(jax.random.PRNGKey(0), self._cfg(1))
+        res0 = suite.run_suite(jax.random.PRNGKey(0), self._cfg(0))
+        for o1, o0 in zip(res.outcomes, res0.outcomes):
+            assert o1.best_reward >= o0.best_reward - 1e-6
+        # the reported frontier is archive-backed and non-dominated
+        assert res.archive is not None
+        c = ar.contents(res.archive)
+        nd = ar.non_dominated_mask(jnp.asarray(c["points"]))
+        assert bool(np.asarray(nd).all())
+        assert res.hypervolume > 0.0
+        assert 1 <= len(res.pareto) <= len(res.outcomes)
+        js = suite.to_json(res)
+        assert js["hypervolume"] == res.hypervolume
+        assert js["archive"]["n"] == int(res.archive.n_valid)
+        report = suite.format_report(res)
+        assert "hypervolume" in report
+
+    def test_tied_winners_all_on_frontier(self):
+        """Two identical scenarios share one winner triple; the archive
+        collapses the duplicate point but the report must list both."""
+        cfg = dataclasses.replace(
+            suite.SMOKE_SUITE, workloads=("resnet50",),
+            weight_grid=((1.0, 1.0, 0.1), (1.0, 1.0, 0.1)),
+            n_sa=2, n_rl=0, n_evo=0, sa=sa.SAConfig(n_iters=300),
+            refine=False, placement_refine=False)
+        res = suite.run_suite(jax.random.PRNGKey(0), cfg)
+        assert res.pareto == [0, 1]
+        assert res.pareto_normalized == [0, 1]
+
+
+class TestMultiChainPlacementSA:
+    def test_chains_never_worse_same_key(self):
+        """Chain 0 reuses the caller's key, so n_chains=4 is a strict
+        superset of the n_chains=1 run on every design."""
+        env_cfg = chipenv.EnvConfig(hw=suite.PLACEMENT_SENSITIVE_HW)
+        dps = ps.random_design(jax.random.PRNGKey(11), (3,))
+        keys = jax.random.split(jax.random.PRNGKey(12), 3)
+        rewards = {}
+        for nc in (1, 4):
+            cfg = sa.PlacementSAConfig(n_iters=200, n_chains=nc)
+            fn = jax.jit(jax.vmap(lambda k, d: sa.refine_placement(
+                k, d, env_cfg, cfg).best_reward))
+            rewards[nc] = np.asarray(fn(keys, dps))
+        assert (rewards[4] >= rewards[1] - 1e-5).all()
+
+    def test_single_chain_unchanged(self):
+        """n_chains=1 must preserve the PR-4 trajectory bit-for-bit."""
+        env_cfg = chipenv.EnvConfig(hw=suite.PLACEMENT_SENSITIVE_HW)
+        dp = ps.random_design(jax.random.PRNGKey(21))
+        key = jax.random.PRNGKey(22)
+        r_default = sa.refine_placement(
+            key, dp, env_cfg, sa.PlacementSAConfig(n_iters=200))
+        r_explicit = sa.refine_placement(
+            key, dp, env_cfg, sa.PlacementSAConfig(n_iters=200, n_chains=1))
+        assert float(r_default.best_reward) == float(r_explicit.best_reward)
+        np.testing.assert_array_equal(
+            np.asarray(r_default.best_placement.chiplet_cell),
+            np.asarray(r_explicit.best_placement.chiplet_cell))

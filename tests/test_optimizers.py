@@ -138,16 +138,19 @@ class TestPPO:
 
 class TestPortfolio:
     def test_runs_and_refines(self):
+        from repro.optimizer import evo
         cfg = portfolio.PortfolioConfig(
             n_sa=2, n_rl=1,
             sa=sa.SAConfig(n_iters=2000),
             rl=ppo.PPOConfig(n_steps=64, n_envs=4, batch_size=32),
             rl_timesteps=64 * 4 * 2,
+            evo=evo.EvoConfig(pop_size=8, n_generations=5),
             refine=True, max_refine_sweeps=2)
         res = portfolio.optimize(jax.random.PRNGKey(0), cfg=cfg)
         assert res.best_reward >= max(res.sa_rewards.max(),
-                                      res.rl_rewards.max()) - 1e-5
-        assert res.source in ("sa", "rl", "refined")
+                                      res.rl_rewards.max(),
+                                      res.evo_rewards.max()) - 1e-5
+        assert res.source in ("sa", "rl", "evo", "refined")
         flat = np.asarray(ps.to_flat(res.best_design))
         assert chipenv.action_space.contains(flat)
 

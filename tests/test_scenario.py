@@ -133,9 +133,11 @@ class TestSAScenario:
 
 class TestPortfolioVectorized:
     def test_optimize_uses_population_and_refines(self):
+        from repro.optimizer import evo
         cfg = portfolio.PortfolioConfig(
             n_sa=2, n_rl=2, sa=sa.SAConfig(n_iters=1000),
             rl=TINY_PPO, rl_timesteps=TINY_STEPS,
+            evo=evo.EvoConfig(pop_size=8, n_generations=5),
             refine=True, max_refine_sweeps=1)
         res = portfolio.optimize(jax.random.PRNGKey(0), cfg=cfg)
         assert res.rl_rewards.shape == (2,)
