@@ -215,6 +215,146 @@ def bench_evo_archive(smoke: bool = True) -> dict:
     }
 
 
+def bench_surrogate(smoke: bool = True) -> dict:
+    """ISSUE-6: the learned-surrogate front-end ranker, measured.
+
+    Four claims, all on this box and this run:
+
+    1. rank quality — Spearman between surrogate scores and analytic
+       fast-tier rewards on a held-out random pool (>= 0.8 CI gate);
+    2. exactness-guard sanity — the analytic argmax of a fresh 64k pool
+       sits inside the surrogate's top-k (so the re-score step recovers
+       it);
+    3. throughput — surrogate-ranked candidates/s (fold once, then
+       score + top_k, the ranker's steady-state hot path) vs the
+       analytic fast tier on the SAME 64k pool (>= 10x CI gate);
+    4. equal-budget value — a full run_stage vs its mode='random'
+       control (identical analytic budget AND bootstrap key stream).
+    """
+    import dataclasses
+
+    from repro.core import workload as wl
+    from repro.kernels import ops
+    from repro.surrogate import model as sm
+    from repro.surrogate import ranker as srk
+
+    del smoke   # quality/throughput claims need the real scale
+    scen = cm.stack_scenarios(
+        [cm.Scenario(workload=wl.MLPERF[name])
+         for name in list(wl.MLPERF)[:2]])
+    hw_cfg = chipenv.EnvConfig().hw
+    cfg = srk.SurrogateConfig()
+
+    t0 = time.time()
+    sres = srk.run_stage(jax.random.PRNGKey(21), scen, cfg, hw_cfg,
+                         nop_fidelity="fast")
+    jax.block_until_ready(sres.cand_rewards)
+    stage_s = time.time() - t0
+    t0 = time.time()
+    rres = srk.run_stage(jax.random.PRNGKey(21), scen,
+                         dataclasses.replace(cfg, mode="random"), hw_cfg,
+                         nop_fidelity="fast")
+    jax.block_until_ready(rres.cand_rewards)
+    rand_s = time.time() - t0
+    best_sur = np.asarray(sres.cand_rewards).max(axis=1)
+    best_rnd = np.asarray(rres.cand_rewards).max(axis=1)
+
+    scen0 = jax.tree_util.tree_map(lambda x: x[0], scen)
+    analytic_fn = jax.jit(jax.vmap(lambda f: cm.reward_only(
+        ps.from_flat(f), scen0.workload, scen0.weights, hw_cfg,
+        nop_fidelity="fast")))
+
+    # rank quality on a held-out pool (never seen in training)
+    held = srk.random_flats(jax.random.PRNGKey(22), 2048)
+    true_r = np.asarray(analytic_fn(held))
+    pred_r = np.asarray(sm.score(sres.params, held, scen0))
+    rk_t = np.argsort(np.argsort(true_r)).astype(np.float64)
+    rk_p = np.argsort(np.argsort(pred_r)).astype(np.float64)
+    spearman = float(np.corrcoef(rk_t, rk_p)[0, 1])
+
+    # throughput, both sides timed on the same fresh 64k pool; warm up
+    # at the FULL pool shape so neither side pays trace+compile inside
+    # the timed region
+    pool = srk.random_flats(jax.random.PRNGKey(23), cfg.pool_size)
+    analytic_fn(pool).block_until_ready()              # compile
+    reps = 3
+    t0 = time.time()
+    for _ in range(reps):
+        pool_r = analytic_fn(pool)
+    pool_r.block_until_ready()
+    analytic_s = (time.time() - t0) / reps
+    pool_r = np.asarray(pool_r)
+
+    folded = sm.fold_scenario(sres.params, scen0)
+    def ranked(p):
+        scores = ops.surrogate_score(p, folded, backend=cfg.backend)
+        return jax.lax.top_k(scores, cfg.top_k)
+    jax.block_until_ready(ranked(pool))                # compile
+    reps = 5
+    t0 = time.time()
+    for _ in range(reps):
+        top_scores, top_idx = ranked(pool)
+    jax.block_until_ready((top_scores, top_idx))
+    ranked_s = (time.time() - t0) / reps
+
+    analytic_cps = cfg.pool_size / max(analytic_s, 1e-9)
+    ranked_cps = cfg.pool_size / max(ranked_s, 1e-9)
+    argmax_in_topk = bool(int(np.argmax(pool_r))
+                          in set(np.asarray(top_idx).tolist()))
+
+    return {
+        "pool_size": cfg.pool_size, "top_k": cfg.top_k,
+        "bootstrap": cfg.bootstrap, "train_steps": cfg.train.steps,
+        "spearman_heldout_2048": round(spearman, 4),
+        "argmax_in_topk": argmax_in_topk,
+        "analytic_fast_candidates_per_s": round(analytic_cps, 1),
+        "surrogate_ranked_candidates_per_s": round(ranked_cps, 1),
+        "throughput_ratio": round(ranked_cps / max(analytic_cps, 1e-9), 2),
+        "stage_wall_s": round(stage_s, 3),
+        "random_control_wall_s": round(rand_s, 3),
+        "stage_best_rewards": [round(float(r), 2) for r in best_sur],
+        "random_best_rewards": [round(float(r), 2) for r in best_rnd],
+        "stage_beats_random": bool((best_sur >= best_rnd - 1e-6).all()),
+    }
+
+
+def bench_surrogate_suite() -> dict:
+    """Suite with the surrogate stage vs the PR-5 three-arm baseline.
+
+    Same key, same SA/RL/evo streams (the stage only folds its own key),
+    so per-scenario winners must be >= the baseline's — the ISSUE-6
+    never-worse CI guard (``--assert-surrogate``).
+    """
+    import dataclasses
+
+    from repro.optimizer import scenario as suite
+    from repro.surrogate import ranker as srk
+    from repro.surrogate import train as strain
+
+    stage = srk.SurrogateConfig(
+        pool_size=16384, top_k=64, bootstrap=1024, capacity=8192,
+        train=strain.TrainConfig(steps=800, batch_size=512))
+    base = dataclasses.replace(
+        suite.SMOKE_SUITE, workloads=("mlperf",),
+        weight_grid=((1.0, 1.0, 0.1),), placement_refine=False,
+        archive_capacity=2048)
+    cfg_s = dataclasses.replace(base, surrogate=stage)
+    res_s = suite.run_suite(jax.random.PRNGKey(0), cfg_s)
+    res_b = suite.run_suite(jax.random.PRNGKey(0), base)
+    rewards_s = [o.best_reward for o in res_s.outcomes]
+    rewards_b = [o.best_reward for o in res_b.outcomes]
+    return {
+        "n_scenarios": len(res_s.outcomes),
+        "rewards_with_surrogate": [round(r, 2) for r in rewards_s],
+        "rewards_baseline": [round(r, 2) for r in rewards_b],
+        "winners_ok": all(rs >= rb - 1e-6
+                          for rs, rb in zip(rewards_s, rewards_b)),
+        "surrogate_wins": sum(o.source == "surrogate"
+                              for o in res_s.outcomes),
+        "extra_analytic_evals_per_scenario": srk.analytic_budget(stage),
+    }
+
+
 def _engine_config(smoke: bool):
     """(n_rl, PPOConfig, timesteps) for the engine bench at either scale."""
     if smoke:
@@ -279,9 +419,69 @@ def main():
                          "the SA+RL-only suite on every MLPerf smoke "
                          "scenario's winner AND on archive hypervolume "
                          "(fixed seed)")
+    ap.add_argument("--surrogate", action="store_true",
+                    help="run ONLY the surrogate ranker benchmark "
+                         "(Spearman, ranked candidates/s vs the analytic "
+                         "fast tier, equal-budget stage-vs-random, suite "
+                         "never-worse) and merge the record into --out")
+    ap.add_argument("--assert-surrogate", action="store_true",
+                    help="with --surrogate: fail unless Spearman >= 0.8, "
+                         "the analytic argmax is in the surrogate top-k, "
+                         "ranked throughput >= 10x the analytic fast "
+                         "tier, and suite winners never lose to the "
+                         "three-arm baseline")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.abspath(__file__)), "BENCH_optimizer.json"))
     args = ap.parse_args()
+
+    if args.surrogate:
+        print("[bench] surrogate ranker: train, Spearman, 64k-pool "
+              "throughput vs analytic fast tier ...")
+        sur = bench_surrogate(smoke=args.smoke)
+        print(f"[bench]   spearman={sur['spearman_heldout_2048']} "
+              f"argmax_in_topk={sur['argmax_in_topk']}")
+        print(f"[bench]   analytic fast "
+              f"{sur['analytic_fast_candidates_per_s']:,.0f} cands/s vs "
+              f"ranked {sur['surrogate_ranked_candidates_per_s']:,.0f} "
+              f"cands/s -> {sur['throughput_ratio']}x")
+        print(f"[bench]   stage {sur['stage_wall_s']}s "
+              f"best={sur['stage_best_rewards']} vs random control "
+              f"{sur['random_control_wall_s']}s "
+              f"best={sur['random_best_rewards']}")
+        print("[bench] suite with surrogate stage vs three-arm baseline "
+              "(same key) ...")
+        sur_suite = bench_surrogate_suite()
+        print(f"[bench]   winners_ok={sur_suite['winners_ok']} "
+              f"(surrogate won {sur_suite['surrogate_wins']}/"
+              f"{sur_suite['n_scenarios']})")
+        record = {}
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                record = json.load(f)
+        record["surrogate"] = sur
+        record["surrogate_suite"] = sur_suite
+        with open(args.out, "w") as f:
+            json.dump(record, f, indent=2)
+            f.write("\n")
+        print(f"[bench] wrote {args.out}")
+        if args.assert_surrogate:
+            fails = []
+            if sur["spearman_heldout_2048"] < 0.8:
+                fails.append(f"spearman {sur['spearman_heldout_2048']}"
+                             " < 0.8")
+            if not sur["argmax_in_topk"]:
+                fails.append("analytic argmax not in surrogate top-k")
+            if sur["throughput_ratio"] < 10.0:
+                fails.append(f"ranked throughput only "
+                             f"{sur['throughput_ratio']}x the analytic "
+                             f"fast tier (need >= 10x)")
+            if not sur_suite["winners_ok"]:
+                fails.append("suite winner lost to three-arm baseline")
+            if fails:
+                for msg in fails:
+                    print(f"[bench] FAIL: {msg}", file=sys.stderr)
+                sys.exit(1)
+        return
 
     n_rl, rl_cfg, timesteps = _engine_config(smoke=args.smoke)
     if args.n_rl:

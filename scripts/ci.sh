@@ -3,8 +3,10 @@
 #
 #   bash scripts/ci.sh
 #
-# Mirrors ROADMAP.md's tier-1 verify command. hypothesis is optional
-# (tests/test_properties.py skips itself when it is missing).
+# Mirrors ROADMAP.md's tier-1 verify command. hypothesis is optional:
+# when the real wheel is missing, tests/conftest.py exposes the vendored
+# shim in tests/_vendor/ so the property suites (tests/test_properties.py,
+# the hypothesis half of tests/test_evo.py) EXECUTE instead of skipping.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -32,6 +34,18 @@ echo "=== smoke: portfolio engine benchmark (+ evo-arm archive guard) ==="
 # the bench archive capacity is large enough that no eviction occurs),
 # so a failure means the superset contract was broken.
 python benchmarks/bench_optimizer.py --smoke --assert-evo-hv
+
+echo "=== smoke: surrogate ranker guards (ISSUE-6) ==="
+# --assert-surrogate: (a) held-out Spearman(surrogate, analytic fast
+# tier) >= 0.8; (b) the analytic argmax of a fresh 64k pool is inside
+# the surrogate top-k (the exactness guard's re-score recovers it);
+# (c) surrogate-ranked candidates/s >= 10x the analytic fast tier's on
+# the same pool, both timed in this run; (d) the MLPerf smoke suite
+# with the surrogate stage never loses a scenario winner to the PR-5
+# three-arm baseline on the same key (holds by construction — the
+# stage folds its own key and every winner is analytic-scored).
+python benchmarks/bench_optimizer.py --surrogate --assert-surrogate \
+    --out "${TMPDIR:-/tmp}/bench_surrogate_ci.json"
 
 echo "=== smoke: cost-model eval throughput (fast-tier + delta-SA guards) ==="
 # CI-scale smoke run with the two-tier throughput guard: fails if the

@@ -62,6 +62,30 @@ _CALLEE_RE = re.compile(r"(?:calls=|to_apply=|condition=|body=|branch_"
 _LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 
 
+def _split_operands(operands_str: str) -> List[str]:
+    """Split an operand list on TOP-LEVEL commas only.
+
+    Inline operand types contain commas inside brackets
+    (``f32[16,16]{1,0} %gte.3``); a naive ``str.split(",")`` shatters
+    them and the trailing-token name extraction then yields ``"16]{1"``
+    instead of ``%gte.3``, silently dropping every shape lookup for
+    rank>=2 operands (dot K-dims, operand bytes).
+    """
+    out, cur, depth = [], [], 0
+    for ch in operands_str:
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+            continue
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth = max(0, depth - 1)
+        cur.append(ch)
+    out.append("".join(cur))
+    return [o.strip() for o in out if o.strip()]
+
+
 def _parse_shape(type_str: str) -> List[Tuple[str, List[int]]]:
     out = []
     for dtype, dims in _SHAPE_RE.findall(type_str):
@@ -162,8 +186,7 @@ def program_costs(hlo_text: str) -> ProgramCosts:
         if not m:
             continue
         name, type_str, op, operands_str, tail = m.groups()
-        operands = [o.strip().split(" ")[-1]
-                    for o in operands_str.split(",") if o.strip()]
+        operands = [o.split(" ")[-1] for o in _split_operands(operands_str)]
 
         if op == "dot":
             k = 1

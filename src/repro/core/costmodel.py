@@ -20,6 +20,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -536,6 +537,38 @@ def _metrics_from_nop(pre: EvalPrefix, workload: Workload,
     )
 
 
+# --- evaluation taps (surrogate training-data collection) ------------------
+# Host-level (concrete) evaluate() calls can be observed by registered
+# taps — the surrogate's EvalDataset (surrogate/dataset.py) fills itself
+# from the optimizer arms' candidate streams this way. Calls made while
+# tracing (inside jit/vmap/scan — the SA/GA/PPO hot loops) are skipped:
+# a tap is a host-side side effect and would otherwise leak tracers.
+_EVAL_TAPS: list = []
+
+
+def register_eval_tap(tap) -> None:
+    """Register ``tap(dp, workload, weights, metrics)`` on evaluate()."""
+    if tap not in _EVAL_TAPS:
+        _EVAL_TAPS.append(tap)
+
+
+def unregister_eval_tap(tap) -> None:
+    """Remove a previously registered eval tap (no-op if absent)."""
+    if tap in _EVAL_TAPS:
+        _EVAL_TAPS.remove(tap)
+
+
+def _notify_eval_taps(dp, workload, weights, mtr) -> None:
+    if not _EVAL_TAPS:
+        return
+    if any(isinstance(x, jax.core.Tracer)
+           for x in (mtr.reward, dp.arch_type, workload.gemm_ops,
+                     weights.alpha)):
+        return
+    for tap in list(_EVAL_TAPS):
+        tap(dp, workload, weights, mtr)
+
+
 def evaluate(dp: ps.DesignPoint,
              workload: Workload = GENERIC_WORKLOAD,
              weights: RewardWeights = RewardWeights(),
@@ -600,7 +633,9 @@ def evaluate(dp: ps.DesignPoint,
                            v.arch_type, pre.mesh_edges)
         nop_canon = pm.nop_stats_fast(m, n, pre.n_positions, v.hbm_mask,
                                       v.arch_type, pre.mesh_edges)
-    return _metrics_from_nop(pre, workload, weights, cfg, nop, nop_canon)
+    mtr = _metrics_from_nop(pre, workload, weights, cfg, nop, nop_canon)
+    _notify_eval_taps(dp, workload, weights, mtr)
+    return mtr
 
 
 class PlacementCtx(NamedTuple):

@@ -119,6 +119,20 @@ def chiplet_eval(dp: ps.DesignPoint,
                                        nop_fidelity)
 
 
+def surrogate_score(flat, folded, backend: str = "auto") -> jnp.ndarray:
+    """Fused surrogate scoring: (N, 14) design flats -> (N,) scores.
+
+    ``folded`` is a scenario-folded ``surrogate.model.FoldedParams``
+    (one readout vector per scenario — see model.fold_scenario).
+    backend: "auto" (pallas on TPU, jnp model path elsewhere),
+    "pallas" (interpret-mode off-TPU), "ref".
+    """
+    if backend == "pallas" or (backend == "auto" and _on_tpu()):
+        from repro.kernels import surrogate_score as _ss
+        return _ss.surrogate_score(flat, folded, interpret=not _on_tpu())
+    return _ref.surrogate_score_reference(flat, folded)
+
+
 def decode_attention(q, k, v, pos, scale=None, window: int = 0,
                      backend: str = "auto"):
     """Single-token GQA decode attention against a (B, KV, S, D) cache."""

@@ -159,6 +159,24 @@ def chiplet_eval_reference(designs_flat: jnp.ndarray,
                      axis=-1)
 
 
+@jax.jit
+def _surrogate_score_jit(flat, folded):
+    from repro.surrogate import model as sm
+    return sm.score_folded(folded, flat)
+
+
+def surrogate_score_reference(flat: jnp.ndarray, folded) -> jnp.ndarray:
+    """Oracle for the fused surrogate scoring kernel.
+
+    flat: (N, 14) int design indices; folded: a scenario-folded
+    ``surrogate.model.FoldedParams``. Returns (N,) predicted Eq.-17
+    rewards — the pure-jnp model path the Pallas kernel must match.
+    (Jitted: this is also the CPU production path of
+    ``ops.surrogate_score``, the ranker's hot loop.)
+    """
+    return _surrogate_score_jit(jnp.asarray(flat, jnp.int32), folded)
+
+
 def decode_attention_reference(q, k, v, pos, scale=None, window: int = 0):
     """Oracle for the single-token decode kernel.
 

@@ -1,0 +1,152 @@
+"""Pallas TPU kernel: fused surrogate candidate scoring.
+
+The surrogate ranker's hot loop (surrogate/ranker.py) scores millions
+of Table-1 design points per second against a trained
+MLP-with-embeddings (surrogate/model.py). The kernel fuses, per VMEM
+tile of ``BLOCK_N`` designs on the sublane axis:
+
+  1. featurization — the categorical one-hot embeddings, normalized
+     ordinals, HBM-mask bit extracts and bandwidth-product interactions
+     of ``model.featurize_t``, computed on the 128-lane axis (all
+     inputs are small integers, so the f32 arithmetic is bit-exact
+     against the int32 reference path), with the mesh-dims lookup as a
+     one-hot matmul against the same (256, 128) table
+     ``chiplet_eval`` uses — TPU-native, no gather;
+  2. the 2-layer MLP — two MXU (B, 128) x (128, 128) matmuls over the
+     zero-padded weight operands;
+  3. the scenario-conditioned head — the Eq.-17 (alpha, beta, gamma)
+     combination pre-folded into a single readout vector + first-layer
+     bias by ``model.fold_scenario``, applied as one lane reduction.
+
+  inputs:  designs f32 (N, 128)  — cols 0..13 = Table-1 grid indices
+           mesh    f32 (256,128) — col 0 = m, col 1 = n (shared table)
+           w1      f32 (128,128) — rows 0..28 = W1, cols 0..H-1
+           w2      f32 (128,128) — rows/cols 0..H-1 = W2
+           vecs    f32 (8, 128)  — row 0 = b1_eff, row 1 = b2,
+                                   row 2 = w_s, row 3 col 0 = bias_s
+  output:  scores  f32 (N, 128)  — col 0 = predicted Eq.-17 reward
+
+``kernels/ref.surrogate_score_reference`` is the interpret-mode twin
+(the pure-jnp model path); ``tests/test_kernels.py`` asserts parity.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import chiplet_eval as _ce
+from repro.surrogate import model as sm
+
+BLOCK_N = 256
+LANES = 128
+
+
+def _bit(x, b):
+    return jnp.floor(x / (2.0 ** b)) % 2.0
+
+
+def _kernel(design_ref, mesh_ref, w1_ref, w2_ref, vec_ref, out_ref):
+    raw = design_ref[...].astype(jnp.float32)            # (B, 128)
+    b = raw.shape[0]
+
+    arch = raw[:, 0]
+    c1 = raw[:, 1]
+    mask = raw[:, 2] + 1.0
+    is_lol = (arch == 2.0).astype(jnp.float32)
+
+    # footprint positions + mesh dims (one-hot matmul, like chiplet_eval)
+    n_pos = jnp.where(is_lol > 0, jnp.floor((c1 + 2.0) / 2.0), c1 + 1.0)
+    onehot = (jax.lax.broadcasted_iota(jnp.float32, (b, 256), 1)
+              == n_pos[:, None]).astype(jnp.float32)
+    mn = jnp.dot(onehot, mesh_ref[...],
+                 preferred_element_type=jnp.float32)
+    m, n = mn[:, 0], mn[:, 1]
+
+    bits = [_bit(mask, i) for i in range(6)]
+    cf = c1 + 1.0                                        # n_dies
+    feats = jnp.stack([
+        (arch == 0.0).astype(jnp.float32),
+        (arch == 1.0).astype(jnp.float32),
+        is_lol, *bits, sum(bits) * (1.0 / 6.0),
+        raw[:, 3], raw[:, 7], raw[:, 10],
+        c1 * (1.0 / 128.0), raw[:, 4] * (1.0 / 20.0),
+        raw[:, 5] * (1.0 / 100.0), raw[:, 6] * (1.0 / 10.0),
+        raw[:, 8] * (1.0 / 31.0), raw[:, 9] * (1.0 / 100.0),
+        raw[:, 11] * (1.0 / 20.0), raw[:, 12] * (1.0 / 100.0),
+        raw[:, 13] * (1.0 / 10.0),
+        (raw[:, 4] + 1.0) * (raw[:, 5] + 1.0) * (1.0 / 2000.0),
+        (raw[:, 11] + 1.0) * (raw[:, 12] + 1.0) * (1.0 / 2000.0),
+        jnp.sqrt(cf) * (1.0 / 12.0), 1.0 / cf,
+        m * (1.0 / 16.0), n * (1.0 / 16.0), (m + n) * (1.0 / 30.0),
+    ], axis=-1)                                          # (B, 29)
+    feats = jnp.pad(feats, ((0, 0), (0, LANES - sm.N_FEATURES)))
+
+    vecs = vec_ref[...]
+    h1 = jax.nn.relu(jnp.dot(feats, w1_ref[...],
+                             preferred_element_type=jnp.float32)
+                     + vecs[0][None, :])
+    h2 = jax.nn.relu(jnp.dot(h1, w2_ref[...],
+                             preferred_element_type=jnp.float32)
+                     + vecs[1][None, :])
+    score = jnp.sum(h2 * vecs[2][None, :], axis=1) + vecs[3, 0]
+    out_ref[...] = jnp.pad(score[:, None], ((0, 0), (0, LANES - 1)))
+
+
+def pack_folded(folded: sm.FoldedParams):
+    """FoldedParams -> the zero-padded (w1, w2, vecs) kernel operands."""
+    h = folded.W2.shape[0]
+    w1 = jnp.zeros((LANES, LANES), jnp.float32)
+    w1 = w1.at[: sm.N_FEATURES, :h].set(folded.W1.astype(jnp.float32))
+    w2 = jnp.zeros((LANES, LANES), jnp.float32)
+    w2 = w2.at[:h, :h].set(folded.W2.astype(jnp.float32))
+    vecs = jnp.zeros((8, LANES), jnp.float32)
+    vecs = vecs.at[0, :h].set(folded.b1_eff.astype(jnp.float32))
+    vecs = vecs.at[1, :h].set(folded.b2.astype(jnp.float32))
+    vecs = vecs.at[2, :h].set(folded.w_s.astype(jnp.float32))
+    vecs = vecs.at[3, 0].set(folded.bias_s.astype(jnp.float32))
+    return w1, w2, vecs
+
+
+def pad_flats(flat: jnp.ndarray, block_n: int = BLOCK_N) -> jnp.ndarray:
+    """(N, 14) int design flats -> (N_padded, 128) f32 kernel input."""
+    x = jnp.asarray(flat, jnp.float32)
+    n_pad = (-x.shape[0]) % block_n
+    return jnp.pad(x, ((0, n_pad), (0, LANES - x.shape[1])))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def score_batch(designs_padded: jnp.ndarray, w1: jnp.ndarray,
+                w2: jnp.ndarray, vecs: jnp.ndarray,
+                interpret: bool = True,
+                block_n: int = BLOCK_N) -> jnp.ndarray:
+    """Run the kernel on padded designs; returns (N_padded,) scores."""
+    n = designs_padded.shape[0]
+    assert n % block_n == 0, f"batch {n} must be a multiple of {block_n}"
+    mesh_tab = jnp.asarray(_ce._mesh_tables())
+    tile = pl.BlockSpec((block_n, LANES), lambda i: (i, 0))
+    whole = lambda shape: pl.BlockSpec(shape, lambda i: (0, 0))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(n // block_n,),
+        in_specs=[tile, whole((256, LANES)), whole((LANES, LANES)),
+                  whole((LANES, LANES)), whole((8, LANES))],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((n, LANES), jnp.float32),
+        interpret=interpret,
+    )(designs_padded.astype(jnp.float32), mesh_tab, w1, w2, vecs)
+    return out[:, 0]
+
+
+def surrogate_score(flat: jnp.ndarray, folded: sm.FoldedParams,
+                    interpret: bool = True,
+                    block_n: int = BLOCK_N) -> jnp.ndarray:
+    """(N, 14) design flats -> (N,) surrogate scores via the kernel."""
+    n = flat.shape[0]
+    padded = pad_flats(flat, block_n)
+    w1, w2, vecs = pack_folded(folded)
+    return score_batch(padded, w1, w2, vecs, interpret=interpret,
+                       block_n=block_n)[:n]

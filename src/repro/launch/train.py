@@ -73,10 +73,20 @@ def train_scenario_suite(args):
                 f"--weights must be a comma list of alpha:beta:gamma "
                 f"triples, e.g. 1:1:0.1,2:0.5:0.1 (got {args.weights!r})")
         overrides["weight_grid"] = grid
+    if args.surrogate:
+        from repro.surrogate import ranker as srk
+        from repro.surrogate import train as strain
+        overrides["surrogate"] = (
+            srk.SurrogateConfig(pool_size=16384, top_k=64, bootstrap=1024,
+                                capacity=8192,
+                                train=strain.TrainConfig(steps=800,
+                                                         batch_size=512))
+            if args.smoke else srk.SurrogateConfig())
     cfg = dataclasses.replace(cfg, **overrides)
     cfg = suite.with_hw_preset(cfg, args.hw_preset)
     print(f"[suite] workloads={workloads} x {len(cfg.weight_grid)} "
           f"weight settings, n_sa={cfg.n_sa}, n_rl={cfg.n_rl}, "
+          f"surrogate={'on' if cfg.surrogate is not None else 'off'}, "
           f"hw-preset={args.hw_preset}")
     res = suite.run_suite(_jax.random.PRNGKey(args.seed), cfg, verbose=True)
     print()
@@ -174,6 +184,11 @@ def main():
                     help="scenario-suite HW calibration preset "
                          "(placement-sensitive: paper-literal Eq.-13 "
                          "traffic + amortization exponent 1)")
+    ap.add_argument("--surrogate", action="store_true",
+                    help="scenario-suite: add the learned-surrogate "
+                         "front-filter arm (surrogate-rank a large pool, "
+                         "analytically re-score the top-k; winners stay "
+                         "analytic-scored)")
     ap.add_argument("--out", default=None,
                     help="write the scenario-suite JSON report here")
     args = ap.parse_args()

@@ -59,6 +59,18 @@ class EvoConfig:
     tournament_k: int = 3
     p_crossover: float = 0.9
     p_mutate: float = 0.1          # per-gene uniform resample probability
+    # fraction of mutating genes that take a +-1 ordinal *creep* step
+    # (clipped to the gene's grid) instead of a uniform resample. The
+    # Table-1 heads are ordinal (PE counts, SRAM sizes, link widths), so
+    # local steps preserve fitness correlation; 0.0 keeps the original
+    # pure-resample operator AND its key stream bit-exact (the creep
+    # bits are folded from the resample key on a static branch).
+    p_creep: float = 0.0
+    # per generation, this many uniform proposals are scored by a
+    # surrogate (when one is passed to evolve()) and the argmax is
+    # injected into the offspring; its *fitness* still comes from the
+    # analytic evaluation like every other individual. 0 disables.
+    surrogate_proposals: int = 0
     placement_genes: bool = False
     archive_capacity: int = 64
 
@@ -108,16 +120,26 @@ def _eval_genome(genome: jnp.ndarray, env_cfg: chipenv.EnvConfig,
 
 def evolve(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
            cfg: EvoConfig = EvoConfig(),
-           scenario: cm.Scenario = None) -> EvoResult:
+           scenario: cm.Scenario = None,
+           surrogate=None) -> EvoResult:
     """One GA run (single scalarized objective + live Pareto archive).
 
     jit/vmap-safe; ``scenario`` is a traced (workload, weights) pytree —
     vmap over it to evolve many scenarios inside one XLA program.
+
+    ``surrogate`` is an optional scenario-folded
+    ``surrogate.model.FoldedParams``: with
+    ``cfg.surrogate_proposals > 0`` each generation injects the
+    surrogate-argmax of that many uniform proposals into the offspring
+    (selection/elitism still run on analytic fitness only).
     """
     scenario = env_cfg.scenario() if scenario is None else scenario
     heads = jnp.asarray(genome_head_sizes(cfg), jnp.int32)
     n_genes = heads.shape[0]
     pop_n = cfg.pop_size
+    use_sur = surrogate is not None and cfg.surrogate_proposals > 0
+    if use_sur:
+        from repro.surrogate import model as sm
 
     def eval_pop(pop):
         return jax.vmap(
@@ -152,7 +174,28 @@ def evolve(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
                                      (pop_n, n_genes))
         mval = jax.random.randint(k_mval, (pop_n, n_genes), 0, heads,
                                   dtype=jnp.int32)
+        if cfg.p_creep > 0.0:
+            # static branch + keys folded from k_mval: the p_creep=0
+            # default consumes exactly the original key stream
+            creep = jax.random.bernoulli(
+                jax.random.fold_in(k_mval, 1), cfg.p_creep,
+                (pop_n, n_genes))
+            step = jnp.where(
+                jax.random.bernoulli(jax.random.fold_in(k_mval, 2), 0.5,
+                                     (pop_n, n_genes)), 1, -1)
+            mval = jnp.where(creep, jnp.clip(child + step, 0, heads - 1),
+                             mval)
         child = jnp.where(mmask, mval, child)
+        if use_sur:
+            # surrogate-guided immigrant: best of Q uniform proposals by
+            # predicted reward, injected after the elite slot — its real
+            # fitness (and any selection pressure) stays analytic
+            props = jax.random.randint(
+                jax.random.fold_in(k_mval, 3),
+                (cfg.surrogate_proposals, n_genes), 0, heads,
+                dtype=jnp.int32)
+            s = sm.score_folded(surrogate, props[:, : ps.N_PARAMS])
+            child = child.at[1].set(props[jnp.argmax(s)])
         child = child.at[0].set(best_g)        # elitism (static index)
 
         fit_c, obj_c = eval_pop(child)
@@ -173,12 +216,13 @@ def evolve(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
 def evolve_population(key, n_islands: int,
                       env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
                       cfg: EvoConfig = EvoConfig(),
-                      scenario: cm.Scenario = None) -> EvoResult:
+                      scenario: cm.Scenario = None,
+                      surrogate=None) -> EvoResult:
     """N independent GA islands in one vmapped program; results stacked."""
     scenario = env_cfg.scenario() if scenario is None else scenario
     keys = jax.random.split(key, n_islands)
     return jax.jit(jax.vmap(
-        lambda k: evolve(k, env_cfg, cfg, scenario)))(keys)
+        lambda k: evolve(k, env_cfg, cfg, scenario, surrogate)))(keys)
 
 
 def evolve_scenario_population(key, scenarios: cm.Scenario, n_islands: int,

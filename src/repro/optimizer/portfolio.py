@@ -40,6 +40,8 @@ from repro.optimizer import archive as ar
 from repro.optimizer import evo
 from repro.rl import ppo
 from repro.sa import annealing as sa
+from repro.surrogate import dataset as sds
+from repro.surrogate import ranker as srk
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +60,10 @@ class PortfolioConfig:
     rl: ppo.PPOConfig = ppo.PPOConfig()
     rl_timesteps: int = 250_000
     evo: evo.EvoConfig = evo.EvoConfig()
+    # surrogate front-filter stage (None disables; see surrogate/ranker.py).
+    # Runs under its own folded key, so enabling it never perturbs the
+    # SA/RL/GA streams — candidates (all analytically re-scored) only ADD.
+    surrogate: srk.SurrogateConfig = None
 
 
 class PortfolioResult(NamedTuple):
@@ -67,11 +73,12 @@ class PortfolioResult(NamedTuple):
     rl_rewards: np.ndarray          # (n_rl,)
     refined_reward: float
     wall_time_s: float
-    source: str                     # 'sa' | 'rl' | 'evo' | 'refined'
+    source: str                     # 'sa'|'rl'|'evo'|'refined'|'surrogate'
     placement: object = None        # placement.Placement of the winner
     placement_reward: float = None  # >= best_reward by construction
     evo_rewards: np.ndarray = None  # (n_evo,)
     archive: ar.Archive = None      # shared cross-arm Pareto archive
+    surrogate_rewards: np.ndarray = None   # (K,) analytic top-k rewards
 
 
 @functools.partial(jax.jit, static_argnums=(2, 3))
@@ -293,21 +300,61 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
     arc = ar.empty(cfg.archive_capacity)
     cand_flats = np.concatenate([all_flats, refine_flats], axis=0)
     cand_labels = labels + ["refined"] * len(refine_rewards)
-    arm_ids = {"sa": 0, "rl": 1, "evo": 2, "refined": 3}
-    if len(cand_labels):
-        mtr = cm.evaluate(ps.from_flat(jnp.asarray(cand_flats, jnp.int32)),
-                          scenario.workload, scenario.weights, env_cfg.hw,
-                          nop_fidelity=env_cfg.nop_fidelity)
-        # reward mirrors the archived point (canonical-floorplan eval of
-        # the stored flats), NOT the arm-reported best — an RL/evo reward
-        # achieved via a placement mutation belongs to (design, placement)
-        # pairs the 14-index row can't reproduce
-        arc = ar.insert_batch(
-            arc, ar.point_from_metrics(mtr),
-            jnp.asarray(cand_flats, jnp.int32),
-            reward=mtr.reward,
-            payload=jnp.asarray([arm_ids[l] for l in cand_labels],
-                                jnp.int32))
+    arm_ids = {"sa": 0, "rl": 1, "evo": 2, "refined": 3, "surrogate": 4}
+    # the archive evaluation below is the portfolio's one concrete
+    # (host-level) cost-model call — with a surrogate stage configured it
+    # doubles as the eval tap site feeding the training ring buffer
+    tap = None
+    if cfg.surrogate is not None:
+        tap = sds.EvalTap(capacity=cfg.surrogate.capacity)
+        cm.register_eval_tap(tap)
+    try:
+        if len(cand_labels):
+            mtr = cm.evaluate(
+                ps.from_flat(jnp.asarray(cand_flats, jnp.int32)),
+                scenario.workload, scenario.weights, env_cfg.hw,
+                nop_fidelity=env_cfg.nop_fidelity)
+            # reward mirrors the archived point (canonical-floorplan eval
+            # of the stored flats), NOT the arm-reported best — an RL/evo
+            # reward achieved via a placement mutation belongs to
+            # (design, placement) pairs the 14-index row can't reproduce
+            arc = ar.insert_batch(
+                arc, ar.point_from_metrics(mtr),
+                jnp.asarray(cand_flats, jnp.int32),
+                reward=mtr.reward,
+                payload=jnp.asarray([arm_ids[l] for l in cand_labels],
+                                    jnp.int32))
+
+        # --- surrogate front-filter stage (see surrogate/ranker.py) --------
+        overall_r = max(best_r, refined_r)
+        sur_rewards_arr = None
+        if cfg.surrogate is not None:
+            scen_b = jax.tree_util.tree_map(
+                lambda x: jnp.asarray(x)[None], scenario)
+            sres = srk.run_stage(
+                jax.random.fold_in(key, 7), scen_b, cfg.surrogate,
+                env_cfg.hw, nop_fidelity=env_cfg.nop_fidelity,
+                tap_dataset=tap.dataset)
+            sur_flats = np.asarray(sres.cand_flats[0])
+            sur_rewards_arr = np.asarray(sres.cand_rewards[0], np.float32)
+            s_mtr = cm.evaluate(
+                ps.from_flat(jnp.asarray(sur_flats, jnp.int32)),
+                scenario.workload, scenario.weights, env_cfg.hw,
+                nop_fidelity=env_cfg.nop_fidelity)
+            arc = ar.insert_batch(
+                arc, ar.point_from_metrics(s_mtr),
+                jnp.asarray(sur_flats, jnp.int32), reward=s_mtr.reward,
+                payload=jnp.full((sur_flats.shape[0],),
+                                 arm_ids["surrogate"], jnp.int32))
+            j = int(np.argmax(sur_rewards_arr))
+            if float(sur_rewards_arr[j]) > overall_r:
+                overall_r = float(sur_rewards_arr[j])
+                best_flat = jnp.asarray(sur_flats[j], jnp.int32)
+                best_design = ps.from_flat(best_flat)
+                source = "surrogate"
+    finally:
+        if tap is not None:
+            cm.unregister_eval_tap(tap)
     if evo_archive is not None:
         # the GA's generation-live fronts (stacked over islands): every
         # point an island ever archived competes for the shared front too.
@@ -335,7 +382,7 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
             evo_genomes[top - len(sa_rewards) - len(rl_rewards_arr)],
             jnp.int32)
         _, init_plc = evo.genome_placement(win_g)
-    placement, placement_r = init_plc, max(best_r, refined_r)
+    placement, placement_r = init_plc, overall_r
     if cfg.refine_placement:
         pres = sa.refine_placement(
             jax.random.fold_in(key, 2), best_design, env_cfg,
@@ -345,7 +392,7 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
 
     return PortfolioResult(
         best_design=best_design,
-        best_reward=max(best_r, refined_r),
+        best_reward=overall_r,
         sa_rewards=sa_rewards,
         rl_rewards=rl_rewards_arr,
         refined_reward=refined_r,
@@ -355,4 +402,5 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
         placement_reward=placement_r,
         evo_rewards=evo_rewards_arr,
         archive=arc,
+        surrogate_rewards=sur_rewards_arr,
     )

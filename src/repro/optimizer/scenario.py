@@ -36,6 +36,7 @@ from repro.optimizer import evo as evo_mod
 from repro.optimizer import portfolio
 from repro.rl import ppo
 from repro.sa import annealing as sa
+from repro.surrogate import ranker as srk
 
 # (alpha, beta, gamma) objective trade-offs swept by default (Eq. 17):
 # balanced (paper default), throughput-first, cost-first, energy-aware.
@@ -101,6 +102,12 @@ class SuiteConfig:
     evo: evo_mod.EvoConfig = evo_mod.EvoConfig(pop_size=32,
                                                n_generations=40)
     env: chipenv.EnvConfig = chipenv.EnvConfig()
+    # surrogate front-filter arm (None disables; surrogate/ranker.py): a
+    # learned ranker proposes candidates that are always analytically
+    # re-scored before competing. Runs under fold_in(key, 7), so the
+    # SA/RL/GA/placement key streams are untouched and enabling it only
+    # grows the candidate + refine sets (never-worse by construction).
+    surrogate: srk.SurrogateConfig = None
 
 
 SMOKE_SUITE = SuiteConfig(
@@ -128,7 +135,7 @@ class ScenarioOutcome:
     weights: Tuple[float, float, float]
     best_flat: np.ndarray           # (14,) int32 design indices
     best_reward: float              # with the refined placement (if any)
-    source: str   # 'sa' | 'rl' | 'evo' | 'refined' | 'placement' | 'codesign'
+    source: str   # 'sa'|'rl'|'evo'|'surrogate'|'refined'|'placement'|'codesign'
     tasks_per_sec: float
     energy_per_task_j: float
     total_cost: float
@@ -237,6 +244,15 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
         evo_archives = evo_res.archive     # leaves (S, n_evo, C, ...)
         lo = arm_slices[-1][2] if arm_slices else 0
         arm_slices.append(("evo", lo, lo + cfg.n_evo))
+    if cfg.surrogate is not None:
+        sur_stage = srk.run_stage(
+            jax.random.fold_in(jnp.asarray(key), 7), scenarios,
+            cfg.surrogate, cfg.env.hw, nop_fidelity=cfg.env.nop_fidelity)
+        cand_rewards.append(np.asarray(sur_stage.cand_rewards))
+        cand_flats.append(np.asarray(sur_stage.cand_flats))
+        lo = arm_slices[-1][2] if arm_slices else 0
+        arm_slices.append(
+            ("surrogate", lo, lo + sur_stage.cand_rewards.shape[1]))
     if not cand_rewards:
         raise ValueError("SuiteConfig needs n_sa, n_rl or n_evo > 0")
 

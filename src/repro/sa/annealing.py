@@ -33,6 +33,12 @@ class SAConfig:
     n_iters: int = 500_000
     temperature: float = 200.0
     step_size: float = 10.0
+    # with a surrogate passed to run(): per iteration, draw this many
+    # candidate moves, let the surrogate pick the most promising one,
+    # and spend the single analytic evaluation on it (acceptance and the
+    # best-so-far bookkeeping stay purely analytic). 0 keeps the paper's
+    # single-proposal Algorithm 2 and its key stream bit-exact.
+    surrogate_proposals: int = 0
 
 
 class SAState(NamedTuple):
@@ -61,13 +67,22 @@ def _objective(x: jnp.ndarray, env_cfg: chipenv.EnvConfig,
 
 def run(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
         cfg: SAConfig = SAConfig(), record_every: int = 1000,
-        scenario: cm.Scenario = None) -> SAResult:
+        scenario: cm.Scenario = None, surrogate=None) -> SAResult:
     """One SA chain (Algorithm 2). jit/vmap-safe.
 
     ``scenario`` is a traced (workload, weights) pytree; vmap over it to
     anneal many scenarios inside one XLA program.
+
+    ``surrogate`` is an optional scenario-folded
+    ``surrogate.model.FoldedParams``: with
+    ``cfg.surrogate_proposals = Q > 0`` each step proposes Q moves,
+    surrogate-ranks them, and analytically evaluates only the winner —
+    the accept test and the returned rewards stay analytic.
     """
     scenario = env_cfg.scenario() if scenario is None else scenario
+    use_sur = surrogate is not None and cfg.surrogate_proposals > 0
+    if use_sur:
+        from repro.surrogate import model as sm
     k_init, k_run = jax.random.split(key)
     x0 = jax.random.uniform(k_init, (ps.N_PARAMS,)) * (_HEADS - 1.0)
     o0 = _objective(x0, env_cfg, scenario)
@@ -75,9 +90,19 @@ def run(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
 
     def step(state: SAState, it):
         key, k_prop, k_acc = jax.random.split(state.key, 3)
-        delta = jax.random.uniform(
-            k_prop, (ps.N_PARAMS,), minval=-1.0, maxval=1.0) * cfg.step_size
-        x_cand = jnp.clip(state.x_curr + delta, 0.0, _HEADS - 1.0)
+        if use_sur:
+            delta = jax.random.uniform(
+                k_prop, (cfg.surrogate_proposals, ps.N_PARAMS),
+                minval=-1.0, maxval=1.0) * cfg.step_size
+            cands = jnp.clip(state.x_curr + delta, 0.0, _HEADS - 1.0)
+            scores = sm.score_folded(
+                surrogate, jnp.round(cands).astype(jnp.int32))
+            x_cand = cands[jnp.argmax(scores)]
+        else:
+            delta = jax.random.uniform(
+                k_prop, (ps.N_PARAMS,), minval=-1.0,
+                maxval=1.0) * cfg.step_size
+            x_cand = jnp.clip(state.x_curr + delta, 0.0, _HEADS - 1.0)
         o_cand = _objective(x_cand, env_cfg, scenario)
 
         better_best = o_cand > state.o_best
@@ -104,12 +129,14 @@ def run_population(key, n_chains: int,
                    env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
                    cfg: SAConfig = SAConfig(),
                    record_every: int = 1000,
-                   scenario: cm.Scenario = None) -> SAResult:
+                   scenario: cm.Scenario = None,
+                   surrogate=None) -> SAResult:
     """N independent chains in one vmapped program; results stacked."""
     scenario = env_cfg.scenario() if scenario is None else scenario
     keys = jax.random.split(key, n_chains)
     return jax.jit(jax.vmap(
-        lambda k: run(k, env_cfg, cfg, record_every, scenario)))(keys)
+        lambda k: run(k, env_cfg, cfg, record_every, scenario,
+                      surrogate)))(keys)
 
 
 def run_scenario_population(key, scenarios: cm.Scenario, n_chains: int,

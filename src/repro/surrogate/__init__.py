@@ -1,0 +1,12 @@
+"""Learned cost-model surrogate (front-end ranker, ROADMAP item 1).
+
+- ``model``   : featurization + MLP + scenario-conditioned head folding
+- ``dataset`` : ring-buffer EvalDataset + the costmodel eval tap
+- ``train``   : one-scan Adam training (training/optim.py machinery)
+- ``ranker``  : surrogate_topk front filter with the exactness guard
+
+The fused scoring kernel lives in ``repro.kernels.surrogate_score``
+(Pallas) with its jnp twin dispatched by ``repro.kernels.ops``.
+"""
+
+from repro.surrogate import dataset, model, ranker, train  # noqa: F401

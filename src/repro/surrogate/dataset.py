@@ -1,0 +1,120 @@
+"""Ring-buffer EvalDataset + the costmodel eval tap that fills it.
+
+The surrogate trains *online* from the evaluation streams the optimizer
+arms already produce: every host-level (concrete, non-traced)
+``costmodel.evaluate`` call can be tapped through
+``costmodel.register_eval_tap`` and lands in a fixed-capacity ring
+buffer of (design flat, scenario features, target vector) rows.
+Evaluations inside jitted scan bodies (the SA/GA/PPO hot loops) are
+traced and therefore invisible to the tap by construction — the arms'
+*candidate* streams (their returned bests, the portfolio's archive
+evaluation batch) are what flows through here, topped up by an explicit
+bootstrap pool where the ranker needs more coverage
+(surrogate/ranker.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core import params as ps
+from repro.surrogate import model as sm
+
+
+class EvalDataset(NamedTuple):
+    """Fixed-capacity ring buffer of surrogate training rows."""
+
+    flats: jnp.ndarray      # (C, 14) int32 design indices
+    sfeats: jnp.ndarray     # (C, S) f32 scenario features
+    targets: jnp.ndarray    # (C, 6) f32 raw (un-standardized) targets
+    count: jnp.ndarray      # () int32 — total rows ever written
+
+
+def empty(capacity: int) -> EvalDataset:
+    return EvalDataset(
+        flats=jnp.zeros((capacity, ps.N_PARAMS), jnp.int32),
+        sfeats=jnp.zeros((capacity, sm.N_SCEN_FEATURES), jnp.float32),
+        targets=jnp.zeros((capacity, sm.N_TARGETS), jnp.float32),
+        count=jnp.zeros((), jnp.int32))
+
+
+def size(ds: EvalDataset) -> jnp.ndarray:
+    """Number of valid rows (<= capacity)."""
+    return jnp.minimum(ds.count, ds.flats.shape[0])
+
+
+def targets_from_metrics(mtr: cm.Metrics) -> jnp.ndarray:
+    """Metrics -> (..., 6) raw target rows (see model.TARGET_NAMES)."""
+    return jnp.stack([
+        jnp.asarray(mtr.reward_t, jnp.float32),
+        jnp.asarray(mtr.reward_c, jnp.float32),
+        jnp.asarray(mtr.reward_e, jnp.float32),
+        jnp.log(jnp.maximum(jnp.asarray(mtr.tasks_per_sec, jnp.float32),
+                            1e-30)),
+        jnp.log(jnp.maximum(jnp.asarray(mtr.energy_per_task_j, jnp.float32),
+                            1e-30)),
+        jnp.log(jnp.maximum(jnp.asarray(mtr.total_cost, jnp.float32),
+                            1e-30))], -1)
+
+
+def add(ds: EvalDataset, flats: jnp.ndarray, targets: jnp.ndarray,
+        sfeats: jnp.ndarray) -> EvalDataset:
+    """Ring-write a batch of rows (newest rows win when over capacity)."""
+    flats = jnp.asarray(flats, jnp.int32).reshape(-1, ps.N_PARAMS)
+    targets = jnp.asarray(targets, jnp.float32).reshape(-1, sm.N_TARGETS)
+    sfeats = jnp.broadcast_to(
+        jnp.asarray(sfeats, jnp.float32),
+        flats.shape[:1] + (sm.N_SCEN_FEATURES,))
+    cap = ds.flats.shape[0]
+    n = flats.shape[0]
+    if n > cap:                              # only the tail can survive
+        flats, targets, sfeats = flats[-cap:], targets[-cap:], sfeats[-cap:]
+        ds = ds._replace(count=ds.count + (n - cap))
+        n = cap
+    idx = (ds.count + jnp.arange(n)) % cap
+    return EvalDataset(
+        flats=ds.flats.at[idx].set(flats),
+        sfeats=ds.sfeats.at[idx].set(sfeats),
+        targets=ds.targets.at[idx].set(targets),
+        count=ds.count + n)
+
+
+def add_metrics(ds: EvalDataset, dp: ps.DesignPoint, mtr: cm.Metrics,
+                scenario: cm.Scenario) -> EvalDataset:
+    """Record evaluate() results: (designs, Metrics, their scenario)."""
+    return add(ds, ps.to_flat(dp), targets_from_metrics(mtr),
+               sm.scenario_features(scenario))
+
+
+class EvalTap:
+    """A costmodel eval tap bound to one ring buffer.
+
+    Usage::
+
+        tap = EvalTap(capacity=8192)
+        cm.register_eval_tap(tap)
+        ... host-level cm.evaluate calls accumulate into tap.dataset ...
+        cm.unregister_eval_tap(tap)
+
+    The tap only ever sees concrete arrays (costmodel skips taps while
+    tracing), so the ring update runs eagerly on host.
+    """
+
+    def __init__(self, capacity: int = 8192):
+        self.dataset = empty(capacity)
+
+    def __call__(self, dp: ps.DesignPoint, workload: cm.Workload,
+                 weights: cm.RewardWeights, mtr: cm.Metrics) -> None:
+        scen = cm.Scenario(workload=workload, weights=weights)
+        sf = sm.scenario_features(scen)
+        flats = ps.to_flat(dp)
+        tgts = targets_from_metrics(mtr)
+        # a scalar-scenario batched-design call broadcasts its one
+        # scenario row over the whole design batch
+        if np.ndim(sf) == 1 and np.ndim(flats) > 1:
+            sf = jnp.broadcast_to(sf, flats.shape[:-1] + sf.shape)
+        self.dataset = add(self.dataset, flats, tgts, sf)

@@ -1,0 +1,110 @@
+"""Strategies for the vendored hypothesis shim (see package docstring).
+
+Each strategy generates via ``example(rnd, mode)`` where ``rnd`` is a
+seeded ``random.Random`` and ``mode`` is ``'low'`` (lower bounds),
+``'high'`` (upper bounds) or ``'rand'``; the bound sweeps give every
+``@given`` test deterministic edge-case coverage before the random
+examples.
+"""
+
+from __future__ import annotations
+
+import random
+
+
+class SearchStrategy:
+    def example(self, rnd: random.Random, mode: str = "rand"):
+        raise NotImplementedError
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def example(self, rnd, mode="rand"):
+        if mode == "low":
+            return self.lo
+        if mode == "high":
+            return self.hi
+        return rnd.randint(self.lo, self.hi)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def example(self, rnd, mode="rand"):
+        if mode == "low":
+            return self.lo
+        if mode == "high":
+            return self.hi
+        return rnd.uniform(self.lo, self.hi)
+
+
+class _Booleans(SearchStrategy):
+    def example(self, rnd, mode="rand"):
+        if mode == "low":
+            return False
+        if mode == "high":
+            return True
+        return bool(rnd.getrandbits(1))
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, *strats):
+        self.strats = strats
+
+    def example(self, rnd, mode="rand"):
+        return tuple(s.example(rnd, mode) for s in self.strats)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements, min_size=0, max_size=None):
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = int(max_size if max_size is not None
+                            else min_size + 10)
+
+    def example(self, rnd, mode="rand"):
+        if mode == "low":
+            n = self.min_size
+        elif mode == "high":
+            n = self.max_size
+        else:
+            n = rnd.randint(self.min_size, self.max_size)
+        # element modes stay random so bound-sweep lists aren't constant
+        return [self.elements.example(rnd, "rand") for _ in range(n)]
+
+
+class _Randoms(SearchStrategy):
+    def __init__(self, use_true_random=False):
+        self.use_true_random = use_true_random
+
+    def example(self, rnd, mode="rand"):
+        if self.use_true_random:
+            return random.Random()
+        return random.Random(rnd.getrandbits(32))
+
+
+def integers(min_value, max_value):
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value, max_value, **_ignored):
+    return _Floats(min_value, max_value)
+
+
+def booleans():
+    return _Booleans()
+
+
+def tuples(*strats):
+    return _Tuples(*strats)
+
+
+def lists(elements, min_size=0, max_size=None):
+    return _Lists(elements, min_size, max_size)
+
+
+def randoms(use_true_random=False):
+    return _Randoms(use_true_random)

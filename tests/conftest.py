@@ -1,0 +1,21 @@
+"""Test-suite bootstrap: vendored hypothesis fallback.
+
+The CI container ships no ``hypothesis`` wheel (and installing one is
+not allowed), which previously left every property-based suite
+(tests/test_properties.py, the TestArchiveHypothesis half of
+tests/test_evo.py) permanently skipped. When the real library is
+missing, expose the minimal vendored shim in tests/_vendor/ under the
+same import name so those suites execute; a genuine install always
+takes precedence (this hook only runs on ImportError).
+"""
+
+import os
+import sys
+
+try:
+    import hypothesis  # noqa: F401  (real install wins)
+except ImportError:
+    sys.path.insert(
+        0, os.path.join(os.path.dirname(__file__), "_vendor"))
+
+collect_ignore_glob = ["_vendor/*"]

@@ -282,6 +282,27 @@ class TestEvolve:
         np.testing.assert_allclose(float(r), float(res.best_reward),
                                    rtol=1e-5)
 
+    def test_creep_mutation_never_loses_fixed_seeds(self):
+        """+-1 ordinal creep (p_creep=0.5) vs pure per-index resample on
+        fixed seeds: the Table-1 heads are ordinal, so local steps keep
+        fitness correlation and creep should not lose on these runs."""
+        base = evo.EvoConfig(pop_size=16, n_generations=12)
+        creep = dataclasses.replace(base, p_creep=0.5)
+        for seed in (0, 1):
+            key = jax.random.PRNGKey(seed)
+            r_base = evo.evolve(key, cfg=base)
+            r_creep = evo.evolve(key, cfg=creep)
+            assert (float(r_creep.best_reward)
+                    >= float(r_base.best_reward)), seed
+
+    def test_creep_mutation_deterministic_and_in_grid(self):
+        cfg = dataclasses.replace(TINY_EVO, p_creep=0.5)
+        r1 = evo.evolve(jax.random.PRNGKey(0), cfg=cfg)
+        r2 = evo.evolve(jax.random.PRNGKey(0), cfg=cfg)
+        assert float(r1.best_reward) == float(r2.best_reward)
+        flat = np.asarray(ps.to_flat(r1.best_design))
+        assert chipenv.action_space.contains(flat)
+
     def test_population_and_scenario_population_shapes(self):
         pop = evo.evolve_population(jax.random.PRNGKey(4), 2, cfg=TINY_EVO)
         assert pop.best_reward.shape == (2,)

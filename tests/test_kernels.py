@@ -310,3 +310,60 @@ class TestDecodeAttention:
         b = ops.decode_attention(q, k, v, jnp.int32(99), backend="ref")
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=2e-5, atol=2e-5)
+
+
+class TestSurrogateScore:
+    """Fused surrogate scoring kernel vs its jnp twin (model.score_folded)."""
+
+    @staticmethod
+    def _folded(seed=0):
+        from repro.core import env as chipenv
+        from repro.surrogate import model as sm
+        params = sm.init_params(jax.random.PRNGKey(seed))
+        # non-trivial target normalizers, like after training
+        params["mu"] = jnp.linspace(-2.0, 4.0, sm.N_TARGETS)
+        params["sd"] = jnp.linspace(0.5, 3.0, sm.N_TARGETS)
+        return sm.fold_scenario(params, chipenv.EnvConfig().scenario())
+
+    @pytest.mark.parametrize("n", [256, 1024, 1000])
+    def test_matches_model_twin(self, n):
+        from repro.kernels import surrogate_score as ss
+        from repro.surrogate import model as sm
+        folded = self._folded()
+        flat = ps.to_flat(ps.random_design(jax.random.PRNGKey(n), (n,)))
+        out = ss.surrogate_score(flat, folded, interpret=True)
+        expect = sm.score_folded(folded, flat)
+        assert out.shape == (n,)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_block_size_independence(self):
+        from repro.kernels import surrogate_score as ss
+        folded = self._folded(1)
+        flat = ps.to_flat(ps.random_design(jax.random.PRNGKey(5), (512,)))
+        a = ss.surrogate_score(flat, folded, interpret=True, block_n=128)
+        b = ss.surrogate_score(flat, folded, interpret=True, block_n=512)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_ops_dispatch(self):
+        folded = self._folded(2)
+        flat = ps.to_flat(ps.random_design(jax.random.PRNGKey(6), (300,)))
+        a = ops.surrogate_score(flat, folded, backend="pallas")
+        b = ops.surrogate_score(flat, folded, backend="ref")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_ranking_agreement(self):
+        """The kernel must preserve the jnp twin's top-k set exactly on a
+        well-separated pool (the ranker consumes indices, not scores)."""
+        from repro.kernels import surrogate_score as ss
+        from repro.surrogate import model as sm
+        folded = self._folded(3)
+        flat = ps.to_flat(ps.random_design(jax.random.PRNGKey(7), (2048,)))
+        k_scores = np.asarray(ss.surrogate_score(flat, folded,
+                                                 interpret=True))
+        j_scores = np.asarray(sm.score_folded(folded, flat))
+        top_k = set(np.argsort(k_scores)[::-1][:64].tolist())
+        top_j = set(np.argsort(j_scores)[::-1][:64].tolist())
+        assert len(top_k & top_j) >= 63   # ties at the boundary only

@@ -1,0 +1,331 @@
+"""Surrogate subsystem tests (surrogate/, costmodel eval tap, wiring).
+
+Covers: featurization invariants, the scenario-fold identity (score ==
+alpha*r_t - beta*r_c - gamma*r_e of predict()), the EvalDataset ring
+buffer, the costmodel tap's concrete/traced gating, the run_stage
+exactness guard (every returned reward is analytic), and the
+portfolio / suite key-stream isolation contract (enabling the stage
+never perturbs the other arms).
+
+Kernel parity (Pallas twin vs ref vs model) lives in tests/test_kernels.py;
+the throughput + Spearman-at-scale gates live in scripts/ci.sh on top of
+benchmarks/bench_optimizer.py --surrogate.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core import env as chipenv
+from repro.core import params as ps
+from repro.core import workload as wl
+from repro.optimizer import evo
+from repro.optimizer import portfolio
+from repro.optimizer import scenario as suite
+from repro.rl import ppo
+from repro.sa import annealing as sa
+from repro.surrogate import dataset as sds
+from repro.surrogate import model as sm
+from repro.surrogate import ranker as srk
+from repro.surrogate import train as strain
+
+TINY_STAGE = srk.SurrogateConfig(
+    pool_size=2048, top_k=16, bootstrap=128, capacity=2048,
+    train=strain.TrainConfig(steps=200, batch_size=128))
+
+
+def _scenarios(n=2):
+    return cm.stack_scenarios(
+        [cm.Scenario(workload=wl.MLPERF[name])
+         for name in list(wl.MLPERF)[:n]])
+
+
+class TestFeaturize:
+    def test_shape_dtype_and_batch_consistency(self):
+        flats = srk.random_flats(jax.random.PRNGKey(0), 64)
+        f = sm.featurize(flats)
+        assert f.shape == (64, sm.N_FEATURES)
+        assert f.dtype == jnp.float32
+        assert bool(jnp.isfinite(f).all())
+        # leading batch dims reshape through
+        f3 = sm.featurize(flats.reshape(4, 16, ps.N_PARAMS))
+        np.testing.assert_array_equal(
+            np.asarray(f3.reshape(64, sm.N_FEATURES)), np.asarray(f))
+
+    def test_featurize_t_transposed_twin(self):
+        flats = srk.random_flats(jax.random.PRNGKey(1), 32)
+        np.testing.assert_array_equal(
+            np.asarray(sm.featurize_t(flats.T).T),
+            np.asarray(sm.featurize(flats)))
+
+    def test_distinct_designs_distinct_features(self):
+        flats = srk.random_flats(jax.random.PRNGKey(2), 128)
+        f = np.asarray(sm.featurize(flats))
+        uniq_designs = np.unique(np.asarray(flats), axis=0).shape[0]
+        uniq_feats = np.unique(f.round(6), axis=0).shape[0]
+        assert uniq_feats == uniq_designs
+
+
+class TestFoldScenario:
+    def test_fold_matches_predict_combination(self):
+        """score_folded must equal the Eq.-17 combination of the three
+        denormalized reward-term heads of predict()."""
+        params = sm.init_params(jax.random.PRNGKey(0))
+        # non-trivial normalizers, like after training
+        params["mu"] = jnp.arange(1.0, 7.0)
+        params["sd"] = jnp.arange(0.5, 3.5, 0.5)
+        scen = chipenv.EnvConfig().scenario()
+        flats = srk.random_flats(jax.random.PRNGKey(3), 256)
+        p = sm.predict(params, flats, scen)
+        w = scen.weights
+        want = (w.alpha * p[:, 0] - w.beta * p[:, 1] - w.gamma * p[:, 2])
+        got = sm.score(params, flats, scen)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_rank_topk_matches_argsort(self):
+        params = sm.init_params(jax.random.PRNGKey(1))
+        scen = chipenv.EnvConfig().scenario()
+        flats = srk.random_flats(jax.random.PRNGKey(4), 512)
+        folded = sm.fold_scenario(params, scen)
+        scores = np.asarray(sm.score_folded(folded, flats))
+        _, idx = sm.rank_topk_jnp(folded, flats, 8)
+        np.testing.assert_array_equal(
+            scores[np.asarray(idx)],
+            np.sort(scores)[::-1][:8])
+
+
+class TestEvalDataset:
+    def test_ring_wraps_newest_rows_win(self):
+        ds = sds.empty(8)
+        f1 = jnp.arange(5 * ps.N_PARAMS, dtype=jnp.int32).reshape(5, -1)
+        t1 = jnp.ones((5, sm.N_TARGETS))
+        s1 = jnp.zeros((5, sm.N_SCEN_FEATURES))
+        ds = sds.add(ds, f1, t1, s1)
+        assert int(sds.size(ds)) == 5
+        f2 = 100 + jnp.arange(6 * ps.N_PARAMS, dtype=jnp.int32).reshape(6, -1)
+        ds = sds.add(ds, f2, 2 * jnp.ones((6, sm.N_TARGETS)),
+                     jnp.zeros((6, sm.N_SCEN_FEATURES)))
+        assert int(ds.count) == 11
+        assert int(sds.size(ds)) == 8
+        rows = np.asarray(ds.flats)
+        # all six newest rows present, oldest three evicted
+        for r in np.asarray(f2):
+            assert (rows == r).all(axis=1).any()
+        assert not (rows == np.asarray(f1[0])).all(axis=1).any()
+
+    def test_oversized_batch_keeps_tail(self):
+        ds = sds.empty(4)
+        f = jnp.arange(10 * ps.N_PARAMS, dtype=jnp.int32).reshape(10, -1)
+        ds = sds.add(ds, f, jnp.zeros((10, sm.N_TARGETS)),
+                     jnp.zeros((sm.N_SCEN_FEATURES,)))
+        assert int(sds.size(ds)) == 4
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(ds.flats), axis=0),
+            np.sort(np.asarray(f[-4:]), axis=0))
+
+    def test_targets_from_metrics_order(self):
+        dp = ps.from_flat(srk.random_flats(jax.random.PRNGKey(5), 3))
+        mtr = cm.evaluate(dp)
+        t = np.asarray(sds.targets_from_metrics(mtr))
+        assert t.shape == (3, sm.N_TARGETS)
+        np.testing.assert_allclose(t[:, 0], np.asarray(mtr.reward_t),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(t[:, 3],
+                                   np.log(np.asarray(mtr.tasks_per_sec)),
+                                   rtol=1e-6)
+
+
+class TestEvalTap:
+    def test_concrete_eval_tapped_traced_skipped(self):
+        tap = sds.EvalTap(capacity=64)
+        cm.register_eval_tap(tap)
+        try:
+            dp = ps.from_flat(srk.random_flats(jax.random.PRNGKey(6), 4))
+            cm.evaluate(dp)                          # concrete -> tapped
+            assert int(sds.size(tap.dataset)) == 4
+            jax.jit(cm.evaluate)(dp)                 # traced -> skipped
+            assert int(sds.size(tap.dataset)) == 4
+            scen = _scenarios(2)
+            cm.evaluate_scenarios(dp, scen, chipenv.EnvConfig().hw,
+                                  paired=False)      # vmapped -> skipped
+            assert int(sds.size(tap.dataset)) == 4
+        finally:
+            cm.unregister_eval_tap(tap)
+        cm.evaluate(ps.from_flat(srk.random_flats(jax.random.PRNGKey(7), 2)))
+        assert int(sds.size(tap.dataset)) == 4       # unregistered
+
+    def test_tap_rows_are_training_rows(self):
+        tap = sds.EvalTap(capacity=16)
+        cm.register_eval_tap(tap)
+        try:
+            flats = srk.random_flats(jax.random.PRNGKey(8), 5)
+            mtr = cm.evaluate(ps.from_flat(flats))
+        finally:
+            cm.unregister_eval_tap(tap)
+        np.testing.assert_array_equal(np.asarray(tap.dataset.flats[:5]),
+                                      np.asarray(flats))
+        np.testing.assert_allclose(
+            np.asarray(tap.dataset.targets[:5]),
+            np.asarray(sds.targets_from_metrics(mtr)), rtol=1e-6)
+
+
+class TestTrain:
+    def test_fit_learns_ranking_signal(self):
+        """200 steps on 128 bootstrap rows already rank far better than
+        chance (full-scale Spearman gate lives in ci.sh)."""
+        scen = _scenarios(1)
+        ds, flats, rewards = srk.bootstrap_dataset(
+            jax.random.PRNGKey(9), scen, 256, chipenv.EnvConfig().hw,
+            nop_fidelity="fast", capacity=1024)
+        params, _ = strain.fit(jax.random.PRNGKey(10), ds,
+                               strain.TrainConfig(steps=400,
+                                                  batch_size=128))
+        scen0 = jax.tree_util.tree_map(lambda x: x[0], scen)
+        pred = np.asarray(sm.score(params, flats, scen0))
+        true = np.asarray(rewards[0])
+        rank_p = np.argsort(np.argsort(pred))
+        rank_t = np.argsort(np.argsort(true))
+        rho = np.corrcoef(rank_p, rank_t)[0, 1]
+        assert rho > 0.5, rho
+
+
+class TestRunStage:
+    def test_exactness_guard_all_rewards_analytic(self):
+        """Every reward run_stage returns must reproduce from the
+        analytic cost model on the returned flats."""
+        scen = _scenarios(2)
+        res = srk.run_stage(jax.random.PRNGKey(11), scen, TINY_STAGE,
+                            chipenv.EnvConfig().hw, nop_fidelity="fast")
+        assert res.cand_flats.shape == (2, TINY_STAGE.top_k + 1,
+                                        ps.N_PARAMS)
+        mtr = cm.evaluate_scenarios(
+            ps.from_flat(res.cand_flats), scen, chipenv.EnvConfig().hw,
+            paired=True, nop_fidelity="fast")
+        np.testing.assert_allclose(np.asarray(res.cand_rewards),
+                                   np.asarray(mtr.reward), rtol=1e-5)
+
+    def test_modes_share_bootstrap_stream_and_budget(self):
+        """mode='random' is a true control: same bootstrap key stream
+        (identical free-rider candidate) and same analytic budget."""
+        scen = _scenarios(1)
+        r_sur = srk.run_stage(jax.random.PRNGKey(12), scen, TINY_STAGE,
+                              chipenv.EnvConfig().hw, nop_fidelity="fast")
+        r_rnd = srk.run_stage(
+            jax.random.PRNGKey(12), scen,
+            dataclasses.replace(TINY_STAGE, mode="random"),
+            chipenv.EnvConfig().hw, nop_fidelity="fast")
+        assert r_rnd.params is None
+        # the bootstrap argmax free-rider (last candidate) is identical
+        np.testing.assert_array_equal(
+            np.asarray(r_sur.cand_flats[:, -1]),
+            np.asarray(r_rnd.cand_flats[:, -1]))
+        assert r_sur.cand_rewards.shape == r_rnd.cand_rewards.shape
+        assert (srk.analytic_budget(TINY_STAGE)
+                == TINY_STAGE.bootstrap + TINY_STAGE.top_k)
+
+    def test_deterministic(self):
+        scen = _scenarios(1)
+        r1 = srk.run_stage(jax.random.PRNGKey(13), scen, TINY_STAGE,
+                           chipenv.EnvConfig().hw, nop_fidelity="fast")
+        r2 = srk.run_stage(jax.random.PRNGKey(13), scen, TINY_STAGE,
+                           chipenv.EnvConfig().hw, nop_fidelity="fast")
+        np.testing.assert_array_equal(np.asarray(r1.cand_flats),
+                                      np.asarray(r2.cand_flats))
+        np.testing.assert_allclose(np.asarray(r1.cand_rewards),
+                                   np.asarray(r2.cand_rewards))
+
+
+class TestSurrogateGuidedArms:
+    def test_evo_surrogate_proposals_rewards_stay_analytic(self):
+        params = sm.init_params(jax.random.PRNGKey(0))
+        scen = chipenv.EnvConfig().scenario()
+        folded = sm.fold_scenario(params, scen)
+        cfg = evo.EvoConfig(pop_size=8, n_generations=5,
+                            surrogate_proposals=16)
+        res = evo.evolve(jax.random.PRNGKey(14), cfg=cfg,
+                         surrogate=folded)
+        r = cm.reward_only(res.best_design)
+        np.testing.assert_allclose(float(r), float(res.best_reward),
+                                   rtol=1e-5)
+
+    def test_sa_surrogate_proposals_rewards_stay_analytic(self):
+        params = sm.init_params(jax.random.PRNGKey(1))
+        folded = sm.fold_scenario(params, chipenv.EnvConfig().scenario())
+        cfg = sa.SAConfig(n_iters=300, surrogate_proposals=8)
+        res = sa.run(jax.random.PRNGKey(15), cfg=cfg, surrogate=folded)
+        r = cm.reward_only(res.best_design)
+        np.testing.assert_allclose(float(r), float(res.best_reward),
+                                   rtol=1e-5)
+
+    def test_default_paths_ignore_surrogate_flag(self):
+        """surrogate_proposals=0 (default) must not consume the folded
+        params nor perturb the key stream."""
+        params = sm.init_params(jax.random.PRNGKey(2))
+        folded = sm.fold_scenario(params, chipenv.EnvConfig().scenario())
+        e0 = evo.evolve(jax.random.PRNGKey(16),
+                        cfg=evo.EvoConfig(pop_size=8, n_generations=4))
+        e1 = evo.evolve(jax.random.PRNGKey(16),
+                        cfg=evo.EvoConfig(pop_size=8, n_generations=4),
+                        surrogate=folded)
+        assert float(e0.best_reward) == float(e1.best_reward)
+        s0 = sa.run(jax.random.PRNGKey(17), cfg=sa.SAConfig(n_iters=200))
+        s1 = sa.run(jax.random.PRNGKey(17), cfg=sa.SAConfig(n_iters=200),
+                    surrogate=folded)
+        assert float(s0.best_reward) == float(s1.best_reward)
+
+
+class TestPortfolioSurrogateStage:
+    CFG = dict(
+        n_sa=2, n_rl=1, n_evo=1,
+        sa=sa.SAConfig(n_iters=500),
+        rl=ppo.PPOConfig(n_steps=32, n_envs=2, batch_size=32),
+        rl_timesteps=32 * 2 * 2,
+        evo=evo.EvoConfig(pop_size=8, n_generations=5,
+                          archive_capacity=32),
+        refine=False, refine_placement=False)
+
+    def test_stage_never_perturbs_other_arms(self):
+        """ISSUE-6 acceptance shape: the surrogate stage only ADDS
+        candidates under its own folded key (fold_in(key, 7)); the
+        SA/RL/evo streams and rewards are bit-identical with it on."""
+        cfg1 = portfolio.PortfolioConfig(surrogate=TINY_STAGE, **self.CFG)
+        cfg0 = portfolio.PortfolioConfig(surrogate=None, **self.CFG)
+        r1 = portfolio.optimize(jax.random.PRNGKey(0), cfg=cfg1)
+        r0 = portfolio.optimize(jax.random.PRNGKey(0), cfg=cfg0)
+        np.testing.assert_array_equal(r1.sa_rewards, r0.sa_rewards)
+        np.testing.assert_array_equal(r1.rl_rewards, r0.rl_rewards)
+        np.testing.assert_array_equal(r1.evo_rewards, r0.evo_rewards)
+        assert r1.best_reward >= r0.best_reward - 1e-6
+        assert r1.surrogate_rewards is not None
+        assert r1.surrogate_rewards.shape == (TINY_STAGE.top_k + 1,)
+        assert r0.surrogate_rewards is None
+        assert r1.source in ("sa", "rl", "evo", "surrogate", "refined")
+
+    def test_winner_design_reproducible(self):
+        cfg = portfolio.PortfolioConfig(surrogate=TINY_STAGE, **self.CFG)
+        res = portfolio.optimize(jax.random.PRNGKey(1), cfg=cfg)
+        r = cm.reward_only(res.best_design)
+        np.testing.assert_allclose(float(r), float(res.best_reward),
+                                   rtol=1e-5)
+
+
+class TestSuiteSurrogateArm:
+    def _cfg(self, surrogate):
+        return dataclasses.replace(
+            suite.SMOKE_SUITE, workloads=("resnet50", "bert"),
+            weight_grid=((1.0, 1.0, 0.1),),
+            n_sa=2, n_rl=0, n_evo=0, sa=sa.SAConfig(n_iters=300),
+            refine=False, placement_refine=False, surrogate=surrogate)
+
+    def test_suite_winners_never_worse_with_stage(self):
+        res1 = suite.run_suite(jax.random.PRNGKey(0),
+                               self._cfg(TINY_STAGE))
+        res0 = suite.run_suite(jax.random.PRNGKey(0), self._cfg(None))
+        for o1, o0 in zip(res1.outcomes, res0.outcomes):
+            assert o1.best_reward >= o0.best_reward - 1e-6
+        assert all(o.source in ("sa", "surrogate") for o in res1.outcomes)
