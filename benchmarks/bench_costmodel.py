@@ -33,6 +33,15 @@ is deterministic, the wall-clock one is a regression floor (this
 2-core container's SA steps are kernel-launch-bound, so the measured
 wall ratio sits well below the structural kernel ratio — see
 BENCH_costmodel.json and the README's delta-evaluation section).
+
+ISSUE-7 adds two hot-path benches: **phase-scheduled SA**
+(``phase_schedule`` pins the move kind per segment so chiplet segments
+statically prune the fused anchor re-scan; ``--assert-min-phased-sa-ratio``
+gates its wall-clock win over the mixed delta stream) and
+**delta-priced env stepping** (placement-episode PPO rollouts priced
+from the carried ``PlacementEvalCache`` with ``lax.cond``-gated
+vectorized auto-reset vs the cache-free scratch rollout;
+``--assert-min-env-step-ratio`` gates the end-to-end step ratio).
 """
 
 from __future__ import annotations
@@ -195,6 +204,175 @@ def _placement_sa_bench(smoke: bool) -> dict:
     return out
 
 
+def _placement_sa_phased_bench(smoke: bool) -> dict:
+    """Phase-scheduled SA vs the PR-4 mixed delta stream.
+
+    ISSUE-7 tentpole (a): the baseline is the shipped hot path (delta
+    evaluation, mixed Bernoulli move stream); the contender pins the
+    move kind per segment, so chiplet segments statically prune the
+    fused 6-anchor re-scan instead of computing and discarding it every
+    step. Same iteration budget, same keys; both runs must beat the
+    canonical floorplan (phased SA explores a different move sequence,
+    so reward equality is NOT expected — the correctness contract lives
+    in tests/test_placement_delta.py). ``scan_unroll`` stays at 1 here:
+    it is trajectory-preserving (asserted bit-for-bit in the tests) but
+    measurably SLOWER on this CPU backend, where XLA executes per-kernel
+    thunks regardless of unrolling, so unrolled bodies only add
+    scheduling work (measured: unroll 8 ~0.5x the unroll-1 wall).
+    """
+    from repro.core import env as chipenv
+    from repro.optimizer import scenario as suite
+    from repro.sa import annealing as sa
+
+    n_designs = 8 if smoke else 16
+    n_iters = 300 if smoke else 1000
+    schedule = (("chiplet", 40), ("hbm", 10))
+    unroll = 1
+    env_cfg = chipenv.EnvConfig(hw=suite.PLACEMENT_SENSITIVE_HW)
+    dps = ps.random_design(jax.random.PRNGKey(11), (n_designs,))
+    keys = jax.random.split(jax.random.PRNGKey(12), n_designs)
+
+    cfgs = {
+        "mixed_delta": sa.PlacementSAConfig(n_iters=n_iters),
+        "phased": sa.PlacementSAConfig(n_iters=n_iters,
+                                       phase_schedule=schedule,
+                                       scan_unroll=unroll),
+    }
+    fns, results, kernels = {}, {}, {}
+    best = {name: float("inf") for name in cfgs}
+    for name, cfg in cfgs.items():
+        fn = jax.jit(jax.vmap(lambda k, d, _c=cfg: sa.refine_placement(
+            k, d, env_cfg, _c)))
+        kernels[name] = _count_step_kernels(fn, keys, dps)
+        r = fn(keys, dps)
+        jax.block_until_ready(r)
+        results[name] = r
+        fns[name] = fn
+    for _ in range(4):                      # alternating best-of-4
+        for name in cfgs:
+            t0 = time.time()
+            jax.block_until_ready(fns[name](keys, dps))
+            best[name] = min(best[name], time.time() - t0)
+    steps = {name: n_designs * n_iters / best[name] for name in cfgs}
+    gains = {name: np.asarray(results[name].best_reward)
+             - np.asarray(results[name].canonical_reward)
+             for name in cfgs}
+    rec = {
+        "batch": n_designs, "sa_iters": n_iters,
+        "phase_schedule": [list(s) for s in schedule],
+        "scan_unroll": unroll,
+        "mixed_delta_steps_per_s": round(steps["mixed_delta"], 1),
+        "phased_steps_per_s": round(steps["phased"], 1),
+        "wall_ratio": round(steps["phased"] / steps["mixed_delta"], 3),
+        "mixed_delta_step_kernels": kernels["mixed_delta"],
+        "phased_step_kernels": kernels["phased"],
+        "mixed_delta_mean_gain": round(float(gains["mixed_delta"].mean()), 4),
+        "phased_mean_gain": round(float(gains["phased"].mean()), 4),
+    }
+    print(f"[bench] phased SA: mixed delta {steps['mixed_delta']:,.0f} "
+          f"steps/s ({kernels['mixed_delta']} kernels) vs phased+unroll "
+          f"{steps['phased']:,.0f} ({kernels['phased']} kernels) -> "
+          f"{rec['wall_ratio']:.2f}x wall; mean gain "
+          f"{gains['mixed_delta'].mean():+.3f} vs "
+          f"{gains['phased'].mean():+.3f}")
+    return rec
+
+
+def _env_step_bench(smoke: bool) -> dict:
+    """Delta-priced vs scratch-evaluate placement-episode env stepping.
+
+    ISSUE-7 tentpole (b): placement episodes driven by a presampled
+    action stream in the exact PPO rollout shape. Three variants, same
+    keys and actions:
+
+      - ``scratch`` — the cache-free baseline: per-env
+        ``auto_reset_step`` under ``jax.vmap`` (every step rebuilds the
+        reset placement context) pricing each move with a scratch
+        ``costmodel.evaluate``. This is what the rollout costs without
+        the cache plumbing.
+      - ``scratch_vec`` — ``auto_reset_step_vec`` (reset work gated
+        behind a scalar ``lax.cond`` on ``any(done)``), still scratch
+        pricing. Isolates the reset-gating share of the win.
+      - ``delta`` — ``auto_reset_step_vec`` with ``delta_eval=True``:
+        each move is priced by one fused
+        ``nop_stats_delta(move_kinds='both')`` against the carried
+        cache. This is the shipped PPO hot path.
+
+    ``step_ratio`` is delta vs the cache-free scratch baseline (the
+    tentpole's end-to-end claim); ``pricing_ratio`` is delta vs
+    scratch_vec (the isolated delta-pricing share — modest here because
+    both are kernel-launch-bound on this 2-core container). All three
+    reward streams must agree to 1e-5 (same floorplans, different
+    pricing), asserted here and field-by-field in tests/test_env_delta.py.
+    """
+    from repro.core import env as chipenv
+    from repro.optimizer import scenario as suite
+
+    n_envs = 8 if smoke else 16
+    n_steps = 128 if smoke else 256
+    episode_len = 64
+    heads = jnp.asarray(ps.PLACEMENT_HEAD_SIZES, jnp.int32)
+    acts = jax.random.randint(jax.random.PRNGKey(5),
+                              (n_steps, n_envs, len(ps.PLACEMENT_HEAD_SIZES)),
+                              0, heads, dtype=jnp.int32)
+    keys = jax.random.split(jax.random.PRNGKey(6), n_envs)
+
+    variants = {"scratch": (False, False),
+                "scratch_vec": (False, True),
+                "delta": (True, True)}
+    fns, rewards = {}, {}
+    best = {name: float("inf") for name in variants}
+    for name, (delta, vec) in variants.items():
+        cfg = chipenv.EnvConfig(hw=suite.PLACEMENT_SENSITIVE_HW,
+                                placement_episode=True, delta_eval=delta,
+                                episode_len=episode_len)
+
+        def rollout(a, _cfg=cfg, _vec=vec):
+            states, _ = jax.vmap(lambda k: chipenv.reset(k, _cfg))(keys)
+
+            def body(st, at):
+                if _vec:
+                    st, _, r, _, _ = chipenv.auto_reset_step_vec(
+                        st, at, _cfg)
+                else:
+                    st, _, r, _, _ = jax.vmap(
+                        lambda s, ai: chipenv.auto_reset_step(
+                            s, ai, _cfg))(st, at)
+                return st, r
+
+            _, rews = jax.lax.scan(body, states, a)
+            return rews
+
+        fn = jax.jit(rollout)
+        rewards[name] = np.asarray(fn(acts))           # compile + warm
+        fns[name] = fn
+    for _ in range(4):                                 # alternating best-of-4
+        for name in fns:
+            t0 = time.time()
+            fns[name](acts).block_until_ready()
+            best[name] = min(best[name], time.time() - t0)
+    steps = {name: n_envs * n_steps / best[name] for name in fns}
+    agree = bool(
+        np.allclose(rewards["delta"], rewards["scratch"],
+                    rtol=1e-5, atol=1e-5)
+        and np.allclose(rewards["delta"], rewards["scratch_vec"],
+                        rtol=1e-5, atol=1e-5))
+    rec = {
+        "n_envs": n_envs, "n_steps": n_steps, "episode_len": episode_len,
+        "scratch_steps_per_s": round(steps["scratch"], 1),
+        "scratch_vec_steps_per_s": round(steps["scratch_vec"], 1),
+        "delta_steps_per_s": round(steps["delta"], 1),
+        "step_ratio": round(steps["delta"] / steps["scratch"], 3),
+        "pricing_ratio": round(steps["delta"] / steps["scratch_vec"], 3),
+        "rewards_agree": agree,
+    }
+    print(f"[bench] env step: scratch {steps['scratch']:,.0f} steps/s, "
+          f"scratch+vec-reset {steps['scratch_vec']:,.0f}, delta "
+          f"{steps['delta']:,.0f} -> {rec['step_ratio']:.2f}x end-to-end "
+          f"({rec['pricing_ratio']:.2f}x pricing), agree={agree}")
+    return rec
+
+
 def _placement_chains_bench(smoke: bool) -> dict:
     """Multi-chain vs single-chain placement SA (ROADMAP PR-4 follow-up).
 
@@ -278,6 +456,14 @@ def main():
                     help="fail unless the full-recompute SA step "
                          "schedules >= RATIO x the delta step's compiled "
                          "kernels (deterministic structural guard)")
+    ap.add_argument("--assert-min-phased-sa-ratio", type=float, default=None,
+                    help="fail unless the phase-scheduled SA delivers "
+                         ">= RATIO x the mixed delta stream's steps/s "
+                         "(wall clock)")
+    ap.add_argument("--assert-min-env-step-ratio", type=float, default=None,
+                    help="fail unless delta-priced placement-episode env "
+                         "steps deliver >= RATIO x the cache-free "
+                         "scratch-evaluate rollout's steps/s (wall clock)")
     ap.add_argument("--placement-gain", action="store_true",
                     help="also sweep placement-SA gain per HW preset")
     ap.add_argument("--out", default=os.path.join(
@@ -332,6 +518,12 @@ def main():
     sa_rec = _placement_sa_bench(args.smoke)
     record["placement_sa_step"] = sa_rec
 
+    phased_rec = _placement_sa_phased_bench(args.smoke)
+    record["placement_sa_phased"] = phased_rec
+
+    env_rec = _env_step_bench(args.smoke)
+    record["env_step"] = env_rec
+
     record["placement_sa_chains"] = _placement_chains_bench(args.smoke)
 
     if args.placement_gain:
@@ -367,6 +559,22 @@ def main():
         print(f"[bench] FAIL: full/delta SA step kernel ratio "
               f"{kernel_ratio:.2f}x < required "
               f"{args.assert_min_sa_kernel_ratio:.2f}x", file=sys.stderr)
+        sys.exit(1)
+    if (args.assert_min_phased_sa_ratio is not None
+            and phased_rec["wall_ratio"] < args.assert_min_phased_sa_ratio):
+        print(f"[bench] FAIL: phased/mixed SA wall ratio "
+              f"{phased_rec['wall_ratio']:.2f}x < required "
+              f"{args.assert_min_phased_sa_ratio:.2f}x", file=sys.stderr)
+        sys.exit(1)
+    if not env_rec["rewards_agree"]:
+        print("[bench] FAIL: delta-priced env rewards diverged from the "
+              "scratch-evaluate path", file=sys.stderr)
+        sys.exit(1)
+    if (args.assert_min_env_step_ratio is not None
+            and env_rec["step_ratio"] < args.assert_min_env_step_ratio):
+        print(f"[bench] FAIL: delta/scratch env step ratio "
+              f"{env_rec['step_ratio']:.2f}x < required "
+              f"{args.assert_min_env_step_ratio:.2f}x", file=sys.stderr)
         sys.exit(1)
 
 

@@ -67,6 +67,21 @@ echo "=== smoke: cost-model eval throughput (fast-tier + delta-SA guards) ==="
 # if the delta rewards diverge materially from the full-recompute
 # path at the bench protocol (bitwise identity is asserted by the
 # tier-1 trajectory tests; the bench records it as a flag).
+#
+# ISSUE-7 hot-path guards: (c) phase-scheduled SA must beat the mixed
+# delta stream's wall clock (x1.25 floor; measured 1.53x at the full
+# protocol — the ISSUE's 2x target is out of reach on this 2-core
+# container because the mixed stream's fused move_kinds='both' delta
+# already shares most kernels with the pinned segments; vs the PR-4
+# recorded mixed-delta baseline of 101,723 steps/s the phased path is
+# ~4x, but that spans machine conditions so it is not gated); and
+# (d) delta-priced placement-episode env stepping must deliver >= 2.5x
+# the cache-free scratch rollout's steps/s (measured 3.31x end to end:
+# ~2.3x from the cond-gated vectorized auto-reset that stops rebuilding
+# the placement context every step, ~1.44x from delta pricing on top).
+# The run also hard-fails if the delta env rewards diverge from either
+# scratch stream at 1e-5.
 python benchmarks/bench_costmodel.py --smoke --assert-min-ratio 1.8 \
     --assert-min-sa-ratio 1.05 --assert-min-sa-kernel-ratio 1.7 \
+    --assert-min-phased-sa-ratio 1.25 --assert-min-env-step-ratio 2.5 \
     --out "${TMPDIR:-/tmp}/bench_costmodel_ci.json"

@@ -23,6 +23,17 @@ top of the canonical Fig.-4 floorplan of the design the action selects —
 and the observation gains the pairwise-NoP diagnostics (mean HBM hops,
 mean forwarding hops, link contention). The default (14-head) space is
 bit-identical to the paper's environment.
+
+``EnvConfig(placement_episode=True)`` is the cache-carried mode: each
+episode draws one random design at reset and the *whole episode* refines
+its floorplan — actions are the four placement heads alone, and the
+floorplan accumulates across steps instead of restarting from canonical.
+A ``placement.PlacementEvalCache`` rides the env state, so each step
+prices its move with ``nop_stats_delta(move_kinds='both')`` + the
+placement-independent ``costmodel.placement_ctx`` prefix instead of a
+full ``costmodel.evaluate`` — the delta-priced PPO rollout path
+(``delta_eval=False`` keeps the scratch re-evaluation as the benchmark
+baseline and test oracle; both paths agree on every Metrics field).
 """
 
 from __future__ import annotations
@@ -65,6 +76,15 @@ class EnvConfig:
     # form fast tier whenever a step carries no explicit placement
     # mutation; 'full' forces the pairwise tier everywhere.
     nop_fidelity: str = "auto"
+    # placement-episode mode (see module docstring): episodes refine the
+    # floorplan of a per-episode random design; actions are the 4
+    # placement heads, obs gains the NoP diagnostics, and the eval cache
+    # rides EnvState. Mutually exclusive with placement_actions.
+    placement_episode: bool = False
+    # placement-episode step pricing: True carries the PlacementEvalCache
+    # (delta NoP stats + prefix/suffix reward split); False re-evaluates
+    # the mutated floorplan from scratch each step (bench/test oracle).
+    delta_eval: bool = True
 
     def scenario(self) -> cm.Scenario:
         return cm.Scenario(workload=self.workload, weights=self.weights)
@@ -75,7 +95,10 @@ def _resolve(scenario, cfg: EnvConfig) -> cm.Scenario:
 
 
 def head_sizes(cfg: EnvConfig) -> Tuple[int, ...]:
-    """Action head sizes for this config (14 Table-1 heads, +4 placement)."""
+    """Action head sizes for this config (14 Table-1 heads, +4 placement;
+    placement episodes use the 4 placement heads alone)."""
+    if cfg.placement_episode:
+        return ps.PLACEMENT_HEAD_SIZES
     return ps.EXT_HEAD_SIZES if cfg.placement_actions else ps.HEAD_SIZES
 
 
@@ -84,7 +107,8 @@ def action_dim(cfg: EnvConfig) -> int:
 
 
 def obs_dim(cfg: EnvConfig) -> int:
-    return OBS_DIM_PLACEMENT if cfg.placement_actions else OBS_DIM
+    ext = cfg.placement_actions or cfg.placement_episode
+    return OBS_DIM_PLACEMENT if ext else OBS_DIM
 
 
 class EnvState(NamedTuple):
@@ -92,6 +116,11 @@ class EnvState(NamedTuple):
     t: jnp.ndarray              # step within the episode (int32)
     prev_reward: jnp.ndarray    # float32
     key: jnp.ndarray            # PRNG key for reset randomization
+    # placement-episode mode only (None otherwise — the default pytree is
+    # unchanged): the placement-independent eval prefix and the carried
+    # floorplan + eval cache the delta step prices moves against.
+    ctx: cm.PlacementCtx = None
+    cache: pm.PlacementEvalCache = None
 
 
 action_space = spaces.MultiDiscrete(ps.HEAD_SIZES)
@@ -122,7 +151,7 @@ def _observe(metrics: cm.Metrics, t, prev_reward, cfg: EnvConfig):
         jnp.asarray(t, jnp.float32) / jnp.float32(cfg.episode_len),
         jnp.asarray(prev_reward, jnp.float32) / 200.0,
     ]
-    if cfg.placement_actions:
+    if cfg.placement_actions or cfg.placement_episode:
         cols += [
             metrics.hops_hbm_mean / 8.0,
             metrics.hops_ai_mean / 8.0,
@@ -159,6 +188,8 @@ def reset(key, cfg: EnvConfig = EnvConfig(),
     scenario = _resolve(scenario, cfg)
     k_design, k_state = jax.random.split(key)
     design = ps.random_design(k_design)
+    if cfg.placement_episode:
+        return _reset_placement(design, k_state, cfg, scenario)
     metrics = cm.evaluate(design, scenario.workload, scenario.weights, cfg.hw,
                           nop_fidelity=cfg.nop_fidelity)
     zero = jnp.float32(0.0)
@@ -167,11 +198,35 @@ def reset(key, cfg: EnvConfig = EnvConfig(),
     return state, _observe(metrics, 0, zero, cfg)
 
 
+def _reset_placement(design, k_state, cfg: EnvConfig, scenario):
+    """Placement-episode reset: canonical floorplan + primed eval cache.
+
+    Both pricing modes build the same cache (the scratch oracle needs
+    the carried floorplan too), so reset observations are bit-equal and
+    the differential test isolates the *step* pricing.
+    """
+    v = ps.decode(design)
+    n_pos = cm.footprint_positions(v)
+    m, n = cm.mesh_dims(n_pos)
+    base = pm.canonical(m, n, v.hbm_mask, v.arch_type)
+    ctx = cm.placement_ctx(design, scenario.workload, scenario.weights,
+                           cfg.hw)
+    cache = pm.nop_stats_cache(base, n_pos, v.hbm_mask, v.arch_type,
+                               ctx.prefix.mesh_edges)
+    metrics = cm.metrics_from_nop(ctx, cache.stats, cfg.hw)
+    zero = jnp.float32(0.0)
+    state = EnvState(design=design, t=jnp.int32(0), prev_reward=zero,
+                     key=k_state, ctx=ctx, cache=cache)
+    return state, _observe(metrics, 0, zero, cfg)
+
+
 def step(state: EnvState, action: jnp.ndarray,
          cfg: EnvConfig = EnvConfig(), scenario: cm.Scenario = None
          ) -> Tuple[EnvState, jnp.ndarray, jnp.ndarray, jnp.ndarray, cm.Metrics]:
     """Apply a full design-point assignment; returns (state', obs, r, done, metrics)."""
     scenario = _resolve(scenario, cfg)
+    if cfg.placement_episode:
+        return _step_placement(state, action, cfg, scenario)
     design, placement = _design_and_placement(action, cfg)
     # a placement mutation always needs the full pairwise tier; plain
     # design-only actions take whatever tier the config asks for
@@ -188,6 +243,55 @@ def step(state: EnvState, action: jnp.ndarray,
     return new_state, obs, reward, done, metrics
 
 
+def _step_placement(state: EnvState, action: jnp.ndarray,
+                    cfg: EnvConfig, scenario):
+    """Placement-episode step: mutate the carried floorplan and price it.
+
+    The 4-head action [slot, target_cell, hbm_idx, hbm_target_cell]
+    relocates one chiplet slot AND re-anchors one HBM stack (either can
+    be a no-op by targeting the current cell/anchor). With
+    ``cfg.delta_eval`` the move is priced by one fused
+    ``nop_stats_delta(move_kinds='both')`` against the carried cache —
+    no full evaluate, no per-step anchor re-scan beyond the single
+    updated stack row; otherwise the mutated floorplan is re-scored from
+    scratch with ``costmodel.evaluate`` (same numbers, benchmark
+    baseline). Unbatched (the env vmaps).
+    """
+    if action.ndim > 1:
+        raise ValueError(
+            "placement-episode actions are single-env; vmap step() over "
+            f"the batch instead (got action shape {action.shape})")
+    v = ps.decode(state.design)
+    n_pos = cm.footprint_positions(v)
+    a = jnp.asarray(action, jnp.int32)
+    if cfg.delta_eval:
+        # one fused delta: relocate + re-anchor, one tail — equivalent to
+        # apply_action on the carried floorplan (placement.nop_stats_delta
+        # docstring), so the scratch path below is its exact oracle.
+        tgt = jnp.clip(a[3], 0, pm.N_CELLS - 1)
+        ti, tj = pm.cell_ij(tgt)
+        move = pm.PlacementMove(kind=jnp.int32(1), slot=a[0], cell=a[1],
+                                hbm=a[2],
+                                anchor=jnp.stack([ti, tj], axis=-1))
+        cache = pm.nop_stats_delta(state.cache, move, n_pos, v.hbm_mask,
+                                   v.arch_type, state.ctx.prefix.mesh_edges,
+                                   move_kinds="both")
+        metrics = cm.metrics_from_nop(state.ctx, cache.stats, cfg.hw)
+    else:
+        plc = pm.apply_action(state.cache.placement, a, n_pos)
+        metrics = cm.evaluate(state.design, scenario.workload,
+                              scenario.weights, cfg.hw, plc)
+        # keep the carried floorplan current; the stats fields go stale
+        # but are never read on this path (pricing is from-scratch)
+        cache = state.cache._replace(placement=plc)
+    reward = metrics.reward
+    t_next = state.t + 1
+    done = t_next >= cfg.episode_len
+    obs = _observe(metrics, t_next, reward, cfg)
+    new_state = state._replace(t=t_next, prev_reward=reward, cache=cache)
+    return new_state, obs, reward, done, metrics
+
+
 def auto_reset_step(state: EnvState, action: jnp.ndarray,
                     cfg: EnvConfig = EnvConfig(),
                     scenario: cm.Scenario = None):
@@ -201,6 +305,44 @@ def auto_reset_step(state: EnvState, action: jnp.ndarray,
         reset_state._replace(key=k_next), new_state)
     out_obs = jnp.where(done, reset_obs, obs)
     return out_state, out_obs, reward, done, metrics
+
+
+def auto_reset_step_vec(states: EnvState, actions: jnp.ndarray,
+                        cfg: EnvConfig = EnvConfig(),
+                        scenario: cm.Scenario = None):
+    """Batched ``auto_reset_step``: the reset work runs only on boundary
+    steps.
+
+    Bit-identical outputs to ``jax.vmap(auto_reset_step)``, but the
+    fresh-episode computation (for placement episodes that is a full
+    ``placement_ctx`` + anchor-scan cache rebuild — far more than a
+    delta-priced step) sits under a scalar ``lax.cond`` on "any env
+    finished". Rollout-scanned envs reset together and share
+    ``episode_len``, so their clocks stay synchronized and the cond
+    predicate is False on all but one step in ``episode_len`` — the
+    reset branch is skipped instead of computed-and-discarded every
+    step, which is what keeps delta-priced placement rollouts delta
+    priced. (Under an outer vmap — e.g. ``train_population`` — the cond
+    lowers to a select and this degrades gracefully to the old cost.)
+    """
+    scenario = _resolve(scenario, cfg)
+    new_states, obs, reward, done, metrics = jax.vmap(
+        lambda s, a: step(s, a, cfg, scenario))(states, actions)
+    keys = jax.vmap(jax.random.split)(new_states.key)   # (E, 2, 2)
+
+    def boundary(_):
+        reset_states, reset_obs = jax.vmap(
+            lambda k: reset(k, cfg, scenario))(keys[:, 1])
+        out_states = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(
+                done.reshape(done.shape + (1,) * (a.ndim - 1)), a, b),
+            reset_states._replace(key=keys[:, 0]), new_states)
+        out_obs = jnp.where(done[:, None], reset_obs, obs)
+        return out_states, out_obs
+
+    out_states, out_obs = jax.lax.cond(
+        jnp.any(done), boundary, lambda _: (new_states, obs), None)
+    return out_states, out_obs, reward, done, metrics
 
 
 class VecEnv:

@@ -597,13 +597,17 @@ def nop_stats_delta(cache: PlacementEvalCache, move: PlacementMove,
     ``move_kinds`` statically prunes the dead branch: ``'chiplet'``
     promises ``move.kind == 0`` for every move (no anchor scan is even
     traced — the cheapest path, used by ``PlacementSAConfig(p_hbm=0)``
-    relocation-only annealing), ``'hbm'`` promises ``kind == 1``, and
-    ``'mixed'`` (default) handles both branchlessly. Unbatched (the SA
-    chain vmaps).
+    relocation-only annealing), ``'hbm'`` promises ``kind == 1``,
+    ``'both'`` applies the relocate AND the re-anchor in one fused
+    update (``move.kind`` is ignored; one anchor scan + one gather +
+    one tail — the cache-carried env-step path, equivalent to
+    ``apply_action`` when ``move.anchor`` is the integer cell of the
+    fourth action head), and ``'mixed'`` (default) handles the two
+    single-move kinds branchlessly. Unbatched (the SA chain vmaps).
     """
-    if move_kinds not in ("mixed", "chiplet", "hbm"):
-        raise ValueError(f"move_kinds must be 'mixed', 'chiplet' or "
-                         f"'hbm', got {move_kinds!r}")
+    if move_kinds not in ("mixed", "chiplet", "hbm", "both"):
+        raise ValueError(f"move_kinds must be 'mixed', 'chiplet', 'hbm' "
+                         f"or 'both', got {move_kinds!r}")
     plc = cache.placement
     mask = jnp.asarray(hbm_mask, jnp.int32)
     is_hbm = jnp.asarray(move.kind, jnp.int32) > 0
@@ -632,6 +636,8 @@ def nop_stats_delta(cache: PlacementEvalCache, move: PlacementMove,
         cells_new, hbm_new, d_cell_new = cells_c, plc.hbm_ij, cache.d_cell
     elif move_kinds == "hbm":
         cells_new, hbm_new, d_cell_new = plc.chiplet_cell, hbm_h, d_cell_h
+    elif move_kinds == "both":
+        cells_new, hbm_new, d_cell_new = cells_c, hbm_h, d_cell_h
     else:
         cells_new = jnp.where(is_hbm, plc.chiplet_cell, cells_c)
         hbm_new = jnp.where(is_hbm, hbm_h, plc.hbm_ij)

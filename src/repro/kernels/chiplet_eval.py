@@ -223,22 +223,41 @@ def _kernel(design_ref, cells_ref, mesh_ref, out_ref, *,
                 dmin = jnp.minimum(dmin, jnp.where(bit[:, None] > 0, d, big))
             return dmin
 
-        # per occupied slot -> nearest stack (traffic-weighted mean)
-        d_hbm = min_anchor_dist(ci, cj)                # (B, 128)
+        # nearest-stack distance *field* over the 16x16 grid, one 128-lane
+        # row per grid half — the only two min_anchor_dist passes left
+        def grid_half(cell_idx):
+            i = jnp.floor(cell_idx / _GRID)
+            j = cell_idx % _GRID
+            return i, j, min_anchor_dist(i, j)
+
+        gi0, gj0, gd0 = grid_half(lane)                # cells   0..127
+        gi1, gj1, gd1 = grid_half(lane + LANES)        # cells 128..255
+
+        # per occupied slot -> nearest stack: MXU one-hot gather. Each
+        # slot's one-hot row selects exactly one lane of a grid-half
+        # field, so the f32 matmul reproduces min_anchor_dist(ci, cj)
+        # bit-exactly (one selected value + zeros) without a third
+        # per-slot anchor scan.
+        oh0 = (cells[:, :, None] == lane[:, None, :]).astype(jnp.float32)
+        oh1 = (cells[:, :, None]
+               == (lane[:, None, :] + LANES)).astype(jnp.float32)
+        gather_dims = (((2,), (1,)), ((0,), (0,)))     # (B,S,C) x (B,C)
+        d_hbm = (jax.lax.dot_general(oh0, gd0, gather_dims,
+                                     preferred_element_type=jnp.float32)
+                 + jax.lax.dot_general(oh1, gd1, gather_dims,
+                                       preferred_element_type=jnp.float32))
         inv_pos = 1.0 / jnp.maximum(n_pos, 1.0)
         sum_hbm = jnp.sum(jnp.where(active, d_hbm, 0.0), axis=1)
         h_hbm_mean = sum_hbm * inv_pos
 
-        # worst router of the spanned region (16x16 grid, 2 x 128 lanes)
-        def cell_worst(cell_idx):
-            i = jnp.floor(cell_idx / _GRID)
-            j = cell_idx % _GRID
+        # worst router of the spanned region, reusing the field rows
+        def half_worst(i, j, d):
             in_box = ((i >= i_min[:, None]) & (i <= i_max[:, None])
                       & (j >= j_min[:, None]) & (j <= j_max[:, None]))
-            return jnp.max(jnp.where(in_box, min_anchor_dist(i, j), -big),
-                           axis=1)
+            return jnp.max(jnp.where(in_box, d, -big), axis=1)
 
-        h_hbm = jnp.maximum(cell_worst(lane), cell_worst(lane + LANES))
+        h_hbm = jnp.maximum(half_worst(gi0, gj0, gd0),
+                            half_worst(gi1, gj1, gd1))
 
         # chiplet-to-chiplet forwarding fans out from the traffic centroid
         cent_i = jnp.sum(jnp.where(active, ci, 0.0), axis=1) * inv_pos

@@ -135,9 +135,37 @@ def _crowding(pts_min: jnp.ndarray, keep: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(keep, cd, -jnp.inf)
 
 
+def _hv_contrib(pts_min: jnp.ndarray, keep: jnp.ndarray) -> jnp.ndarray:
+    """Leave-one-out hypervolume contribution of the kept rows.
+
+    Min-space points in, -inf on non-kept rows out (same ranking-key
+    contract as :func:`_crowding`). The reference is the kept rows'
+    nadir pushed out by a margin (the jit-safe twin of
+    :func:`nadir_ref`), so every kept point encloses positive volume and
+    extreme points keep large contributions. O(n^3 log n) — the
+    opt-in ``eviction='hv'`` quality mode, not the default.
+    """
+    n = keep.shape[0]
+    any_keep = keep.any()
+    hi = jnp.max(jnp.where(keep[:, None], pts_min, -_BIG), axis=0)
+    lo = jnp.min(jnp.where(keep[:, None], pts_min, _BIG), axis=0)
+    pad = 0.1 * jnp.maximum(hi - lo, 0.01 * jnp.abs(hi) + 1e-9)
+    refm = jnp.where(any_keep, hi + pad, jnp.ones((N_OBJ,)))
+    base = jnp.where(keep[:, None], jnp.minimum(pts_min, refm), refm)
+    hv_all = _hv_min(base, refm)
+
+    def without(i):
+        drop = jnp.arange(n) == i
+        return _hv_min(jnp.where(drop[:, None], refm, base), refm)
+
+    contrib = hv_all - jax.vmap(without)(jnp.arange(n))
+    return jnp.where(keep, contrib, -jnp.inf)
+
+
 def insert_batch(archive: Archive, points: jnp.ndarray, flats: jnp.ndarray,
                  reward: jnp.ndarray = None, payload: jnp.ndarray = None,
-                 valid: jnp.ndarray = None) -> Archive:
+                 valid: jnp.ndarray = None,
+                 eviction: str = "crowding") -> Archive:
     """Insert a (B, 3) batch of points; return the updated archive.
 
     Pure-functional and jit/scan-safe: forms the (C+B)-row union, runs
@@ -147,7 +175,16 @@ def insert_batch(archive: Archive, points: jnp.ndarray, flats: jnp.ndarray,
     capacity — evicts by crowding distance. Order-insensitive up to
     ties: permuting the rows of one batch changes at most which of two
     entries with *identical objectives* survives.
+
+    ``eviction`` picks the capacity-eviction key (a static string):
+    ``'crowding'`` (default, NSGA-II crowding distance) or ``'hv'``
+    (leave-one-out exclusive hypervolume contribution — evicts the
+    point whose removal costs the least dominated volume; slower but
+    directly optimizes the reported archive metric).
     """
+    if eviction not in ("crowding", "hv"):
+        raise ValueError(f"eviction must be 'crowding' or 'hv', "
+                         f"got {eviction!r}")
     points = jnp.asarray(points, jnp.float32)
     b = points.shape[0]
     flats = jnp.asarray(flats, jnp.int32)
@@ -176,7 +213,8 @@ def insert_batch(archive: Archive, points: jnp.ndarray, flats: jnp.ndarray,
     keep = val_u & ~dominated & ~dup
 
     cap = archive.capacity
-    key = _crowding(pm, keep)
+    key = _crowding(pm, keep) if eviction == "crowding" else _hv_contrib(
+        pm, keep)
     sel = jnp.argsort(-key)[:cap]          # stable: kept rows first
     return Archive(points=jnp.take(pts_u, sel, axis=0),
                    flats=jnp.take(flats_u, sel, axis=0),
@@ -185,10 +223,11 @@ def insert_batch(archive: Archive, points: jnp.ndarray, flats: jnp.ndarray,
                    valid=jnp.take(keep, sel))
 
 
-def merge(dst: Archive, src: Archive) -> Archive:
+def merge(dst: Archive, src: Archive, eviction: str = "crowding") -> Archive:
     """Insert every valid entry of ``src`` into ``dst``."""
     return insert_batch(dst, src.points, src.flats, reward=src.reward,
-                        payload=src.payload, valid=src.valid)
+                        payload=src.payload, valid=src.valid,
+                        eviction=eviction)
 
 
 def hypervolume(archive: Archive, ref) -> jnp.ndarray:
@@ -204,6 +243,15 @@ def hypervolume(archive: Archive, ref) -> jnp.ndarray:
     refm = _to_min(jnp.asarray(ref, jnp.float32))
     pm = jnp.where(archive.valid[:, None],
                    jnp.minimum(_to_min(archive.points), refm), refm)
+    return _hv_min(pm, refm)
+
+
+def _hv_min(pm: jnp.ndarray, refm: jnp.ndarray) -> jnp.ndarray:
+    """Hypervolume sweep core in min space (see :func:`hypervolume`).
+
+    Rows must already be clipped to ``refm`` (invalid rows set equal to
+    it, so they enclose zero volume).
+    """
     order = jnp.argsort(pm[:, 2])
     x = jnp.take(pm[:, 0], order)
     y = jnp.take(pm[:, 1], order)

@@ -73,6 +73,17 @@ class EvoConfig:
     surrogate_proposals: int = 0
     placement_genes: bool = False
     archive_capacity: int = 64
+    # island-model migration (evolve_population): every migrate_every
+    # generations each island's current best genome emigrates to its
+    # ring neighbour, replacing that island's current worst individual —
+    # one jnp.roll + one one-hot select per epoch, batched over the
+    # island axis, so the compiled kernel count is island-invariant
+    # (tests/test_evo.py). 0 (default) keeps the PR-5 independent-island
+    # vmap path and its per-island key streams bit-exact.
+    migrate_every: int = 0
+    # archive.insert_batch eviction key ('crowding' default | 'hv' for
+    # leave-one-out hypervolume-contribution eviction)
+    archive_eviction: str = "crowding"
 
 
 class EvoResult(NamedTuple):
@@ -135,25 +146,47 @@ def evolve(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
     """
     scenario = env_cfg.scenario() if scenario is None else scenario
     heads = jnp.asarray(genome_head_sizes(cfg), jnp.int32)
-    n_genes = heads.shape[0]
+    eval_pop = _make_eval_pop(env_cfg, scenario, cfg.placement_genes)
+    carry0 = _init_carry(key, cfg, heads, eval_pop)
+    generation = _make_generation(cfg, heads, eval_pop, surrogate)
+    (_, _, best_g, best_r, arc, _), history = jax.lax.scan(
+        generation, carry0, None, length=cfg.n_generations)
+    return EvoResult(best_design=ps.from_flat(best_g[: ps.N_PARAMS]),
+                     best_reward=best_r, history=history, archive=arc,
+                     best_genome=best_g)
+
+
+def _make_eval_pop(env_cfg, scenario, placement_genes):
+    def eval_pop(pop):
+        return jax.vmap(
+            lambda g: _eval_genome(g, env_cfg, scenario,
+                                   placement_genes))(pop)
+    return eval_pop
+
+
+def _init_carry(key, cfg: EvoConfig, heads, eval_pop):
+    """Seed population + archive; the carry of the generation scan."""
+    n_genes = int(heads.shape[0])
+    k_init, k_run = jax.random.split(key)
+    pop0 = jax.random.randint(k_init, (cfg.pop_size, n_genes), 0, heads,
+                              dtype=jnp.int32)
+    fit0, obj0 = eval_pop(pop0)
+    arc0 = ar.insert_batch(ar.empty(cfg.archive_capacity, n_genes),
+                           obj0, pop0, reward=fit0,
+                           eviction=cfg.archive_eviction)
+    i0 = jnp.argmax(fit0)
+    return (pop0, fit0, pop0[i0], fit0[i0], arc0, k_run)
+
+
+def _make_generation(cfg: EvoConfig, heads, eval_pop, surrogate=None):
+    """One GA generation as a scan step (shared by evolve and the
+    migrating island path, so both compile the same per-island program
+    and the per-island key streams match the independent runs)."""
+    n_genes = int(heads.shape[0])
     pop_n = cfg.pop_size
     use_sur = surrogate is not None and cfg.surrogate_proposals > 0
     if use_sur:
         from repro.surrogate import model as sm
-
-    def eval_pop(pop):
-        return jax.vmap(
-            lambda g: _eval_genome(g, env_cfg, scenario,
-                                   cfg.placement_genes))(pop)
-
-    k_init, k_run = jax.random.split(key)
-    pop0 = jax.random.randint(k_init, (pop_n, n_genes), 0, heads,
-                              dtype=jnp.int32)
-    fit0, obj0 = eval_pop(pop0)
-    arc0 = ar.insert_batch(ar.empty(cfg.archive_capacity, n_genes),
-                           obj0, pop0, reward=fit0)
-    i0 = jnp.argmax(fit0)
-    carry0 = (pop0, fit0, pop0[i0], fit0[i0], arc0, k_run)
 
     def generation(carry, _):
         pop, fit, best_g, best_r, arc, key = carry
@@ -199,18 +232,15 @@ def evolve(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
         child = child.at[0].set(best_g)        # elitism (static index)
 
         fit_c, obj_c = eval_pop(child)
-        arc = ar.insert_batch(arc, obj_c, child, reward=fit_c)
+        arc = ar.insert_batch(arc, obj_c, child, reward=fit_c,
+                              eviction=cfg.archive_eviction)
         i = jnp.argmax(fit_c)
         better = fit_c[i] > best_r
         best_g = jnp.where(better, child[i], best_g)
         best_r = jnp.where(better, fit_c[i], best_r)
         return (child, fit_c, best_g, best_r, arc, key), best_r
 
-    (_, _, best_g, best_r, arc, _), history = jax.lax.scan(
-        generation, carry0, None, length=cfg.n_generations)
-    return EvoResult(best_design=ps.from_flat(best_g[: ps.N_PARAMS]),
-                     best_reward=best_r, history=history, archive=arc,
-                     best_genome=best_g)
+    return generation
 
 
 def evolve_population(key, n_islands: int,
@@ -218,11 +248,68 @@ def evolve_population(key, n_islands: int,
                       cfg: EvoConfig = EvoConfig(),
                       scenario: cm.Scenario = None,
                       surrogate=None) -> EvoResult:
-    """N independent GA islands in one vmapped program; results stacked."""
+    """N GA islands in one vmapped program; results stacked.
+
+    With ``cfg.migrate_every = 0`` (default) the islands are fully
+    independent — the PR-5 path, bit-exact. With ``migrate_every > 0``
+    the islands synchronize every that-many generations: each island's
+    current best genome emigrates along a ring (``jnp.roll`` over the
+    island axis) and replaces the receiving island's current worst
+    individual. The epoch is one vmapped generation + one branchless
+    one-hot exchange, so kernel counts stay island-invariant.
+    """
     scenario = env_cfg.scenario() if scenario is None else scenario
     keys = jax.random.split(key, n_islands)
-    return jax.jit(jax.vmap(
-        lambda k: evolve(k, env_cfg, cfg, scenario, surrogate)))(keys)
+    if cfg.migrate_every <= 0:
+        return jax.jit(jax.vmap(
+            lambda k: evolve(k, env_cfg, cfg, scenario, surrogate)))(keys)
+    return _evolve_islands(keys, env_cfg, cfg, scenario, surrogate)
+
+
+def _evolve_islands(keys, env_cfg, cfg: EvoConfig, scenario,
+                    surrogate=None) -> EvoResult:
+    """Ring-migrating island GA: one scan over generations of a vmapped
+    generation step plus a branchless migration exchange."""
+    heads = jnp.asarray(genome_head_sizes(cfg), jnp.int32)
+    eval_pop = _make_eval_pop(env_cfg, scenario, cfg.placement_genes)
+    generation = _make_generation(cfg, heads, eval_pop, surrogate)
+    pop_n = cfg.pop_size
+
+    def run(keys):
+        carry0 = jax.vmap(
+            lambda k: _init_carry(k, cfg, heads, eval_pop))(keys)
+        vgen = jax.vmap(lambda c: generation(c, None))
+
+        def epoch(vcarry, g):
+            vcarry, best_r = vgen(vcarry)
+            pop, fit, best_g, best_rc, arc, key = vcarry
+            do = ((g + 1) % cfg.migrate_every) == 0
+            # emigrant: each island's best individual, selected by a
+            # one-hot sum (fitness is island-independent, so the fitness
+            # travels with the genome)
+            oh_b = (jnp.arange(pop_n)[None, :]
+                    == jnp.argmax(fit, axis=1)[:, None])
+            mig = jnp.sum(jnp.where(oh_b[:, :, None], pop, 0), axis=1)
+            mig_fit = jnp.sum(jnp.where(oh_b, fit, 0.0), axis=1)
+            in_g = jnp.roll(mig, 1, axis=0)
+            in_f = jnp.roll(mig_fit, 1, axis=0)
+            # immigrant replaces the receiving island's current worst
+            oh_w = (jnp.arange(pop_n)[None, :]
+                    == jnp.argmin(fit, axis=1)[:, None])
+            sel = do & oh_w
+            pop = jnp.where(sel[:, :, None], in_g[:, None, :], pop)
+            fit = jnp.where(sel, in_f[:, None], fit)
+            return (pop, fit, best_g, best_rc, arc, key), best_r
+
+        carry, hist = jax.lax.scan(epoch, carry0,
+                                   jnp.arange(cfg.n_generations))
+        (_, _, best_g, best_r, arc, _) = carry
+        return best_g, best_r, jnp.swapaxes(hist, 0, 1), arc
+
+    best_g, best_r, history, arc = jax.jit(run)(keys)
+    return EvoResult(best_design=ps.from_flat(best_g[:, : ps.N_PARAMS]),
+                     best_reward=best_r, history=history, archive=arc,
+                     best_genome=best_g)
 
 
 def evolve_scenario_population(key, scenarios: cm.Scenario, n_islands: int,

@@ -108,6 +108,12 @@ class SuiteConfig:
     # SA/RL/GA/placement key streams are untouched and enabling it only
     # grows the candidate + refine sets (never-worse by construction).
     surrogate: srk.SurrogateConfig = None
+    # periodic surrogate re-fit cadence (scenarios per re-fit; 0 = off =
+    # single fit, bit-exact with the PR-6 stage). With refits on, the
+    # stage folds each chunk's analytic re-scores back into the eval
+    # dataset before the next fit — the ROADMAP item-1 follow-up of
+    # training on the suite's own tapped eval traffic during long runs.
+    surrogate_refit_every: int = 0
 
 
 SMOKE_SUITE = SuiteConfig(
@@ -247,7 +253,8 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
     if cfg.surrogate is not None:
         sur_stage = srk.run_stage(
             jax.random.fold_in(jnp.asarray(key), 7), scenarios,
-            cfg.surrogate, cfg.env.hw, nop_fidelity=cfg.env.nop_fidelity)
+            cfg.surrogate, cfg.env.hw, nop_fidelity=cfg.env.nop_fidelity,
+            refit_every=cfg.surrogate_refit_every)
         cand_rewards.append(np.asarray(sur_stage.cand_rewards))
         cand_flats.append(np.asarray(sur_stage.cand_flats))
         lo = arm_slices[-1][2] if arm_slices else 0

@@ -91,9 +91,18 @@ def collect_rollout(params, env_states, obs, key, env_cfg, cfg: PPOConfig,
         logits, value = nets.policy_value(params, obs)
         action = nets.sample_action(k_act, logits, heads)   # (E, n_heads)
         logp = nets.log_prob(logits, action, heads)
-        states, obs_next, reward, done, _ = jax.vmap(
-            lambda s, a: chipenv.auto_reset_step(s, a, env_cfg, scenario)
-        )(states, action)
+        if env_cfg.placement_episode:
+            # cond-gated batched reset: synchronized placement episodes
+            # pay the placement-ctx + cache rebuild only on boundary
+            # steps (the separately compiled reset branch can move
+            # boundary obs by an ulp, so the classic design env keeps
+            # the per-env path and its recorded trajectories bit-exact)
+            states, obs_next, reward, done, _ = chipenv.auto_reset_step_vec(
+                states, action, env_cfg, scenario)
+        else:
+            states, obs_next, reward, done, _ = jax.vmap(
+                lambda s, a: chipenv.auto_reset_step(
+                    s, a, env_cfg, scenario))(states, action)
         rec = Rollout(obs=obs, actions=action, log_probs=logp,
                       values=value, rewards=reward,
                       dones=done.astype(jnp.float32))
@@ -258,7 +267,13 @@ def train(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
     carry, log = jax.lax.scan(
         jax.jit(lambda c, x: update(c, x, scenario)),
         carry, None, length=n_updates)
-    best_design = ps.from_flat(carry.best_action[: ps.N_PARAMS])
+    # placement-episode actions carry no Table-1 assignment: the design
+    # is drawn per episode, so best_design is a placeholder there and
+    # best_action (the 4 placement heads) is the meaningful output.
+    if chipenv.action_dim(env_cfg) >= ps.N_PARAMS:
+        best_design = ps.from_flat(carry.best_action[: ps.N_PARAMS])
+    else:
+        best_design = ps.from_flat(jnp.zeros((ps.N_PARAMS,), jnp.int32))
     return TrainResult(params=carry.params, log=log,
                        best_design=best_design,
                        best_reward=carry.best_reward,
@@ -302,7 +317,15 @@ def train_scenario_population(key, scenarios: chipenv.Scenario,
 
 def greedy_design(params: nets.ACParams, env_cfg=chipenv.EnvConfig(),
                   key=None, scenario: chipenv.Scenario = None) -> ps.DesignPoint:
-    """Run the trained policy greedily from a reset obs (inference mode)."""
+    """Run the trained policy greedily from a reset obs (inference mode).
+
+    Design-selecting configs only — placement episodes
+    (``EnvConfig(placement_episode=True)``) have no design heads to
+    decode, so this raises there.
+    """
+    if chipenv.action_dim(env_cfg) < ps.N_PARAMS:
+        raise ValueError("greedy_design needs the Table-1 design heads; "
+                         "placement-episode actions carry none")
     key = jax.random.PRNGKey(0) if key is None else key
     _, obs = chipenv.reset(key, env_cfg, scenario)
     logits, _ = nets.policy_value(params, obs)

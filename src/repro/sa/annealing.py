@@ -191,6 +191,20 @@ class PlacementSAConfig:
     n_iters: int = 12_000
     temperature: float = 20.0
     p_hbm: float = 0.5            # fraction of moves that re-anchor a stack
+    # alternating pinned-kind phases instead of the Bernoulli(p_hbm) move
+    # mix: a tuple of ("chiplet" | "hbm", segment_length) pairs forming
+    # one cycle, e.g. (("chiplet", 40), ("hbm", 10)). Each segment runs
+    # with the move kind pinned, so its step program is statically pruned
+    # via nop_stats_delta(move_kinds=...) — chiplet segments never trace
+    # the fused 6-anchor re-scan. n_iters must be a multiple of the cycle
+    # length. None (default) keeps the mixed Bernoulli stream and its
+    # key-split layout bit-for-bit (the recorded-trajectory oracle).
+    phase_schedule: tuple = None
+    # lax.scan unroll factor for the SA step loop. Value-preserving (the
+    # per-step computation is unchanged — trajectories stay bit-exact)
+    # but folds k steps into one while-loop round, amortizing per-step
+    # kernel-launch overhead on launch-bound hosts.
+    scan_unroll: int = 1
     profile_guided: bool = True   # bias moves toward the traffic centroid
     p_guided: float = 0.5         # fraction of guided (vs uniform) moves
     guide_sigma: float = 1.25     # Gaussian jitter of guided moves (hops)
@@ -203,6 +217,33 @@ class PlacementSAConfig:
     # n_chains=1 preserves the PR-4 key-split layout bit-for-bit (the
     # recorded-trajectory oracle runs against it).
     n_chains: int = 1
+
+
+def _validated_phase_schedule(cfg: PlacementSAConfig):
+    """Normalize cfg.phase_schedule to ((kind, len), ...) or None.
+
+    Raises ValueError on unknown kinds, non-positive segment lengths, or
+    an n_iters that is not a whole number of cycles (the scan structure
+    needs a static cycle count).
+    """
+    if cfg.phase_schedule is None:
+        return None
+    segs = tuple((str(k), int(ln)) for k, ln in cfg.phase_schedule)
+    if not segs:
+        raise ValueError("phase_schedule must be None or a non-empty tuple "
+                         "of (kind, length) pairs")
+    for kname, ln in segs:
+        if kname not in ("chiplet", "hbm"):
+            raise ValueError(f"phase_schedule kind must be 'chiplet' or "
+                             f"'hbm', got {kname!r}")
+        if ln <= 0:
+            raise ValueError(f"phase_schedule segment lengths must be "
+                             f"positive, got {ln}")
+    cycle = sum(ln for _, ln in segs)
+    if cfg.n_iters % cycle != 0:
+        raise ValueError(f"n_iters ({cfg.n_iters}) must be a multiple of "
+                         f"the phase_schedule cycle length ({cycle})")
+    return segs
 
 
 class PlacementResult(NamedTuple):
@@ -245,6 +286,14 @@ def refine_placement(key, design: ps.DesignPoint,
     returns the best chain's result — extra chains ride the same kernel
     launches, so on the launch-bound container they are much cheaper
     than sequential restarts (bench_costmodel.py records the ratio).
+
+    ``cfg.phase_schedule`` replaces the Bernoulli move mix with
+    alternating pinned-kind segments whose step programs are statically
+    pruned (chiplet segments skip the fused 6-anchor re-scan entirely),
+    and ``cfg.scan_unroll`` folds several steps per while-loop round —
+    together the scan-free hot path benched as ``placement_sa_phased``
+    in BENCH_costmodel.json. Both default off; the defaults reproduce
+    the PR-4 recorded trajectories bit-for-bit.
     """
     scenario = env_cfg.scenario() if scenario is None else scenario
     v = ps.decode(design)
@@ -271,13 +320,17 @@ def refine_placement(key, design: ps.DesignPoint,
             lambda a, b: jnp.where(better, a, b), init_placement, base)
         r_start = jnp.maximum(r_init, r0)
 
-    def propose(plc, key, cell_sums=None):
+    def propose(plc, key, cell_sums=None, pin_kind=None):
         """One swap/relocate/re-anchor proposal as a PlacementMove.
 
         Shared between the delta and full-recompute steps — the key
         split layout is part of the bit-for-bit trajectory contract.
         ``cell_sums`` lets the delta step serve the profile-guided
         centroid from the cache instead of re-reducing the slot axis.
+        ``pin_kind`` (0 chiplet / 1 hbm) statically pins the move kind
+        for phase-scheduled segments; the 8-way split layout is kept
+        either way so pinned and mixed streams draw the same slot /
+        cell / anchor / accept randomness per iteration.
         """
         key, k_kind, k_slot, k_cell, k_bit, k_anchor, k_acc, k_mix = (
             jax.random.split(key, 8))
@@ -296,69 +349,117 @@ def refine_placement(key, design: ps.DesignPoint,
             anchor = jnp.where(guided, g_anchor, anchor)
         # HBM re-anchor proposal (uniform over the placed stacks)
         bit = pm.select_placed_bit(k_bit, v.hbm_mask)
-        use_hbm = jax.random.uniform(k_kind) < cfg.p_hbm
-        move = pm.PlacementMove(kind=use_hbm.astype(jnp.int32), slot=slot,
+        if pin_kind is None:
+            use_hbm = jax.random.uniform(k_kind) < cfg.p_hbm
+            kind = use_hbm.astype(jnp.int32)
+        else:
+            kind = jnp.int32(pin_kind)
+        move = pm.PlacementMove(kind=kind, slot=slot,
                                 cell=cell, hbm=bit, anchor=anchor)
         return move, key, k_acc
 
-    def step_full(state, it):
+    def make_step_full(pin_kind=None):
         """PR-3 semantics: one full costmodel.evaluate per candidate
         (kept as the delta benchmark baseline and trajectory oracle)."""
-        plc, r_curr, best, r_best, key = state
-        move, key, k_acc = propose(plc, key)
-        cand = pm.apply_move(plc, move, n_pos)
-        r_cand = objective(cand)
+        def step_full(state, it):
+            plc, r_curr, best, r_best, key = state
+            move, key, k_acc = propose(plc, key, pin_kind=pin_kind)
+            cand = pm.apply_move(plc, move, n_pos)
+            r_cand = objective(cand)
 
-        better_best = r_cand > r_best
-        best = jax.tree_util.tree_map(
-            lambda a, b: jnp.where(better_best, a, b), cand, best)
-        r_best = jnp.where(better_best, r_cand, r_best)
+            better_best = r_cand > r_best
+            best = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(better_best, a, b), cand, best)
+            r_best = jnp.where(better_best, r_cand, r_best)
 
-        t = cfg.temperature / (it + 1.0)
-        accept = (r_cand > r_curr) | (jax.random.uniform(k_acc) < t)
-        plc = jax.tree_util.tree_map(
-            lambda a, b: jnp.where(accept, a, b), cand, plc)
-        r_curr = jnp.where(accept, r_cand, r_curr)
-        return (plc, r_curr, best, r_best, key), r_best
+            t = cfg.temperature / (it + 1.0)
+            accept = (r_cand > r_curr) | (jax.random.uniform(k_acc) < t)
+            plc = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(accept, a, b), cand, plc)
+            r_curr = jnp.where(accept, r_cand, r_curr)
+            return (plc, r_curr, best, r_best, key), r_best
+        return step_full
 
     # p_hbm pins the move kind at 0 or 1 -> statically prune the dead
     # delta branch (a relocation-only chain never traces the anchor scan)
     move_kinds = ("chiplet" if cfg.p_hbm <= 0.0
                   else "hbm" if cfg.p_hbm >= 1.0 else "mixed")
 
-    def step_delta(state, it):
+    def make_step_delta(mk, pin_kind=None):
         """Cache-carried step: delta NoP stats + suffix-only reward;
-        accept/reject folds the candidate back via pm.commit_move."""
-        cache, r_curr, best, r_best, key = state
-        move, key, k_acc = propose(cache.placement, key,
-                                   (cache.sum_ci, cache.sum_cj))
-        cand = pm.nop_stats_delta(cache, move, n_pos, v.hbm_mask,
-                                  v.arch_type, mesh_edges,
-                                  move_kinds=move_kinds)
-        r_cand = cm.reward_from_nop(ctx, cand.stats, env_cfg.hw)
+        accept/reject folds the candidate back via pm.commit_move.
+        ``mk`` statically prunes the untaken delta branch; phased
+        segments pass mk='chiplet'/'hbm' with the matching pin."""
+        def step_delta(state, it):
+            cache, r_curr, best, r_best, key = state
+            move, key, k_acc = propose(cache.placement, key,
+                                       (cache.sum_ci, cache.sum_cj),
+                                       pin_kind=pin_kind)
+            cand = pm.nop_stats_delta(cache, move, n_pos, v.hbm_mask,
+                                      v.arch_type, mesh_edges,
+                                      move_kinds=mk)
+            r_cand = cm.reward_from_nop(ctx, cand.stats, env_cfg.hw)
 
-        better_best = r_cand > r_best
-        best = jax.tree_util.tree_map(
-            lambda a, b: jnp.where(better_best, a, b), cand.placement, best)
-        r_best = jnp.where(better_best, r_cand, r_best)
+            better_best = r_cand > r_best
+            best = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(better_best, a, b), cand.placement,
+                best)
+            r_best = jnp.where(better_best, r_cand, r_best)
 
-        t = cfg.temperature / (it + 1.0)
-        accept = (r_cand > r_curr) | (jax.random.uniform(k_acc) < t)
-        cache = pm.commit_move(cache, cand, accept)
-        r_curr = jnp.where(accept, r_cand, r_curr)
-        return (cache, r_curr, best, r_best, key), r_best
+            t = cfg.temperature / (it + 1.0)
+            accept = (r_cand > r_curr) | (jax.random.uniform(k_acc) < t)
+            cache = pm.commit_move(cache, cand, accept)
+            r_curr = jnp.where(accept, r_cand, r_curr)
+            return (cache, r_curr, best, r_best, key), r_best
+        return step_delta
+
+    segs = _validated_phase_schedule(cfg)
 
     def _chain(chain_key):
         if cfg.delta_eval:
             cache0 = pm.nop_stats_cache(start, n_pos, v.hbm_mask,
                                         v.arch_type, mesh_edges)
             state = (cache0, r_start, start, r_start, chain_key)
-            step = step_delta
         else:
             state = (start, r_start, start, r_start, chain_key)
-            step = step_full
-        iters = jnp.arange(cfg.n_iters, dtype=jnp.float32)
-        (_, _, best, r_best, _), trace = jax.lax.scan(step, state, iters)
+        if segs is None:
+            step = (make_step_delta(move_kinds) if cfg.delta_eval
+                    else make_step_full())
+            iters = jnp.arange(cfg.n_iters, dtype=jnp.float32)
+            (_, _, best, r_best, _), trace = jax.lax.scan(
+                step, state, iters, unroll=cfg.scan_unroll)
+        else:
+            # phase-scheduled chain: an outer scan over cycles; each
+            # cycle runs one statically-pruned inner scan per segment
+            # (chiplet segments never trace the 6-anchor re-scan).
+            # Temperature follows the *global* iteration index, so the
+            # schedule only changes which kind each iteration draws.
+            cycle = sum(ln for _, ln in segs)
+            steps = {}
+            for kname, _ in segs:
+                if kname not in steps:
+                    pin = 0 if kname == "chiplet" else 1
+                    steps[kname] = (make_step_delta(kname, pin)
+                                    if cfg.delta_eval
+                                    else make_step_full(pin))
+
+            def cycle_body(st, c):
+                traces = []
+                off = 0
+                for kname, ln in segs:
+                    iters = (c * cycle + off
+                             + jnp.arange(ln)).astype(jnp.float32)
+                    st, tr = jax.lax.scan(
+                        steps[kname], st, iters,
+                        unroll=min(cfg.scan_unroll, ln))
+                    traces.append(tr)
+                    off += ln
+                return st, jnp.concatenate(traces)
+
+            n_cycles = cfg.n_iters // cycle
+            (_, _, best, r_best, _), trace2 = jax.lax.scan(
+                cycle_body, state, jnp.arange(n_cycles))
+            trace = trace2.reshape(cfg.n_iters)
         # strided best-so-far trace + the final value (the stride rarely
         # lands on the last iteration; history[-1] must equal best_reward)
         history = jnp.concatenate([trace[:: cfg.record_every], trace[-1:]])

@@ -135,9 +135,26 @@ def bootstrap_dataset(key, scenarios: cm.Scenario, n: int, hw_cfg,
     return ds, flats, mtr.reward
 
 
+def _rank_and_rescore(params, pool, scenarios, cfg: SurrogateConfig,
+                      hw_cfg, nop_fidelity):
+    """Surrogate-rank ``pool`` per scenario, analytically re-score the
+    winners. Returns ((S, k, 14) flats, Metrics with (S, k) leaves)."""
+    n_scen = int(jnp.shape(scenarios.weights.alpha)[0])
+    scen_list = [jax.tree_util.tree_map(lambda x, i=i: x[i], scenarios)
+                 for i in range(n_scen)]
+    tops = [rank_pool(params, pool, sc, cfg.top_k, cfg.backend)[0]
+            for sc in scen_list]
+    sel_flats = jnp.stack([pool[idx] for idx in tops])      # (S, k, 14)
+    mtr = cm.evaluate_scenarios(ps.from_flat(sel_flats), scenarios,
+                                hw_cfg, paired=True,
+                                nop_fidelity=nop_fidelity)
+    return sel_flats, mtr
+
+
 def run_stage(key, scenarios: cm.Scenario, cfg: SurrogateConfig, hw_cfg,
               nop_fidelity: str = "auto",
-              tap_dataset: Optional[sds.EvalDataset] = None) -> StageResult:
+              tap_dataset: Optional[sds.EvalDataset] = None,
+              refit_every: int = 0) -> StageResult:
     """The full surrogate_topk stage over a batched Scenario.
 
     Spends exactly ``analytic_budget(cfg)`` analytic evaluations per
@@ -146,6 +163,16 @@ def run_stage(key, scenarios: cm.Scenario, cfg: SurrogateConfig, hw_cfg,
     equal-stream control). Returned candidates: the per-scenario
     bootstrap argmax + either the surrogate-ranked top-k (analytically
     re-scored) or ``top_k`` more uniform analytic evals.
+
+    ``refit_every`` (surrogate mode only; 0 = off, bit-exact with the
+    single-fit path) walks the scenario grid in chunks of that many
+    scenarios, re-fitting before each chunk on the *growing* eval
+    stream: the tapped seed rows + bootstrap, plus every earlier chunk's
+    analytic re-scores folded back into the dataset — exactly the rows a
+    costmodel eval tap sees from this stage, so long suites keep
+    training the ranker on their own eval traffic instead of freezing it
+    after the bootstrap. Chunk fit/pool keys are folds of the stage keys,
+    leaving the ``refit_every=0`` stream untouched.
     """
     n_scen = int(jnp.shape(scenarios.weights.alpha)[0])
     k_boot = jax.random.fold_in(key, 0)
@@ -164,18 +191,34 @@ def run_stage(key, scenarios: cm.Scenario, cfg: SurrogateConfig, hw_cfg,
             extra, (n_scen, cfg.top_k, ps.N_PARAMS))
         sel_rewards = mtr.reward
         params = None
-    else:
+    elif refit_every <= 0:
         params, _ = strain.fit(k_train, ds, cfg.train)
         pool = random_flats(k_sel, cfg.pool_size)
-        scen_list = [jax.tree_util.tree_map(lambda x, i=i: x[i], scenarios)
-                     for i in range(n_scen)]
-        tops = [rank_pool(params, pool, sc, cfg.top_k, cfg.backend)[0]
-                for sc in scen_list]
-        sel_flats = jnp.stack([pool[idx] for idx in tops])  # (S, k, 14)
-        mtr = cm.evaluate_scenarios(ps.from_flat(sel_flats), scenarios,
-                                    hw_cfg, paired=True,
-                                    nop_fidelity=nop_fidelity)
+        sel_flats, mtr = _rank_and_rescore(params, pool, scenarios, cfg,
+                                           hw_cfg, nop_fidelity)
         sel_rewards = mtr.reward                            # (S, k)
+    else:
+        sfeats = sm.scenario_features(scenarios)            # (S, S_FEAT)
+        flats_parts, reward_parts = [], []
+        params = None
+        for c0 in range(0, n_scen, refit_every):
+            chunk = jax.tree_util.tree_map(
+                lambda x: x[c0:c0 + refit_every], scenarios)
+            params, _ = strain.fit(jax.random.fold_in(k_train, c0), ds,
+                                   cfg.train)
+            pool = random_flats(jax.random.fold_in(k_sel, c0),
+                                cfg.pool_size)
+            cf, cmtr = _rank_and_rescore(params, pool, chunk, cfg,
+                                         hw_cfg, nop_fidelity)
+            flats_parts.append(cf)
+            reward_parts.append(cmtr.reward)
+            # fold this chunk's analytic eval stream back in for the
+            # next chunk's fit (the eval-tap rows of this stage)
+            tgts = sds.targets_from_metrics(cmtr)           # (nc, k, 6)
+            for s in range(cf.shape[0]):
+                ds = sds.add(ds, cf[s], tgts[s], sfeats[c0 + s])
+        sel_flats = jnp.concatenate(flats_parts, axis=0)    # (S, k, 14)
+        sel_rewards = jnp.concatenate(reward_parts, axis=0)
 
     # the bootstrap pool's per-scenario argmax rides along in both modes
     # (those analytic evals are already paid for)

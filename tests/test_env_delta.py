@@ -1,0 +1,233 @@
+"""ISSUE-7 tentpole (b): cache-carried (delta-priced) env stepping.
+
+Placement episodes thread a PlacementCtx + PlacementEvalCache through
+EnvState so each step prices one floorplan move with a fused
+``nop_stats_delta(move_kinds='both')`` instead of a full
+``costmodel.evaluate``. The contract tested here: across 50-step
+episodes the delta-priced step agrees with a scratch ``evaluate`` of the
+same mutated floorplan on EVERY ``Metrics`` field to 1e-5, the default
+(non-placement) env pytree is unchanged, and PPO trains on the
+placement-episode observation/action space.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core import env as chipenv
+from repro.core import params as ps
+from repro.core import placement as pm
+from repro.rl import ppo
+
+
+def _cfgs(episode_len=50):
+    mk = lambda delta: chipenv.EnvConfig(placement_episode=True,
+                                         delta_eval=delta,
+                                         episode_len=episode_len)
+    return mk(True), mk(False)
+
+
+def _actions(key, n):
+    heads = jnp.asarray(ps.PLACEMENT_HEAD_SIZES, jnp.int32)
+    return jax.random.randint(key, (n, len(ps.PLACEMENT_HEAD_SIZES)), 0,
+                              heads, dtype=jnp.int32)
+
+
+class TestPlacementEpisodePricing:
+    def test_reset_bit_equal_between_modes(self):
+        d_cfg, s_cfg = _cfgs()
+        key = jax.random.PRNGKey(0)
+        sd, od = chipenv.reset(key, d_cfg)
+        ss, os_ = chipenv.reset(key, s_cfg)
+        np.testing.assert_array_equal(np.asarray(od), np.asarray(os_))
+        np.testing.assert_array_equal(
+            np.asarray(sd.cache.placement.chiplet_cell),
+            np.asarray(ss.cache.placement.chiplet_cell))
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_delta_vs_scratch_50_steps_all_metrics(self, seed):
+        """The acceptance contract: every Metrics field to 1e-5 on every
+        step of a 50-step episode, against BOTH the scratch-mode env and
+        an independently maintained apply_action + evaluate oracle."""
+        d_cfg, s_cfg = _cfgs()
+        key = jax.random.PRNGKey(seed)
+        sd, _ = chipenv.reset(key, d_cfg)
+        ss, _ = chipenv.reset(key, s_cfg)
+        acts = _actions(jax.random.fold_in(key, 1), 50)
+        scen = d_cfg.scenario()
+        d_step = jax.jit(lambda st, a: chipenv.step(st, a, d_cfg))
+        s_step = jax.jit(lambda st, a: chipenv.step(st, a, s_cfg))
+        design = sd.design
+        v = ps.decode(design)
+        n_pos = cm.footprint_positions(v)
+        plc = sd.cache.placement
+        for i in range(50):
+            sd, od, rd, dd, md = d_step(sd, acts[i])
+            ss, os_, rs, ds, ms = s_step(ss, acts[i])
+            # the independent oracle never touches the env's cache
+            plc = pm.apply_action(plc, acts[i], n_pos)
+            mo = cm.evaluate(design, scen.workload, scen.weights, d_cfg.hw,
+                             placement=plc)
+            for field in cm.Metrics._fields:
+                a = float(getattr(md, field))
+                np.testing.assert_allclose(
+                    a, float(getattr(ms, field)), rtol=1e-5, atol=1e-5,
+                    err_msg=f"step {i} vs scratch env: {field}")
+                np.testing.assert_allclose(
+                    a, float(getattr(mo, field)), rtol=1e-5, atol=1e-5,
+                    err_msg=f"step {i} vs oracle: {field}")
+            np.testing.assert_allclose(np.asarray(od), np.asarray(os_),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f"step {i}: obs")
+            assert bool(dd) == bool(ds)
+            np.testing.assert_array_equal(
+                np.asarray(sd.cache.placement.chiplet_cell),
+                np.asarray(plc.chiplet_cell), err_msg=f"step {i}: cells")
+        assert bool(dd)   # episode_len=50 -> last step terminates
+
+    def test_auto_reset_equivalence_across_boundary(self):
+        """auto_reset_step agrees between pricing modes through an
+        episode boundary (fresh cache on reset in both)."""
+        d_cfg, s_cfg = _cfgs(episode_len=5)
+        key = jax.random.PRNGKey(7)
+        sd, _ = chipenv.reset(key, d_cfg)
+        ss, _ = chipenv.reset(key, s_cfg)
+        acts = _actions(jax.random.fold_in(key, 2), 12)
+        d_step = jax.jit(lambda st, a: chipenv.auto_reset_step(st, a, d_cfg))
+        s_step = jax.jit(lambda st, a: chipenv.auto_reset_step(st, a, s_cfg))
+        dones = []
+        for i in range(12):
+            sd, od, rd, dd, _ = d_step(sd, acts[i])
+            ss, os_, rs, ds, _ = s_step(ss, acts[i])
+            np.testing.assert_allclose(float(rd), float(rs), rtol=1e-5,
+                                       atol=1e-5, err_msg=f"step {i}")
+            np.testing.assert_allclose(np.asarray(od), np.asarray(os_),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f"step {i}")
+            dones.append(bool(dd))
+        assert dones[4] and dones[9]          # two boundaries crossed
+
+    def test_vmapped_episode_scan(self):
+        """The PPO rollout shape: scan of vmapped auto_reset_step runs
+        jitted with finite rewards in both pricing modes, agreeing."""
+        d_cfg, s_cfg = _cfgs(episode_len=8)
+        n_env, n_steps = 3, 16
+        keys = jax.random.split(jax.random.PRNGKey(9), n_env)
+        acts = jax.random.randint(
+            jax.random.PRNGKey(10), (n_steps, n_env, 4), 0,
+            jnp.asarray(ps.PLACEMENT_HEAD_SIZES, jnp.int32),
+            dtype=jnp.int32)
+
+        def rollout(cfg):
+            states, _ = jax.vmap(lambda k: chipenv.reset(k, cfg))(keys)
+
+            def body(st, a):
+                st, _, r, d, _ = jax.vmap(
+                    lambda s, ai: chipenv.auto_reset_step(s, ai, cfg))(st, a)
+                return st, (r, d)
+
+            _, (rews, dones) = jax.lax.scan(body, states, acts)
+            return rews, dones
+
+        rd, dd = jax.jit(lambda: rollout(d_cfg))()
+        rs, ds = jax.jit(lambda: rollout(s_cfg))()
+        assert bool(jnp.isfinite(rd).all())
+        np.testing.assert_allclose(np.asarray(rd), np.asarray(rs),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(dd), np.asarray(ds))
+
+    @pytest.mark.parametrize("placement", [False, True])
+    def test_auto_reset_step_vec_matches_per_env(self, placement):
+        """auto_reset_step_vec (cond-gated batched reset, the PPO
+        placement-rollout fast path) matches vmapped per-env
+        auto_reset_step: rewards, dones, final cache cells and key
+        streams are bit-identical; observations agree bitwise off
+        episode boundaries and to 1e-5 at them (the separately compiled
+        cond reset branch can move a boundary obs feature by an ulp,
+        which is why ppo.collect_rollout only routes placement episodes
+        through the vec path — the classic design env keeps the per-env
+        path and its PR-4 recorded trajectories bit-exact)."""
+        if placement:
+            cfg = chipenv.EnvConfig(placement_episode=True, delta_eval=True,
+                                    episode_len=5)
+            n_act = len(ps.PLACEMENT_HEAD_SIZES)
+            highs = jnp.asarray(ps.PLACEMENT_HEAD_SIZES, jnp.int32)
+        else:
+            cfg = chipenv.EnvConfig(episode_len=5)
+            n_act = len(ps.HEAD_SIZES)
+            highs = jnp.asarray(ps.HEAD_SIZES, jnp.int32)
+        n_env, n_steps = 3, 12                 # crosses two boundaries
+        keys = jax.random.split(jax.random.PRNGKey(13), n_env)
+        acts = jax.random.randint(jax.random.PRNGKey(14),
+                                  (n_steps, n_env, n_act), 0, highs,
+                                  dtype=jnp.int32)
+
+        def rollout(vec):
+            states, _ = jax.vmap(lambda k: chipenv.reset(k, cfg))(keys)
+
+            def body(st, a):
+                if vec:
+                    st, o, r, d, _ = chipenv.auto_reset_step_vec(st, a, cfg)
+                else:
+                    st, o, r, d, _ = jax.vmap(
+                        lambda s, ai: chipenv.auto_reset_step(
+                            s, ai, cfg))(st, a)
+                return st, (o, r, d)
+
+            final, out = jax.lax.scan(body, states, acts)
+            return final, out
+
+        fs_v, (ov, rv, dv) = jax.jit(lambda: rollout(True))()
+        fs_p, (op, rp, dp_) = jax.jit(lambda: rollout(False))()
+        dones = np.asarray(dv)
+        np.testing.assert_array_equal(dones, np.asarray(dp_))
+        np.testing.assert_array_equal(np.asarray(rv), np.asarray(rp))
+        ov, op = np.asarray(ov), np.asarray(op)
+        np.testing.assert_array_equal(ov[~dones], op[~dones])
+        np.testing.assert_allclose(ov[dones], op[dones],
+                                   rtol=1e-5, atol=1e-5)
+        if placement:
+            np.testing.assert_array_equal(
+                np.asarray(fs_v.cache.placement.chiplet_cell),
+                np.asarray(fs_p.cache.placement.chiplet_cell))
+        np.testing.assert_array_equal(np.asarray(fs_v.key),
+                                      np.asarray(fs_p.key))
+
+    def test_default_env_pytree_unchanged(self):
+        """Non-placement episodes: EnvState keeps ctx/cache at None (the
+        PR-4 pytree structure), spaces unchanged."""
+        cfg = chipenv.EnvConfig()
+        state, obs = chipenv.reset(jax.random.PRNGKey(1), cfg)
+        assert state.ctx is None and state.cache is None
+        assert chipenv.head_sizes(cfg) == ps.HEAD_SIZES
+        assert obs.shape == (chipenv.obs_dim(cfg),)
+        p_cfg = chipenv.EnvConfig(placement_episode=True)
+        assert chipenv.head_sizes(p_cfg) == ps.PLACEMENT_HEAD_SIZES
+        assert chipenv.obs_dim(p_cfg) == 13
+        assert chipenv.action_dim(p_cfg) == 4
+
+    def test_batched_action_raises(self):
+        cfg = chipenv.EnvConfig(placement_episode=True)
+        state, _ = chipenv.reset(jax.random.PRNGKey(2), cfg)
+        with pytest.raises(ValueError, match="vmap"):
+            chipenv.step(state, jnp.zeros((2, 4), jnp.int32), cfg)
+
+
+class TestPPOPlacementEpisodes:
+    CFG = ppo.PPOConfig(n_envs=2, n_steps=8, n_epochs=1, batch_size=8)
+
+    def test_train_runs_and_shapes(self):
+        env_cfg = chipenv.EnvConfig(placement_episode=True, episode_len=8)
+        res = ppo.train(jax.random.PRNGKey(0), env_cfg=env_cfg,
+                        cfg=self.CFG, total_timesteps=32)
+        assert res.best_action.shape == (4,)
+        assert np.isfinite(float(res.best_reward))
+
+    def test_greedy_design_raises_without_design_heads(self):
+        env_cfg = chipenv.EnvConfig(placement_episode=True, episode_len=8)
+        res = ppo.train(jax.random.PRNGKey(1), env_cfg=env_cfg,
+                        cfg=self.CFG, total_timesteps=32)
+        with pytest.raises(ValueError, match="placement-episode"):
+            ppo.greedy_design(res.params, env_cfg)

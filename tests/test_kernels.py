@@ -243,6 +243,44 @@ class TestChipletEval:
             ops.chiplet_eval(dp, backend="ref", placement=plc,
                              nop_fidelity="fast")
 
+    def test_one_hot_gather_boundary_cells(self):
+        """ISSUE-7 tentpole (c): the MXU one-hot anchor gather splits the
+        256-cell grid into two 128-lane halves and gathers per-slot
+        distances with two dot_generals. The risky inputs are exactly the
+        half seams and extremes — cells 0, 127 (last lane of half 0),
+        128 (first lane of half 1), 255 — plus duplicated cells (several
+        slots in one cell must each gather the full field value, not a
+        share of it). Kernel == jnp oracle on all columns."""
+        from repro.core import placement as pm
+        n = 256
+        dp = ps.random_design(jax.random.PRNGKey(31), (n,))
+        v = ps.decode(dp)
+        m, mesh_n = cm.mesh_dims(cm.footprint_positions(v))
+        base = pm.canonical(m, mesh_n, v.hbm_mask, v.arch_type)
+        cells = np.asarray(base.chiplet_cell).copy()
+        seam = [0, 127, 128, 255]
+        for r in range(n):
+            k = len(seam)
+            # rotate the seam cells through the first 2k slots, with each
+            # seam cell duplicated across two slots
+            cells[r, : 2 * k] = np.asarray(seam + seam, np.int32)[
+                np.arange(2 * k) % (2 * k)]
+            cells[r] = np.roll(cells[r], r % pm.MAX_SLOTS)
+        hbm = base.hbm_ij + jax.random.uniform(
+            jax.random.PRNGKey(32), base.hbm_ij.shape, minval=-1.5,
+            maxval=1.5)
+        plc = pm.Placement(chiplet_cell=jnp.asarray(cells, jnp.int32),
+                           hbm_ij=hbm.astype(jnp.float32))
+        wl_vals = (1e9, 2e7, 25e6, 0.85)
+        w_vals = (1.0, 1.0, 0.1)
+        out = ce.evaluate_batch(ce.pad_designs(dp, plc),
+                                ce.pad_cells(dp, plc),
+                                wl_vals, w_vals, interpret=True)[:n]
+        expect = ref.chiplet_eval_reference(ps.to_flat(dp), wl_vals, w_vals,
+                                            placement_flat=pm.to_flat(plc))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-4, atol=1e-4)
+
     def test_paper_case_design(self):
         """Kernel reproduces the Table-6 case-(i) reward."""
         import sys

@@ -240,6 +240,62 @@ class TestRunStage:
                                    np.asarray(r2.cand_rewards))
 
 
+class TestPeriodicRefit:
+    """ISSUE-7 satellite 2: SuiteConfig.surrogate_refit_every."""
+
+    def test_refit_off_bit_exact(self):
+        """refit_every=0 (the default) must stay on the single-fit PR-6
+        code path bit-for-bit."""
+        scen = _scenarios(2)
+        r0 = srk.run_stage(jax.random.PRNGKey(17), scen, TINY_STAGE,
+                           chipenv.EnvConfig().hw, nop_fidelity="fast")
+        r1 = srk.run_stage(jax.random.PRNGKey(17), scen, TINY_STAGE,
+                           chipenv.EnvConfig().hw, nop_fidelity="fast",
+                           refit_every=0)
+        np.testing.assert_array_equal(np.asarray(r0.cand_flats),
+                                      np.asarray(r1.cand_flats))
+        np.testing.assert_array_equal(np.asarray(r0.cand_rewards),
+                                      np.asarray(r1.cand_rewards))
+
+    def test_refit_grows_dataset_and_stays_analytic(self):
+        """With refits on, each chunk's analytic re-scores are folded
+        back into the dataset before the next fit (the stage's own
+        eval-tap stream), the result shape is unchanged, and the
+        exactness guard still holds on every returned reward."""
+        scen = _scenarios(3)
+        hw = chipenv.EnvConfig().hw
+        r0 = srk.run_stage(jax.random.PRNGKey(18), scen, TINY_STAGE, hw,
+                           nop_fidelity="fast")
+        r2 = srk.run_stage(jax.random.PRNGKey(18), scen, TINY_STAGE, hw,
+                           nop_fidelity="fast", refit_every=2)
+        assert r2.cand_flats.shape == r0.cand_flats.shape
+        assert int(sds.size(r2.dataset)) == (int(sds.size(r0.dataset))
+                                             + 3 * TINY_STAGE.top_k)
+        mtr = cm.evaluate_scenarios(
+            ps.from_flat(r2.cand_flats), scen, hw, paired=True,
+            nop_fidelity="fast")
+        np.testing.assert_allclose(np.asarray(r2.cand_rewards),
+                                   np.asarray(mtr.reward), rtol=1e-5)
+        # the shared bootstrap argmax free-rider is unaffected by refits
+        np.testing.assert_array_equal(np.asarray(r0.cand_flats[:, -1]),
+                                      np.asarray(r2.cand_flats[:, -1]))
+
+    def test_suite_wiring(self):
+        """SuiteConfig carries the cadence and run_suite threads it to
+        run_stage; enabled refits keep the suite running end-to-end."""
+        assert suite.SuiteConfig().surrogate_refit_every == 0
+        cfg = dataclasses.replace(
+            suite.SMOKE_SUITE, workloads=("resnet50", "bert"),
+            weight_grid=((1.0, 1.0, 0.1),),
+            n_sa=1, n_rl=0, n_evo=0, sa=sa.SAConfig(n_iters=300),
+            refine=False, placement_refine=False,
+            surrogate=TINY_STAGE, surrogate_refit_every=1)
+        res = suite.run_suite(jax.random.PRNGKey(19), cfg)
+        assert len(res.outcomes) == 2
+        for o in res.outcomes:
+            assert np.isfinite(o.best_reward)
+
+
 class TestSurrogateGuidedArms:
     def test_evo_surrogate_proposals_rewards_stay_analytic(self):
         params = sm.init_params(jax.random.PRNGKey(0))
