@@ -355,6 +355,91 @@ def bench_surrogate_suite() -> dict:
     }
 
 
+def bench_traffic_trace(smoke: bool = True) -> dict:
+    """ROADMAP-3 traffic traces, measured on this box.
+
+    Two claims:
+
+    1. throughput — ``evaluate_trace`` vmaps the per-step evaluator over
+       the whole trace inside ONE compiled program, so its per-trace-step
+       eval rate should stay close to the point-scenario rate (>= 0.5x is
+       the ``--assert-trace`` floor; the trace adds the queueing /
+       load-energy channels on top of each step);
+    2. winners move — the same suite key on the placement-sensitive
+       preset picks different winning designs under a flat trace vs a
+       bursty one (the SLO channel rewards headroom that plain Eq.-17
+       scoring never sees). ``--assert-trace`` requires >= 1 diverging
+       scenario.
+    """
+    import dataclasses
+
+    from repro.core import traffic as tr
+    from repro.core import workload as wl
+    from repro.optimizer import scenario as suite
+    from repro.surrogate import ranker as srk
+
+    hw_cfg = chipenv.EnvConfig().hw
+    workload = wl.registry()["llama3-8b:decode"]
+    weights = cm.make_weights(1.0, 1.0, 0.1)
+    tcfg = tr.TRACE_PRESETS["bursty"]
+    scen = tr.traced_scenario(
+        cm.Scenario(workload=workload, weights=weights), tcfg, hw_cfg)
+    n_designs = 512
+    pool = srk.random_flats(jax.random.PRNGKey(31), n_designs)
+    dp = ps.from_flat(pool)
+
+    point_fn = jax.jit(lambda d: cm.evaluate(
+        d, workload, weights, hw_cfg, nop_fidelity="fast").reward)
+    trace_fn = jax.jit(lambda d: cm.evaluate_trace(
+        d, scen, hw_cfg, nop_fidelity="fast").reward)
+    point_fn(dp).block_until_ready()                   # compile
+    trace_fn(dp).block_until_ready()
+    reps = 5
+    t0 = time.time()
+    for _ in range(reps):
+        r = point_fn(dp)
+    r.block_until_ready()
+    point_s = (time.time() - t0) / reps
+    t0 = time.time()
+    for _ in range(reps):
+        r = trace_fn(dp)
+    r.block_until_ready()
+    trace_s = (time.time() - t0) / reps
+    point_rate = n_designs / max(point_s, 1e-9)
+    step_rate = n_designs * tcfg.n_steps / max(trace_s, 1e-9)
+
+    base = dataclasses.replace(
+        suite.PLACEMENT_SENSITIVE_SMOKE,
+        workloads=("llama3-8b:decode", "qwen2-0.5b:decode"),
+        weight_grid=((1.0, 1.0, 0.1),))
+    res_flat = suite.run_suite(jax.random.PRNGKey(0),
+                               dataclasses.replace(base, trace="flat"))
+    res_bur = suite.run_suite(jax.random.PRNGKey(0),
+                              dataclasses.replace(base, trace="bursty"))
+    diverged = sum(
+        not np.array_equal(of.best_flat, ob.best_flat)
+        for of, ob in zip(res_flat.outcomes, res_bur.outcomes))
+
+    return {
+        "n_designs": n_designs,
+        "trace_steps": tcfg.n_steps,
+        "point_evals_per_s": round(point_rate, 1),
+        "trace_step_evals_per_s": round(step_rate, 1),
+        "per_step_ratio": round(step_rate / max(point_rate, 1e-9), 3),
+        "n_scenarios": len(res_flat.outcomes),
+        "winners_diverged": int(diverged),
+        "flat_slo": [round(o.slo_attainment, 3) for o in res_flat.outcomes],
+        "bursty_slo": [round(o.slo_attainment, 3)
+                       for o in res_bur.outcomes],
+        "flat_rewards": [round(o.best_reward, 2)
+                         for o in res_flat.outcomes],
+        "bursty_rewards": [round(o.best_reward, 2)
+                           for o in res_bur.outcomes],
+        "suite_wall_s": round(res_flat.wall_time_s + res_bur.wall_time_s,
+                              3),
+    }
+
+
 def _engine_config(smoke: bool):
     """(n_rl, PPOConfig, timesteps) for the engine bench at either scale."""
     if smoke:
@@ -430,9 +515,53 @@ def main():
                          "ranked throughput >= 10x the analytic fast "
                          "tier, and suite winners never lose to the "
                          "three-arm baseline")
+    ap.add_argument("--trace", action="store_true",
+                    help="run ONLY the traffic-trace benchmark "
+                         "(trace-eval throughput vs the point path, "
+                         "flat-vs-bursty winner divergence on the "
+                         "placement-sensitive smoke suite) and merge the "
+                         "record into --out")
+    ap.add_argument("--assert-trace", action="store_true",
+                    help="with --trace: fail unless per-trace-step eval "
+                         "throughput stays >= 0.5x the point-scenario "
+                         "rate and at least one suite winner differs "
+                         "between the flat and bursty traces")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.abspath(__file__)), "BENCH_optimizer.json"))
     args = ap.parse_args()
+
+    if args.trace:
+        print("[bench] traffic traces: 32-step trace eval vs point eval, "
+              "flat-vs-bursty suite winners ...")
+        trc = bench_traffic_trace(smoke=args.smoke)
+        print(f"[bench]   point {trc['point_evals_per_s']:,.0f} evals/s vs "
+              f"trace {trc['trace_step_evals_per_s']:,.0f} step-evals/s "
+              f"-> {trc['per_step_ratio']}x per step")
+        print(f"[bench]   winners diverged on {trc['winners_diverged']}/"
+              f"{trc['n_scenarios']} scenarios; slo flat="
+              f"{trc['flat_slo']} bursty={trc['bursty_slo']}")
+        record = {}
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                record = json.load(f)
+        record["traffic_trace"] = trc
+        with open(args.out, "w") as f:
+            json.dump(record, f, indent=2)
+            f.write("\n")
+        print(f"[bench] wrote {args.out}")
+        if args.assert_trace:
+            fails = []
+            if trc["per_step_ratio"] < 0.5:
+                fails.append(f"trace eval only {trc['per_step_ratio']}x "
+                             f"the point rate per step (need >= 0.5x)")
+            if trc["winners_diverged"] < 1:
+                fails.append("flat and bursty traces picked identical "
+                             "winners on every scenario")
+            if fails:
+                for msg in fails:
+                    print(f"[bench] FAIL: {msg}", file=sys.stderr)
+                sys.exit(1)
+        return
 
     if args.surrogate:
         print("[bench] surrogate ranker: train, Spearman, 64k-pool "

@@ -47,6 +47,17 @@ echo "=== smoke: surrogate ranker guards (ISSUE-6) ==="
 python benchmarks/bench_optimizer.py --surrogate --assert-surrogate \
     --out "${TMPDIR:-/tmp}/bench_surrogate_ci.json"
 
+echo "=== smoke: traffic-trace guards (ISSUE-8 / ROADMAP-3) ==="
+# --assert-trace: (a) evaluate_trace's per-trace-step eval rate must
+# stay >= 0.5x the point-scenario rate (the whole 32-step trace vmaps
+# into ONE compiled program — measured ~26x per step on this box, the
+# batch amortizes per-call dispatch); (b) the flat and bursty traces
+# must pick different winning designs on at least one placement-
+# sensitive smoke scenario (the SLO-attainment channel rewards
+# throughput headroom plain Eq.-17 scoring never sees).
+python benchmarks/bench_optimizer.py --smoke --trace --assert-trace \
+    --out "${TMPDIR:-/tmp}/bench_trace_ci.json"
+
 echo "=== smoke: cost-model eval throughput (fast-tier + delta-SA guards) ==="
 # CI-scale smoke run with the two-tier throughput guard: fails if the
 # closed-form fast tier drops below 1.8x the full pairwise tier's

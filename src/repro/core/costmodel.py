@@ -261,6 +261,40 @@ def make_weights(alpha: float, beta: float, gamma: float) -> RewardWeights:
                          gamma=jnp.float32(gamma))
 
 
+class TrafficTrace(NamedTuple):
+    """A serving-load distribution: T steps of (QPS, workload mix, SLO).
+
+    Produced by the parametric generators in :mod:`repro.core.traffic`
+    (flat / diurnal / bursty / multi-tenant over the config fleet). A
+    traced :class:`Scenario` pairs one of these with a workload whose
+    leaves carry the matching leading ``(T,)`` axis (the per-step
+    mix-weighted fleet workload); :func:`evaluate_trace` then vmaps the
+    point model over T, so a 32-step trace compiles to ONE XLA program
+    like any other batch dimension.
+
+    ``dt`` are the step weights (sum to 1 for the generators); ``mix``
+    records the per-step fleet composition for reports/tests (rows sum
+    to 1) — the mixed workload itself already lives on the Scenario.
+    The queueing proxy treats the serving engine as ``n_servers``
+    decode slots (continuous batching advances every active slot per
+    step, so a design's service rate splits evenly across slots — see
+    ``serving/engine.py``). ``slo_weight`` prices each step's missed
+    p99 SLO into the reward; ``idle_frac`` is the load-proportionality
+    floor (fraction of power burned at zero utilization). With
+    ``slo_weight == 0`` and ``idle_frac == 0`` every added term is an
+    exact float no-op, which is what makes a length-1 flat trace
+    bit-exact with the point-scenario path.
+    """
+
+    qps: jnp.ndarray                    # (T,) offered tasks/s
+    dt: jnp.ndarray                     # (T,) step weights (sum 1)
+    mix: jnp.ndarray                    # (T, F) fleet mix rows (sum 1)
+    slo_latency_s: jnp.ndarray          # () p99 sojourn-time SLO
+    slo_weight: jnp.ndarray = jnp.float32(0.0)   # reward per missed step
+    idle_frac: jnp.ndarray = jnp.float32(0.0)    # energy floor at u -> 0
+    n_servers: jnp.ndarray = jnp.float32(8.0)    # engine decode slots
+
+
 class Scenario(NamedTuple):
     """One optimization scenario: what to run x how to trade off PPAC.
 
@@ -268,10 +302,17 @@ class Scenario(NamedTuple):
     a leading scenario axis) is a first-class traced argument: one compiled
     program can evaluate a (design x workload x reward-weight) grid, and
     ``sa.run`` / ``ppo.train`` vmap over it.
+
+    ``trace`` is optionally a :class:`TrafficTrace`; when set, the
+    workload leaves carry a leading ``(T,)`` axis and every consumer
+    (:func:`evaluate_scenario`, :func:`scenario_reward`, the optimizer
+    arms) scores the design against the whole trace. ``trace=None``
+    keeps the pytree structure and every existing code path bit-exact.
     """
 
     workload: Workload = GENERIC_WORKLOAD
     weights: RewardWeights = RewardWeights()
+    trace: TrafficTrace = None
 
 
 def stack_scenarios(scenarios) -> Scenario:
@@ -654,19 +695,24 @@ class PlacementCtx(NamedTuple):
     workload: Workload
     weights: RewardWeights
     nop_canon: pm.NoPStats
+    # optional TrafficTrace: when set, the workload leaves carry the
+    # trace's (T,) axis and reward_from_nop scores the whole trace
+    # (broadcasting — same elementwise program as evaluate_trace)
+    trace: TrafficTrace = None
 
 
 def placement_ctx(dp: ps.DesignPoint,
                   workload: Workload = GENERIC_WORKLOAD,
                   weights: RewardWeights = RewardWeights(),
-                  cfg: hw.HWConfig = hw.DEFAULT_HW) -> PlacementCtx:
+                  cfg: hw.HWConfig = hw.DEFAULT_HW,
+                  trace: TrafficTrace = None) -> PlacementCtx:
     """Precompute the placement-independent half of :func:`evaluate`."""
     pre = _eval_prefix(dp, cfg)
     nop_canon = pm.nop_stats_fast(pre.mesh_m, pre.mesh_n, pre.n_positions,
                                   pre.v.hbm_mask, pre.v.arch_type,
                                   pre.mesh_edges)
     return PlacementCtx(prefix=pre, workload=workload, weights=weights,
-                        nop_canon=nop_canon)
+                        nop_canon=nop_canon, trace=trace)
 
 
 def metrics_from_nop(ctx: PlacementCtx, nop: pm.NoPStats,
@@ -691,9 +737,31 @@ def reward_from_nop(ctx: PlacementCtx, nop: pm.NoPStats,
 
     ``cfg`` must match the ctx (see :func:`metrics_from_nop`). Only the
     reward is consumed, so XLA dead-code-eliminates the unused metric
-    branches (die cost, yield, ...) from the compiled SA step.
+    branches (die cost, yield, ...) from the compiled SA step. With a
+    traced ctx the per-step metrics broadcast over the workload's (T,)
+    leaves and the trace-aggregated reward comes back — still one
+    scalar, still delta-evaluable.
     """
-    return metrics_from_nop(ctx, nop, cfg).reward
+    if ctx.trace is None:
+        return metrics_from_nop(ctx, nop, cfg).reward
+    return _trace_aggregate(metrics_from_nop(ctx, nop, cfg), ctx.trace,
+                            ctx.weights).reward
+
+
+def scenario_metrics_from_nop(ctx: PlacementCtx, nop: pm.NoPStats,
+                              cfg: hw.HWConfig) -> Metrics:
+    """Like :func:`metrics_from_nop`, aggregated over the ctx's trace.
+
+    For a trace-free ctx this IS :func:`metrics_from_nop` (bit-exact);
+    for a traced ctx the per-step metrics are dt-weighted into one
+    point-shaped bundle whose ``reward`` / ``energy_per_task_j`` carry
+    the SLO penalty and load-proportional energy (see
+    :func:`evaluate_trace`).
+    """
+    mtr = metrics_from_nop(ctx, nop, cfg)
+    if ctx.trace is None:
+        return mtr
+    return _trace_aggregate(mtr, ctx.trace, ctx.weights).metrics
 
 
 def reward_only(dp: ps.DesignPoint,
@@ -711,9 +779,19 @@ def evaluate_scenario(dp: ps.DesignPoint, scenario: Scenario = Scenario(),
                       cfg: hw.HWConfig = hw.DEFAULT_HW,
                       placement: pm.Placement = None,
                       nop_fidelity: str = "auto") -> Metrics:
-    """`evaluate` keyed by a Scenario pytree (vmap over it for batches)."""
-    return evaluate(dp, scenario.workload, scenario.weights, cfg, placement,
-                    nop_fidelity)
+    """`evaluate` keyed by a Scenario pytree (vmap over it for batches).
+
+    A traced scenario (``scenario.trace is not None``) returns the
+    trace-aggregated point-shaped :class:`Metrics` — same structure and
+    shapes as the point path, so every downstream consumer (env
+    observations, archive points, surrogate targets) is trace-aware for
+    free. The dispatch is static (pytree structure), so trace-free
+    callers compile the exact pre-trace program.
+    """
+    if scenario.trace is None:
+        return evaluate(dp, scenario.workload, scenario.weights, cfg,
+                        placement, nop_fidelity)
+    return evaluate_trace(dp, scenario, cfg, placement, nop_fidelity).metrics
 
 
 def evaluate_scenarios(dp: ps.DesignPoint, scenarios: Scenario,
@@ -760,3 +838,190 @@ def reward_scenarios(dp: ps.DesignPoint, scenarios: Scenario,
     """Scenario-batched scalar objective (leading axis = scenario)."""
     return evaluate_scenarios(dp, scenarios, cfg,
                               nop_fidelity=nop_fidelity).reward
+
+
+def scenario_reward(dp: ps.DesignPoint, scenario: Scenario,
+                    cfg: hw.HWConfig = hw.DEFAULT_HW,
+                    placement: pm.Placement = None,
+                    nop_fidelity: str = "auto") -> jnp.ndarray:
+    """Scalar objective of one (possibly traced) Scenario.
+
+    The optimizer arms' hot-path entry: identical to :func:`reward_only`
+    for point scenarios (same program), the trace-aggregated reward of
+    :func:`evaluate_trace` for traced ones. XLA dead-code-eliminates the
+    metric channels the reward doesn't touch in both cases.
+    """
+    if scenario.trace is None:
+        return evaluate(dp, scenario.workload, scenario.weights, cfg,
+                        placement, nop_fidelity).reward
+    return evaluate_trace(dp, scenario, cfg, placement, nop_fidelity).reward
+
+
+# ---------------------------------------------------------------------------
+# Traffic traces: score a design against a serving load distribution
+# ---------------------------------------------------------------------------
+# Eq. 17 is affine in the workload's mapping_eff and blind to offered
+# load, so a plain time-average over a trace collapses back to a point
+# scenario. What actually distinguishes serving loads is (a) whether the
+# design's service capacity absorbs each step's QPS within the tail SLO
+# and (b) how much of its energy is load-proportional. evaluate_trace
+# adds exactly those two channels on top of the per-step Eq.-17 reward:
+#
+#   reward = sum_t dt_t * ( r17_t
+#                           - gamma * r_e_t * (f(u_t) - 1)   # idle energy
+#                           - slo_weight * (1 - ok_t) )      # missed p99
+#
+# where f(u) = idle_frac/u + (1 - idle_frac) inflates energy/task at low
+# utilization and ok_t is the p99-within-SLO indicator from an analytic
+# M/D/c queueing proxy of serving/engine.py's slot scheduler. Both added
+# terms are exact float no-ops when idle_frac == slo_weight == 0, so a
+# length-1 flat trace is bitwise identical to the point path.
+
+_RHO_MAX = 0.995          # clip utilization for the finite-wait formula
+_OVERLOAD_PEN = 50.0      # extra p99 (in service times) per unit rho > 1
+_LN100 = 4.60517019       # -ln(0.01): exponential waiting-tail p99 factor
+_U_MIN = 1e-6             # utilization floor for the idle-energy ratio
+
+
+class TraceMetrics(NamedTuple):
+    """:func:`evaluate_trace` output: aggregated + per-step views.
+
+    ``metrics`` is the dt-weighted point-shaped bundle (its ``reward``
+    is the trace reward, its ``energy_per_task_j`` /
+    ``tasks_per_joule`` include the load-proportionality inflation);
+    ``per_step`` the raw (T,)-leaved point metrics. The queueing
+    channels carry the leading (T,) axis (then any design batch dims).
+    """
+
+    metrics: Metrics                   # aggregated, point-shaped
+    per_step: Metrics                  # raw Eq.-17 metrics, (T, ...) leaves
+    rho: jnp.ndarray                   # (T, ...) offered utilization
+    p99_latency_s: jnp.ndarray         # (T, ...) proxy p99 sojourn time
+    slo_ok: jnp.ndarray                # (T, ...) 1.0 where p99 <= SLO
+    slo_attainment: jnp.ndarray        # (...) dt-weighted fraction met
+    reward_eq17: jnp.ndarray           # (...) dt-weighted plain Eq.-17
+    reward: jnp.ndarray                # (...) == metrics.reward
+
+
+def queueing_p99(tasks_per_sec: jnp.ndarray, qps: jnp.ndarray,
+                 n_servers: jnp.ndarray):
+    """Analytic M/D/c p99 sojourn-time proxy of the serving engine.
+
+    The engine (serving/engine.py) is ``c = n_servers`` decode slots
+    with continuous batching: every step advances all active slots, so
+    at saturation the design completes ``tasks_per_sec`` tasks/s and
+    each task occupies its slot for ``D = c / tasks_per_sec`` seconds —
+    c parallel servers with deterministic service D and Poisson(qps)
+    arrivals, i.e. M/D/c. Mean wait via Sakasegawa's M/M/c
+    approximation halved for deterministic service, p99 from the
+    exponential waiting-tail bound, plus a linear overload penalty for
+    ``rho > 1`` (the clipped formula alone would saturate). CAL —
+    calibrated against the discrete-event slot-scheduler simulator in
+    traffic.py (tests/test_traffic.py keeps it in band).
+    """
+    mu = jnp.maximum(tasks_per_sec, 1e-9)
+    c = n_servers
+    d = c / mu                                       # service time
+    rho = qps / mu
+    rho_c = jnp.clip(rho, 0.0, _RHO_MAX)
+    wq = 0.5 * (rho_c ** jnp.sqrt(2.0 * (c + 1.0))) / (1.0 - rho_c) * (d / c)
+    p99 = d + _LN100 * wq + jnp.maximum(rho - 1.0, 0.0) * d * _OVERLOAD_PEN
+    return rho, p99
+
+
+def _tdim(v: jnp.ndarray, like: jnp.ndarray) -> jnp.ndarray:
+    """Reshape a (T,) vector to broadcast against (T, ...) ``like``."""
+    extra = max(jnp.ndim(like) - 1, 0)
+    return jnp.reshape(v, jnp.shape(v) + (1,) * extra)
+
+
+def _trace_aggregate(per_step: Metrics, trace: TrafficTrace,
+                     weights: RewardWeights) -> TraceMetrics:
+    """dt-weighted aggregation of (T,)-leaved point metrics over a trace.
+
+    Works on both trace layouts: vmapped metrics (every leaf (T, ...),
+    the :func:`evaluate_trace` path) and broadcast metrics (only
+    workload-dependent leaves carry (T,), the delta/:func:`reward_from_nop`
+    path) — ``dt`` broadcasts against either.
+    """
+    dt = trace.dt
+
+    def wmean(x):
+        return jnp.sum(_tdim(dt, x) * x, axis=0)
+
+    rho, p99 = queueing_p99(per_step.tasks_per_sec,
+                            _tdim(trace.qps, per_step.tasks_per_sec),
+                            trace.n_servers)
+    slo_ok = (p99 <= trace.slo_latency_s).astype(jnp.float32)
+    slo_attainment = wmean(slo_ok)
+
+    # load-proportional energy: f(u) = idle/u + (1 - idle); exactly 1.0
+    # at idle_frac == 0 (and at full utilization), so the inflation is
+    # an exact no-op for trace-free-equivalent configs
+    u = jnp.clip(rho, _U_MIN, 1.0)
+    f_load = trace.idle_frac / u + (1.0 - trace.idle_frac)
+    reward_step = (per_step.reward
+                   - weights.gamma * per_step.reward_e * (f_load - 1.0)
+                   - trace.slo_weight * (1.0 - slo_ok))
+    reward = wmean(reward_step)
+    reward_eq17 = wmean(per_step.reward)
+
+    agg = jax.tree_util.tree_map(wmean, per_step)
+    agg = agg._replace(
+        reward=reward,
+        energy_per_task_j=wmean(per_step.energy_per_task_j * f_load),
+        tasks_per_joule=wmean(per_step.tasks_per_joule / f_load))
+    return TraceMetrics(metrics=agg, per_step=per_step, rho=rho,
+                        p99_latency_s=p99, slo_ok=slo_ok,
+                        slo_attainment=slo_attainment,
+                        reward_eq17=reward_eq17, reward=reward)
+
+
+def evaluate_trace(dp: ps.DesignPoint, scenario: Scenario,
+                   cfg: hw.HWConfig = hw.DEFAULT_HW,
+                   placement: pm.Placement = None,
+                   nop_fidelity: str = "auto") -> TraceMetrics:
+    """Score design point(s) against a traced scenario's full trace.
+
+    vmaps :func:`evaluate` over the workload's leading (T,) axis — the
+    trace is just another batch dimension, so a 32-step trace under
+    ``jit`` is ONE compiled XLA program with no per-step Python
+    dispatch, and ``dp`` may itself carry any batch shape (the T axis
+    leads in ``per_step`` / queueing channels, batch dims follow).
+    """
+    if scenario.trace is None:
+        raise ValueError("evaluate_trace needs scenario.trace; use "
+                         "evaluate_scenario for point scenarios")
+    per_step = jax.vmap(
+        lambda w: evaluate(dp, w, scenario.weights, cfg, placement,
+                           nop_fidelity))(scenario.workload)
+    return _trace_aggregate(per_step, scenario.trace, scenario.weights)
+
+
+def evaluate_trace_scenarios(dp: ps.DesignPoint, scenarios: Scenario,
+                             cfg: hw.HWConfig = hw.DEFAULT_HW,
+                             paired: bool = None,
+                             placements: pm.Placement = None,
+                             nop_fidelity: str = "auto") -> TraceMetrics:
+    """Trace metrics under a *batch* of traced scenarios.
+
+    The traced twin of :func:`evaluate_scenarios` (same pairing rules,
+    same one-compiled-program property) returning the full
+    :class:`TraceMetrics` — the suite uses it to read SLO attainment
+    into the archive's objective space.
+    """
+    n_scen = jnp.shape(scenarios.weights.alpha)[0]
+    shape_paired = jnp.ndim(dp.arch_type) >= 1 and (
+        jnp.shape(dp.arch_type)[0] == n_scen)
+    if paired is None:
+        paired = shape_paired
+    elif paired and not shape_paired:
+        raise ValueError(
+            f"paired=True needs a design batch with leading axis "
+            f"{n_scen}, got shape {jnp.shape(dp.arch_type)}")
+    if placements is not None and not paired:
+        raise ValueError("placements requires paired design/scenario axes")
+    in_axes = (0 if paired else None, 0, None if placements is None else 0)
+    return jax.vmap(
+        lambda d, s, p: evaluate_trace(d, s, cfg, p, nop_fidelity),
+        in_axes=in_axes)(dp, scenarios, placements)

@@ -190,8 +190,8 @@ def reset(key, cfg: EnvConfig = EnvConfig(),
     design = ps.random_design(k_design)
     if cfg.placement_episode:
         return _reset_placement(design, k_state, cfg, scenario)
-    metrics = cm.evaluate(design, scenario.workload, scenario.weights, cfg.hw,
-                          nop_fidelity=cfg.nop_fidelity)
+    metrics = cm.evaluate_scenario(design, scenario, cfg.hw,
+                                   nop_fidelity=cfg.nop_fidelity)
     zero = jnp.float32(0.0)
     state = EnvState(design=design, t=jnp.int32(0), prev_reward=zero,
                      key=k_state)
@@ -210,10 +210,10 @@ def _reset_placement(design, k_state, cfg: EnvConfig, scenario):
     m, n = cm.mesh_dims(n_pos)
     base = pm.canonical(m, n, v.hbm_mask, v.arch_type)
     ctx = cm.placement_ctx(design, scenario.workload, scenario.weights,
-                           cfg.hw)
+                           cfg.hw, trace=scenario.trace)
     cache = pm.nop_stats_cache(base, n_pos, v.hbm_mask, v.arch_type,
                                ctx.prefix.mesh_edges)
-    metrics = cm.metrics_from_nop(ctx, cache.stats, cfg.hw)
+    metrics = cm.scenario_metrics_from_nop(ctx, cache.stats, cfg.hw)
     zero = jnp.float32(0.0)
     state = EnvState(design=design, t=jnp.int32(0), prev_reward=zero,
                      key=k_state, ctx=ctx, cache=cache)
@@ -232,8 +232,8 @@ def step(state: EnvState, action: jnp.ndarray,
     # design-only actions take whatever tier the config asks for
     fid = ("auto" if placement is not None and cfg.nop_fidelity == "fast"
            else cfg.nop_fidelity)
-    metrics = cm.evaluate(design, scenario.workload, scenario.weights, cfg.hw,
-                          placement, nop_fidelity=fid)
+    metrics = cm.evaluate_scenario(design, scenario, cfg.hw, placement,
+                                   nop_fidelity=fid)
     reward = metrics.reward
     t_next = state.t + 1
     done = t_next >= cfg.episode_len
@@ -276,11 +276,10 @@ def _step_placement(state: EnvState, action: jnp.ndarray,
         cache = pm.nop_stats_delta(state.cache, move, n_pos, v.hbm_mask,
                                    v.arch_type, state.ctx.prefix.mesh_edges,
                                    move_kinds="both")
-        metrics = cm.metrics_from_nop(state.ctx, cache.stats, cfg.hw)
+        metrics = cm.scenario_metrics_from_nop(state.ctx, cache.stats, cfg.hw)
     else:
         plc = pm.apply_action(state.cache.placement, a, n_pos)
-        metrics = cm.evaluate(state.design, scenario.workload,
-                              scenario.weights, cfg.hw, plc)
+        metrics = cm.evaluate_scenario(state.design, scenario, cfg.hw, plc)
         # keep the carried floorplan current; the stats fields go stale
         # but are never read on this path (pricing is from-scratch)
         cache = state.cache._replace(placement=plc)

@@ -1,0 +1,238 @@
+"""Parametric traffic-trace generators over the config fleet (ROADMAP 3).
+
+Real deployments don't see the paper's point workloads: QPS moves
+diurnally or in bursts, the served model mix shifts, and tail-latency
+SLOs bound how much of a design's throughput is actually usable. This
+module samples :class:`repro.core.costmodel.TrafficTrace` tensors —
+``(T, workload-mix, QPS)`` — from four parametric families over the
+assigned model-config fleet, and attaches them to scenarios so the whole
+optimizer stack scores designs against serving *distributions*:
+
+  - ``flat``:          constant QPS, constant mix (the SLO/energy terms
+                       still bite — a point scenario under load),
+  - ``diurnal``:       one sinusoidal day, mix drifting with per-model
+                       phases,
+  - ``bursty``:        Bernoulli load spikes of ``peak`` x the baseline
+                       with lognormal jitter,
+  - ``multi-tenant``:  n_tenants fleet models with phase-shifted
+                       intensities sharing the box.
+
+Every generator is deterministic under its PRNG key, emits mix rows that
+sum to 1, and normalizes QPS so the dt-weighted offered load equals
+``load`` x the dt-weighted monolithic-baseline service rate of the mixed
+workload (design-independent, so traces are comparable across designs).
+
+The discrete-event simulator at the bottom is the calibration oracle for
+``costmodel.queueing_p99``: it mirrors ``serving/engine.py``'s slot
+scheduler (c slots, deterministic per-task occupancy c/mu, FIFO
+admission) and tests/test_traffic.py keeps the analytic proxy in band.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core import hw_constants as hw
+from repro.core import monolithic as mono
+from repro.core import workload as wl
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    """One trace family + its knobs (see module docstring)."""
+
+    kind: str = "flat"            # flat | diurnal | bursty | multi-tenant
+    n_steps: int = 32             # T
+    load: float = 1.5             # mean offered QPS / mono reference rate
+    peak: float = 3.0             # burst / diurnal peak multiplier
+    burst_prob: float = 0.15      # bursty: fraction of steps in a burst
+    mix_spread: float = 0.25      # traffic fraction from the rest of the fleet
+    n_tenants: int = 4            # multi-tenant: co-resident fleet models
+    slo_mult: float = 2.0         # SLO = slo_mult * c / mono reference rate
+    slo_weight: float = 30.0      # reward penalty per fully-missed trace
+    idle_frac: float = 0.35       # power floor at zero utilization
+    n_servers: int = 8            # queueing servers (engine decode slots)
+    fleet: Tuple[str, ...] = ("archs:decode",)   # mix pool (workload names)
+    seed: int = 0
+
+
+KINDS = ("flat", "diurnal", "bursty", "multi-tenant")
+
+TRACE_PRESETS: Dict[str, TraceConfig] = {
+    kind: TraceConfig(kind=kind) for kind in KINDS
+}
+
+
+def fleet_workloads(cfg: TraceConfig):
+    """Resolve the mix pool -> (names, stacked Workload with (F,) leaves)."""
+    names, workloads = wl.resolve(cfg.fleet)
+    return names, jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *workloads)
+
+
+def _load_shape(key, cfg: TraceConfig) -> jnp.ndarray:
+    """(T,) relative load curve of the family (scale fixed by make_trace)."""
+    t = jnp.arange(cfg.n_steps, dtype=jnp.float32)
+    phase = 2.0 * jnp.pi * t / cfg.n_steps
+    if cfg.kind == "flat":
+        return jnp.ones(cfg.n_steps, jnp.float32)
+    if cfg.kind == "diurnal":
+        # one day: trough -> peak -> trough, peak-to-trough = cfg.peak
+        return 1.0 + (cfg.peak - 1.0) * 0.5 * (1.0 - jnp.cos(phase))
+    if cfg.kind == "bursty":
+        k_b, k_j = jax.random.split(key)
+        burst = jax.random.bernoulli(k_b, cfg.burst_prob,
+                                     (cfg.n_steps,)).astype(jnp.float32)
+        jitter = jnp.exp(0.2 * jax.random.normal(k_j, (cfg.n_steps,)))
+        return (1.0 + (cfg.peak - 1.0) * burst) * jitter
+    if cfg.kind == "multi-tenant":
+        # superposition of the tenants' phase-shifted days (built again
+        # in _mix_rows with the same key so load follows the mix)
+        phases = jax.random.uniform(key, (cfg.n_tenants,),
+                                    maxval=2.0 * jnp.pi)
+        return jnp.mean(1.0 + (cfg.peak - 1.0) * 0.5
+                        * (1.0 - jnp.cos(phase[:, None] + phases[None, :])),
+                        axis=-1)
+    raise ValueError(f"unknown trace kind {cfg.kind!r}; one of {KINDS}")
+
+
+def _mix_rows(key, cfg: TraceConfig, n_fleet: int) -> jnp.ndarray:
+    """(T, 1 + F) mix rows: column 0 = the scenario's own workload.
+
+    Every row sums to 1; the own-workload column carries
+    ``1 - mix_spread`` and the fleet columns share ``mix_spread``
+    according to the family's drift profile.
+    """
+    t = jnp.arange(cfg.n_steps, dtype=jnp.float32)
+    phase = 2.0 * jnp.pi * t / cfg.n_steps
+    if cfg.kind == "flat":
+        p = jnp.full((cfg.n_steps, n_fleet), 1.0 / n_fleet)
+    elif cfg.kind in ("diurnal", "bursty"):
+        # smooth per-model drift: softmax over phase-shifted sinusoids
+        phases = jax.random.uniform(key, (n_fleet,), maxval=2.0 * jnp.pi)
+        logits = jnp.sin(phase[:, None] + phases[None, :])
+        p = jax.nn.softmax(logits, axis=-1)
+    elif cfg.kind == "multi-tenant":
+        k_sel, k_ph = jax.random.split(key)
+        n_t = min(cfg.n_tenants, n_fleet)
+        sel = jax.random.permutation(k_sel, n_fleet)[:n_t]
+        phases = jax.random.uniform(k_ph, (cfg.n_tenants,),
+                                    maxval=2.0 * jnp.pi)[:n_t]
+        inten = 1.0 + (cfg.peak - 1.0) * 0.5 * (
+            1.0 - jnp.cos(phase[:, None] + phases[None, :]))   # (T, n_t)
+        p = jnp.zeros((cfg.n_steps, n_fleet))
+        p = p.at[:, sel].set(inten / jnp.sum(inten, -1, keepdims=True))
+    else:
+        raise ValueError(f"unknown trace kind {cfg.kind!r}; one of {KINDS}")
+    own = jnp.full((cfg.n_steps, 1), 1.0 - cfg.mix_spread)
+    return jnp.concatenate([own, cfg.mix_spread * p], axis=-1)
+
+
+def make_trace(key, workload: cm.Workload, cfg: TraceConfig,
+               hw_cfg: hw.HWConfig = hw.DEFAULT_HW):
+    """Sample one trace -> (traced Workload with (T,) leaves, TrafficTrace).
+
+    ``workload`` is the scenario's own point workload; the traced
+    workload is the per-step convex mix of it with the fleet pool. QPS
+    is anchored to the *monolithic baseline's* service rate on the
+    mixed workload (design-independent): the dt-weighted offered load
+    is exactly ``cfg.load`` x the dt-weighted reference rate, and the
+    p99 SLO is ``cfg.slo_mult`` x the reference service time
+    ``n_servers / reference rate``.
+    """
+    k_shape, k_mix = jax.random.split(jnp.asarray(key))
+    _, fleet = fleet_workloads(cfg)
+    n_fleet = jnp.shape(fleet.gemm_ops)[0]
+    mix = _mix_rows(k_mix, cfg, n_fleet)                     # (T, 1+F)
+    traced_wl = jax.tree_util.tree_map(
+        lambda own, fl: mix[:, 0] * own + mix[:, 1:] @ fl, workload, fleet)
+
+    # design-independent QPS anchor: the monolithic baseline's rate on
+    # each step's mixed workload
+    mu_ref = jax.vmap(lambda w: mono.evaluate(w, hw_cfg).tasks_per_sec)(
+        traced_wl)                                           # (T,)
+    dt = jnp.full((cfg.n_steps,), 1.0 / cfg.n_steps)
+    shape = _load_shape(k_shape, cfg)
+    weighted = mu_ref * shape
+    norm = jnp.sum(dt * weighted) / jnp.maximum(
+        jnp.sum(dt * mu_ref), 1e-30)
+    qps = cfg.load * weighted / jnp.maximum(norm, 1e-30)
+    mu_mean = jnp.sum(dt * mu_ref)
+
+    trace = cm.TrafficTrace(
+        qps=qps, dt=dt, mix=mix,
+        slo_latency_s=cfg.slo_mult * cfg.n_servers
+        / jnp.maximum(mu_mean, 1e-30),
+        slo_weight=jnp.float32(cfg.slo_weight),
+        idle_frac=jnp.float32(cfg.idle_frac),
+        n_servers=jnp.float32(cfg.n_servers))
+    return traced_wl, trace
+
+
+def traced_scenario(scenario: cm.Scenario, cfg: TraceConfig,
+                    hw_cfg: hw.HWConfig = hw.DEFAULT_HW,
+                    index: int = 0) -> cm.Scenario:
+    """Attach a sampled trace to one point scenario (key = seed, index)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), index)
+    traced_wl, trace = make_trace(key, scenario.workload, cfg, hw_cfg)
+    return cm.Scenario(workload=traced_wl, weights=scenario.weights,
+                       trace=trace)
+
+
+def apply_trace(scenarios: cm.Scenario, cfg: TraceConfig,
+                hw_cfg: hw.HWConfig = hw.DEFAULT_HW) -> cm.Scenario:
+    """Trace every scenario of a stacked batch (one sampled trace each).
+
+    Scenario ``s`` gets the key ``fold_in(PRNGKey(cfg.seed), s)``, so
+    the batch is deterministic under the config and independent of the
+    suite's optimizer key streams.
+    """
+    n_scen = int(jnp.shape(scenarios.weights.alpha)[0])
+    scalars = [jax.tree_util.tree_map(lambda x: x[s], scenarios)
+               for s in range(n_scen)]
+    return cm.stack_scenarios([
+        traced_scenario(sc, cfg, hw_cfg, index=s)
+        for s, sc in enumerate(scalars)])
+
+
+def resolve_trace(name_or_cfg) -> TraceConfig:
+    """A preset name, a TraceConfig (passthrough), or None -> None."""
+    if name_or_cfg is None or isinstance(name_or_cfg, TraceConfig):
+        return name_or_cfg
+    if name_or_cfg in TRACE_PRESETS:
+        return TRACE_PRESETS[name_or_cfg]
+    raise ValueError(f"unknown trace preset {name_or_cfg!r}; "
+                     f"one of {sorted(TRACE_PRESETS)} or a TraceConfig")
+
+
+# --------------------------------------------------------------------------- #
+# calibration oracle: discrete-event twin of serving/engine.py's scheduler
+# --------------------------------------------------------------------------- #
+
+def slot_scheduler_p99_sim(qps: float, tasks_per_sec: float, n_servers: int,
+                           n_tasks: int = 4000, seed: int = 0) -> float:
+    """p99 sojourn time of the engine's slot scheduler (numpy, host-only).
+
+    Mirrors ``serving/engine.py``: ``n_servers`` slots, FIFO admission,
+    every decode step advances all active slots, so a task occupies its
+    slot for a deterministic ``D = n_servers / tasks_per_sec`` seconds
+    and the system is an M/D/c queue. This is the oracle
+    ``costmodel.queueing_p99`` is calibrated against.
+    """
+    rng = np.random.default_rng(seed)
+    d = n_servers / tasks_per_sec
+    arrivals = np.cumsum(rng.exponential(1.0 / qps, n_tasks))
+    free = np.zeros(n_servers)
+    sojourn = np.empty(n_tasks)
+    for i, t in enumerate(arrivals):
+        j = int(np.argmin(free))
+        start = max(t, free[j])
+        free[j] = start + d
+        sojourn[i] = free[j] - t
+    return float(np.percentile(sojourn, 99.0))

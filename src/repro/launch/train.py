@@ -73,6 +73,15 @@ def train_scenario_suite(args):
                 f"--weights must be a comma list of alpha:beta:gamma "
                 f"triples, e.g. 1:1:0.1,2:0.5:0.1 (got {args.weights!r})")
         overrides["weight_grid"] = grid
+    if args.trace:
+        from repro.core import traffic as tr
+        tcfg = tr.resolve_trace(args.trace)
+        if args.trace_steps or args.trace_load:
+            tcfg = dataclasses.replace(
+                tcfg,
+                n_steps=args.trace_steps or tcfg.n_steps,
+                load=args.trace_load or tcfg.load)
+        overrides["trace"] = tcfg
     if args.surrogate:
         from repro.surrogate import ranker as srk
         from repro.surrogate import train as strain
@@ -87,7 +96,7 @@ def train_scenario_suite(args):
     print(f"[suite] workloads={workloads} x {len(cfg.weight_grid)} "
           f"weight settings, n_sa={cfg.n_sa}, n_rl={cfg.n_rl}, "
           f"surrogate={'on' if cfg.surrogate is not None else 'off'}, "
-          f"hw-preset={args.hw_preset}")
+          f"trace={args.trace or 'off'}, hw-preset={args.hw_preset}")
     res = suite.run_suite(_jax.random.PRNGKey(args.seed), cfg, verbose=True)
     print()
     print(suite.format_report(res))
@@ -189,6 +198,17 @@ def main():
                          "front-filter arm (surrogate-rank a large pool, "
                          "analytically re-score the top-k; winners stay "
                          "analytic-scored)")
+    ap.add_argument("--trace", default=None,
+                    choices=["flat", "diurnal", "bursty", "multi-tenant"],
+                    help="scenario-suite: score every scenario against a "
+                         "sampled serving traffic trace (core/traffic.py) "
+                         "instead of a point workload; adds SLO attainment "
+                         "to the archive objectives")
+    ap.add_argument("--trace-steps", type=int, default=None,
+                    help="trace length T (default: preset's 32)")
+    ap.add_argument("--trace-load", type=float, default=None,
+                    help="mean offered load vs the monolithic baseline "
+                         "rate (default: preset's 1.5)")
     ap.add_argument("--out", default=None,
                     help="write the scenario-suite JSON report here")
     args = ap.parse_args()

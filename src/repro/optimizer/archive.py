@@ -13,9 +13,11 @@ arms (SA chains, PPO agents, GA populations).
 Objective convention
 --------------------
 A point is the raw PPAC triple ``(tasks_per_sec, energy_per_task_j,
-total_cost)`` with directions :data:`MAXIMIZE` = (up, down, down).
-Internally everything is flipped to minimization via :data:`_SIGNS`;
-callers never see the flipped space.
+total_cost)`` with directions :data:`MAXIMIZE` = (up, down, down) — or,
+for traffic-traced suites, the 4-tuple extended with SLO attainment
+(up, :data:`MAXIMIZE_SLO`). Every routine infers the objective count
+from the trailing axis; internally everything is flipped to
+minimization via :func:`_signs`; callers never see the flipped space.
 
 Implementation notes (PR-4 container lessons): no scatters anywhere —
 membership updates are argsort + gather (``take``) and masked
@@ -36,8 +38,21 @@ from repro.core import params as ps
 
 N_OBJ = 3
 MAXIMIZE = (True, False, False)        # tasks/s UP, J/task DOWN, cost DOWN
-_SIGNS = jnp.asarray([-1.0, 1.0, 1.0], jnp.float32)
+MAXIMIZE_SLO = MAXIMIZE + (True,)      # + trace SLO attainment UP
+_DIRECTIONS = {3: MAXIMIZE, 4: MAXIMIZE_SLO}
 _BIG = jnp.float32(3.0e38)             # sentinel for invalid rows (min space)
+
+
+def _signs(n_obj: int) -> jnp.ndarray:
+    """(n_obj,) +-1 flip vector of the objective convention."""
+    dirs = _DIRECTIONS.get(int(n_obj))
+    if dirs is None:
+        raise ValueError(f"unsupported objective count {n_obj}; "
+                         f"one of {sorted(_DIRECTIONS)}")
+    return jnp.asarray([-1.0 if up else 1.0 for up in dirs], jnp.float32)
+
+
+_SIGNS = _signs(N_OBJ)
 
 
 class Archive(NamedTuple):
@@ -51,7 +66,7 @@ class Archive(NamedTuple):
     index, arm id, ...).
     """
 
-    points: jnp.ndarray        # (C, 3) float32, raw objective convention
+    points: jnp.ndarray        # (C, n_obj) float32, raw objective convention
     flats: jnp.ndarray         # (C, G) int32 genomes
     reward: jnp.ndarray        # (C,)  float32
     payload: jnp.ndarray       # (C,)  int32
@@ -66,11 +81,12 @@ class Archive(NamedTuple):
         return jnp.sum(self.valid, axis=-1)
 
 
-def empty(capacity: int, genome_dim: int = ps.N_PARAMS) -> Archive:
+def empty(capacity: int, genome_dim: int = ps.N_PARAMS,
+          n_obj: int = N_OBJ) -> Archive:
     """An all-invalid archive of the given capacity."""
     # dominated sentinel: worst value on every objective (raw convention)
     return Archive(
-        points=jnp.broadcast_to(_BIG * _SIGNS, (capacity, N_OBJ)),
+        points=jnp.broadcast_to(_BIG * _signs(n_obj), (capacity, n_obj)),
         flats=jnp.zeros((capacity, genome_dim), jnp.int32),
         reward=jnp.full((capacity,), -jnp.inf, jnp.float32),
         payload=jnp.full((capacity,), -1, jnp.int32),
@@ -80,7 +96,8 @@ def empty(capacity: int, genome_dim: int = ps.N_PARAMS) -> Archive:
 
 def _to_min(points: jnp.ndarray) -> jnp.ndarray:
     """Flip the raw convention into all-minimize space."""
-    return jnp.asarray(points, jnp.float32) * _SIGNS
+    points = jnp.asarray(points, jnp.float32)
+    return points * _signs(points.shape[-1])
 
 
 def point_from_metrics(mtr) -> jnp.ndarray:
@@ -93,9 +110,16 @@ def point_from_metrics(mtr) -> jnp.ndarray:
                       mtr.total_cost], axis=-1)
 
 
+def point_with_slo(mtr, slo_attainment) -> jnp.ndarray:
+    """PPAC triple + trace SLO attainment -> 4-objective archive point."""
+    return jnp.concatenate(
+        [point_from_metrics(mtr),
+         jnp.asarray(slo_attainment, jnp.float32)[..., None]], axis=-1)
+
+
 def non_dominated_mask(points: jnp.ndarray,
                        valid: jnp.ndarray = None) -> jnp.ndarray:
-    """Boolean mask of the non-dominated rows of ``points`` (N, 3).
+    """Boolean mask of the non-dominated rows of ``points`` (N, n_obj).
 
     Raw objective convention. A valid row is dominated iff some other
     valid row is <= on every (minimized) objective and < on at least one.
@@ -120,7 +144,7 @@ def _crowding(pts_min: jnp.ndarray, keep: jnp.ndarray) -> jnp.ndarray:
     total = jnp.sum(keep)
     cd = jnp.zeros((n,), jnp.float32)
     rank = jnp.arange(n)
-    for d in range(N_OBJ):
+    for d in range(pts_min.shape[-1]):
         v = jnp.where(keep, pts_min[:, d], jnp.inf)
         order = jnp.argsort(v)
         vs = v[order]
@@ -150,7 +174,7 @@ def _hv_contrib(pts_min: jnp.ndarray, keep: jnp.ndarray) -> jnp.ndarray:
     hi = jnp.max(jnp.where(keep[:, None], pts_min, -_BIG), axis=0)
     lo = jnp.min(jnp.where(keep[:, None], pts_min, _BIG), axis=0)
     pad = 0.1 * jnp.maximum(hi - lo, 0.01 * jnp.abs(hi) + 1e-9)
-    refm = jnp.where(any_keep, hi + pad, jnp.ones((N_OBJ,)))
+    refm = jnp.where(any_keep, hi + pad, jnp.ones_like(hi))
     base = jnp.where(keep[:, None], jnp.minimum(pts_min, refm), refm)
     hv_all = _hv_min(base, refm)
 
@@ -166,7 +190,7 @@ def insert_batch(archive: Archive, points: jnp.ndarray, flats: jnp.ndarray,
                  reward: jnp.ndarray = None, payload: jnp.ndarray = None,
                  valid: jnp.ndarray = None,
                  eviction: str = "crowding") -> Archive:
-    """Insert a (B, 3) batch of points; return the updated archive.
+    """Insert a (B, n_obj) batch of points; return the updated archive.
 
     Pure-functional and jit/scan-safe: forms the (C+B)-row union, runs
     one masked pairwise dominance test, drops exact-duplicate points
@@ -231,13 +255,14 @@ def merge(dst: Archive, src: Archive, eviction: str = "crowding") -> Archive:
 
 
 def hypervolume(archive: Archive, ref) -> jnp.ndarray:
-    """Exact 3-D hypervolume dominated by the archive w.r.t. ``ref``.
+    """Exact hypervolume dominated by the archive w.r.t. ``ref``.
 
-    ``ref`` is a raw-convention triple (tasks/s lower bound, J/task and
-    cost upper bounds) that every counted point should dominate; points
-    beyond it are clipped and contribute zero volume. Exact sweep:
-    slices along the third (minimized) objective, 2-D staircase area per
-    slice — O(C^2 log C), fully vectorized (sort + cummin + vmap), no
+    ``ref`` is a raw-convention point (tasks/s lower bound, J/task and
+    cost upper bounds, SLO-attainment lower bound when 4-D) that every
+    counted point should dominate; points beyond it are clipped and
+    contribute zero volume. Exact recursive sweep: slices along the last
+    (minimized) objective, recursing to a 2-D staircase base case —
+    O(C^(d-1) log C), fully vectorized (sort + cummin + nested vmap), no
     host callbacks, so it can run inside a jitted program.
     """
     refm = _to_min(jnp.asarray(ref, jnp.float32))
@@ -250,28 +275,34 @@ def _hv_min(pm: jnp.ndarray, refm: jnp.ndarray) -> jnp.ndarray:
     """Hypervolume sweep core in min space (see :func:`hypervolume`).
 
     Rows must already be clipped to ``refm`` (invalid rows set equal to
-    it, so they enclose zero volume).
+    it, so they enclose zero volume). Recursive over the objective
+    count: the 2-D base case is the sorted staircase, a d-D volume is
+    the sum over last-axis slices of the (d-1)-D volume of the points
+    active in that slice. For d == 3 this unrolls to exactly the
+    pre-generalization sweep (same op sequence, bitwise identical).
     """
-    order = jnp.argsort(pm[:, 2])
-    x = jnp.take(pm[:, 0], order)
-    y = jnp.take(pm[:, 1], order)
-    z = jnp.take(pm[:, 2], order)
-    heights = jnp.concatenate([z[1:], refm[2:3]]) - z
-    n = x.shape[0]
-
-    def slice_area(k):
-        active = jnp.arange(n) <= k
-        xa = jnp.where(active, x, refm[0])
-        ya = jnp.where(active, y, refm[1])
-        o = jnp.argsort(xa)
-        xs, ys = jnp.take(xa, o), jnp.take(ya, o)
+    d = pm.shape[-1]
+    if d == 2:
+        o = jnp.argsort(pm[:, 0])
+        xs, ys = jnp.take(pm[:, 0], o), jnp.take(pm[:, 1], o)
         ymin = jax.lax.cummin(ys)
         xn = jnp.concatenate([xs[1:], refm[0:1]])
         return jnp.sum(jnp.maximum(xn - xs, 0.0)
                        * jnp.maximum(refm[1] - ymin, 0.0))
 
-    areas = jax.vmap(slice_area)(jnp.arange(n))
-    return jnp.sum(areas * jnp.maximum(heights, 0.0))
+    order = jnp.argsort(pm[:, d - 1])
+    front = jnp.take(pm[:, :d - 1], order, axis=0)
+    z = jnp.take(pm[:, d - 1], order)
+    heights = jnp.concatenate([z[1:], refm[d - 1:d]]) - z
+    n = z.shape[0]
+
+    def slice_vol(k):
+        active = (jnp.arange(n) <= k)[:, None]
+        return _hv_min(jnp.where(active, front, refm[:d - 1]),
+                       refm[:d - 1])
+
+    vols = jax.vmap(slice_vol)(jnp.arange(n))
+    return jnp.sum(vols * jnp.maximum(heights, 0.0))
 
 
 def nadir_ref(points: jnp.ndarray, valid: jnp.ndarray = None,
@@ -291,8 +322,8 @@ def nadir_ref(points: jnp.ndarray, valid: jnp.ndarray = None,
     hi = jnp.max(jnp.where(valid[..., None], pm, -_BIG), axis=0)
     lo = jnp.min(jnp.where(valid[..., None], pm, _BIG), axis=0)
     pad = margin * jnp.maximum(hi - lo, 0.01 * jnp.abs(hi) + 1e-9)
-    refm = jnp.where(any_valid, hi + pad, jnp.ones((N_OBJ,)))
-    return refm * _SIGNS
+    refm = jnp.where(any_valid, hi + pad, jnp.ones_like(hi))
+    return refm * _signs(pm.shape[-1])
 
 
 def contents(archive: Archive) -> dict:

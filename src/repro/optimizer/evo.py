@@ -124,8 +124,8 @@ def _eval_genome(genome: jnp.ndarray, env_cfg: chipenv.EnvConfig,
         fid = "auto" if fid == "fast" else fid
     else:
         design, plc = ps.from_flat(genome[..., : ps.N_PARAMS]), None
-    mtr = cm.evaluate(design, scenario.workload, scenario.weights,
-                      env_cfg.hw, plc, nop_fidelity=fid)
+    mtr = cm.evaluate_scenario(design, scenario, env_cfg.hw, plc,
+                               nop_fidelity=fid)
     return mtr.reward, ar.point_from_metrics(mtr)
 
 

@@ -91,9 +91,8 @@ def _sweep_rewards(cands, scenario: cm.Scenario, hw_cfg,
     winners) instead of re-tracing a fresh closure per scenario.
     """
     return jax.vmap(
-        lambda c: cm.reward_only(ps.from_flat(c), scenario.workload,
-                                 scenario.weights, hw_cfg,
-                                 nop_fidelity=nop_fidelity))(cands)
+        lambda c: cm.scenario_reward(ps.from_flat(c), scenario, hw_cfg,
+                                     nop_fidelity=nop_fidelity))(cands)
 
 
 def coordinate_refine(flat: jnp.ndarray, env_cfg: chipenv.EnvConfig,
@@ -146,8 +145,8 @@ def _sweep_all_scenarios(flats, scenarios: cm.Scenario, hw_cfg,
                  cm.footprint_positions(ps.decode(ps.from_flat(flats))))
 
     def reward_sc(c, s, p, cap):
-        r = cm.reward_only(ps.from_flat(c), s.workload, s.weights, hw_cfg,
-                           p, nop_fidelity=fid)
+        r = cm.scenario_reward(ps.from_flat(c), s, hw_cfg, p,
+                               nop_fidelity=fid)
         if cap is None:
             return r
         n_pos_c = cm.footprint_positions(ps.decode(ps.from_flat(c)))
@@ -200,8 +199,8 @@ def coordinate_refine_batch(flats, scenarios: cm.Scenario,
             break
         flats = new_flats
     if rewards is None:
-        rewards = jax.vmap(lambda c, s: cm.reward_only(
-            ps.from_flat(c), s.workload, s.weights, env_cfg.hw,
+        rewards = jax.vmap(lambda c, s: cm.scenario_reward(
+            ps.from_flat(c), s, env_cfg.hw,
             nop_fidelity=env_cfg.nop_fidelity))(flats, scenarios)
     return np.asarray(flats), np.asarray(rewards)
 
@@ -310,10 +309,9 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
         cm.register_eval_tap(tap)
     try:
         if len(cand_labels):
-            mtr = cm.evaluate(
+            mtr = cm.evaluate_scenario(
                 ps.from_flat(jnp.asarray(cand_flats, jnp.int32)),
-                scenario.workload, scenario.weights, env_cfg.hw,
-                nop_fidelity=env_cfg.nop_fidelity)
+                scenario, env_cfg.hw, nop_fidelity=env_cfg.nop_fidelity)
             # reward mirrors the archived point (canonical-floorplan eval
             # of the stored flats), NOT the arm-reported best — an RL/evo
             # reward achieved via a placement mutation belongs to
@@ -337,10 +335,9 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
                 tap_dataset=tap.dataset)
             sur_flats = np.asarray(sres.cand_flats[0])
             sur_rewards_arr = np.asarray(sres.cand_rewards[0], np.float32)
-            s_mtr = cm.evaluate(
+            s_mtr = cm.evaluate_scenario(
                 ps.from_flat(jnp.asarray(sur_flats, jnp.int32)),
-                scenario.workload, scenario.weights, env_cfg.hw,
-                nop_fidelity=env_cfg.nop_fidelity)
+                scenario, env_cfg.hw, nop_fidelity=env_cfg.nop_fidelity)
             arc = ar.insert_batch(
                 arc, ar.point_from_metrics(s_mtr),
                 jnp.asarray(sur_flats, jnp.int32), reward=s_mtr.reward,

@@ -30,6 +30,7 @@ from repro.core import hw_constants as hw
 from repro.core import monolithic as mono
 from repro.core import params as ps
 from repro.core import placement as pm
+from repro.core import traffic as tr
 from repro.core import workload as wl
 from repro.optimizer import archive as ar
 from repro.optimizer import evo as evo_mod
@@ -114,6 +115,13 @@ class SuiteConfig:
     # dataset before the next fit — the ROADMAP item-1 follow-up of
     # training on the suite's own tapped eval traffic during long runs.
     surrogate_refit_every: int = 0
+    # traffic trace (core/traffic.py): a preset name ('flat', 'diurnal',
+    # 'bursty', 'multi-tenant'), a traffic.TraceConfig, or None (point
+    # scenarios, bit-exact with the pre-trace suite). When set, every
+    # scenario is scored against its sampled serving-load distribution
+    # (SLO attainment + load-proportional energy) by all arms, and the
+    # suite archive gains SLO attainment as a fourth objective.
+    trace: object = None
 
 
 SMOKE_SUITE = SuiteConfig(
@@ -150,6 +158,9 @@ class ScenarioOutcome:
     reward_canonical: float = None  # winner under the Fig.-4 floorplan
     placement_cells: np.ndarray = None   # (128,) grid cell per slot
     placement_hbm_ij: np.ndarray = None  # (6, 2) HBM anchor coords
+    # traffic-trace channels (None on point-scenario suites)
+    slo_attainment: float = None    # dt-weighted fraction of steps in SLO
+    p99_latency_s: float = None     # worst trace step's proxy p99 sojourn
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,16 +180,27 @@ class SuiteResult:
 
 def build_scenarios(cfg: SuiteConfig) -> Tuple[List[str], List[str],
                                                cm.Scenario]:
-    """Resolve the grid -> (scenario names, workload names, batched Scenario)."""
+    """Resolve the grid -> (scenario names, workload names, batched Scenario).
+
+    With ``cfg.trace`` set the stacked batch is run through
+    :func:`repro.core.traffic.apply_trace` — every scenario gets its own
+    sampled serving-load trace (keyed by the trace config's seed and the
+    scenario index, independent of the optimizer key streams).
+    """
     wl_names, workloads = wl.resolve(cfg.workloads)
     names, wnames, scalars = [], [], []
+    tcfg = tr.resolve_trace(cfg.trace)
+    tag = "" if tcfg is None else f"|trace={tcfg.kind}"
     for wname, workload in zip(wl_names, workloads):
         for a, b, g in cfg.weight_grid:
-            names.append(f"{wname}|a={a:g},b={b:g},g={g:g}")
+            names.append(f"{wname}|a={a:g},b={b:g},g={g:g}{tag}")
             wnames.append(wname)
             scalars.append(cm.Scenario(workload=workload,
                                        weights=cm.make_weights(a, b, g)))
-    return names, wnames, cm.stack_scenarios(scalars)
+    scenarios = cm.stack_scenarios(scalars)
+    if tcfg is not None:
+        scenarios = tr.apply_trace(scenarios, tcfg, cfg.env.hw)
+    return names, wnames, scenarios
 
 
 def pareto_indices(points: np.ndarray,
@@ -363,8 +385,20 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
                   f"({sources[s]})")
 
     # scenario-batched PPAC evaluation of all winners in one program
-    metrics = cm.evaluate_scenarios(dp_batch, scenarios, cfg.env.hw,
-                                    placements=placements)
+    # (traced suites go through the TraceMetrics twin to also read the
+    # SLO / p99 channels into the outcomes and the fourth objective)
+    traced = scenarios.trace is not None
+    win_slo = win_p99 = None
+    if traced:
+        tm = cm.evaluate_trace_scenarios(dp_batch, scenarios, cfg.env.hw,
+                                         placements=placements)
+        metrics = tm.metrics
+        win_slo = np.asarray(tm.slo_attainment, np.float64)       # (S,)
+        win_p99 = np.asarray(jnp.max(tm.p99_latency_s, axis=1),
+                             np.float64)                          # (S,)
+    else:
+        metrics = cm.evaluate_scenarios(dp_batch, scenarios, cfg.env.hw,
+                                        placements=placements)
 
     outcomes = []
     for s in range(n_scen):
@@ -385,20 +419,36 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
                              np.asarray(placements.chiplet_cell[s])),
             placement_hbm_ij=(None if placements is None else
                               np.asarray(placements.hbm_ij[s])),
+            slo_attainment=(None if win_slo is None
+                            else float(win_slo[s])),
+            p99_latency_s=(None if win_p99 is None
+                           else float(win_p99[s])),
         ))
 
     triples = np.stack([
         [o.tasks_per_sec, o.energy_per_task_j, o.total_cost]
         for o in outcomes])
+    n_obj = 3
+    if traced:
+        # SLO attainment joins the winners' / archive's objective space
+        triples = np.concatenate([triples, win_slo[:, None]], axis=1)
+        n_obj = 4
 
     # per-workload normalization: tasks/s and J/task relative to the
     # iso-node monolithic baseline evaluated on the *same* workload, so
     # heavy workloads compete on speedup rather than raw task rate
     mono_m = jax.vmap(lambda w: mono.evaluate(w, cfg.env.hw))(
         scenarios.workload)
-    mono_t = np.maximum(np.asarray(mono_m.tasks_per_sec, np.float64), 1e-30)
-    mono_j = np.maximum(np.asarray(mono_m.energy_per_task_j, np.float64),
-                        1e-30)
+    mono_t = np.asarray(mono_m.tasks_per_sec, np.float64)
+    mono_j = np.asarray(mono_m.energy_per_task_j, np.float64)
+    if traced:
+        # traced workload leaves carry (S, T): dt-weight the baseline
+        # over the trace so normalization matches the aggregated metrics
+        dt = np.asarray(scenarios.trace.dt, np.float64)           # (S, T)
+        mono_t = np.sum(dt * mono_t, axis=1)
+        mono_j = np.sum(dt * mono_j, axis=1)
+    mono_t = np.maximum(mono_t, 1e-30)
+    mono_j = np.maximum(mono_j, 1e-30)
     norm = triples.copy()
     norm[:, 0] = triples[:, 0] / mono_t
     norm[:, 1] = triples[:, 1] / mono_j
@@ -408,16 +458,16 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
     # lives in one code path, optimizer/archive.py). The archive collapses
     # exact-duplicate points to one entry; the report wants every tied
     # scenario listed, so re-expand ties against the surviving points.
-    def _front(tr: np.ndarray) -> List[int]:
+    def _front(pts: np.ndarray) -> List[int]:
         a = ar.insert_batch(
-            ar.empty(n_scen), jnp.asarray(tr, jnp.float32),
+            ar.empty(n_scen, n_obj=n_obj), jnp.asarray(pts, jnp.float32),
             jnp.asarray(winner_flats),
             reward=jnp.asarray(winner_rewards, jnp.float32),
             payload=jnp.arange(n_scen, dtype=jnp.int32))
-        surviving = ar.contents(a)["points"]            # (F, 3) float32
-        tr32 = np.asarray(tr, np.float32)
+        surviving = ar.contents(a)["points"]            # (F, n_obj) f32
+        pts32 = np.asarray(pts, np.float32)
         return [s for s in range(n_scen)
-                if (tr32[s] == surviving).all(axis=1).any()]
+                if (pts32[s] == surviving).all(axis=1).any()]
 
     pareto = _front(triples)
     pareto_norm = _front(norm)
@@ -425,19 +475,27 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
     # suite-level cross-arm archive (normalized space): every candidate
     # every arm produced, every point the GA islands archived, and the
     # final winners, competing for one bounded non-dominated store
-    suite_arc = ar.empty(cfg.archive_capacity)
+    suite_arc = ar.empty(cfg.archive_capacity, n_obj=n_obj)
     cand_all = np.concatenate([flats, refined_flats], axis=1)  # (S, K', 14)
     n_cand = cand_all.shape[1]
-    cand_m = cm.evaluate_scenarios(
-        ps.from_flat(jnp.asarray(cand_all, jnp.int32)), scenarios,
-        cfg.env.hw)
-    cand_pts = np.stack([
+    cand_dp = ps.from_flat(jnp.asarray(cand_all, jnp.int32))
+    if traced:
+        cand_tm = cm.evaluate_trace_scenarios(cand_dp, scenarios,
+                                              cfg.env.hw)
+        cand_m = cand_tm.metrics
+        cand_slo = np.asarray(cand_tm.slo_attainment, np.float64)
+    else:
+        cand_m = cm.evaluate_scenarios(cand_dp, scenarios, cfg.env.hw)
+    cand_cols = [
         np.asarray(cand_m.tasks_per_sec, np.float64) / mono_t[:, None],
         np.asarray(cand_m.energy_per_task_j, np.float64) / mono_j[:, None],
-        np.asarray(cand_m.total_cost, np.float64)], axis=-1)
+        np.asarray(cand_m.total_cost, np.float64)]
+    if traced:
+        cand_cols.append(cand_slo)
+    cand_pts = np.stack(cand_cols, axis=-1)
     cand_rw = np.asarray(cand_m.reward, np.float64)
     suite_arc = ar.insert_batch(
-        suite_arc, jnp.asarray(cand_pts.reshape(-1, 3), jnp.float32),
+        suite_arc, jnp.asarray(cand_pts.reshape(-1, n_obj), jnp.float32),
         jnp.asarray(cand_all.reshape(-1, ps.N_PARAMS)),
         reward=jnp.asarray(cand_rw.reshape(-1), jnp.float32),
         payload=jnp.repeat(jnp.arange(n_scen, dtype=jnp.int32), n_cand))
@@ -450,10 +508,22 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
         pts[..., 1] /= mono_j[:, None, None]
         n_isl, n_arc = pts.shape[1], pts.shape[2]
         g_dim = evo_archives.flats.shape[-1]
+        evo_flats = np.asarray(evo_archives.flats).reshape(
+            -1, g_dim)[:, : ps.N_PARAMS]
+        if traced:
+            # SLO column via re-evaluation of the Table-1 genes under the
+            # canonical floorplan (placement genes, if any, are dropped —
+            # queueing only sees throughput, where that is a small effect)
+            evo_tm = cm.evaluate_trace_scenarios(
+                ps.from_flat(jnp.asarray(
+                    evo_flats.reshape(n_scen, n_isl * n_arc, ps.N_PARAMS),
+                    jnp.int32)), scenarios, cfg.env.hw)
+            evo_slo = np.asarray(evo_tm.slo_attainment,
+                                 np.float64).reshape(pts.shape[:-1])
+            pts = np.concatenate([pts, evo_slo[..., None]], axis=-1)
         suite_arc = ar.insert_batch(
-            suite_arc, jnp.asarray(pts.reshape(-1, 3), jnp.float32),
-            jnp.asarray(evo_archives.flats).reshape(
-                -1, g_dim)[:, : ps.N_PARAMS],
+            suite_arc, jnp.asarray(pts.reshape(-1, n_obj), jnp.float32),
+            jnp.asarray(evo_flats),
             reward=jnp.asarray(evo_archives.reward).reshape(-1),
             payload=jnp.repeat(jnp.arange(n_scen, dtype=jnp.int32),
                                n_isl * n_arc),
@@ -481,10 +551,13 @@ def format_report(res: SuiteResult) -> str:
         plus = "+" if i in res.pareto_normalized else " "
         gain = (0.0 if o.reward_canonical is None
                 else o.best_reward - o.reward_canonical)
+        slo = ("" if o.slo_attainment is None
+               else f" slo={o.slo_attainment:.2f}"
+                    f" p99={o.p99_latency_s:.2e}s")
         lines.append(
             f"{star}{plus}{o.name:<41} {o.best_reward:>9.1f} {gain:>9.3f} "
             f"{o.tasks_per_sec:>12,.0f} {o.energy_per_task_j:>10.2e} "
-            f"{o.total_cost:>9.0f} {o.source:>9}")
+            f"{o.total_cost:>9.0f} {o.source:>9}{slo}")
     lines.append(f"\nPareto frontier (raw tasks/s vs J/task vs cost): "
                  f"{len(res.pareto)}/{len(res.outcomes)} scenarios (*); "
                  f"monolithic-normalized frontier: "
@@ -507,7 +580,8 @@ def to_json(res: SuiteResult) -> Dict:
             "capacity": res.archive.capacity,
             "n": int(c["points"].shape[0]),
             "hypervolume": res.hypervolume,
-            # rows: (speedup vs monolithic, J/task ratio, cost $)
+            # rows: (speedup vs monolithic, J/task ratio, cost $[, SLO
+            # attainment when the suite ran under a traffic trace])
             "points": [[float(x) for x in p] for p in c["points"]],
             "reward": [float(r) for r in c["reward"]],
             "scenario": [int(p) for p in c["payload"]],
@@ -531,6 +605,8 @@ def to_json(res: SuiteResult) -> Dict:
             "energy_per_task_j": o.energy_per_task_j,
             "total_cost": o.total_cost,
             "eff_tops": o.eff_tops,
+            "slo_attainment": o.slo_attainment,
+            "p99_latency_s": o.p99_latency_s,
             "placement_cells": (None if o.placement_cells is None else
                                 [int(c) for c in o.placement_cells]),
             "placement_hbm_ij": (None if o.placement_hbm_ij is None else

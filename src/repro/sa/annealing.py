@@ -61,8 +61,8 @@ def _objective(x: jnp.ndarray, env_cfg: chipenv.EnvConfig,
     scenario = env_cfg.scenario() if scenario is None else scenario
     idx = jnp.clip(jnp.round(x), 0.0, _HEADS - 1.0).astype(jnp.int32)
     dp = ps.from_flat(idx)
-    return cm.reward_only(dp, scenario.workload, scenario.weights, env_cfg.hw,
-                          nop_fidelity=env_cfg.nop_fidelity)
+    return cm.scenario_reward(dp, scenario, env_cfg.hw,
+                              nop_fidelity=env_cfg.nop_fidelity)
 
 
 def run(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
@@ -301,16 +301,15 @@ def refine_placement(key, design: ps.DesignPoint,
     m, n = cm.mesh_dims(n_pos)
     base = pm.canonical(m, n, v.hbm_mask, v.arch_type)
     ctx = cm.placement_ctx(design, scenario.workload, scenario.weights,
-                           env_cfg.hw)
+                           env_cfg.hw, trace=scenario.trace)
     mesh_edges = ctx.prefix.mesh_edges
 
     def objective(plc: pm.Placement) -> jnp.ndarray:
-        return cm.reward_only(design, scenario.workload, scenario.weights,
-                              env_cfg.hw, plc)
+        return cm.scenario_reward(design, scenario, env_cfg.hw, plc)
 
     # canonical baseline through the closed-form fast tier (no Placement)
-    r0 = cm.reward_only(design, scenario.workload, scenario.weights,
-                        env_cfg.hw, nop_fidelity=env_cfg.nop_fidelity)
+    r0 = cm.scenario_reward(design, scenario, env_cfg.hw,
+                            nop_fidelity=env_cfg.nop_fidelity)
     if init_placement is None:
         start, r_start = base, r0
     else:

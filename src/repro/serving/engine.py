@@ -9,16 +9,21 @@ prefill/decode API:
   - every decode step advances *all* active slots in one jit'd call,
   - greedy or temperature sampling.
 
-Slot-level cache surgery uses one batched cache of shape (B, ...) and
-jax.lax.dynamic_update_index_in_dim writes — no per-request recompile.
-The decode step is the exact function the dry-run lowers for the
-``decode_32k`` / ``long_500k`` cells.
+Slot-level cache surgery uses one batched cache and per-leaf batch-axis
+splices — no per-request recompile. Cache leaves do NOT all put the
+batch at axis 1 with one row per slot: the SSD state leaves fold batch
+with heads, ``(layers, B*h, n, pd)``, so :func:`cache_batch_axes`
+derives each leaf's (batch axis, rows-per-slot) structurally by
+comparing ``init_cache`` shapes at batch B vs batch 1. The decode step
+is the exact function the dry-run lowers for the ``decode_32k`` /
+``long_500k`` cells.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import warnings
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +43,80 @@ class Request:
     done: bool = False
 
 
+# --------------------------------------------------------------------------- #
+# cache splicing: per-leaf batch-axis surgery
+# --------------------------------------------------------------------------- #
+
+def cache_batch_axes(arch: ArchConfig, n_slots: int, max_len: int,
+                     dtype) -> List[Tuple[int, int]]:
+    """Per-leaf ``(batch_axis, rows_per_slot)`` of the engine cache.
+
+    Derived structurally: the batch axis of each leaf is the first axis
+    whose extent differs between ``init_cache(arch, n_slots, ...)`` and
+    ``init_cache(arch, 1, ...)``, and its per-slot width is that axis's
+    extent at batch 1 (8 for the SSD leaves that fold batch with heads,
+    1 for attention/MLA/conv leaves). ``(None, None)`` marks a leaf
+    whose shape does not depend on the batch at all (only possible at
+    ``n_slots == 1``, where whole-leaf replacement is the correct
+    splice).
+    """
+    full = jax.tree_util.tree_leaves(M.init_cache(arch, n_slots, max_len,
+                                                  dtype))
+    one = jax.tree_util.tree_leaves(M.init_cache(arch, 1, max_len, dtype))
+    axes: List[Tuple[int, int]] = []
+    for f, o in zip(full, one):
+        axis = per = None
+        for d, (sf, so) in enumerate(zip(f.shape, o.shape)):
+            if sf != so:
+                axis, per = d, so
+                break
+        axes.append((axis, per))
+    return axes
+
+
+def splice_slot(cache, row_cache, axes: List[Tuple[int, int]], slot: int):
+    """Write a batch-1 ``row_cache`` into ``cache`` at ``slot``.
+
+    ``axes`` is :func:`cache_batch_axes` output, aligned with the leaf
+    order of both trees. Each leaf is updated only along its own batch
+    axis at offset ``slot * rows_per_slot``.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(cache)
+    rows = treedef.flatten_up_to(row_cache)
+    out = []
+    for full, row, (axis, per) in zip(leaves, rows, axes):
+        if axis is None:
+            out.append(row.astype(full.dtype))
+            continue
+        out.append(jax.lax.dynamic_update_slice_in_dim(
+            full, row.astype(full.dtype), slot * per, axis=axis))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def splice_rows(cache, new_cache, axes: List[Tuple[int, int]],
+                slots: np.ndarray):
+    """Adopt ``new_cache`` rows for the given slots only.
+
+    Used by :meth:`ServingEngine.step` to keep just the decoded position
+    group's rows out of a full-batch decode: every leaf is updated at
+    the row block of each slot in ``slots`` along its own batch axis;
+    all other rows keep the prior cache contents.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(cache)
+    news = treedef.flatten_up_to(new_cache)
+    slots = np.asarray(slots, np.int32)
+    out = []
+    for full, new, (axis, per) in zip(leaves, news, axes):
+        if axis is None:
+            out.append(new.astype(full.dtype))
+            continue
+        idx = jnp.asarray(
+            (slots[:, None] * per + np.arange(per)[None, :]).reshape(-1))
+        sl = (slice(None),) * axis + (idx,)
+        out.append(full.at[sl].set(new[sl].astype(full.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 class ServingEngine:
     def __init__(self, arch: ArchConfig, params, n_slots: int = 4,
                  max_len: int = 256, dtype=jnp.float32, seed: int = 0):
@@ -46,9 +125,11 @@ class ServingEngine:
         self.n_slots = n_slots
         self.max_len = max_len
         self.cache = M.init_cache(arch, n_slots, max_len, dtype)
+        self._axes = cache_batch_axes(arch, n_slots, max_len, dtype)
         self.positions = np.zeros(n_slots, np.int32)       # next position
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.key = jax.random.PRNGKey(seed)
+        self.last_run_exhausted = False
 
         self._prefill1 = jax.jit(
             lambda params, toks, cache: M.prefill(params, arch, toks, cache))
@@ -72,10 +153,7 @@ class ServingEngine:
                                  jax.tree_util.tree_leaves(
                                      self.cache)[0].dtype)
         logits, row_cache, _ = self._prefill1(self.params, toks, row_cache)
-        self.cache = jax.tree_util.tree_map(
-            lambda full, row: jax.lax.dynamic_update_slice_in_dim(
-                full, row.astype(full.dtype), slot, axis=1),
-            self.cache, row_cache)
+        self.cache = splice_slot(self.cache, row_cache, self._axes, slot)
         self.slot_req[slot] = req
         self.positions[slot] = len(req.prompt)
         first = self._sample(logits[0], req)
@@ -98,17 +176,21 @@ class ServingEngine:
         for i in active:
             tokens[i] = self.slot_req[i].output[-1]
         # all rows share one position scalar per step; slots may differ ->
-        # decode at each distinct position group
-        for pos in sorted({int(self.positions[i]) for i in active}):
-            group = [i for i in active if self.positions[i] == pos]
+        # decode at each distinct position group. The groups are
+        # snapshotted before the loop: each active slot is decoded exactly
+        # once per step at the position it held when the step began —
+        # advancing a slot must not re-enter it into a later group, and a
+        # slot freed by a mid-step finish must not be dereferenced by one.
+        groups: Dict[int, List[int]] = {}
+        for i in active:
+            groups.setdefault(int(self.positions[i]), []).append(i)
+        for pos in sorted(groups):
+            group = groups[pos]
             logits, new_cache = self._decode(
                 self.params, jnp.asarray(tokens), pos, self.cache)
             # only splice back rows belonging to this position group
-            rows = jnp.asarray(group)
-            self.cache = jax.tree_util.tree_map(
-                lambda full, new: full.at[:, rows].set(new[:, rows])
-                if full.ndim >= 2 else new,
-                self.cache, new_cache)
+            self.cache = splice_rows(self.cache, new_cache, self._axes,
+                                     np.asarray(group))
             for i in group:
                 req = self.slot_req[i]
                 tok = self._sample(logits[i], req)
@@ -121,15 +203,27 @@ class ServingEngine:
 
     def run(self, requests: List[Request], max_steps: int = 512
             ) -> List[Request]:
-        """Serve a request list to completion with continuous batching."""
+        """Serve a request list with continuous batching.
+
+        Runs until every request completes or ``max_steps`` decode steps
+        have elapsed, admitting pending requests into free slots between
+        steps. Budget exhaustion is surfaced rather than silent:
+        requests still in flight (or never admitted) come back with
+        ``done=False``, ``self.last_run_exhausted`` is set, and a
+        ``RuntimeWarning`` is emitted.
+        """
         pending = list(requests)
-        finished: List[Request] = []
         steps = 0
-        while (pending or any(self.slot_req)) and steps < max_steps:
+        while ((pending or any(r is not None for r in self.slot_req))
+               and steps < max_steps):
             while pending and self._free_slots():
                 self.add_request(pending.pop(0))
             self.step()
-            finished.extend(r for r in requests
-                            if r.done and r not in finished)
             steps += 1
+        self.last_run_exhausted = not all(r.done for r in requests)
+        if self.last_run_exhausted:
+            warnings.warn(
+                f"ServingEngine.run: max_steps={max_steps} exhausted with "
+                f"{sum(not r.done for r in requests)} request(s) unfinished",
+                RuntimeWarning, stacklevel=2)
         return requests

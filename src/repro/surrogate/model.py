@@ -107,8 +107,18 @@ def featurize(flat: jnp.ndarray) -> jnp.ndarray:
 
 
 def scenario_features(scenario: cm.Scenario) -> jnp.ndarray:
-    """Scenario -> (..., N_SCEN_FEATURES) f32 conditioning vector."""
+    """Scenario -> (..., N_SCEN_FEATURES) f32 conditioning vector.
+
+    Traced scenarios (``scenario.trace`` set) carry (..., T) workload
+    leaves; they are dt-weight-averaged over the trace axis first, so
+    the surrogate conditions on the mean served workload.
+    """
     w, wl = scenario.weights, scenario.workload
+    if scenario.trace is not None:
+        dt = jnp.asarray(scenario.trace.dt, jnp.float32)
+        wl = jax.tree_util.tree_map(
+            lambda x: jnp.sum(jnp.asarray(x, jnp.float32) * dt, axis=-1),
+            wl)
     return jnp.stack([
         jnp.asarray(w.alpha, jnp.float32),
         jnp.asarray(w.beta, jnp.float32),

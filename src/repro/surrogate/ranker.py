@@ -102,8 +102,8 @@ def surrogate_topk(key, params, scenario: cm.Scenario,
     top_idx, top_scores = rank_pool(params, pool, scenario, cfg.top_k,
                                     cfg.backend)
     top = pool[top_idx]
-    rewards = jax.vmap(lambda f: cm.reward_only(
-        ps.from_flat(f), scenario.workload, scenario.weights, hw_cfg,
+    rewards = jax.vmap(lambda f: cm.scenario_reward(
+        ps.from_flat(f), scenario, hw_cfg,
         nop_fidelity=nop_fidelity))(top)
     return top, rewards, top_scores
 

@@ -1,0 +1,237 @@
+"""Traffic-trace scenarios: generators, trace evaluation, queueing proxy.
+
+Covers the ROADMAP-3 layer end to end:
+
+- generator invariants: determinism under a fixed PRNG key, mix rows
+  summing to 1, dt-weighted QPS normalization to the configured load,
+- ``costmodel.evaluate_trace`` degrading *bitwise* to the point path on
+  a length-1 flat trace with the SLO / idle-energy channels disabled,
+- the whole 32-step trace compiling to ONE XLA program (jit round-trip
+  equals eager, no per-step dispatch),
+- the analytic M/D/c p99 proxy staying in band against the
+  discrete-event slot-scheduler twin of serving/engine.py,
+- the 4-objective (PPAC + SLO attainment) archive path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core import hw_constants as hw
+from repro.core import monolithic as mono
+from repro.core import params as ps
+from repro.core import traffic as tr
+from repro.core import workload as wl
+from repro.optimizer import archive as ar
+
+DP = ps.from_flat(jnp.asarray(
+    [1, 40, 31, 1, 10, 2, 1, 1, 1, 1, 1, 1, 1, 1], jnp.int32))
+WORKLOAD = wl.registry()["llama3-8b:decode"]
+
+
+def _weights():
+    return cm.make_weights(1.0, 1.0, 0.1)
+
+
+class TestGenerators:
+    @pytest.mark.parametrize("kind", tr.KINDS)
+    def test_deterministic_under_key(self, kind):
+        cfg = tr.TraceConfig(kind=kind)
+        key = jax.random.PRNGKey(3)
+        wl_a, trace_a = tr.make_trace(key, WORKLOAD, cfg)
+        wl_b, trace_b = tr.make_trace(key, WORKLOAD, cfg)
+        for xa, xb in zip(jax.tree_util.tree_leaves((wl_a, trace_a)),
+                          jax.tree_util.tree_leaves((wl_b, trace_b))):
+            np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+    @pytest.mark.parametrize("kind", tr.KINDS)
+    def test_mix_rows_sum_to_one(self, kind):
+        cfg = tr.TraceConfig(kind=kind)
+        _, trace = tr.make_trace(jax.random.PRNGKey(0), WORKLOAD, cfg)
+        rows = np.asarray(trace.mix)
+        assert rows.shape[0] == cfg.n_steps
+        np.testing.assert_allclose(rows.sum(axis=-1), 1.0, rtol=1e-6)
+        assert (rows >= 0.0).all()
+        # column 0 is the scenario's own workload at 1 - mix_spread
+        np.testing.assert_allclose(rows[:, 0], 1.0 - cfg.mix_spread,
+                                   rtol=1e-6)
+
+    @pytest.mark.parametrize("kind", tr.KINDS)
+    def test_qps_normalized_to_load(self, kind):
+        cfg = tr.TraceConfig(kind=kind, load=2.25)
+        traced_wl, trace = tr.make_trace(
+            jax.random.PRNGKey(1), WORKLOAD, cfg)
+        mu_ref = jax.vmap(
+            lambda w: mono.evaluate(w, hw.DEFAULT_HW).tasks_per_sec)(
+                traced_wl)
+        offered = float(jnp.sum(trace.dt * trace.qps))
+        reference = float(jnp.sum(trace.dt * mu_ref))
+        assert offered == pytest.approx(cfg.load * reference, rel=1e-5)
+
+    def test_distinct_kinds_distinct_loads(self):
+        qps = {}
+        for kind in tr.KINDS:
+            _, trace = tr.make_trace(jax.random.PRNGKey(0), WORKLOAD,
+                                     tr.TraceConfig(kind=kind))
+            qps[kind] = np.asarray(trace.qps)
+        assert np.ptp(qps["flat"]) == pytest.approx(0.0)
+        assert np.ptp(qps["bursty"]) > 0.0
+        assert np.ptp(qps["diurnal"]) > 0.0
+
+    def test_resolve_trace(self):
+        assert tr.resolve_trace(None) is None
+        assert tr.resolve_trace("bursty").kind == "bursty"
+        cfg = tr.TraceConfig(kind="diurnal", n_steps=8)
+        assert tr.resolve_trace(cfg) is cfg
+        with pytest.raises(ValueError, match="unknown trace preset"):
+            tr.resolve_trace("nope")
+
+
+class TestEvaluateTrace:
+    def test_length1_flat_trace_bit_exact(self):
+        """A T=1 flat trace with SLO + idle channels off == point path."""
+        cfg = tr.TraceConfig(kind="flat", n_steps=1, mix_spread=0.0,
+                             slo_weight=0.0, idle_frac=0.0)
+        traced_wl, trace = tr.make_trace(
+            jax.random.PRNGKey(0), WORKLOAD, cfg)
+        scen = cm.Scenario(workload=traced_wl, weights=_weights(),
+                           trace=trace)
+        tm = cm.evaluate_trace(DP, scen)
+        point = cm.evaluate(DP, WORKLOAD, _weights())
+        for name in cm.Metrics._fields:
+            a = np.asarray(getattr(tm.metrics, name))
+            b = np.asarray(getattr(point, name))
+            np.testing.assert_array_equal(
+                a, b, err_msg=f"Metrics.{name} not bit-exact")
+        # ... and through the Scenario dispatchers
+        np.testing.assert_array_equal(
+            np.asarray(cm.evaluate_scenario(DP, scen).reward),
+            np.asarray(point.reward))
+        np.testing.assert_array_equal(
+            np.asarray(cm.scenario_reward(DP, scen)),
+            np.asarray(point.reward))
+
+    def test_one_compiled_program(self):
+        """The full 32-step trace jits into one program == eager result."""
+        scen = tr.traced_scenario(
+            cm.Scenario(workload=WORKLOAD, weights=_weights()),
+            tr.TraceConfig(kind="bursty"))
+        fn = jax.jit(lambda d: cm.evaluate_trace(d, scen).reward)
+        np.testing.assert_allclose(
+            np.asarray(fn(DP)),
+            np.asarray(cm.evaluate_trace(DP, scen).reward), rtol=1e-6)
+        # design batches ride as extra trailing axes of one program
+        batch = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (5,) + jnp.shape(x)), DP)
+        tm = cm.evaluate_trace(batch, scen)
+        assert tm.reward.shape == (5,)
+        assert tm.p99_latency_s.shape == (32, 5)
+
+    def test_trace_changes_ranking_under_load(self):
+        """SLO + idle channels make the traced reward load-dependent."""
+        scen = tr.traced_scenario(
+            cm.Scenario(workload=WORKLOAD, weights=_weights()),
+            tr.TraceConfig(kind="bursty", load=2.5))
+        tm = cm.evaluate_trace(DP, scen)
+        point = cm.evaluate(DP, WORKLOAD, _weights())
+        assert float(tm.reward) != pytest.approx(float(point.reward))
+        assert 0.0 <= float(tm.slo_attainment) <= 1.0
+        # eq17 component stays the dt-weighted plain reward
+        assert float(tm.reward) <= float(tm.reward_eq17) + 1e-6
+
+    def test_evaluate_trace_scenarios_shapes(self):
+        base = cm.stack_scenarios([
+            cm.Scenario(workload=WORKLOAD, weights=_weights()),
+            cm.Scenario(workload=wl.registry()["qwen2-0.5b:decode"],
+                        weights=cm.make_weights(2.0, 0.5, 0.1))])
+        scens = tr.apply_trace(base, tr.TraceConfig(kind="diurnal"))
+        tm = cm.evaluate_trace_scenarios(DP, scens)
+        assert tm.reward.shape == (2,)
+        assert tm.slo_attainment.shape == (2,)
+        assert tm.p99_latency_s.shape == (2, 32)
+        # trace-aware evaluate_scenarios agrees with the TraceMetrics view
+        np.testing.assert_array_equal(
+            np.asarray(cm.evaluate_scenarios(DP, scens).reward),
+            np.asarray(tm.reward))
+
+
+class TestQueueingProxy:
+    @pytest.mark.parametrize("rho", [0.3, 0.7, 0.9])
+    def test_calibrated_against_slot_scheduler_sim(self, rho):
+        mu, c = 40.0, 8
+        qps = rho * mu
+        _, p99 = cm.queueing_p99(jnp.float32(mu), jnp.float32(qps),
+                                 jnp.float32(c))
+        sim = tr.slot_scheduler_p99_sim(qps, mu, c, n_tasks=4000)
+        ratio = float(p99) / sim
+        assert 0.4 <= ratio <= 2.5, (
+            f"analytic/sim p99 ratio {ratio:.2f} out of band at rho={rho}")
+
+    def test_monotone_in_load_and_overload_penalized(self):
+        mu, c = 40.0, 8
+        loads = jnp.asarray([0.2, 0.5, 0.8, 0.95, 1.3]) * mu
+        _, p99 = cm.queueing_p99(jnp.float32(mu), loads, jnp.float32(c))
+        p = np.asarray(p99)
+        assert (np.diff(p) > 0.0).all()
+        d = c / mu
+        assert p[-1] > d * cm._OVERLOAD_PEN * 0.2   # overload term bites
+
+
+class TestFourObjectiveArchive:
+    def test_insert_and_hypervolume(self):
+        key = jax.random.PRNGKey(0)
+        pts3 = jax.random.uniform(key, (24, 3), minval=0.5, maxval=4.0)
+        slo = jax.random.uniform(jax.random.PRNGKey(1), (24, 1))
+        pts4 = jnp.concatenate([pts3, slo], axis=-1)
+        flats = jnp.zeros((24, ps.N_PARAMS), jnp.int32)
+        a4 = ar.insert_batch(ar.empty(16, n_obj=4), pts4, flats)
+        assert int(a4.n_valid) > 0
+        hv = float(ar.hypervolume(
+            a4, ar.nadir_ref(a4.points, a4.valid)))
+        assert hv > 0.0
+        # a strictly-better SLO at identical PPAC is non-dominated in 4-D
+        base = jnp.asarray([[1.0, 1.0, 1.0, 0.5]], jnp.float32)
+        better = jnp.asarray([[1.0, 1.0, 1.0, 0.9]], jnp.float32)
+        both = jnp.concatenate([base, better])
+        mask = ar.non_dominated_mask(both)
+        assert not bool(mask[0]) and bool(mask[1])
+
+    def test_three_objective_path_unchanged(self):
+        key = jax.random.PRNGKey(2)
+        pts = jax.random.uniform(key, (24, 3), minval=0.5, maxval=4.0)
+        flats = jnp.zeros((24, ps.N_PARAMS), jnp.int32)
+        a = ar.insert_batch(ar.empty(16), pts, flats)
+        ref = ar.nadir_ref(pts)
+        hv = float(ar.hypervolume(a, ref))
+        # brute-force Monte Carlo cross-check of the recursive sweep
+        rng = np.random.default_rng(0)
+        refm = np.asarray(ar._to_min(ref))
+        pm = np.asarray(ar._to_min(a.points))[np.asarray(a.valid)]
+        lo = pm.min(0)
+        samp = rng.uniform(lo, refm, (100000, 3))
+        dom = ((samp[:, None, :] >= pm[None, :, :]).all(-1)).any(1)
+        mc = float(dom.mean() * np.prod(refm - lo))
+        assert hv == pytest.approx(mc, rel=0.05)
+
+
+@pytest.mark.slow
+class TestSuiteIntegration:
+    def test_traced_smoke_suite(self):
+        import dataclasses
+
+        from repro.optimizer import scenario as sc
+
+        cfg = dataclasses.replace(
+            sc.SMOKE_SUITE, workloads=("qwen2-0.5b:decode",),
+            weight_grid=((1.0, 1.0, 0.1),), trace="bursty")
+        res = sc.run_suite(jax.random.PRNGKey(0), cfg)
+        o = res.outcomes[0]
+        assert o.slo_attainment is not None
+        assert 0.0 <= o.slo_attainment <= 1.0
+        assert o.p99_latency_s > 0.0
+        assert res.archive.points.shape[-1] == 4
+        assert "|trace=bursty" in o.name
+        js = sc.to_json(res)
+        assert js["scenarios"][0]["slo_attainment"] == o.slo_attainment
