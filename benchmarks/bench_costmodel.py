@@ -42,6 +42,12 @@ gates its wall-clock win over the mixed delta stream) and
 from the carried ``PlacementEvalCache`` with ``lax.cond``-gated
 vectorized auto-reset vs the cache-free scratch rollout;
 ``--assert-min-env-step-ratio`` gates the end-to-end step ratio).
+
+``--mapping`` records the fourth design layer's cost and gain: full-tier
+``evaluate`` throughput with a traced mapping vs ``mapping=None`` (the
+latter compiles the exact unmapped program), and the extra reward that
+SA mapping co-annealing (``p_mapping=0.25``) buys over placement-only
+refinement at the same iteration budget.
 """
 
 from __future__ import annotations
@@ -439,6 +445,74 @@ def _placement_chains_bench(smoke: bool) -> dict:
     return rec
 
 
+def _mapping_bench(smoke: bool, batch: int, iters: int) -> dict:
+    """Mapping-layer cost and gain (fourth design layer).
+
+    Two questions, answered on the same container and protocol as the
+    tier benches above:
+
+      - **Eval cost**: full-tier ``costmodel.evaluate`` throughput with a
+        traced (canonical) mapping vs ``mapping=None`` on the same
+        batch/canonical floorplan. The mapped program adds the per-slot
+        stage-neighbor reduction to the NoP tail, so this records what
+        mapping support costs when it IS requested (``mapping=None``
+        statically compiles the exact unmapped program — zero cost, by
+        construction, tested in tests/test_mapping.py).
+      - **SA gain**: ``sa.refine_placement`` with mapping co-annealing
+        (``p_mapping=0.25``) vs placement-only moves, same keys, same
+        total iteration budget, placement-sensitive preset. The mean /
+        max extra reward over the placement-only winner is the honest
+        measure of what the fourth layer buys.
+    """
+    from repro.core import env as chipenv
+    from repro.core import mapping as mpg
+    from repro.optimizer import scenario as suite
+    from repro.sa import annealing as sa
+
+    n = min(batch, 16384)
+    dp = ps.random_design(jax.random.PRNGKey(0), (n,))
+    canon = mpg.canonical(batch_shape=(n,))
+
+    unmapped_fn = jax.jit(
+        lambda d: cm.evaluate(d, nop_fidelity="full").reward)
+    dt_unmapped = _throughput(unmapped_fn, dp, iters)
+    mapped_fn = jax.jit(
+        lambda a: cm.evaluate(a[0], nop_fidelity="full",
+                              mapping=a[1]).reward)
+    dt_mapped = _throughput(mapped_fn, (dp, canon), iters)
+
+    n_designs = 8 if smoke else 16
+    n_iters = 300 if smoke else 1000
+    env_cfg = chipenv.EnvConfig(hw=suite.PLACEMENT_SENSITIVE_HW)
+    dps = ps.random_design(jax.random.PRNGKey(11), (n_designs,))
+    keys = jax.random.split(jax.random.PRNGKey(12), n_designs)
+    gains = {}
+    for name, p_map in (("placement_only", 0.0), ("co_anneal", 0.25)):
+        cfg = sa.PlacementSAConfig(n_iters=n_iters, p_mapping=p_map)
+        res = jax.jit(jax.vmap(lambda k, d, _c=cfg: sa.refine_placement(
+            k, d, env_cfg, _c).best_reward))(keys, dps)
+        gains[name] = np.asarray(res)
+    extra = gains["co_anneal"] - gains["placement_only"]
+
+    rec = {
+        "batch": n,
+        "unmapped_designs_per_s": round(n / dt_unmapped, 1),
+        "mapped_designs_per_s": round(n / dt_mapped, 1),
+        "mapped_cost_x": round(dt_mapped / dt_unmapped, 3),
+        "sa_batch": n_designs, "sa_iters": n_iters, "p_mapping": 0.25,
+        "mapping_sa_mean_extra_gain": round(float(extra.mean()), 4),
+        "mapping_sa_max_extra_gain": round(float(extra.max()), 4),
+        "mapping_sa_frac_improved": round(float((extra > 0).mean()), 3),
+    }
+    print(f"[bench] mapping eval: unmapped {n/dt_unmapped:,.0f} designs/s "
+          f"vs mapped {n/dt_mapped:,.0f} -> {rec['mapped_cost_x']:.2f}x "
+          f"full-tier cost when a mapping is traced")
+    print(f"[bench] mapping SA: co-anneal extra gain over placement-only "
+          f"mean {extra.mean():+.4f}, max {extra.max():+.4f} "
+          f"({rec['mapping_sa_frac_improved']:.0%} of designs improved)")
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=65536)
@@ -466,6 +540,9 @@ def main():
                          "scratch-evaluate rollout's steps/s (wall clock)")
     ap.add_argument("--placement-gain", action="store_true",
                     help="also sweep placement-SA gain per HW preset")
+    ap.add_argument("--mapping", action="store_true",
+                    help="also record mapped vs unmapped full-tier eval "
+                         "throughput and the mapping-SA co-anneal gain")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.abspath(__file__)), "BENCH_costmodel.json"))
     args = ap.parse_args()
@@ -530,6 +607,9 @@ def main():
         record["placement_gain"] = _placement_gain_sweep(
             n_designs=8 if args.smoke else 16,
             n_iters=200 if args.smoke else 4000)
+
+    if args.mapping:
+        record["mapping"] = _mapping_bench(args.smoke, n, iters)
 
     with open(args.out, "w") as f:
         json.dump(record, f, indent=2)

@@ -96,3 +96,46 @@ python benchmarks/bench_costmodel.py --smoke --assert-min-ratio 1.8 \
     --assert-min-sa-ratio 1.05 --assert-min-sa-kernel-ratio 1.7 \
     --assert-min-phased-sa-ratio 1.25 --assert-min-env-step-ratio 2.5 \
     --out "${TMPDIR:-/tmp}/bench_costmodel_ci.json"
+
+echo "=== smoke: mapping-layer guards (fourth design layer) ==="
+# (a) mapping=None must stay bit-exact: the jitted full-tier evaluate
+#     with mapping=None compiles the identical pre-mapping program, so
+#     every Metrics leaf on a 4k random batch must match the no-kwarg
+#     call bitwise; (b) the mapping-enabled smoke suite (MAPPING_SMOKE)
+#     must never lose a scenario winner to the three-layer
+#     placement-sensitive baseline on the same key — holds by
+#     construction (the mapping stage folds its own key stream,
+#     fold_in(key, 8), and swaps a mapped candidate in only on strict
+#     improvement), so a failure means that contract was broken.
+python - <<'PY'
+import jax, jax.numpy as jnp, numpy as np, sys
+from repro.core import costmodel as cm, params as ps
+from repro.optimizer import scenario as suite
+
+dp = ps.random_design(jax.random.PRNGKey(0), (4096,))
+a = jax.jit(lambda d: cm.evaluate(d, nop_fidelity="full"))(dp)
+b = jax.jit(lambda d: cm.evaluate(d, nop_fidelity="full",
+                                  mapping=None))(dp)
+for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+    if not bool(jnp.array_equal(x, y)):
+        print("[ci] FAIL: mapping=None is not bit-exact with the "
+              "pre-mapping full tier", file=sys.stderr)
+        sys.exit(1)
+print("[ci] mapping=None bit-exact on the full tier (4096 designs)")
+
+key = jax.random.PRNGKey(0)
+base = suite.run_suite(key, suite.PLACEMENT_SENSITIVE_SMOKE)
+mapped = suite.run_suite(key, suite.MAPPING_SMOKE)
+worse = []
+for ob, om in zip(base.outcomes, mapped.outcomes):
+    if om.best_reward < ob.best_reward - 1e-6:
+        worse.append((om.name, om.best_reward, ob.best_reward))
+if worse:
+    print(f"[ci] FAIL: mapping-enabled suite lost winners: {worse}",
+          file=sys.stderr)
+    sys.exit(1)
+gains = [om.best_reward - ob.best_reward
+         for ob, om in zip(base.outcomes, mapped.outcomes)]
+print(f"[ci] mapping suite never-worse on {len(gains)} scenarios "
+      f"(mean gain {np.mean(gains):+.3f}, max {np.max(gains):+.3f})")
+PY

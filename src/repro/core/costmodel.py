@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hw_constants as hw
+from repro.core import mapping as mpg
 from repro.core import params as ps
 from repro.core import placement as pm
 
@@ -417,7 +418,8 @@ def _eval_prefix(dp: ps.DesignPoint, cfg: hw.HWConfig) -> EvalPrefix:
 
 def _metrics_from_nop(pre: EvalPrefix, workload: Workload,
                       weights: RewardWeights, cfg: hw.HWConfig,
-                      nop: pm.NoPStats, nop_canon: pm.NoPStats) -> Metrics:
+                      nop: pm.NoPStats, nop_canon: pm.NoPStats,
+                      mapping: mpg.Mapping = None) -> Metrics:
     """NoP stats -> full PPAC metric bundle (Eqs. 10-17 suffix).
 
     The placement-dependent half of :func:`evaluate`: everything the NoP
@@ -425,6 +427,16 @@ def _metrics_from_nop(pre: EvalPrefix, workload: Workload,
     package cost, reward. Shared verbatim between the tiered
     ``evaluate`` paths and the delta-evaluated placement SA
     (:func:`reward_from_nop`), so both score a placement identically.
+
+    ``mapping`` (default None: the exact pre-mapping program, statically
+    dispatched) additionally re-prices the dataflow-dependent channels:
+    pipeline receivers cut the HBM bandwidth demand and HBM-side
+    interconnect energy (3 of 4 operand streams arrive chiplet-to-
+    chiplet) while raising the AI-fabric demand and forwarding energy;
+    off-canonical tiles trade HBM traffic against utilization; and the
+    pipeline-balance / tile factors scale ``U_chip``. Every factor is an
+    exact 1.0 (or added 0.0) under ``mapping.canonical()``, so the
+    canonical mapping is numerically identical to ``mapping=None``.
     """
     v = pre.v
     is_lol, uses_3d_mem = pre.is_lol, pre.uses_3d_mem
@@ -472,6 +484,12 @@ def _metrics_from_nop(pre: EvalPrefix, workload: Workload,
                     * ops_per_die / reuse_comm) / _GIGA
     bw_req_hbm = 4.0 * operand_gbps                    # Eq. 13 (src = HBM)
     bw_req_ai = 1.0 * operand_gbps                     # Eq. 13 (src = AI)
+    if mapping is not None:
+        ms = mpg.traffic_summary(mapping, n_positions)
+        # receivers pull 1 of 4 streams from HBM; larger tiles amortize
+        # more HBM traffic; forwarded streams land on the AI fabric
+        bw_req_hbm = bw_req_hbm * (ms.pull_frac * ms.tile_hbm)
+        bw_req_ai = bw_req_ai * (1.0 + 3.0 * ms.recv_frac)
     link_bw_hbm = v.hbm_dr_2p5d * v.hbm_links_2p5d * congestion
     if cfg.hbm_peak_cap:
         bw_act_hbm = jnp.minimum(link_bw_hbm,
@@ -489,6 +507,10 @@ def _metrics_from_nop(pre: EvalPrefix, workload: Workload,
 
     # ---- throughput (Eqs. 3-4) --------------------------------------------
     u_chip = workload.mapping_eff
+    if mapping is not None:
+        # tile sweet-spot + pipeline-balance penalties on the mapping
+        # efficiency (exactly 1.0 x 1.0 at canonical)
+        u_chip = u_chip * (ms.tile_u * ms.balance)
     peak_tops = pes_per_die * n_dies * cfg.freq_ghz * _GIGA / _TERA
     eff_ops = ops_per_die * n_dies * u_sys * u_chip          # MAC/s, Eq. 3
     eff_tops = eff_ops / _TERA
@@ -503,11 +525,18 @@ def _metrics_from_nop(pre: EvalPrefix, workload: Workload,
     bits_per_op_hbm = cfg.n_operands * cfg.data_width_bits / reuse_comm
     # half of the operand traffic is forwarded chiplet-to-chiplet (Fig. 5
     # dataflow: inputs broadcast through neighbours) (CAL)
-    bits_per_op_ai = 0.5 * bits_per_op_hbm
-    e_comm = (bits_per_op_hbm * (e_link_hbm + cfg.e_bit_hbm_device_pj)
+    if mapping is None:
+        bits_hbm_eff = bits_per_op_hbm
+        bits_per_op_ai = 0.5 * bits_per_op_hbm
+    else:
+        # the streams a receiver no longer pulls from HBM traverse the
+        # AI fabric instead (0.75 x recv_frac of the operand bits)
+        bits_hbm_eff = bits_per_op_hbm * (ms.pull_frac * ms.tile_hbm)
+        bits_per_op_ai = bits_per_op_hbm * (0.5 + 0.75 * ms.recv_frac)
+    e_comm = (bits_hbm_eff * (e_link_hbm + cfg.e_bit_hbm_device_pj)
               + bits_per_op_ai * e_link_ai
               + is_lol * bits_per_op_ai * e_link_3d
-              + uses_3d_mem * bits_per_op_hbm * (e_link_3d - e_link_hbm))
+              + uses_3d_mem * bits_hbm_eff * (e_link_3d - e_link_hbm))
     e_op_total = cfg.e_op_pj + e_comm                         # Eq. 7
     energy_per_task = ops_per_task * e_op_total * 1e-12 / u_chip
     tasks_per_joule = 1.0 / jnp.maximum(energy_per_task, 1e-30)
@@ -615,7 +644,8 @@ def evaluate(dp: ps.DesignPoint,
              weights: RewardWeights = RewardWeights(),
              cfg: hw.HWConfig = hw.DEFAULT_HW,
              placement: pm.Placement = None,
-             nop_fidelity: str = "auto") -> Metrics:
+             nop_fidelity: str = "auto",
+             mapping: mpg.Mapping = None) -> Metrics:
     """Evaluate a (batch of) design point(s) -> full PPAC metrics.
 
     ``placement`` optionally places every chiplet slot / HBM stack on the
@@ -657,9 +687,13 @@ def evaluate(dp: ps.DesignPoint,
         raise ValueError(
             "nop_fidelity='fast' evaluates the canonical floorplan only; "
             "drop the explicit placement or use 'auto'/'full'")
+    if nop_fidelity == "fast" and mapping is not None:
+        raise ValueError(
+            "nop_fidelity='fast' evaluates the canonical dataflow only; "
+            "drop the explicit mapping or use 'auto'/'full'")
     pre = _eval_prefix(dp, cfg)
     v, m, n = pre.v, pre.mesh_m, pre.mesh_n
-    if placement is None and nop_fidelity != "full":
+    if placement is None and nop_fidelity != "full" and mapping is None:
         # fast tier: closed-form canonical stats, no Placement materialized
         nop = pm.nop_stats_fast(m, n, pre.n_positions, v.hbm_mask,
                                 v.arch_type, pre.mesh_edges)
@@ -667,14 +701,21 @@ def evaluate(dp: ps.DesignPoint,
     elif placement is None:
         placement = pm.canonical(m, n, v.hbm_mask, v.arch_type)
         nop = pm.nop_stats(placement, pre.n_positions, v.hbm_mask,
-                           v.arch_type, pre.mesh_edges)
-        nop_canon = nop             # same object -> congestion exactly 1
+                           v.arch_type, pre.mesh_edges, mapping=mapping)
+        if mapping is None:
+            nop_canon = nop         # same object -> congestion exactly 1
+        else:
+            # congestion normalizer stays the *unmapped* canonical pass so
+            # a traffic-reducing mapping is rewarded, not normalized away
+            nop_canon = pm.nop_stats_fast(m, n, pre.n_positions, v.hbm_mask,
+                                          v.arch_type, pre.mesh_edges)
     else:
         nop = pm.nop_stats(placement, pre.n_positions, v.hbm_mask,
-                           v.arch_type, pre.mesh_edges)
+                           v.arch_type, pre.mesh_edges, mapping=mapping)
         nop_canon = pm.nop_stats_fast(m, n, pre.n_positions, v.hbm_mask,
                                       v.arch_type, pre.mesh_edges)
-    mtr = _metrics_from_nop(pre, workload, weights, cfg, nop, nop_canon)
+    mtr = _metrics_from_nop(pre, workload, weights, cfg, nop, nop_canon,
+                            mapping)
     _notify_eval_taps(dp, workload, weights, mtr)
     return mtr
 
@@ -699,24 +740,40 @@ class PlacementCtx(NamedTuple):
     # trace's (T,) axis and reward_from_nop scores the whole trace
     # (broadcasting — same elementwise program as evaluate_trace)
     trace: TrafficTrace = None
+    # optional Mapping: the ctx-default dataflow the *_from_nop suffix
+    # scores against (overridable per call — the mapping-SA hot path
+    # passes candidates explicitly). The canonical baseline stays the
+    # unmapped fast tier either way.
+    mapping: mpg.Mapping = None
 
 
 def placement_ctx(dp: ps.DesignPoint,
                   workload: Workload = GENERIC_WORKLOAD,
                   weights: RewardWeights = RewardWeights(),
                   cfg: hw.HWConfig = hw.DEFAULT_HW,
-                  trace: TrafficTrace = None) -> PlacementCtx:
+                  trace: TrafficTrace = None,
+                  mapping: mpg.Mapping = None) -> PlacementCtx:
     """Precompute the placement-independent half of :func:`evaluate`."""
     pre = _eval_prefix(dp, cfg)
     nop_canon = pm.nop_stats_fast(pre.mesh_m, pre.mesh_n, pre.n_positions,
                                   pre.v.hbm_mask, pre.v.arch_type,
                                   pre.mesh_edges)
     return PlacementCtx(prefix=pre, workload=workload, weights=weights,
-                        nop_canon=nop_canon, trace=trace)
+                        nop_canon=nop_canon, trace=trace, mapping=mapping)
+
+
+# sentinel: "use the ctx's mapping" — distinct from an explicit None,
+# which forces the unmapped suffix regardless of the ctx default
+_USE_CTX_MAPPING = object()
+
+
+def _resolve_ctx_mapping(ctx: PlacementCtx, mapping):
+    return ctx.mapping if mapping is _USE_CTX_MAPPING else mapping
 
 
 def metrics_from_nop(ctx: PlacementCtx, nop: pm.NoPStats,
-                     cfg: hw.HWConfig) -> Metrics:
+                     cfg: hw.HWConfig,
+                     mapping=_USE_CTX_MAPPING) -> Metrics:
     """Full metrics of cached/delta NoP stats under a precomputed ctx.
 
     ``cfg`` is deliberately required (no ``DEFAULT_HW`` fallback): it
@@ -726,13 +783,20 @@ def metrics_from_nop(ctx: PlacementCtx, nop: pm.NoPStats,
     ``nop = placement.nop_stats_cache(...).stats`` (or any chain of
     ``nop_stats_delta`` updates of it) this equals
     ``evaluate(dp, ..., placement=...)`` bit-for-bit.
+
+    ``mapping`` defaults to the ctx's mapping; pass one explicitly to
+    score a candidate dataflow (it must be the same mapping the ``nop``
+    stats were computed under, exactly like the placement/cache
+    contract). Pass ``None`` to force the unmapped suffix.
     """
+    mapping = _resolve_ctx_mapping(ctx, mapping)
     return _metrics_from_nop(ctx.prefix, ctx.workload, ctx.weights, cfg,
-                             nop, ctx.nop_canon)
+                             nop, ctx.nop_canon, mapping)
 
 
 def reward_from_nop(ctx: PlacementCtx, nop: pm.NoPStats,
-                    cfg: hw.HWConfig) -> jnp.ndarray:
+                    cfg: hw.HWConfig,
+                    mapping=_USE_CTX_MAPPING) -> jnp.ndarray:
     """Scalar objective of cached/delta NoP stats (the SA hot path).
 
     ``cfg`` must match the ctx (see :func:`metrics_from_nop`). Only the
@@ -743,13 +807,14 @@ def reward_from_nop(ctx: PlacementCtx, nop: pm.NoPStats,
     scalar, still delta-evaluable.
     """
     if ctx.trace is None:
-        return metrics_from_nop(ctx, nop, cfg).reward
-    return _trace_aggregate(metrics_from_nop(ctx, nop, cfg), ctx.trace,
-                            ctx.weights).reward
+        return metrics_from_nop(ctx, nop, cfg, mapping).reward
+    return _trace_aggregate(metrics_from_nop(ctx, nop, cfg, mapping),
+                            ctx.trace, ctx.weights).reward
 
 
 def scenario_metrics_from_nop(ctx: PlacementCtx, nop: pm.NoPStats,
-                              cfg: hw.HWConfig) -> Metrics:
+                              cfg: hw.HWConfig,
+                              mapping=_USE_CTX_MAPPING) -> Metrics:
     """Like :func:`metrics_from_nop`, aggregated over the ctx's trace.
 
     For a trace-free ctx this IS :func:`metrics_from_nop` (bit-exact);
@@ -758,7 +823,7 @@ def scenario_metrics_from_nop(ctx: PlacementCtx, nop: pm.NoPStats,
     the SLO penalty and load-proportional energy (see
     :func:`evaluate_trace`).
     """
-    mtr = metrics_from_nop(ctx, nop, cfg)
+    mtr = metrics_from_nop(ctx, nop, cfg, mapping)
     if ctx.trace is None:
         return mtr
     return _trace_aggregate(mtr, ctx.trace, ctx.weights).metrics
@@ -769,16 +834,18 @@ def reward_only(dp: ps.DesignPoint,
                 weights: RewardWeights = RewardWeights(),
                 cfg: hw.HWConfig = hw.DEFAULT_HW,
                 placement: pm.Placement = None,
-                nop_fidelity: str = "auto") -> jnp.ndarray:
+                nop_fidelity: str = "auto",
+                mapping: mpg.Mapping = None) -> jnp.ndarray:
     """Cheap scalar objective for the optimizers."""
     return evaluate(dp, workload, weights, cfg, placement,
-                    nop_fidelity).reward
+                    nop_fidelity, mapping).reward
 
 
 def evaluate_scenario(dp: ps.DesignPoint, scenario: Scenario = Scenario(),
                       cfg: hw.HWConfig = hw.DEFAULT_HW,
                       placement: pm.Placement = None,
-                      nop_fidelity: str = "auto") -> Metrics:
+                      nop_fidelity: str = "auto",
+                      mapping: mpg.Mapping = None) -> Metrics:
     """`evaluate` keyed by a Scenario pytree (vmap over it for batches).
 
     A traced scenario (``scenario.trace is not None``) returns the
@@ -790,15 +857,17 @@ def evaluate_scenario(dp: ps.DesignPoint, scenario: Scenario = Scenario(),
     """
     if scenario.trace is None:
         return evaluate(dp, scenario.workload, scenario.weights, cfg,
-                        placement, nop_fidelity)
-    return evaluate_trace(dp, scenario, cfg, placement, nop_fidelity).metrics
+                        placement, nop_fidelity, mapping)
+    return evaluate_trace(dp, scenario, cfg, placement, nop_fidelity,
+                          mapping).metrics
 
 
 def evaluate_scenarios(dp: ps.DesignPoint, scenarios: Scenario,
                        cfg: hw.HWConfig = hw.DEFAULT_HW,
                        paired: bool = None,
                        placements: pm.Placement = None,
-                       nop_fidelity: str = "auto") -> Metrics:
+                       nop_fidelity: str = "auto",
+                       mappings: mpg.Mapping = None) -> Metrics:
     """Evaluate design point(s) under a *batch* of scenarios.
 
     ``scenarios`` carries a leading scenario axis S on every leaf. ``dp``
@@ -811,7 +880,8 @@ def evaluate_scenarios(dp: ps.DesignPoint, scenarios: Scenario,
     A B == S batch defaults to *paired*; pass ``paired=False`` to force
     the cross product (or ``paired=True`` to assert pairing was intended).
     ``placements`` (optional, leading axis S, paired mode only) evaluates
-    design i under scenario i with its own explicit placement.
+    design i under scenario i with its own explicit placement;
+    ``mappings`` pairs the same way for explicit dataflows.
     One compiled program for the whole (design x workload x weights) grid.
     """
     import jax
@@ -824,12 +894,15 @@ def evaluate_scenarios(dp: ps.DesignPoint, scenarios: Scenario,
         raise ValueError(
             f"paired=True needs a design batch with leading axis "
             f"{n_scen}, got shape {jnp.shape(dp.arch_type)}")
-    if placements is not None and not paired:
-        raise ValueError("placements requires paired design/scenario axes")
-    in_axes = (0 if paired else None, 0, None if placements is None else 0)
+    if (placements is not None or mappings is not None) and not paired:
+        raise ValueError(
+            "placements/mappings require paired design/scenario axes")
+    in_axes = (0 if paired else None, 0,
+               None if placements is None else 0,
+               None if mappings is None else 0)
     return jax.vmap(
-        lambda d, s, p: evaluate_scenario(d, s, cfg, p, nop_fidelity),
-        in_axes=in_axes)(dp, scenarios, placements)
+        lambda d, s, p, mp: evaluate_scenario(d, s, cfg, p, nop_fidelity, mp),
+        in_axes=in_axes)(dp, scenarios, placements, mappings)
 
 
 def reward_scenarios(dp: ps.DesignPoint, scenarios: Scenario,
@@ -843,7 +916,8 @@ def reward_scenarios(dp: ps.DesignPoint, scenarios: Scenario,
 def scenario_reward(dp: ps.DesignPoint, scenario: Scenario,
                     cfg: hw.HWConfig = hw.DEFAULT_HW,
                     placement: pm.Placement = None,
-                    nop_fidelity: str = "auto") -> jnp.ndarray:
+                    nop_fidelity: str = "auto",
+                    mapping: mpg.Mapping = None) -> jnp.ndarray:
     """Scalar objective of one (possibly traced) Scenario.
 
     The optimizer arms' hot-path entry: identical to :func:`reward_only`
@@ -853,8 +927,9 @@ def scenario_reward(dp: ps.DesignPoint, scenario: Scenario,
     """
     if scenario.trace is None:
         return evaluate(dp, scenario.workload, scenario.weights, cfg,
-                        placement, nop_fidelity).reward
-    return evaluate_trace(dp, scenario, cfg, placement, nop_fidelity).reward
+                        placement, nop_fidelity, mapping).reward
+    return evaluate_trace(dp, scenario, cfg, placement, nop_fidelity,
+                          mapping).reward
 
 
 # ---------------------------------------------------------------------------
@@ -980,7 +1055,8 @@ def _trace_aggregate(per_step: Metrics, trace: TrafficTrace,
 def evaluate_trace(dp: ps.DesignPoint, scenario: Scenario,
                    cfg: hw.HWConfig = hw.DEFAULT_HW,
                    placement: pm.Placement = None,
-                   nop_fidelity: str = "auto") -> TraceMetrics:
+                   nop_fidelity: str = "auto",
+                   mapping: mpg.Mapping = None) -> TraceMetrics:
     """Score design point(s) against a traced scenario's full trace.
 
     vmaps :func:`evaluate` over the workload's leading (T,) axis — the
@@ -994,7 +1070,7 @@ def evaluate_trace(dp: ps.DesignPoint, scenario: Scenario,
                          "evaluate_scenario for point scenarios")
     per_step = jax.vmap(
         lambda w: evaluate(dp, w, scenario.weights, cfg, placement,
-                           nop_fidelity))(scenario.workload)
+                           nop_fidelity, mapping))(scenario.workload)
     return _trace_aggregate(per_step, scenario.trace, scenario.weights)
 
 
@@ -1002,7 +1078,8 @@ def evaluate_trace_scenarios(dp: ps.DesignPoint, scenarios: Scenario,
                              cfg: hw.HWConfig = hw.DEFAULT_HW,
                              paired: bool = None,
                              placements: pm.Placement = None,
-                             nop_fidelity: str = "auto") -> TraceMetrics:
+                             nop_fidelity: str = "auto",
+                             mappings: mpg.Mapping = None) -> TraceMetrics:
     """Trace metrics under a *batch* of traced scenarios.
 
     The traced twin of :func:`evaluate_scenarios` (same pairing rules,
@@ -1019,9 +1096,12 @@ def evaluate_trace_scenarios(dp: ps.DesignPoint, scenarios: Scenario,
         raise ValueError(
             f"paired=True needs a design batch with leading axis "
             f"{n_scen}, got shape {jnp.shape(dp.arch_type)}")
-    if placements is not None and not paired:
-        raise ValueError("placements requires paired design/scenario axes")
-    in_axes = (0 if paired else None, 0, None if placements is None else 0)
+    if (placements is not None or mappings is not None) and not paired:
+        raise ValueError(
+            "placements/mappings require paired design/scenario axes")
+    in_axes = (0 if paired else None, 0,
+               None if placements is None else 0,
+               None if mappings is None else 0)
     return jax.vmap(
-        lambda d, s, p: evaluate_trace(d, s, cfg, p, nop_fidelity),
-        in_axes=in_axes)(dp, scenarios, placements)
+        lambda d, s, p, mp: evaluate_trace(d, s, cfg, p, nop_fidelity, mp),
+        in_axes=in_axes)(dp, scenarios, placements, mappings)

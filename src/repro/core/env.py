@@ -46,12 +46,14 @@ import jax.numpy as jnp
 
 from repro.core import costmodel as cm
 from repro.core import hw_constants as hw
+from repro.core import mapping as mpg
 from repro.core import params as ps
 from repro.core import placement as pm
 from repro.core import spaces
 
 OBS_DIM = 10
 OBS_DIM_PLACEMENT = 13   # + [hops_hbm_mean, hops_ai_mean, link_contention]
+OBS_DIM_MAPPING = 16     # + [recv_frac, pipeline balance, tile_hbm]
 
 
 Scenario = cm.Scenario   # re-export: the traced (workload, weights) pytree
@@ -85,6 +87,13 @@ class EnvConfig:
     # (delta NoP stats + prefix/suffix reward split); False re-evaluates
     # the mutated floorplan from scratch each step (bench/test oracle).
     delta_eval: bool = True
+    # mapping co-exploration (core/mapping.py): the placement episode
+    # additionally carries a Mapping, actions gain the four
+    # params.MAPPING_HEAD_SIZES heads (reassign one slot's pipeline
+    # stage + one layer group's tile), and the observation gains three
+    # mapping diagnostics. Requires placement_episode. Default off —
+    # the 4-head placement episode stays bit-identical.
+    mapping_actions: bool = False
 
     def scenario(self) -> cm.Scenario:
         return cm.Scenario(workload=self.workload, weights=self.weights)
@@ -96,8 +105,13 @@ def _resolve(scenario, cfg: EnvConfig) -> cm.Scenario:
 
 def head_sizes(cfg: EnvConfig) -> Tuple[int, ...]:
     """Action head sizes for this config (14 Table-1 heads, +4 placement;
-    placement episodes use the 4 placement heads alone)."""
+    placement episodes use the 4 placement heads alone, +4 mapping heads
+    with ``mapping_actions``)."""
+    if cfg.mapping_actions and not cfg.placement_episode:
+        raise ValueError("mapping_actions requires placement_episode")
     if cfg.placement_episode:
+        if cfg.mapping_actions:
+            return ps.PLACEMENT_HEAD_SIZES + ps.MAPPING_HEAD_SIZES
         return ps.PLACEMENT_HEAD_SIZES
     return ps.EXT_HEAD_SIZES if cfg.placement_actions else ps.HEAD_SIZES
 
@@ -107,6 +121,8 @@ def action_dim(cfg: EnvConfig) -> int:
 
 
 def obs_dim(cfg: EnvConfig) -> int:
+    if cfg.mapping_actions and cfg.placement_episode:
+        return OBS_DIM_MAPPING
     ext = cfg.placement_actions or cfg.placement_episode
     return OBS_DIM_PLACEMENT if ext else OBS_DIM
 
@@ -121,6 +137,9 @@ class EnvState(NamedTuple):
     # floorplan + eval cache the delta step prices moves against.
     ctx: cm.PlacementCtx = None
     cache: pm.PlacementEvalCache = None
+    # mapping-episode mode only (EnvConfig.mapping_actions): the carried
+    # dataflow the next step mutates; starts canonical at reset.
+    mapping: mpg.Mapping = None
 
 
 action_space = spaces.MultiDiscrete(ps.HEAD_SIZES)
@@ -134,9 +153,11 @@ observation_space = spaces.Box(-10.0, 10.0, (OBS_DIM,))
 ext_observation_space = spaces.Box(-10.0, 10.0, (OBS_DIM_PLACEMENT,))
 
 
-def _observe(metrics: cm.Metrics, t, prev_reward, cfg: EnvConfig):
+def _observe(metrics: cm.Metrics, t, prev_reward, cfg: EnvConfig,
+             msum: mpg.MappingSummary = None):
     """Normalized observation; 10-dim, +3 NoP diagnostics when the
-    placement extension is on (see module docstring)."""
+    placement extension is on, +3 mapping diagnostics when
+    ``mapping_actions`` is on (see module docstring)."""
     cols = [
         jnp.broadcast_to(jnp.float32(cfg.hw.package_area_mm2 / 1000.0),
                          jnp.shape(metrics.die_area_mm2)),
@@ -156,6 +177,13 @@ def _observe(metrics: cm.Metrics, t, prev_reward, cfg: EnvConfig):
             metrics.hops_hbm_mean / 8.0,
             metrics.hops_ai_mean / 8.0,
             metrics.link_contention / 50.0,
+        ]
+    if cfg.mapping_actions and cfg.placement_episode:
+        like = jnp.shape(metrics.die_area_mm2)
+        cols += [
+            jnp.broadcast_to(msum.recv_frac, like),
+            jnp.broadcast_to(msum.balance, like),
+            jnp.broadcast_to(msum.tile_hbm / 2.0, like),
         ]
     return jnp.clip(jnp.stack(cols, axis=-1), -10.0, 10.0)
 
@@ -215,9 +243,16 @@ def _reset_placement(design, k_state, cfg: EnvConfig, scenario):
                                ctx.prefix.mesh_edges)
     metrics = cm.scenario_metrics_from_nop(ctx, cache.stats, cfg.hw)
     zero = jnp.float32(0.0)
+    mapping = msum = None
+    if cfg.mapping_actions:
+        # episodes start from the paper's canonical dataflow — an exact
+        # no-op, so the reset metrics/reward stay bit-equal to the
+        # mapping-free placement episode
+        mapping = mpg.canonical()
+        msum = mpg.traffic_summary(mapping, n_pos)
     state = EnvState(design=design, t=jnp.int32(0), prev_reward=zero,
-                     key=k_state, ctx=ctx, cache=cache)
-    return state, _observe(metrics, 0, zero, cfg)
+                     key=k_state, ctx=ctx, cache=cache, mapping=mapping)
+    return state, _observe(metrics, 0, zero, cfg, msum)
 
 
 def step(state: EnvState, action: jnp.ndarray,
@@ -264,30 +299,42 @@ def _step_placement(state: EnvState, action: jnp.ndarray,
     v = ps.decode(state.design)
     n_pos = cm.footprint_positions(v)
     a = jnp.asarray(action, jnp.int32)
+    mapping = msum = None
+    if cfg.mapping_actions:
+        mapping = mpg.apply_action(state.mapping,
+                                   a[len(ps.PLACEMENT_HEAD_SIZES):], n_pos)
+        msum = mpg.traffic_summary(mapping, n_pos)
     if cfg.delta_eval:
         # one fused delta: relocate + re-anchor, one tail — equivalent to
         # apply_action on the carried floorplan (placement.nop_stats_delta
         # docstring), so the scratch path below is its exact oracle.
+        # Both grid-cell heads are normalized identically: an
+        # out-of-space action must price the same as its clipped twin on
+        # every path, not silently misprice via a clamped gather.
         tgt = jnp.clip(a[3], 0, pm.N_CELLS - 1)
         ti, tj = pm.cell_ij(tgt)
-        move = pm.PlacementMove(kind=jnp.int32(1), slot=a[0], cell=a[1],
+        move = pm.PlacementMove(kind=jnp.int32(1), slot=a[0],
+                                cell=jnp.clip(a[1], 0, pm.N_CELLS - 1),
                                 hbm=a[2],
                                 anchor=jnp.stack([ti, tj], axis=-1))
         cache = pm.nop_stats_delta(state.cache, move, n_pos, v.hbm_mask,
                                    v.arch_type, state.ctx.prefix.mesh_edges,
-                                   move_kinds="both")
-        metrics = cm.scenario_metrics_from_nop(state.ctx, cache.stats, cfg.hw)
+                                   move_kinds="both", mapping=mapping)
+        metrics = cm.scenario_metrics_from_nop(state.ctx, cache.stats,
+                                               cfg.hw, mapping=mapping)
     else:
         plc = pm.apply_action(state.cache.placement, a, n_pos)
-        metrics = cm.evaluate_scenario(state.design, scenario, cfg.hw, plc)
+        metrics = cm.evaluate_scenario(state.design, scenario, cfg.hw, plc,
+                                       mapping=mapping)
         # keep the carried floorplan current; the stats fields go stale
         # but are never read on this path (pricing is from-scratch)
         cache = state.cache._replace(placement=plc)
     reward = metrics.reward
     t_next = state.t + 1
     done = t_next >= cfg.episode_len
-    obs = _observe(metrics, t_next, reward, cfg)
-    new_state = state._replace(t=t_next, prev_reward=reward, cache=cache)
+    obs = _observe(metrics, t_next, reward, cfg, msum)
+    new_state = state._replace(t=t_next, prev_reward=reward, cache=cache,
+                               mapping=mapping)
     return new_state, obs, reward, done, metrics
 
 

@@ -1,0 +1,255 @@
+"""Mapping/dataflow co-exploration: the fourth design layer (ROADMAP 4).
+
+The paper pins the intra/inter-chiplet dataflow to a fixed
+weight-stationary mapping: every chiplet pulls all four operand streams
+of Eq. 13 from its nearest HBM stack and forwards one stream through the
+mesh (Fig. 5). Gemini (arXiv 2312.16436) and Monad (arXiv 2302.11256)
+show the mapping axis — tiling and layer-pipelining across chiplets —
+moves PPAC as much as resource allocation does, so this module makes the
+mapping an explicit, optimizable pytree threaded through the evaluator
+exactly the way ``placement.Placement`` was:
+
+  - ``Mapping`` — per-layer-group tile-size indices plus a
+    chiplet-pipeline *stage* assignment over the footprint slots.
+  - ``canonical()`` — the paper's fixed dataflow: every slot in stage 0
+    (no layer pipelining) and every layer group at the calibrated
+    weight-stationary tile (``CANON_TILE``). Under the canonical
+    mapping every derived factor below is *exactly* 1.0 / 0.0, so the
+    mapped evaluation path is an exact float no-op relative to the
+    unmapped one (and ``mapping=None`` never traces it at all).
+
+Semantics of the two axes:
+
+  - **Stages** partition the active slots into a layer pipeline. A slot
+    in stage ``s > 0`` whose predecessor stage ``s - 1`` is non-empty is
+    a *receiver*: three of its four operand streams arrive
+    chiplet-to-chiplet from the previous stage (activations forwarded
+    along the pipeline) instead of being pulled from HBM — the per-slot
+    HBM weight drops from 4 to 1 and the NoP picks up the forwarded
+    streams over the distance to the previous stage's centroid
+    (``placement._stats_tail``). Unbalanced pipelines stall: throughput
+    follows the largest stage (``balance`` below).
+  - **Tile indices** move the per-layer-group tile size off the
+    calibrated weight-stationary point. Larger tiles amortize more HBM
+    traffic (``tile_hbm < 1``) but fall off the utilization sweet spot
+    in either direction (``tile_u <= 1``) — the classic mapping
+    trade-off, quadratic around the canonical tile.
+
+Pure jnp, branchless, batch-generic; importable by ``placement`` (which
+must not import ``costmodel``).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import params as ps
+
+MAX_SLOTS = 128                 # mirrors placement.MAX_SLOTS (<= Table 1)
+MAX_STAGES = 4                  # pipeline depth cap (diminishing returns)
+N_LAYER_GROUPS = 4              # coarse layer buckets sharing a tile size
+N_TILE = 8                      # tile-size grid points per group
+CANON_TILE = 3                  # the paper's weight-stationary tile index
+
+# Calibration of the tile trade-off (CAL): one grid step away from the
+# canonical tile halves/doubles nothing dramatic — +/-1 step changes HBM
+# traffic by 2^0.35 ~ 1.27x and costs ~3% utilization, so the optimum
+# moves off canonical only when the design is actually HBM-bound.
+TILE_HBM_EXP = 0.35             # log2 HBM-traffic change per tile step
+TILE_U_PEN = 0.03               # quadratic utilization penalty per step^2
+
+# Flat encoding (serialization + kernel packing):
+#   [0:MAX_SLOTS)                     per-slot stage ids (int-valued)
+#   [MAX_SLOTS:MAX_SLOTS+N_GROUPS)    per-group tile indices (int-valued)
+FLAT_DIM = MAX_SLOTS + N_LAYER_GROUPS
+
+
+class Mapping(NamedTuple):
+    """One dataflow assignment: per-group tiles + per-slot pipeline stage.
+
+    ``stage[s]`` is the pipeline stage of footprint slot ``s`` (only the
+    first ``n_positions`` slots of a design are active; inactive slots'
+    stages are ignored by every consumer). ``tile_idx[g]`` indexes the
+    tile-size grid of layer group ``g``.
+    """
+
+    tile_idx: jnp.ndarray       # (..., N_LAYER_GROUPS) int32 in [0, N_TILE)
+    stage: jnp.ndarray          # (..., MAX_SLOTS) int32 in [0, MAX_STAGES)
+
+
+class MappingSummary(NamedTuple):
+    """Placement-free traffic/utilization factors of one mapping.
+
+    Every field is an exact float no-op value under ``canonical()``:
+    ``recv_frac = fwd_hop_frac = 0.0``, the rest exactly ``1.0`` — the
+    contract that keeps the canonical mapping bit-compatible with the
+    unmapped evaluation suffix.
+    """
+
+    recv_frac: jnp.ndarray      # receiver slots / active slots
+    pull_frac: jnp.ndarray      # fraction of Eq.-13 HBM streams kept
+    balance: jnp.ndarray        # pipeline balance (1.0 = no stall)
+    tile_hbm: jnp.ndarray       # HBM-traffic multiplier from the tiles
+    tile_u: jnp.ndarray         # utilization multiplier from the tiles
+
+
+def canonical(batch_shape=()) -> Mapping:
+    """The paper's fixed weight-stationary dataflow as a ``Mapping``.
+
+    All slots in stage 0 (no layer pipelining), every layer group at the
+    calibrated tile. Evaluating under this mapping is numerically
+    identical to ``mapping=None`` (tests/test_mapping.py pins it).
+    """
+    return Mapping(
+        tile_idx=jnp.full(tuple(batch_shape) + (N_LAYER_GROUPS,),
+                          CANON_TILE, jnp.int32),
+        stage=jnp.zeros(tuple(batch_shape) + (MAX_SLOTS,), jnp.int32))
+
+
+def clip_mapping(mapping: Mapping) -> Mapping:
+    """Clamp both index fields into their legal ranges (GA/SA proposals)."""
+    return Mapping(
+        tile_idx=jnp.clip(jnp.asarray(mapping.tile_idx, jnp.int32),
+                          0, N_TILE - 1),
+        stage=jnp.clip(jnp.asarray(mapping.stage, jnp.int32),
+                       0, MAX_STAGES - 1))
+
+
+def active_mask(n_positions) -> jnp.ndarray:
+    """(..., MAX_SLOTS) float 0/1 mask of the active footprint slots."""
+    n_pos = jnp.asarray(n_positions, jnp.float32)
+    slot = jnp.arange(MAX_SLOTS, dtype=jnp.float32)
+    return (slot < n_pos[..., None]).astype(jnp.float32)
+
+
+def stage_counts(mapping: Mapping, n_positions) -> jnp.ndarray:
+    """(..., MAX_STAGES) active-slot count per pipeline stage."""
+    stage = jnp.clip(jnp.asarray(mapping.stage, jnp.int32),
+                     0, MAX_STAGES - 1)
+    active = active_mask(n_positions)
+    oh = (stage[..., None] == jnp.arange(MAX_STAGES)).astype(jnp.float32)
+    return jnp.sum(active[..., None] * oh, axis=-2)
+
+
+def receiver_mask(mapping: Mapping, n_positions) -> jnp.ndarray:
+    """(..., MAX_SLOTS) float mask of pipeline *receiver* slots.
+
+    A receiver is an active slot in stage ``s > 0`` whose predecessor
+    stage ``s - 1`` holds at least one active slot — the slots whose
+    operand streams arrive chiplet-to-chiplet instead of from HBM. A
+    stage assignment with an empty predecessor degrades gracefully: the
+    orphaned stage keeps pulling from HBM (no free traffic).
+    """
+    stage = jnp.clip(jnp.asarray(mapping.stage, jnp.int32),
+                     0, MAX_STAGES - 1)
+    active = active_mask(n_positions)
+    cnt = stage_counts(mapping, n_positions)
+    prev_cnt = jnp.take_along_axis(
+        cnt, jnp.clip(stage - 1, 0, MAX_STAGES - 1), axis=-1)
+    return (active * (stage > 0).astype(jnp.float32)
+            * (prev_cnt > 0).astype(jnp.float32))
+
+
+def traffic_summary(mapping: Mapping, n_positions) -> MappingSummary:
+    """Placement-free mapped-traffic factors (see :class:`MappingSummary`).
+
+    Shared by the :mod:`costmodel` evaluation suffix (bandwidth demand,
+    interconnect energy, utilization) and the surrogate/env feature
+    extractors, so every consumer prices a mapping identically.
+    """
+    n_pos = jnp.maximum(jnp.asarray(n_positions, jnp.float32), 1.0)
+    recv = receiver_mask(mapping, n_positions)
+    n_recv = jnp.sum(recv, axis=-1)
+    recv_frac = n_recv / n_pos
+    pull_frac = 1.0 - 0.75 * recv_frac    # 3 of 4 streams forwarded
+
+    cnt = stage_counts(mapping, n_positions)
+    n_stages = jnp.sum((cnt > 0).astype(jnp.float32), axis=-1)
+    max_cnt = jnp.max(cnt, axis=-1)
+    # throughput follows the largest stage: perfectly balanced pipelines
+    # (and the single-stage canonical) score exactly 1.0
+    balance = n_pos / jnp.maximum(n_stages * max_cnt, 1.0)
+
+    s = (jnp.asarray(mapping.tile_idx, jnp.float32)
+         - jnp.float32(CANON_TILE))
+    s_mean = jnp.mean(s, axis=-1)
+    s_sq = jnp.mean(s * s, axis=-1)
+    tile_hbm = jnp.exp2(-TILE_HBM_EXP * s_mean)
+    tile_u = 1.0 / (1.0 + TILE_U_PEN * s_sq)
+    return MappingSummary(recv_frac=recv_frac, pull_frac=pull_frac,
+                          balance=balance, tile_hbm=tile_hbm,
+                          tile_u=tile_u)
+
+
+def assign_stage(mapping: Mapping, slot, stage_val, n_positions) -> Mapping:
+    """Move one active slot to pipeline stage ``stage_val``.
+
+    ``slot`` is reduced mod ``n_positions`` (every action index maps to
+    an active slot, mirroring ``placement.relocate_chiplet``); the write
+    is a one-hot select, not an ``.at[]`` scatter, for the same
+    vmapped-CPU reason as ``placement.nop_stats_delta``. Unbatched.
+    """
+    n_pos = jnp.maximum(jnp.asarray(n_positions, jnp.int32), 1)
+    s = jnp.mod(jnp.asarray(slot, jnp.int32), n_pos)
+    val = jnp.clip(jnp.asarray(stage_val, jnp.int32), 0, MAX_STAGES - 1)
+    sel = jnp.arange(MAX_SLOTS, dtype=jnp.int32) == s
+    return mapping._replace(stage=jnp.where(sel, val, mapping.stage))
+
+
+def assign_tile(mapping: Mapping, group, tile_val) -> Mapping:
+    """Set one layer group's tile index (one-hot select). Unbatched."""
+    g = jnp.clip(jnp.asarray(group, jnp.int32), 0, N_LAYER_GROUPS - 1)
+    val = jnp.clip(jnp.asarray(tile_val, jnp.int32), 0, N_TILE - 1)
+    sel = jnp.arange(N_LAYER_GROUPS, dtype=jnp.int32) == g
+    return mapping._replace(tile_idx=jnp.where(sel, val, mapping.tile_idx))
+
+
+def apply_action(mapping: Mapping, mp_action, n_positions) -> Mapping:
+    """Apply one 4-head mapping action (env/PPO extension).
+
+    ``mp_action`` = [slot, stage, group, tile] indices (the
+    ``params.MAPPING_HEAD_SIZES`` heads). Both assignments apply each
+    step; either is a no-op when it re-states the current value.
+    Unbatched (the env vmaps).
+    """
+    a = jnp.asarray(mp_action, jnp.int32)
+    mapping = assign_stage(mapping, a[..., 0], a[..., 1], n_positions)
+    return assign_tile(mapping, a[..., 2], a[..., 3])
+
+
+def random_mapping(key, n_positions, batch_shape=()) -> Mapping:
+    """Uniform random legal mapping (tests / GA seeding)."""
+    import jax
+    k_t, k_s = jax.random.split(key)
+    del n_positions   # stages on inactive slots are ignored downstream
+    return Mapping(
+        tile_idx=jax.random.randint(
+            k_t, tuple(batch_shape) + (N_LAYER_GROUPS,), 0, N_TILE,
+            dtype=jnp.int32),
+        stage=jax.random.randint(
+            k_s, tuple(batch_shape) + (MAX_SLOTS,), 0, MAX_STAGES,
+            dtype=jnp.int32))
+
+
+def to_flat(mapping: Mapping) -> jnp.ndarray:
+    """(..., FLAT_DIM) float32: [stages | tile indices]."""
+    return jnp.concatenate([
+        jnp.asarray(mapping.stage, jnp.float32),
+        jnp.asarray(mapping.tile_idx, jnp.float32)], axis=-1)
+
+
+def from_flat(flat: jnp.ndarray) -> Mapping:
+    """Inverse of :func:`to_flat` (clipped to the legal grids)."""
+    return clip_mapping(Mapping(
+        tile_idx=jnp.asarray(flat[..., MAX_SLOTS:FLAT_DIM], jnp.int32),
+        stage=jnp.asarray(flat[..., :MAX_SLOTS], jnp.int32)))
+
+
+# sanity: the slot axis must agree with placement.MAX_SLOTS (placement
+# imports us, so assert on the shared params-level constant instead),
+# and the env action heads must mirror this module's grids
+assert MAX_SLOTS == 128 and ps.N_HBM_LOCATIONS == 6
+assert ps.MAPPING_HEAD_SIZES == (MAX_SLOTS, MAX_STAGES,
+                                 N_LAYER_GROUPS, N_TILE)

@@ -85,6 +85,15 @@ PLACEMENT_HEAD_SIZES = (128, 256, 6, 256)   # slot, cell, hbm bit, hbm cell
 EXT_HEAD_SIZES = HEAD_SIZES + PLACEMENT_HEAD_SIZES
 N_EXT_PARAMS = len(EXT_HEAD_SIZES)
 
+# Mapping-mutation action heads (core/mapping.py): reassign one footprint
+# slot's pipeline stage and one layer group's tile index. Appended after
+# the placement heads when EnvConfig.mapping_actions is on (the mapping
+# layer requires the placement episode). Sizes mirror mapping.MAX_SLOTS /
+# MAX_STAGES / N_LAYER_GROUPS / N_TILE (asserted in core/mapping.py).
+MAPPING_HEAD_SIZES = (128, 4, 4, 8)          # slot, stage, group, tile
+MAP_HEAD_SIZES = EXT_HEAD_SIZES + MAPPING_HEAD_SIZES
+N_MAP_PARAMS = len(MAP_HEAD_SIZES)
+
 
 class DesignValues(NamedTuple):
     """Physical values decoded from a DesignPoint (float32 throughout)."""

@@ -43,6 +43,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import mapping as mpg
 from repro.core import params as ps
 
 GRID = 16                      # interposer routing grid is GRID x GRID
@@ -186,7 +187,8 @@ def _nearest_stack_cells(hbm_ij, floors, bits):
     return gi, gj, d_cell
 
 
-def _stats_tail(chiplet_cell, d_cell, d_hbm, n_positions, mesh_edges=None):
+def _stats_tail(chiplet_cell, d_cell, d_hbm, n_positions, mesh_edges=None,
+                mapping=None):
     """Per-slot/per-link reduction shared by the full tier and the delta
     path: (cells, router distances, per-slot distances) -> NoPStats.
 
@@ -196,6 +198,17 @@ def _stats_tail(chiplet_cell, d_cell, d_hbm, n_positions, mesh_edges=None):
     re-reducing the slot axis. Every op here matches the pre-delta
     ``nop_stats`` body exactly; the delta path inherits bit-identical
     stats from sharing it.
+
+    ``mapping`` (a :class:`repro.core.mapping.Mapping`, default None)
+    reshapes the Fig.-5 operand-stream traffic matrix: a pipeline
+    *receiver* slot (see ``mapping.receiver_mask``) pulls 1 instead of 4
+    streams from HBM and picks up 3 forwarded streams over the distance
+    to its predecessor stage's centroid, so ``hops_ai_mean`` becomes the
+    traffic-weighted forwarding mean and ``link_contention`` prices the
+    re-shaped stream set. ``mapping=None`` traces the exact pre-mapping
+    program (static dispatch, bitwise); the canonical all-stage-0
+    mapping adds exact float no-ops (0-valued receiver sums), so it is
+    numerically identical too.
     """
     n_pos = jnp.asarray(n_positions, jnp.float32)
 
@@ -228,7 +241,6 @@ def _stats_tail(chiplet_cell, d_cell, d_hbm, n_positions, mesh_edges=None):
     cent_j = sum_cj / jnp.maximum(n_pos, 1.0)
     d_cent = (jnp.abs(ci - cent_i[..., None])
               + jnp.abs(cj - cent_j[..., None]))
-    hops_ai_mean = jnp.sum(active * d_cent, axis=-1) / jnp.maximum(n_pos, 1.0)
 
     # ---- per-link contention: operand-streams x hops per mesh link --------
     # 4 HBM-sourced streams per chiplet (Eq. 13) + 1 forwarded AI stream.
@@ -237,8 +249,42 @@ def _stats_tail(chiplet_cell, d_cell, d_hbm, n_positions, mesh_edges=None):
     region_edges = bm * (bn - 1.0) + bn * (bm - 1.0)
     edges = region_edges if mesh_edges is None else jnp.asarray(
         mesh_edges, jnp.float32)
-    stream_hops = (4.0 * jnp.sum(active * d_hbm, axis=-1)
-                   + jnp.sum(active * d_cent, axis=-1))
+    if mapping is None:
+        hops_ai_mean = (jnp.sum(active * d_cent, axis=-1)
+                        / jnp.maximum(n_pos, 1.0))
+        stream_hops = (4.0 * jnp.sum(active * d_hbm, axis=-1)
+                       + jnp.sum(active * d_cent, axis=-1))
+    else:
+        # mapped traffic: receiver slots swap 3 HBM pulls for 3 streams
+        # forwarded from the previous pipeline stage's centroid. With no
+        # receivers every added term is an exact 0.0, reproducing the
+        # unmapped figures bit-for-bit.
+        stage = jnp.clip(jnp.asarray(mapping.stage, jnp.int32),
+                         0, mpg.MAX_STAGES - 1)
+        oh = (stage[..., None]
+              == jnp.arange(mpg.MAX_STAGES)).astype(jnp.float32)
+        act_oh = active[..., None] * oh                 # (..., 128, S)
+        cnt = jnp.sum(act_oh, axis=-2)                  # (..., S)
+        cent_si = (jnp.sum(act_oh * ci[..., None], axis=-2)
+                   / jnp.maximum(cnt, 1.0))
+        cent_sj = (jnp.sum(act_oh * cj[..., None], axis=-2)
+                   / jnp.maximum(cnt, 1.0))
+        prev = jnp.clip(stage - 1, 0, mpg.MAX_STAGES - 1)
+        recv = (active * (stage > 0).astype(jnp.float32)
+                * (jnp.take_along_axis(cnt, prev, axis=-1)
+                   > 0).astype(jnp.float32))
+        d_prev = (jnp.abs(ci - jnp.take_along_axis(cent_si, prev, axis=-1))
+                  + jnp.abs(cj - jnp.take_along_axis(cent_sj, prev,
+                                                     axis=-1)))
+        n_recv = jnp.sum(recv, axis=-1)
+        fwd_hops = jnp.sum(recv * d_prev, axis=-1)
+        hops_ai_mean = ((jnp.sum(active * d_cent, axis=-1)
+                         + 3.0 * fwd_hops)
+                        / (jnp.maximum(n_pos, 1.0) + 3.0 * n_recv))
+        stream_hops = (4.0 * jnp.sum(active * d_hbm, axis=-1)
+                       - 3.0 * jnp.sum(recv * d_hbm, axis=-1)
+                       + jnp.sum(active * d_cent, axis=-1)
+                       + 3.0 * fwd_hops)
     link_contention = stream_hops / jnp.maximum(edges, 1.0)
 
     stats = NoPStats(hops_ai_worst=hops_ai_worst, hops_ai_mean=hops_ai_mean,
@@ -250,13 +296,15 @@ def _stats_tail(chiplet_cell, d_cell, d_hbm, n_positions, mesh_edges=None):
 
 
 def nop_stats(placement: Placement, n_positions, hbm_mask,
-              arch_type, mesh_edges=None) -> NoPStats:
+              arch_type, mesh_edges=None, mapping=None) -> NoPStats:
     """Reduce (hop matrix x Fig.-5 traffic) -> worst/mean latency terms.
 
     All arguments may carry an identical batch shape; placement leaves
     carry it too (before the slot / anchor axes). ``mesh_edges``
     optionally fixes the contention denominator to a given NoP fabric
-    size (defaults to the spanned region's own edge count).
+    size (defaults to the spanned region's own edge count). ``mapping``
+    optionally reshapes the operand-stream traffic (see
+    :func:`_stats_tail`); ``None`` is the exact pre-mapping program.
     """
     mask = jnp.asarray(hbm_mask, jnp.int32)
     floors = hbm_floors(mask, arch_type)              # (..., 6)
@@ -272,7 +320,7 @@ def nop_stats(placement: Placement, n_positions, hbm_mask,
     d_hbm = jnp.take_along_axis(
         d_cell, jnp.asarray(placement.chiplet_cell, jnp.int32), axis=-1)
     stats, _, _ = _stats_tail(placement.chiplet_cell, d_cell, d_hbm,
-                              n_positions, mesh_edges)
+                              n_positions, mesh_edges, mapping)
     return stats
 
 
@@ -542,12 +590,16 @@ class PlacementEvalCache(NamedTuple):
 
 
 def nop_stats_cache(placement: Placement, n_positions, hbm_mask,
-                    arch_type, mesh_edges=None) -> PlacementEvalCache:
+                    arch_type, mesh_edges=None,
+                    mapping=None) -> PlacementEvalCache:
     """Full evaluation that also returns the cached per-slot/per-link
     state :func:`nop_stats_delta` updates incrementally.
 
-    ``cache.stats`` equals ``nop_stats(placement, ...)`` bit-for-bit.
-    Unbatched (vmap for batches).
+    ``cache.stats`` equals ``nop_stats(placement, ..., mapping)``
+    bit-for-bit. The cached geometry (``d_cell`` / ``d_hbm`` / cell
+    sums) is mapping-independent, so :func:`nop_stats_remap` can
+    re-contract it under a different mapping without touching the anchor
+    scan. Unbatched (vmap for batches).
     """
     mask = jnp.asarray(hbm_mask, jnp.int32)
     floors = hbm_floors(mask, arch_type)
@@ -556,7 +608,8 @@ def nop_stats_cache(placement: Placement, n_positions, hbm_mask,
     d_hbm = jnp.take_along_axis(
         d_cell, jnp.asarray(placement.chiplet_cell, jnp.int32), axis=-1)
     stats, sum_ci, sum_cj = _stats_tail(placement.chiplet_cell, d_cell,
-                                        d_hbm, n_positions, mesh_edges)
+                                        d_hbm, n_positions, mesh_edges,
+                                        mapping)
     return PlacementEvalCache(placement=placement, d_cell=d_cell,
                               d_hbm=d_hbm, sum_ci=sum_ci, sum_cj=sum_cj,
                               stats=stats)
@@ -579,7 +632,8 @@ def apply_move(placement: Placement, move: PlacementMove,
 
 def nop_stats_delta(cache: PlacementEvalCache, move: PlacementMove,
                     n_positions, hbm_mask, arch_type, mesh_edges=None,
-                    move_kinds: str = "mixed") -> PlacementEvalCache:
+                    move_kinds: str = "mixed",
+                    mapping=None) -> PlacementEvalCache:
     """Post-move NoP stats by incremental update — O(slots) per move.
 
     A chiplet relocate/swap leaves the router scan ``d_cell`` untouched:
@@ -604,6 +658,10 @@ def nop_stats_delta(cache: PlacementEvalCache, move: PlacementMove,
     ``apply_action`` when ``move.anchor`` is the integer cell of the
     fourth action head), and ``'mixed'`` (default) handles the two
     single-move kinds branchlessly. Unbatched (the SA chain vmaps).
+
+    ``mapping`` fixes the dataflow the candidate is contracted against
+    (the co-annealing SA passes the chain's *current* mapping; a
+    mapping-only move goes through :func:`nop_stats_remap` instead).
     """
     if move_kinds not in ("mixed", "chiplet", "hbm", "both"):
         raise ValueError(f"move_kinds must be 'mixed', 'chiplet', 'hbm' "
@@ -645,11 +703,30 @@ def nop_stats_delta(cache: PlacementEvalCache, move: PlacementMove,
     d_hbm_new = jnp.take_along_axis(
         d_cell_new, jnp.asarray(cells_new, jnp.int32), axis=-1)
     stats, sum_ci, sum_cj = _stats_tail(cells_new, d_cell_new, d_hbm_new,
-                                        n_positions, mesh_edges)
+                                        n_positions, mesh_edges, mapping)
     return PlacementEvalCache(
         placement=Placement(chiplet_cell=cells_new, hbm_ij=hbm_new),
         d_cell=d_cell_new, d_hbm=d_hbm_new,
         sum_ci=sum_ci, sum_cj=sum_cj, stats=stats)
+
+
+def nop_stats_remap(cache: PlacementEvalCache, mapping, n_positions,
+                    mesh_edges=None) -> PlacementEvalCache:
+    """Re-contract the cached traffic rows under a new mapping.
+
+    A mapping move leaves the placement — and with it the anchor scan
+    ``d_cell``, the per-slot gather ``d_hbm``, and the cell sums —
+    untouched; only the :func:`_stats_tail` contraction changes (the
+    touched stage boundary's traffic rows re-weight). This is the
+    cheapest delta kind of the co-annealing SA: no anchor scan, no
+    gather. ``cache.stats`` of the result equals a fresh
+    ``nop_stats(cache.placement, ..., mapping=mapping)`` bit-for-bit
+    (shared tail). Unbatched (the SA chain vmaps).
+    """
+    stats, _, _ = _stats_tail(cache.placement.chiplet_cell, cache.d_cell,
+                              cache.d_hbm, n_positions, mesh_edges,
+                              mapping)
+    return cache._replace(stats=stats)
 
 
 def commit_move(cache: PlacementEvalCache, cand: PlacementEvalCache,

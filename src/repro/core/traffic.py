@@ -76,8 +76,15 @@ def fleet_workloads(cfg: TraceConfig):
         lambda *xs: jnp.stack(xs), *workloads)
 
 
-def _load_shape(key, cfg: TraceConfig) -> jnp.ndarray:
-    """(T,) relative load curve of the family (scale fixed by make_trace)."""
+def _load_shape(key, cfg: TraceConfig, phases=None) -> jnp.ndarray:
+    """(T,) relative load curve of the family (scale fixed by make_trace).
+
+    ``phases`` carries the multi-tenant phase vector drawn once by
+    :func:`make_trace` and shared with :func:`_mix_rows`, so the offered
+    load is the superposition of the *same* tenant intensities that
+    shape the mix (None falls back to drawing from ``key`` — identical
+    values, since make_trace draws from the same key).
+    """
     t = jnp.arange(cfg.n_steps, dtype=jnp.float32)
     phase = 2.0 * jnp.pi * t / cfg.n_steps
     if cfg.kind == "flat":
@@ -92,22 +99,28 @@ def _load_shape(key, cfg: TraceConfig) -> jnp.ndarray:
         jitter = jnp.exp(0.2 * jax.random.normal(k_j, (cfg.n_steps,)))
         return (1.0 + (cfg.peak - 1.0) * burst) * jitter
     if cfg.kind == "multi-tenant":
-        # superposition of the tenants' phase-shifted days (built again
-        # in _mix_rows with the same key so load follows the mix)
-        phases = jax.random.uniform(key, (cfg.n_tenants,),
-                                    maxval=2.0 * jnp.pi)
+        # superposition of the tenants' phase-shifted days
+        if phases is None:
+            phases = jax.random.uniform(key, (cfg.n_tenants,),
+                                        maxval=2.0 * jnp.pi)
         return jnp.mean(1.0 + (cfg.peak - 1.0) * 0.5
                         * (1.0 - jnp.cos(phase[:, None] + phases[None, :])),
                         axis=-1)
     raise ValueError(f"unknown trace kind {cfg.kind!r}; one of {KINDS}")
 
 
-def _mix_rows(key, cfg: TraceConfig, n_fleet: int) -> jnp.ndarray:
+def _mix_rows(key, cfg: TraceConfig, n_fleet: int,
+              phases=None) -> jnp.ndarray:
     """(T, 1 + F) mix rows: column 0 = the scenario's own workload.
 
     Every row sums to 1; the own-workload column carries
     ``1 - mix_spread`` and the fleet columns share ``mix_spread``
-    according to the family's drift profile.
+    according to the family's drift profile. For multi-tenant traces
+    ``phases`` is the tenant phase vector drawn once by
+    :func:`make_trace` and shared with :func:`_load_shape`, so the mix
+    rows are the *same* tenant intensities whose superposition drives
+    the offered load (``key`` still selects which fleet models are the
+    tenants).
     """
     t = jnp.arange(cfg.n_steps, dtype=jnp.float32)
     phase = 2.0 * jnp.pi * t / cfg.n_steps
@@ -122,8 +135,10 @@ def _mix_rows(key, cfg: TraceConfig, n_fleet: int) -> jnp.ndarray:
         k_sel, k_ph = jax.random.split(key)
         n_t = min(cfg.n_tenants, n_fleet)
         sel = jax.random.permutation(k_sel, n_fleet)[:n_t]
-        phases = jax.random.uniform(k_ph, (cfg.n_tenants,),
-                                    maxval=2.0 * jnp.pi)[:n_t]
+        if phases is None:
+            phases = jax.random.uniform(k_ph, (cfg.n_tenants,),
+                                        maxval=2.0 * jnp.pi)
+        phases = phases[:n_t]
         inten = 1.0 + (cfg.peak - 1.0) * 0.5 * (
             1.0 - jnp.cos(phase[:, None] + phases[None, :]))   # (T, n_t)
         p = jnp.zeros((cfg.n_steps, n_fleet))
@@ -149,7 +164,14 @@ def make_trace(key, workload: cm.Workload, cfg: TraceConfig,
     k_shape, k_mix = jax.random.split(jnp.asarray(key))
     _, fleet = fleet_workloads(cfg)
     n_fleet = jnp.shape(fleet.gemm_ops)[0]
-    mix = _mix_rows(k_mix, cfg, n_fleet)                     # (T, 1+F)
+    # multi-tenant: one phase vector drives both the offered load and the
+    # mix, so the peak-load step is the peak-intensity step of the same
+    # tenants (drawn from k_shape -> the load curve matches pre-fix traces)
+    phases = None
+    if cfg.kind == "multi-tenant":
+        phases = jax.random.uniform(k_shape, (cfg.n_tenants,),
+                                    maxval=2.0 * jnp.pi)
+    mix = _mix_rows(k_mix, cfg, n_fleet, phases=phases)      # (T, 1+F)
     traced_wl = jax.tree_util.tree_map(
         lambda own, fl: mix[:, 0] * own + mix[:, 1:] @ fl, workload, fleet)
 
@@ -158,7 +180,7 @@ def make_trace(key, workload: cm.Workload, cfg: TraceConfig,
     mu_ref = jax.vmap(lambda w: mono.evaluate(w, hw_cfg).tasks_per_sec)(
         traced_wl)                                           # (T,)
     dt = jnp.full((cfg.n_steps,), 1.0 / cfg.n_steps)
-    shape = _load_shape(k_shape, cfg)
+    shape = _load_shape(k_shape, cfg, phases=phases)
     weighted = mu_ref * shape
     norm = jnp.sum(dt * weighted) / jnp.maximum(
         jnp.sum(dt * mu_ref), 1e-30)

@@ -108,8 +108,12 @@ def registry() -> Dict[str, Workload]:
         for name, cfg in ARCH_REGISTRY.items():
             out[f"{name}:train"] = from_arch_config(cfg, "train")
             out[f"{name}:decode"] = from_arch_config(cfg, "decode")
-    except ImportError:  # configs not built yet (bootstrap order)
-        pass
+    except ModuleNotFoundError as exc:
+        # only the bootstrap case (configs not built yet) is benign; a
+        # transitive import failure inside repro.configs is a real bug
+        # and must surface, not silently shrink the registry
+        if exc.name not in ("repro.configs", "repro"):
+            raise
     return out
 
 

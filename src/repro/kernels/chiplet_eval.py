@@ -53,6 +53,9 @@ _GRID = 16          # 16x16 placement grid = 256 cells = 2 x 128 lanes
 _HBM_COL = 14       # designs cols 14..25 hold the 6 HBM (i, j) anchors
 _CANON_COL = 26     # cols 26..28: canonical-floorplan link contention,
 #                     mean HBM hops, mean AI hops (host-computed baselines)
+_TILE_COL = 29      # cols 29..32: per-layer-group tile indices (mapping
+#                     tier only; the per-slot pipeline stages stream as
+#                     their own (N, 128) operand)
 
 
 def _mesh_tables() -> np.ndarray:
@@ -73,9 +76,13 @@ def _kernel(design_ref, cells_ref, mesh_ref, out_ref, *,
             workload_vals: Tuple[float, float, float, float],
             weight_vals: Tuple[float, float, float],
             cfg: hw.HWConfig,
-            nop_fidelity: str = "full"):
+            nop_fidelity: str = "full",
+            stage_ref=None):
     gemm_ops, nongemm_ops, _hbm_bytes, mapping_eff = workload_vals
     w_alpha, w_beta, w_gamma = weight_vals
+    with_mapping = stage_ref is not None
+    assert not (with_mapping and nop_fidelity == "fast"), \
+        "the fast tier evaluates the canonical dataflow only"
 
     raw = design_ref[...].astype(jnp.float32)          # (B, 128)
     b = raw.shape[0]
@@ -275,6 +282,61 @@ def _kernel(design_ref, cells_ref, mesh_ref, out_ref, *,
         box_edges = bm * (bn - 1.0) + bn * (bm - 1.0)
         mesh_edges = m * (n - 1.0) + n * (m - 1.0)
         contention = (4.0 * sum_hbm + sum_cent) / jnp.maximum(mesh_edges, 1.0)
+        if with_mapping:
+            # mapped Fig.-5 traffic (core/placement._stats_tail mapped
+            # branch): a pipeline receiver swaps 3 of its 4 HBM pulls
+            # for 3 streams forwarded from the previous stage's
+            # centroid. The stage one-hot select over the 4 pipeline
+            # stages extends the anchor gather: per-stage centroids
+            # reduce over the 128-lane slot axis, then each slot
+            # one-hot-selects its predecessor stage's centroid and
+            # count — all lane-axis VPU work, no scatter.
+            active_f = active.astype(jnp.float32)
+            stg = jnp.clip(stage_ref[...].astype(jnp.float32), 0.0, 3.0)
+            cnts, cent_si, cent_sj = [], [], []
+            for s in range(4):
+                oh_s = active_f * (stg == float(s)).astype(jnp.float32)
+                c = jnp.sum(oh_s, axis=1)
+                inv_c = 1.0 / jnp.maximum(c, 1.0)
+                cnts.append(c)
+                cent_si.append(jnp.sum(oh_s * ci, axis=1) * inv_c)
+                cent_sj.append(jnp.sum(oh_s * cj, axis=1) * inv_c)
+            prev_i = jnp.zeros_like(stg)
+            prev_j = jnp.zeros_like(stg)
+            prev_cnt = jnp.zeros_like(stg)
+            for s in range(4):
+                sel = (stg == float(s)).astype(jnp.float32)
+                p = max(s - 1, 0)
+                prev_i = prev_i + sel * cent_si[p][:, None]
+                prev_j = prev_j + sel * cent_sj[p][:, None]
+                prev_cnt = prev_cnt + sel * cnts[p][:, None]
+            recv = (active_f * (stg > 0.0).astype(jnp.float32)
+                    * (prev_cnt > 0.0).astype(jnp.float32))
+            d_prev = jnp.abs(ci - prev_i) + jnp.abs(cj - prev_j)
+            n_recv = jnp.sum(recv, axis=1)
+            fwd_hops = jnp.sum(recv * d_prev, axis=1)
+            # reciprocal form so zero receivers reproduce the unmapped
+            # `sum_cent * inv_pos` bit-for-bit (x + 0.0 == x, and the
+            # denominator collapses to exactly max(n_pos, 1))
+            h_ai_mean = ((sum_cent + 3.0 * fwd_hops)
+                         * (1.0 / (jnp.maximum(n_pos, 1.0)
+                                   + 3.0 * n_recv)))
+            stream_hops = (4.0 * sum_hbm
+                           - 3.0 * jnp.sum(recv * d_hbm, axis=1)
+                           + sum_cent + 3.0 * fwd_hops)
+            contention = stream_hops / jnp.maximum(mesh_edges, 1.0)
+            # placement-free mapped-traffic factors (mapping.traffic_summary)
+            recv_frac = n_recv / jnp.maximum(n_pos, 1.0)
+            pull_frac = 1.0 - 0.75 * recv_frac
+            n_stages = sum((c > 0.0).astype(jnp.float32) for c in cnts)
+            max_cnt = functools.reduce(jnp.maximum, cnts)
+            balance = (jnp.maximum(n_pos, 1.0)
+                       / jnp.maximum(n_stages * max_cnt, 1.0))
+            tiles = raw[:, _TILE_COL: _TILE_COL + 4] - 3.0   # vs CANON_TILE
+            s_mean = jnp.mean(tiles, axis=1)
+            s_sq = jnp.mean(tiles * tiles, axis=1)
+            tile_hbm = jnp.exp2(-0.35 * s_mean)
+            tile_u = 1.0 / (1.0 + 0.03 * s_sq)
         canon_contention = raw[:, _CANON_COL]
         congestion = ((canon_contention + 1e-6)
                       / (contention + 1e-6)) ** cfg.nop_congestion_exp
@@ -303,6 +365,11 @@ def _kernel(design_ref, cells_ref, mesh_ref, out_ref, *,
                     * ops_per_die / reuse_comm) / 1e9
     bw_req_hbm = 4.0 * operand_gbps
     bw_req_ai = operand_gbps
+    if with_mapping:
+        # receivers pull 1 of 4 streams from HBM; larger tiles amortize
+        # more HBM traffic; forwarded streams land on the AI fabric
+        bw_req_hbm = bw_req_hbm * (pull_frac * tile_hbm)
+        bw_req_ai = bw_req_ai * (1.0 + 3.0 * recv_frac)
     link_bw_hbm = hbm_dr * hbm_links * congestion
     bw_act_hbm = (jnp.minimum(link_bw_hbm, hw.HBM_BANDWIDTH_GBPS_PER_STACK)
                   if cfg.hbm_peak_cap else link_bw_hbm)
@@ -314,7 +381,11 @@ def _kernel(design_ref, cells_ref, mesh_ref, out_ref, *,
     u_sys = jnp.where(is_lol > 0, jnp.minimum(u_sys, u_3d), u_sys)
 
     # ---- throughput ---------------------------------------------------------
-    eff_ops = ops_per_die * n_dies * u_sys * mapping_eff
+    u_chip = mapping_eff
+    if with_mapping:
+        # tile sweet-spot + pipeline-balance penalties (1.0 at canonical)
+        u_chip = u_chip * (tile_u * balance)
+    eff_ops = ops_per_die * n_dies * u_sys * u_chip
     eff_tops = eff_ops / 1e12
 
     # ---- energy -------------------------------------------------------------
@@ -334,7 +405,14 @@ def _kernel(design_ref, cells_ref, mesh_ref, out_ref, *,
                      ai_trace) * e_hop_ai
     e_3d = jnp.where(ic3d < 0.5, hw.E_BIT_PJ_3D[0], hw.E_BIT_PJ_3D[1])
     bits_hbm = cfg.n_operands * cfg.data_width_bits / reuse_comm
-    bits_ai = 0.5 * bits_hbm
+    if with_mapping:
+        # streams a receiver no longer pulls from HBM traverse the AI
+        # fabric instead (0.75 x recv_frac of the operand bits)
+        bits_hbm = bits_hbm * (pull_frac * tile_hbm)
+        bits_ai = (cfg.n_operands * cfg.data_width_bits / reuse_comm
+                   * (0.5 + 0.75 * recv_frac))
+    else:
+        bits_ai = 0.5 * bits_hbm
     e_comm = (bits_hbm * (e_hbm_link + cfg.e_bit_hbm_device_pj)
               + bits_ai * e_ai_link + is_lol * bits_ai * e_3d
               + uses_3d_mem * bits_hbm * (e_3d - e_hbm_link))
@@ -394,7 +472,8 @@ def evaluate_batch(designs_padded: jnp.ndarray,
                    cfg: hw.HWConfig = hw.DEFAULT_HW,
                    interpret: bool = True,
                    block_n: int = BLOCK_N,
-                   nop_fidelity: str = "full") -> jnp.ndarray:
+                   nop_fidelity: str = "full",
+                   stage_padded: jnp.ndarray = None) -> jnp.ndarray:
     """Run the kernel on padded (designs, cells); returns (N, 12) metrics.
 
     ``designs_padded`` / ``cells_padded`` come from :func:`pad_designs` /
@@ -403,9 +482,14 @@ def evaluate_batch(designs_padded: jnp.ndarray,
     NoP tier: the kernel derives the Fig.-4 floorplan analytically on the
     lane axis, the host-side canonical-baseline columns are unused, and
     ``cells_padded`` may be None (no cells operand is even streamed).
+    ``stage_padded`` (from :func:`pad_stage`, full tier only) streams the
+    per-slot pipeline stages of an explicit mapping; the tile indices
+    ride the designs array cols 29..32 (``pad_designs(mapping=...)``).
     """
     n = designs_padded.shape[0]
     assert n % block_n == 0, f"batch {n} must be a multiple of {block_n}"
+    assert not (stage_padded is not None and nop_fidelity == "fast"), \
+        "the fast tier evaluates the canonical dataflow only"
     mesh_tab = jnp.asarray(_mesh_tables())
     kernel = functools.partial(_kernel, workload_vals=workload_vals,
                                weight_vals=weight_vals, cfg=cfg,
@@ -427,6 +511,20 @@ def evaluate_batch(designs_padded: jnp.ndarray,
         out = pl.pallas_call(
             kernel_fast, in_specs=[design_spec, mesh_spec], **out_kw,
         )(designs_padded.astype(jnp.float32), mesh_tab)
+    elif stage_padded is not None:
+        assert cells_padded.shape == designs_padded.shape
+        assert stage_padded.shape == designs_padded.shape
+
+        def kernel_map(design_ref, c_ref, s_ref, mesh_ref, out_ref):
+            kernel(design_ref, c_ref, mesh_ref, out_ref, stage_ref=s_ref)
+
+        out = pl.pallas_call(
+            kernel_map,
+            in_specs=[design_spec, design_spec, design_spec, mesh_spec],
+            **out_kw,
+        )(designs_padded.astype(jnp.float32),
+          cells_padded.astype(jnp.float32),
+          stage_padded.astype(jnp.float32), mesh_tab)
     else:
         assert cells_padded.shape == designs_padded.shape
         out = pl.pallas_call(
@@ -453,7 +551,8 @@ def _design_placement(dp: ps.DesignPoint, placement: pm.Placement = None):
 
 def pad_designs(dp: ps.DesignPoint, placement: pm.Placement = None,
                 block_n: int = BLOCK_N, _resolved=None,
-                nop_fidelity: str = "full") -> jnp.ndarray:
+                nop_fidelity: str = "full",
+                mapping=None) -> jnp.ndarray:
     """(B,)-batched DesignPoint -> (N_padded, 128) f32 kernel input.
 
     Cols 0..13 carry the Table-1 indices, cols 14..25 the six HBM anchor
@@ -463,16 +562,20 @@ def pad_designs(dp: ps.DesignPoint, placement: pm.Placement = None,
     result to avoid re-running the canonical baseline (ops.chiplet_eval).
     ``nop_fidelity='fast'`` skips the anchor/baseline resolution entirely
     (the fast-tier kernel derives the canonical floorplan itself).
+    ``mapping`` (a batched ``mapping.Mapping``) additionally packs the
+    per-layer-group tile indices into cols 29..32 — its per-slot stages
+    stream separately via :func:`pad_stage`.
     """
     flat = ps.to_flat(dp).astype(jnp.float32)          # (B, 14)
     if nop_fidelity != "fast":
         placement, canon = (_design_placement(dp, placement)
                             if _resolved is None else _resolved)
         hbm = placement.hbm_ij.reshape(flat.shape[0], 2 * pm.N_HBM)
-        flat = jnp.concatenate([
-            flat, hbm, canon.link_contention[:, None],
-            canon.hops_hbm_mean[:, None], canon.hops_ai_mean[:, None]],
-            axis=-1)
+        cols = [flat, hbm, canon.link_contention[:, None],
+                canon.hops_hbm_mean[:, None], canon.hops_ai_mean[:, None]]
+        if mapping is not None:
+            cols.append(jnp.asarray(mapping.tile_idx, jnp.float32))
+        flat = jnp.concatenate(cols, axis=-1)
     n = flat.shape[0]
     n_pad = (-n) % block_n
     return jnp.pad(flat, ((0, n_pad), (0, LANES - flat.shape[1])))
@@ -486,3 +589,10 @@ def pad_cells(dp: ps.DesignPoint, placement: pm.Placement = None,
     cells = jnp.asarray(placement.chiplet_cell, jnp.float32)   # (B, 128)
     n_pad = (-cells.shape[0]) % block_n
     return jnp.pad(cells, ((0, n_pad), (0, 0)))
+
+
+def pad_stage(mapping, block_n: int = BLOCK_N) -> jnp.ndarray:
+    """(B,)-batched ``mapping.Mapping`` -> (N_padded, 128) f32 stages."""
+    stage = jnp.asarray(mapping.stage, jnp.float32)            # (B, 128)
+    n_pad = (-stage.shape[0]) % block_n
+    return jnp.pad(stage, ((0, n_pad), (0, 0)))

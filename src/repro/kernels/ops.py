@@ -76,17 +76,23 @@ def chiplet_eval(dp: ps.DesignPoint,
                  cfg: hw.HWConfig = hw.DEFAULT_HW,
                  backend: str = "auto",
                  placement=None,
-                 nop_fidelity: str = "auto") -> jnp.ndarray:
+                 nop_fidelity: str = "auto",
+                 mapping=None) -> jnp.ndarray:
     """Evaluate a batch of design points -> (N, 12) metric matrix:
     [reward, eff_tops, e_comm_pj, pkg_cost, die_cost, u_sys,
      lat_hbm_ns, lat_ai_ns, hops_hbm_mean, hops_ai_mean,
      link_contention, hops_hbm_worst].
 
     ``placement`` is an optional batched ``placement.Placement``; None
-    evaluates the canonical Fig.-4 floorplan. ``nop_fidelity`` picks the
-    NoP tier (see ``costmodel.evaluate``): 'auto' takes the closed-form
-    fast tier whenever ``placement`` is None — on the Pallas path that
-    also skips the host-side canonical-baseline resolution entirely."""
+    evaluates the canonical Fig.-4 floorplan. ``mapping`` is an optional
+    batched ``mapping.Mapping``; None evaluates the canonical (paper)
+    weight-stationary dataflow, an explicit mapping forces the full
+    pairwise NoP tier (mirroring ``costmodel.evaluate``).
+    ``nop_fidelity`` picks the NoP tier (see ``costmodel.evaluate``):
+    'auto' takes the closed-form fast tier whenever ``placement`` and
+    ``mapping`` are None — on the Pallas path that also skips the
+    host-side canonical-baseline resolution entirely."""
+    from repro.core import mapping as _mpg
     from repro.core import placement as _pm
     if nop_fidelity not in cm.NOP_FIDELITIES:
         raise ValueError(f"nop_fidelity must be one of {cm.NOP_FIDELITIES}, "
@@ -95,7 +101,12 @@ def chiplet_eval(dp: ps.DesignPoint,
         raise ValueError(
             "nop_fidelity='fast' evaluates the canonical floorplan only; "
             "drop the explicit placement or use 'auto'/'full'")
-    fast = placement is None and nop_fidelity != "full"
+    if nop_fidelity == "fast" and mapping is not None:
+        raise ValueError(
+            "nop_fidelity='fast' evaluates the canonical dataflow only; "
+            "drop the explicit mapping or use 'auto'/'full'")
+    fast = (placement is None and nop_fidelity != "full"
+            and mapping is None)
     flat = ps.to_flat(dp)
     n = flat.shape[0]
     wl_vals = (float(workload.gemm_ops), float(workload.nongemm_ops),
@@ -109,14 +120,19 @@ def chiplet_eval(dp: ps.DesignPoint,
                                      nop_fidelity="fast")
         else:
             resolved = _ce._design_placement(dp, placement)
-            padded = _ce.pad_designs(dp, _resolved=resolved)
+            padded = _ce.pad_designs(dp, _resolved=resolved,
+                                     mapping=mapping)
             cells = _ce.pad_cells(dp, resolved[0])
+            stage = (None if mapping is None
+                     else _ce.pad_stage(mapping))
             out = _ce.evaluate_batch(padded, cells, wl_vals, w_vals, cfg,
-                                     interpret=not _on_tpu())
+                                     interpret=not _on_tpu(),
+                                     stage_padded=stage)
         return out[:n]
     pflat = None if placement is None else _pm.to_flat(placement)
+    mflat = None if mapping is None else _mpg.to_flat(mapping)
     return _ref.chiplet_eval_reference(flat, wl_vals, w_vals, cfg, pflat,
-                                       nop_fidelity)
+                                       nop_fidelity, mflat)
 
 
 def surrogate_score(flat, folded, backend: str = "auto") -> jnp.ndarray:

@@ -132,14 +132,20 @@ def chiplet_eval_reference(designs_flat: jnp.ndarray,
                            weight_vals: Tuple[float, float, float],
                            cfg: hw.HWConfig = hw.DEFAULT_HW,
                            placement_flat: jnp.ndarray | None = None,
-                           nop_fidelity: str = "auto") -> jnp.ndarray:
+                           nop_fidelity: str = "auto",
+                           mapping_flat: jnp.ndarray | None = None
+                           ) -> jnp.ndarray:
     """(N, >=14) index array -> (N, 12) metrics matching the Pallas kernel.
 
     Columns: [reward, eff_tops, e_comm_pj, pkg_cost, die_cost, u_sys,
     lat_hbm_ns, lat_ai_ns, hops_hbm_mean, hops_ai_mean, link_contention,
     hops_hbm_worst]. ``placement_flat`` is an optional (N, pm.FLAT_DIM)
     ``placement.to_flat`` batch; None evaluates the canonical floorplan.
+    ``mapping_flat`` is an optional (N, mapping.FLAT_DIM)
+    ``mapping.to_flat`` batch; None evaluates the canonical (paper)
+    weight-stationary dataflow.
     """
+    from repro.core import mapping as mpg
     dp = ps.from_flat(designs_flat[:, : ps.N_PARAMS].astype(jnp.int32))
     workload = cm.Workload(
         gemm_ops=jnp.float32(workload_vals[0]),
@@ -151,7 +157,10 @@ def chiplet_eval_reference(designs_flat: jnp.ndarray,
                                gamma=jnp.float32(weight_vals[2]))
     placement = (None if placement_flat is None
                  else pm.from_flat(placement_flat))
-    m = cm.evaluate(dp, workload, weights, cfg, placement, nop_fidelity)
+    mapping = (None if mapping_flat is None
+               else mpg.from_flat(mapping_flat))
+    m = cm.evaluate(dp, workload, weights, cfg, placement, nop_fidelity,
+                    mapping=mapping)
     return jnp.stack([m.reward, m.eff_tops, m.e_comm_pj_per_op, m.pkg_cost,
                       m.die_cost, m.u_sys, m.lat_hbm_ai_ns, m.lat_ai_ai_ns,
                       m.hops_hbm_mean, m.hops_ai_mean, m.link_contention,

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.core import costmodel as cm
 from repro.core import env as chipenv
+from repro.core import mapping as mpg
 from repro.core import params as ps
 from repro.core import placement as pm
 from repro.optimizer import archive as ar
@@ -72,6 +73,13 @@ class EvoConfig:
     # analytic evaluation like every other individual. 0 disables.
     surrogate_proposals: int = 0
     placement_genes: bool = False
+    # extend the genome further with the four mapping heads
+    # (params.MAPPING_HEAD_SIZES: reassign one slot's pipeline stage +
+    # one layer group's tile on top of the canonical dataflow) — the GA
+    # then co-evolves (design, placement, mapping). Requires
+    # placement_genes (the genome layout appends after the placement
+    # genes). Default off: the 18-gene path stays bit-exact.
+    mapping_genes: bool = False
     archive_capacity: int = 64
     # island-model migration (evolve_population): every migrate_every
     # generations each island's current best genome emigrates to its
@@ -95,7 +103,12 @@ class EvoResult(NamedTuple):
 
 
 def genome_head_sizes(cfg: EvoConfig) -> Tuple[int, ...]:
-    """Per-gene grid sizes (14 Table-1 heads, +4 with placement genes)."""
+    """Per-gene grid sizes (14 Table-1 heads, +4 with placement genes,
+    +4 more with mapping genes)."""
+    if cfg.mapping_genes:
+        if not cfg.placement_genes:
+            raise ValueError("mapping_genes requires placement_genes")
+        return ps.MAP_HEAD_SIZES
     return ps.EXT_HEAD_SIZES if cfg.placement_genes else ps.HEAD_SIZES
 
 
@@ -104,28 +117,49 @@ def genome_placement(genome: jnp.ndarray):
 
     The placement genes mutate the canonical Fig.-4 floorplan of the
     design the genome selects, mirroring ``env._design_and_placement``.
+    22-gene genomes (mapping genes appended) decode identically — the
+    placement slice is positional; use :func:`genome_mapping` for the
+    mapping tail.
     """
     design = ps.from_flat(genome[..., : ps.N_PARAMS])
     v = ps.decode(design)
     n_pos = cm.footprint_positions(v)
     m, n = cm.mesh_dims(n_pos)
     base = pm.canonical(m, n, v.hbm_mask, v.arch_type)
-    plc = pm.apply_action(base, genome[..., ps.N_PARAMS:], n_pos)
+    plc = pm.apply_action(
+        base, genome[..., ps.N_PARAMS: ps.N_EXT_PARAMS], n_pos)
     return design, plc
 
 
+def genome_mapping(genome: jnp.ndarray) -> mpg.Mapping:
+    """Decode the mapping tail of a 22-gene genome -> Mapping.
+
+    The four mapping genes apply one stage reassignment and one tile
+    assignment on top of the canonical dataflow (the same single-action
+    semantics as the env's mapping heads). Unbatched (callers vmap).
+    """
+    design = ps.from_flat(genome[..., : ps.N_PARAMS])
+    n_pos = cm.footprint_positions(ps.decode(design))
+    return mpg.apply_action(mpg.canonical(),
+                            genome[..., ps.N_EXT_PARAMS:], n_pos)
+
+
 def _eval_genome(genome: jnp.ndarray, env_cfg: chipenv.EnvConfig,
-                 scenario: cm.Scenario, placement_genes: bool):
+                 scenario: cm.Scenario, placement_genes: bool,
+                 mapping_genes: bool = False):
     """One genome -> (reward, raw PPAC objective triple)."""
     fid = env_cfg.nop_fidelity
+    mapping = None
     if placement_genes:
         design, plc = genome_placement(genome)
         # a mutated placement always needs the full pairwise tier
         fid = "auto" if fid == "fast" else fid
+        if mapping_genes:
+            mapping = genome_mapping(genome)
     else:
         design, plc = ps.from_flat(genome[..., : ps.N_PARAMS]), None
     mtr = cm.evaluate_scenario(design, scenario, env_cfg.hw, plc,
-                               nop_fidelity=fid)
+                               nop_fidelity=fid, mapping=mapping)
     return mtr.reward, ar.point_from_metrics(mtr)
 
 
@@ -146,7 +180,8 @@ def evolve(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
     """
     scenario = env_cfg.scenario() if scenario is None else scenario
     heads = jnp.asarray(genome_head_sizes(cfg), jnp.int32)
-    eval_pop = _make_eval_pop(env_cfg, scenario, cfg.placement_genes)
+    eval_pop = _make_eval_pop(env_cfg, scenario, cfg.placement_genes,
+                              cfg.mapping_genes)
     carry0 = _init_carry(key, cfg, heads, eval_pop)
     generation = _make_generation(cfg, heads, eval_pop, surrogate)
     (_, _, best_g, best_r, arc, _), history = jax.lax.scan(
@@ -156,11 +191,12 @@ def evolve(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
                      best_genome=best_g)
 
 
-def _make_eval_pop(env_cfg, scenario, placement_genes):
+def _make_eval_pop(env_cfg, scenario, placement_genes,
+                   mapping_genes=False):
     def eval_pop(pop):
         return jax.vmap(
             lambda g: _eval_genome(g, env_cfg, scenario,
-                                   placement_genes))(pop)
+                                   placement_genes, mapping_genes))(pop)
     return eval_pop
 
 
@@ -271,7 +307,8 @@ def _evolve_islands(keys, env_cfg, cfg: EvoConfig, scenario,
     """Ring-migrating island GA: one scan over generations of a vmapped
     generation step plus a branchless migration exchange."""
     heads = jnp.asarray(genome_head_sizes(cfg), jnp.int32)
-    eval_pop = _make_eval_pop(env_cfg, scenario, cfg.placement_genes)
+    eval_pop = _make_eval_pop(env_cfg, scenario, cfg.placement_genes,
+                              cfg.mapping_genes)
     generation = _make_generation(cfg, heads, eval_pop, surrogate)
     pop_n = cfg.pop_size
 

@@ -52,10 +52,20 @@ class PortfolioConfig:
     refine: bool = True
     max_refine_sweeps: int = 8
     refine_placement: bool = True
+    # mapping/dataflow stage (core/mapping.py): co-anneal the winner's
+    # (placement, mapping) seeded from the placement-refined floorplan,
+    # under fold_in(key, 8) — no other key stream moves. The mapped
+    # result is kept only when it beats the placement stage's reward, so
+    # enabling it never lowers the portfolio winner. Requires
+    # refine_placement.
+    refine_mapping: bool = False
     archive_capacity: int = 64      # shared Pareto archive size
     # NOTE: placement_sa must precede the `sa` field — that field shadows
     # the annealing module for later annotations in this class body.
     placement_sa: sa.PlacementSAConfig = sa.PlacementSAConfig()
+    # SA config for the mapping stage; None derives it from placement_sa
+    # (p_mapping=0.25, phase_schedule off).
+    placement_sa_mapping: sa.PlacementSAConfig = None
     sa: sa.SAConfig = sa.SAConfig(n_iters=100_000)
     rl: ppo.PPOConfig = ppo.PPOConfig()
     rl_timesteps: int = 250_000
@@ -79,6 +89,10 @@ class PortfolioResult(NamedTuple):
     evo_rewards: np.ndarray = None  # (n_evo,)
     archive: ar.Archive = None      # shared cross-arm Pareto archive
     surrogate_rewards: np.ndarray = None   # (K,) analytic top-k rewards
+    # mapping/dataflow stage (None unless cfg.refine_mapping won): the
+    # winner's mapping.Mapping and its reward (>= placement_reward)
+    mapping: object = None
+    mapping_reward: float = None
 
 
 @functools.partial(jax.jit, static_argnums=(2, 3))
@@ -387,6 +401,28 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
         placement = pres.best_placement
         placement_r = float(pres.best_reward)
 
+    # --- mapping/dataflow stage: (placement, mapping) co-anneal seeded
+    # from the refined floorplan; kept only if it beats the placement
+    # stage (never-worse by construction) ----------------------------------
+    mapping, mapping_r = None, None
+    if cfg.refine_mapping:
+        if not cfg.refine_placement:
+            raise ValueError("refine_mapping requires refine_placement "
+                             "(the stage anneals on top of the refined "
+                             "floorplan)")
+        map_sa = cfg.placement_sa_mapping
+        if map_sa is None:
+            map_sa = dataclasses.replace(cfg.placement_sa, p_mapping=0.25,
+                                         phase_schedule=None)
+        mres = sa.refine_placement(
+            jax.random.fold_in(key, 8), best_design, env_cfg,
+            map_sa, scenario, init_placement=placement)
+        if float(mres.best_reward) > placement_r + 1e-6:
+            placement = mres.best_placement
+            mapping = mres.best_mapping
+            mapping_r = float(mres.best_reward)
+            placement_r = mapping_r
+
     return PortfolioResult(
         best_design=best_design,
         best_reward=overall_r,
@@ -400,4 +436,6 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
         evo_rewards=evo_rewards_arr,
         archive=arc,
         surrogate_rewards=sur_rewards_arr,
+        mapping=mapping,
+        mapping_reward=mapping_r,
     )

@@ -27,6 +27,7 @@ import numpy as np
 from repro.core import costmodel as cm
 from repro.core import env as chipenv
 from repro.core import hw_constants as hw
+from repro.core import mapping as mpg
 from repro.core import monolithic as mono
 from repro.core import params as ps
 from repro.core import placement as pm
@@ -97,6 +98,19 @@ class SuiteConfig:
     # (PlacementSAConfig.delta_eval), spend the recovered budget on
     # coverage (ROADMAP PR-3 follow-up).
     placement_sa: sa.PlacementSAConfig = sa.PlacementSAConfig(n_iters=8_000)
+    # mapping co-exploration stage (core/mapping.py): anneal each winner's
+    # (placement, mapping) jointly, seeded from the placement-refined
+    # floorplan, under fold_in(key, 8) — the SA/RL/GA/placement/surrogate
+    # key streams are untouched. The mapped candidate replaces a winner
+    # only when it beats it, so enabling the stage never lowers any
+    # scenario's reward (the ci.sh gate holds by construction). False
+    # (default) skips the stage entirely — bit-exact with the
+    # three-layer suite.
+    mapping_refine: bool = False
+    # SA config for the mapping stage; None derives it from placement_sa
+    # (p_mapping=0.25, phase_schedule off — it is mutually exclusive
+    # with mapping moves).
+    placement_sa_mapping: sa.PlacementSAConfig = None
     sa: sa.SAConfig = sa.SAConfig(n_iters=20_000)
     rl: ppo.PPOConfig = ppo.PPOConfig(n_steps=128, n_envs=4)
     rl_timesteps: int = 128 * 4 * 4
@@ -139,6 +153,14 @@ SMOKE_SUITE = SuiteConfig(
 PLACEMENT_SENSITIVE_SUITE = with_hw_preset(SuiteConfig(), "placement-sensitive")
 PLACEMENT_SENSITIVE_SMOKE = with_hw_preset(SMOKE_SUITE, "placement-sensitive")
 
+# the placement-sensitive grids with the fourth (mapping/dataflow) layer
+# co-annealed on top of the refined floorplans — the regime where
+# layer-pipelined forwarding and tile-size trades have leverage
+MAPPING_SUITE = dataclasses.replace(PLACEMENT_SENSITIVE_SUITE,
+                                    mapping_refine=True)
+MAPPING_SMOKE = dataclasses.replace(PLACEMENT_SENSITIVE_SMOKE,
+                                    mapping_refine=True)
+
 
 @dataclasses.dataclass(frozen=True)
 class ScenarioOutcome:
@@ -158,6 +180,13 @@ class ScenarioOutcome:
     reward_canonical: float = None  # winner under the Fig.-4 floorplan
     placement_cells: np.ndarray = None   # (128,) grid cell per slot
     placement_hbm_ij: np.ndarray = None  # (6, 2) HBM anchor coords
+    # mapping/dataflow co-exploration (core/mapping.py); None when the
+    # mapping stage was off. reward_premapping is the winner before the
+    # stage ran — best_reward - reward_premapping is the honest mapping
+    # gain (0.0 when the canonical dataflow stayed on top).
+    reward_premapping: float = None
+    mapping_stage: np.ndarray = None     # (128,) pipeline stage per slot
+    mapping_tile: np.ndarray = None      # (4,) tile index per layer group
     # traffic-trace channels (None on point-scenario suites)
     slo_attainment: float = None    # dt-weighted fraction of steps in SLO
     p99_latency_s: float = None     # worst trace step's proxy p99 sojourn
@@ -379,6 +408,46 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
                 winner_rewards = np.maximum(winner_rewards,
                                             canonical_rewards)
 
+    # mapping/dataflow stage: co-anneal (placement, mapping) for all S
+    # winners in one vmapped program, seeded from the refined floorplans.
+    # Swap-in only-if-better per scenario: rows the canonical dataflow
+    # still wins keep their placement AND the canonical mapping (an exact
+    # no-op in the cost model), so reported metrics always match the
+    # reported reward and the stage can only raise winners.
+    mappings = None
+    premap_rewards = None
+    if cfg.mapping_refine:
+        if not cfg.placement_refine:
+            raise ValueError("mapping_refine requires placement_refine "
+                             "(the stage anneals on top of the refined "
+                             "floorplans)")
+        premap_rewards = winner_rewards.copy()
+        map_sa = cfg.placement_sa_mapping
+        if map_sa is None:
+            map_sa = dataclasses.replace(cfg.placement_sa, p_mapping=0.25,
+                                         phase_schedule=None)
+        k_map = jax.random.fold_in(jnp.asarray(key), 8)
+        map_keys = jax.random.split(k_map, n_scen)
+        mres = jax.jit(jax.vmap(
+            lambda k, d, s, p: sa.refine_placement(
+                k, d, cfg.env, map_sa, s, init_placement=p)))(
+                    map_keys, dp_batch, scenarios, placements)
+        map_rewards = np.asarray(mres.best_reward, np.float64)
+        better = map_rewards > winner_rewards + 1e-6
+        for s in range(n_scen):
+            if better[s]:
+                winner_rewards[s] = map_rewards[s]
+                sources[s] = "mapping"
+        sel = jnp.asarray(better)
+        placements = jax.tree_util.tree_map(
+            lambda m, p: jnp.where(
+                sel.reshape((-1,) + (1,) * (p.ndim - 1)), m, p),
+            mres.best_placement, placements)
+        mappings = jax.tree_util.tree_map(
+            lambda m, c: jnp.where(
+                sel.reshape((-1,) + (1,) * (c.ndim - 1)), m, c),
+            mres.best_mapping, mpg.canonical(batch_shape=(n_scen,)))
+
     if verbose:
         for s in range(n_scen):
             print(f"  [suite] {names[s]}: reward={winner_rewards[s]:.1f} "
@@ -391,14 +460,16 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
     win_slo = win_p99 = None
     if traced:
         tm = cm.evaluate_trace_scenarios(dp_batch, scenarios, cfg.env.hw,
-                                         placements=placements)
+                                         placements=placements,
+                                         mappings=mappings)
         metrics = tm.metrics
         win_slo = np.asarray(tm.slo_attainment, np.float64)       # (S,)
         win_p99 = np.asarray(jnp.max(tm.p99_latency_s, axis=1),
                              np.float64)                          # (S,)
     else:
         metrics = cm.evaluate_scenarios(dp_batch, scenarios, cfg.env.hw,
-                                        placements=placements)
+                                        placements=placements,
+                                        mappings=mappings)
 
     outcomes = []
     for s in range(n_scen):
@@ -419,6 +490,12 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
                              np.asarray(placements.chiplet_cell[s])),
             placement_hbm_ij=(None if placements is None else
                               np.asarray(placements.hbm_ij[s])),
+            reward_premapping=(None if premap_rewards is None
+                               else float(premap_rewards[s])),
+            mapping_stage=(None if mappings is None else
+                           np.asarray(mappings.stage[s])),
+            mapping_tile=(None if mappings is None else
+                          np.asarray(mappings.tile_idx[s])),
             slo_attainment=(None if win_slo is None
                             else float(win_slo[s])),
             p99_latency_s=(None if win_p99 is None
@@ -554,10 +631,12 @@ def format_report(res: SuiteResult) -> str:
         slo = ("" if o.slo_attainment is None
                else f" slo={o.slo_attainment:.2f}"
                     f" p99={o.p99_latency_s:.2e}s")
+        mgain = ("" if o.reward_premapping is None
+                 else f" map+={o.best_reward - o.reward_premapping:.3f}")
         lines.append(
             f"{star}{plus}{o.name:<41} {o.best_reward:>9.1f} {gain:>9.3f} "
             f"{o.tasks_per_sec:>12,.0f} {o.energy_per_task_j:>10.2e} "
-            f"{o.total_cost:>9.0f} {o.source:>9}{slo}")
+            f"{o.total_cost:>9.0f} {o.source:>9}{slo}{mgain}")
     lines.append(f"\nPareto frontier (raw tasks/s vs J/task vs cost): "
                  f"{len(res.pareto)}/{len(res.outcomes)} scenarios (*); "
                  f"monolithic-normalized frontier: "
@@ -612,6 +691,11 @@ def to_json(res: SuiteResult) -> Dict:
             "placement_hbm_ij": (None if o.placement_hbm_ij is None else
                                  [[float(x) for x in ij]
                                   for ij in o.placement_hbm_ij]),
+            "reward_premapping": o.reward_premapping,
+            "mapping_stage": (None if o.mapping_stage is None else
+                              [int(x) for x in o.mapping_stage]),
+            "mapping_tile": (None if o.mapping_tile is None else
+                             [int(x) for x in o.mapping_tile]),
         } for o in res.outcomes],
     }
 

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import costmodel as cm
 from repro.core import env as chipenv
+from repro.core import mapping as mpg
 from repro.core import params as ps
 from repro.core import placement as pm
 
@@ -191,6 +192,16 @@ class PlacementSAConfig:
     n_iters: int = 12_000
     temperature: float = 20.0
     p_hbm: float = 0.5            # fraction of moves that re-anchor a stack
+    # fraction of moves that mutate the *mapping* (core/mapping.py)
+    # instead of the placement: a mapping move reassigns one slot's
+    # pipeline stage (or one layer group's tile index) and neutralizes
+    # the placement move (the slot relocates onto its own cell — an
+    # identity swap), so one fused nop_stats_delta prices both kinds.
+    # 0.0 (default) statically dispatches to the pre-mapping program —
+    # bit-for-bit the PR-4 trajectories, no mapping state in the carry.
+    # Mapping randomness is folded off the existing 8-way key split, so
+    # the placement move stream is untouched either way.
+    p_mapping: float = 0.0
     # alternating pinned-kind phases instead of the Bernoulli(p_hbm) move
     # mix: a tuple of ("chiplet" | "hbm", segment_length) pairs forming
     # one cycle, e.g. (("chiplet", 40), ("hbm", 10)). Each segment runs
@@ -228,6 +239,10 @@ def _validated_phase_schedule(cfg: PlacementSAConfig):
     """
     if cfg.phase_schedule is None:
         return None
+    if cfg.p_mapping > 0.0:
+        raise ValueError("phase_schedule and p_mapping > 0 are mutually "
+                         "exclusive (mapping moves need the mixed-kind "
+                         "Bernoulli stream)")
     segs = tuple((str(k), int(ln)) for k, ln in cfg.phase_schedule)
     if not segs:
         raise ValueError("phase_schedule must be None or a non-empty tuple "
@@ -251,6 +266,10 @@ class PlacementResult(NamedTuple):
     best_reward: jnp.ndarray
     canonical_reward: jnp.ndarray    # reward under the Fig.-4 floorplan
     history: jnp.ndarray = None      # best-so-far, every record_every iters
+    # co-annealed dataflow (cfg.p_mapping > 0 only; None otherwise —
+    # the best placement/reward were then scored under the canonical
+    # mapping, i.e. the pre-mapping objective)
+    best_mapping: mpg.Mapping = None
 
 
 def refine_placement(key, design: ps.DesignPoint,
@@ -304,8 +323,11 @@ def refine_placement(key, design: ps.DesignPoint,
                            env_cfg.hw, trace=scenario.trace)
     mesh_edges = ctx.prefix.mesh_edges
 
-    def objective(plc: pm.Placement) -> jnp.ndarray:
-        return cm.scenario_reward(design, scenario, env_cfg.hw, plc)
+    use_mapping = cfg.p_mapping > 0.0
+
+    def objective(plc: pm.Placement, mapping=None) -> jnp.ndarray:
+        return cm.scenario_reward(design, scenario, env_cfg.hw, plc,
+                                  mapping=mapping)
 
     # canonical baseline through the closed-form fast tier (no Placement)
     r0 = cm.scenario_reward(design, scenario, env_cfg.hw,
@@ -319,7 +341,7 @@ def refine_placement(key, design: ps.DesignPoint,
             lambda a, b: jnp.where(better, a, b), init_placement, base)
         r_start = jnp.maximum(r_init, r0)
 
-    def propose(plc, key, cell_sums=None, pin_kind=None):
+    def propose(plc, key, cell_sums=None, pin_kind=None, mapping=None):
         """One swap/relocate/re-anchor proposal as a PlacementMove.
 
         Shared between the delta and full-recompute steps — the key
@@ -330,6 +352,13 @@ def refine_placement(key, design: ps.DesignPoint,
         for phase-scheduled segments; the 8-way split layout is kept
         either way so pinned and mixed streams draw the same slot /
         cell / anchor / accept randomness per iteration.
+
+        With ``mapping`` (the mapping-co-annealed chain) the return
+        grows a candidate mapping: mapping randomness is *folded off*
+        the split keys (the placement stream is untouched), and a
+        mapping move neutralizes the placement move by relocating the
+        chosen slot onto its own cell — an identity swap — so the same
+        fused delta step prices both move kinds.
         """
         key, k_kind, k_slot, k_cell, k_bit, k_anchor, k_acc, k_mix = (
             jax.random.split(key, 8))
@@ -355,16 +384,49 @@ def refine_placement(key, design: ps.DesignPoint,
             kind = jnp.int32(pin_kind)
         move = pm.PlacementMove(kind=kind, slot=slot,
                                 cell=cell, hbm=bit, anchor=anchor)
-        return move, key, k_acc
+        if mapping is None:
+            return move, key, k_acc
+        is_map = (jax.random.uniform(jax.random.fold_in(k_kind, 1))
+                  < cfg.p_mapping)
+        m_slot = jax.random.randint(
+            jax.random.fold_in(k_slot, 1), (), 0, pm.MAX_SLOTS)
+        m_stage = jax.random.randint(
+            jax.random.fold_in(k_cell, 1), (), 0, mpg.MAX_STAGES)
+        m_tile = jax.random.randint(
+            jax.random.fold_in(k_cell, 2), (), 0, mpg.N_TILE)
+        use_tile = (jax.random.uniform(jax.random.fold_in(k_kind, 2))
+                    < 0.25)
+        mut_stage = mpg.assign_stage(mapping, m_slot, m_stage, n_pos)
+        mut_tile = mpg.assign_tile(
+            mapping, jnp.mod(m_slot, mpg.N_LAYER_GROUPS), m_tile)
+        mutated = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(use_tile, b, a), mut_stage, mut_tile)
+        cand_map = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(is_map, b, a), mapping, mutated)
+        # neutralize the placement half of a mapping move: relocating a
+        # slot onto its own cell swaps it with itself (exact identity)
+        slot_eff = jnp.mod(move.slot,
+                           jnp.maximum(jnp.asarray(n_pos, jnp.int32), 1))
+        own_cell = jnp.take(plc.chiplet_cell, slot_eff)
+        move = move._replace(
+            kind=jnp.where(is_map, jnp.int32(0), move.kind),
+            cell=jnp.where(is_map, own_cell, move.cell))
+        return move, key, k_acc, cand_map
 
     def make_step_full(pin_kind=None):
         """PR-3 semantics: one full costmodel.evaluate per candidate
         (kept as the delta benchmark baseline and trajectory oracle)."""
         def step_full(state, it):
-            plc, r_curr, best, r_best, key = state
-            move, key, k_acc = propose(plc, key, pin_kind=pin_kind)
+            if use_mapping:
+                plc, r_curr, best, r_best, mapping, best_map, key = state
+                move, key, k_acc, cand_map = propose(
+                    plc, key, pin_kind=pin_kind, mapping=mapping)
+            else:
+                plc, r_curr, best, r_best, key = state
+                move, key, k_acc = propose(plc, key, pin_kind=pin_kind)
+                cand_map = None
             cand = pm.apply_move(plc, move, n_pos)
-            r_cand = objective(cand)
+            r_cand = objective(cand, cand_map)
 
             better_best = r_cand > r_best
             best = jax.tree_util.tree_map(
@@ -376,13 +438,24 @@ def refine_placement(key, design: ps.DesignPoint,
             plc = jax.tree_util.tree_map(
                 lambda a, b: jnp.where(accept, a, b), cand, plc)
             r_curr = jnp.where(accept, r_cand, r_curr)
+            if use_mapping:
+                best_map = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(better_best, a, b), cand_map,
+                    best_map)
+                mapping = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(accept, a, b), cand_map, mapping)
+                return (plc, r_curr, best, r_best, mapping, best_map,
+                        key), r_best
             return (plc, r_curr, best, r_best, key), r_best
         return step_full
 
     # p_hbm pins the move kind at 0 or 1 -> statically prune the dead
-    # delta branch (a relocation-only chain never traces the anchor scan)
+    # delta branch (a relocation-only chain never traces the anchor scan).
+    # Mapping moves ride kind 0 (identity relocate), so a mapping-enabled
+    # chain can never prune the chiplet branch away.
     move_kinds = ("chiplet" if cfg.p_hbm <= 0.0
-                  else "hbm" if cfg.p_hbm >= 1.0 else "mixed")
+                  else "hbm" if cfg.p_hbm >= 1.0 and not use_mapping
+                  else "mixed")
 
     def make_step_delta(mk, pin_kind=None):
         """Cache-carried step: delta NoP stats + suffix-only reward;
@@ -390,14 +463,22 @@ def refine_placement(key, design: ps.DesignPoint,
         ``mk`` statically prunes the untaken delta branch; phased
         segments pass mk='chiplet'/'hbm' with the matching pin."""
         def step_delta(state, it):
-            cache, r_curr, best, r_best, key = state
-            move, key, k_acc = propose(cache.placement, key,
-                                       (cache.sum_ci, cache.sum_cj),
-                                       pin_kind=pin_kind)
+            if use_mapping:
+                cache, r_curr, best, r_best, mapping, best_map, key = state
+                move, key, k_acc, cand_map = propose(
+                    cache.placement, key, (cache.sum_ci, cache.sum_cj),
+                    pin_kind=pin_kind, mapping=mapping)
+            else:
+                cache, r_curr, best, r_best, key = state
+                move, key, k_acc = propose(cache.placement, key,
+                                           (cache.sum_ci, cache.sum_cj),
+                                           pin_kind=pin_kind)
+                cand_map = None
             cand = pm.nop_stats_delta(cache, move, n_pos, v.hbm_mask,
                                       v.arch_type, mesh_edges,
-                                      move_kinds=mk)
-            r_cand = cm.reward_from_nop(ctx, cand.stats, env_cfg.hw)
+                                      move_kinds=mk, mapping=cand_map)
+            r_cand = cm.reward_from_nop(ctx, cand.stats, env_cfg.hw,
+                                        mapping=cand_map)
 
             better_best = r_cand > r_best
             best = jax.tree_util.tree_map(
@@ -409,24 +490,41 @@ def refine_placement(key, design: ps.DesignPoint,
             accept = (r_cand > r_curr) | (jax.random.uniform(k_acc) < t)
             cache = pm.commit_move(cache, cand, accept)
             r_curr = jnp.where(accept, r_cand, r_curr)
+            if use_mapping:
+                best_map = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(better_best, a, b), cand_map,
+                    best_map)
+                mapping = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(accept, a, b), cand_map, mapping)
+                return (cache, r_curr, best, r_best, mapping, best_map,
+                        key), r_best
             return (cache, r_curr, best, r_best, key), r_best
         return step_delta
 
     segs = _validated_phase_schedule(cfg)
 
     def _chain(chain_key):
-        if cfg.delta_eval:
-            cache0 = pm.nop_stats_cache(start, n_pos, v.hbm_mask,
-                                        v.arch_type, mesh_edges)
-            state = (cache0, r_start, start, r_start, chain_key)
+        incumbent = start if not cfg.delta_eval else pm.nop_stats_cache(
+            start, n_pos, v.hbm_mask, v.arch_type, mesh_edges)
+        if use_mapping:
+            # the incumbent dataflow is the canonical (paper) mapping —
+            # exactly the objective r_start was scored under
+            map0 = mpg.canonical()
+            state = (incumbent, r_start, start, r_start, map0, map0,
+                     chain_key)
         else:
-            state = (start, r_start, start, r_start, chain_key)
+            state = (incumbent, r_start, start, r_start, chain_key)
+        best_map = None
         if segs is None:
             step = (make_step_delta(move_kinds) if cfg.delta_eval
                     else make_step_full())
             iters = jnp.arange(cfg.n_iters, dtype=jnp.float32)
-            (_, _, best, r_best, _), trace = jax.lax.scan(
-                step, state, iters, unroll=cfg.scan_unroll)
+            if use_mapping:
+                (_, _, best, r_best, _, best_map, _), trace = jax.lax.scan(
+                    step, state, iters, unroll=cfg.scan_unroll)
+            else:
+                (_, _, best, r_best, _), trace = jax.lax.scan(
+                    step, state, iters, unroll=cfg.scan_unroll)
         else:
             # phase-scheduled chain: an outer scan over cycles; each
             # cycle runs one statically-pruned inner scan per segment
@@ -462,10 +560,10 @@ def refine_placement(key, design: ps.DesignPoint,
         # strided best-so-far trace + the final value (the stride rarely
         # lands on the last iteration; history[-1] must equal best_reward)
         history = jnp.concatenate([trace[:: cfg.record_every], trace[-1:]])
-        return best, r_best, history
+        return best, r_best, history, best_map
 
     if cfg.n_chains <= 1:
-        best, r_best, history = _chain(key)
+        best, r_best, history, best_map = _chain(key)
     else:
         # several chains per design in one program: same incumbent,
         # independent RNG streams; keep the best chain's result. Chain 0
@@ -474,14 +572,17 @@ def refine_placement(key, design: ps.DesignPoint,
         # result is never worse than n_chains=1 on the same key.
         chain_keys = jnp.concatenate(
             [key[None], jax.random.split(key, cfg.n_chains - 1)])
-        bests, r_bests, histories = jax.vmap(_chain)(chain_keys)
+        bests, r_bests, histories, best_maps = jax.vmap(_chain)(chain_keys)
         win = jnp.argmax(r_bests)
         best = jax.tree_util.tree_map(
             lambda x: jnp.take(x, win, axis=0), bests)
         r_best = jnp.take(r_bests, win)
         history = jnp.take(histories, win, axis=0)
+        best_map = jax.tree_util.tree_map(
+            lambda x: jnp.take(x, win, axis=0), best_maps)
     return PlacementResult(best_placement=best, best_reward=r_best,
-                           canonical_reward=r0, history=history)
+                           canonical_reward=r0, history=history,
+                           best_mapping=best_map)
 
 
 def refine_placement_scenarios(key, designs: ps.DesignPoint,

@@ -41,10 +41,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import costmodel as cm
+from repro.core import mapping as mpg
 from repro.core import params as ps
 
 N_FEATURES = 29
 N_SCEN_FEATURES = 7
+N_MAP_FEATURES = 5
 HIDDEN = 32
 N_TARGETS = 6
 TARGET_NAMES = ("reward_t", "reward_c", "reward_e",
@@ -106,6 +108,20 @@ def featurize(flat: jnp.ndarray) -> jnp.ndarray:
     return feats.reshape(flat.shape[:-1] + (N_FEATURES,))
 
 
+def mapping_features(mapping: mpg.Mapping, n_positions) -> jnp.ndarray:
+    """Mapping -> (..., N_MAP_FEATURES) f32, centered at the canonical
+    dataflow.
+
+    Every feature is *exactly* 0.0 under ``mapping.canonical()`` (the
+    traffic-summary no-op contract), so a canonical mapping contributes
+    exactly nothing to the first layer regardless of the learned ``Wm``
+    rows — the mapped scorer degrades bit-exactly to the unmapped one.
+    """
+    s = mpg.traffic_summary(mapping, n_positions)
+    return jnp.stack([s.recv_frac, 1.0 - s.pull_frac, 1.0 - s.balance,
+                      s.tile_hbm - 1.0, 1.0 - s.tile_u], -1)
+
+
 def scenario_features(scenario: cm.Scenario) -> jnp.ndarray:
     """Scenario -> (..., N_SCEN_FEATURES) f32 conditioning vector.
 
@@ -141,6 +157,10 @@ def init_params(key, hidden: int = HIDDEN) -> Dict[str, jnp.ndarray]:
     return dict(
         W1=jax.random.normal(k1, (N_FEATURES, hidden)) * s1,
         Ws=jax.random.normal(k4, (N_SCEN_FEATURES, hidden)) * s1,
+        # mapping-feature rows: zero-initialized, so an untrained (or
+        # mapping-blind) model scores mapped candidates exactly like
+        # their canonical-dataflow twins
+        Wm=jnp.zeros((N_MAP_FEATURES, hidden)),
         b1=jnp.zeros((hidden,)),
         W2=jax.random.normal(k2, (hidden, hidden)) * s2,
         b2=jnp.zeros((hidden,)),
@@ -151,10 +171,17 @@ def init_params(key, hidden: int = HIDDEN) -> Dict[str, jnp.ndarray]:
     )
 
 
-def forward(params, feats: jnp.ndarray, sfeats: jnp.ndarray) -> jnp.ndarray:
-    """(..., F) features + (..., S) scenario -> (..., 6) standardized."""
-    h1 = jax.nn.relu(feats @ params["W1"] + sfeats @ params["Ws"]
-                     + params["b1"])
+def forward(params, feats: jnp.ndarray, sfeats: jnp.ndarray,
+            mfeats: jnp.ndarray = None) -> jnp.ndarray:
+    """(..., F) features + (..., S) scenario -> (..., 6) standardized.
+
+    ``mfeats`` (optional, (..., N_MAP_FEATURES)) conditions on a
+    mapping; omitted, the program is the pre-mapping one exactly.
+    """
+    h1 = feats @ params["W1"] + sfeats @ params["Ws"] + params["b1"]
+    if mfeats is not None:
+        h1 = h1 + mfeats @ params["Wm"]
+    h1 = jax.nn.relu(h1)
     h2 = jax.nn.relu(h1 @ params["W2"] + params["b2"])
     return h2 @ params["W3"] + params["b3"]
 
@@ -185,6 +212,9 @@ class FoldedParams(NamedTuple):
     b2: jnp.ndarray        # (H,)
     w_s: jnp.ndarray       # (H,)  scenario-conditioned readout
     bias_s: jnp.ndarray    # ()    constant offset (rank-irrelevant)
+    # mapping-feature first-layer rows (zero for mapping-blind models);
+    # trailing+defaulted so pre-mapping FoldedParams pytrees still load
+    Wm: jnp.ndarray = None  # (N_MAP_FEATURES, H)
 
 
 def fold_scenario(params, scenario: cm.Scenario) -> FoldedParams:
@@ -202,14 +232,24 @@ def fold_scenario(params, scenario: cm.Scenario) -> FoldedParams:
         b2=params["b2"],
         w_s=params["W3"][:, :3] @ (coeff * sd3),
         bias_s=jnp.sum(coeff * (mu3 + sd3 * b33)),
+        Wm=params.get("Wm"),
     )
 
 
-def score_folded(folded: FoldedParams, flat: jnp.ndarray) -> jnp.ndarray:
-    """(..., 14) designs -> (...,) predicted Eq.-17 reward (jnp path)."""
+def score_folded(folded: FoldedParams, flat: jnp.ndarray,
+                 mapping_feats: jnp.ndarray = None) -> jnp.ndarray:
+    """(..., 14) designs -> (...,) predicted Eq.-17 reward (jnp path).
+
+    ``mapping_feats`` (optional, (..., N_MAP_FEATURES) from
+    :func:`mapping_features`) scores design+mapping candidates; omitted
+    (or all-zero, the canonical dataflow) the score is the unmapped one.
+    """
     flat2 = flat.reshape(-1, ps.N_PARAMS)
     feats = featurize_t(flat2.T).T                      # (N, F)
-    h1 = jax.nn.relu(feats @ folded.W1 + folded.b1_eff)
+    h1 = feats @ folded.W1 + folded.b1_eff
+    if mapping_feats is not None:
+        h1 = h1 + mapping_feats.reshape(-1, N_MAP_FEATURES) @ folded.Wm
+    h1 = jax.nn.relu(h1)
     h2 = jax.nn.relu(h1 @ folded.W2 + folded.b2)
     s = h2 @ folded.w_s + folded.bias_s
     return s.reshape(flat.shape[:-1])

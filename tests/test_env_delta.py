@@ -87,6 +87,38 @@ class TestPlacementEpisodePricing:
                 np.asarray(plc.chiplet_cell), err_msg=f"step {i}: cells")
         assert bool(dd)   # episode_len=50 -> last step terminates
 
+    @pytest.mark.parametrize("head", [1, 3])
+    def test_out_of_space_cell_targets_price_as_clipped(self, head):
+        """Both grid-cell heads normalize out-of-space targets.
+
+        _step_placement clipped the HBM target (a[3]) but passed the
+        chiplet target (a[1]) unclipped into PlacementMove, leaning on
+        relocate_chiplet's internal clamp to stay in-grid. The env-layer
+        clip pins the contract where the action is decoded: an
+        out-of-range index on EITHER head prices and mutates exactly
+        like its clipped twin (N_CELLS - 1), on the delta path and in
+        agreement with the scratch path."""
+        d_cfg, s_cfg = _cfgs()
+        key = jax.random.PRNGKey(7)
+        base = _actions(jax.random.fold_in(key, 1), 1)[0]
+        wild = base.at[head].set(pm.N_CELLS + 173)
+        clipped = base.at[head].set(pm.N_CELLS - 1)
+        d_step = jax.jit(lambda st, a: chipenv.step(st, a, d_cfg))
+        s_step = jax.jit(lambda st, a: chipenv.step(st, a, s_cfg))
+        outs = {}
+        for name, act in (("wild", wild), ("clipped", clipped)):
+            sd, _ = chipenv.reset(key, d_cfg)
+            sd, od, rd, _, _ = d_step(sd, act)
+            outs[name] = (np.asarray(od), float(rd),
+                          np.asarray(sd.cache.placement.chiplet_cell),
+                          np.asarray(sd.cache.placement.hbm_ij))
+        for a, b in zip(outs["wild"], outs["clipped"]):
+            np.testing.assert_array_equal(a, b)
+        ss, _ = chipenv.reset(key, s_cfg)
+        _, _, rs, _, _ = s_step(ss, wild)
+        np.testing.assert_allclose(outs["wild"][1], float(rs),
+                                   rtol=1e-5, atol=1e-5)
+
     def test_auto_reset_equivalence_across_boundary(self):
         """auto_reset_step agrees between pricing modes through an
         episode boundary (fresh cache on reset in both)."""

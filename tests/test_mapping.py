@@ -1,0 +1,245 @@
+"""Mapping/dataflow co-exploration (fourth design layer) contracts.
+
+Three invariants anchor the layer:
+
+1. **``mapping=None`` is the pre-mapping program.** Every arm —
+   costmodel full tier, explicit placement, the Pallas kernel path, the
+   env — statically dispatches to the exact pre-feature expressions, so
+   omitting the mapping and passing ``mapping=None`` are bitwise
+   identical, and tier-1 regressions pin the unmapped numbers.
+
+2. **The canonical mapping is an exact no-op.** ``mapping.canonical()``
+   reproduces the paper's fixed weight-stationary dataflow: every
+   mapped factor is exactly 1.0 and every mapped correction exactly 0.0,
+   so eager evaluation is bitwise identical to ``mapping=None``. Under
+   ``jit`` the unmapped program constant-folds the scalar
+   ``mapping_eff`` multiply chain while the mapped program carries it as
+   a traced array, so XLA may differ by ~1 ulp — tested at rtol 1e-5.
+
+3. **Delta pricing is a faithful oracle.** Chains of fused
+   mapping+placement delta updates agree with from-scratch evaluation
+   of the same (placement, mapping) state on every Metrics field to
+   1e-5 (the repo's established delta contract).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core import env as chipenv
+from repro.core import mapping as mpg
+from repro.core import params as ps
+from repro.core import placement as pm
+from repro.kernels import ops
+from repro.sa import annealing as sa
+
+
+def _designs(seed=0, n=16):
+    return ps.random_design(jax.random.PRNGKey(seed), batch_shape=(n,))
+
+
+def _assert_tree_bitwise(a, b, msg=""):
+    for i, (x, y) in enumerate(zip(jax.tree_util.tree_leaves(a),
+                                   jax.tree_util.tree_leaves(b))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{msg} (leaf {i})")
+
+
+class TestMappingPytree:
+    def test_canonical_shapes_and_flat_roundtrip(self):
+        m = mpg.canonical(batch_shape=(3,))
+        assert m.stage.shape == (3, mpg.MAX_SLOTS)
+        assert m.tile_idx.shape == (3, mpg.N_LAYER_GROUPS)
+        r = mpg.random_mapping(jax.random.PRNGKey(1), 9)
+        back = mpg.from_flat(mpg.to_flat(r))
+        _assert_tree_bitwise(r, back, "to_flat/from_flat roundtrip")
+
+    def test_canonical_summary_is_exact_identity(self):
+        """The factors the cost model multiplies in are exactly 1/0."""
+        for n_pos in (1, 5, 25):
+            s = mpg.traffic_summary(mpg.canonical(), jnp.int32(n_pos))
+            assert float(s.recv_frac) == 0.0
+            assert float(s.pull_frac) == 1.0
+            assert float(s.balance) == 1.0
+            assert float(s.tile_hbm) == 1.0
+            assert float(s.tile_u) == 1.0
+
+
+class TestCanonicalNoOp:
+    def test_eager_full_tier_bitwise(self):
+        dp = _designs()
+        a = cm.evaluate(dp, nop_fidelity="full")
+        b = cm.evaluate(dp, nop_fidelity="full",
+                        mapping=mpg.canonical(batch_shape=(16,)))
+        _assert_tree_bitwise(a, b, "eager full tier")
+
+    def test_eager_explicit_placement_bitwise(self):
+        dp = _designs(seed=2)
+        pre = jax.vmap(lambda d: cm._eval_prefix(d, cm.hw.DEFAULT_HW))(dp)
+        plc = jax.vmap(pm.canonical)(pre.mesh_m, pre.mesh_n,
+                                     pre.v.hbm_mask, pre.v.arch_type)
+        a = cm.evaluate(dp, placement=plc)
+        b = cm.evaluate(dp, placement=plc,
+                        mapping=mpg.canonical(batch_shape=(16,)))
+        _assert_tree_bitwise(a, b, "eager explicit placement")
+
+    def test_jit_full_tier_within_ulp(self):
+        dp = _designs()
+        a = jax.jit(lambda d: cm.evaluate(d, nop_fidelity="full"))(dp)
+        b = jax.jit(lambda d, m: cm.evaluate(d, nop_fidelity="full",
+                                             mapping=m))(
+            dp, mpg.canonical(batch_shape=(16,)))
+        for n, x, y in zip(a._fields, a, b):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-5, err_msg=f"jit: {n}")
+
+    def test_kernel_canonical_within_ulp(self):
+        dp = _designs(seed=3, n=24)
+        a = ops.chiplet_eval(dp, nop_fidelity="full")
+        b = ops.chiplet_eval(dp, nop_fidelity="full",
+                             mapping=mpg.canonical(batch_shape=(24,)))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   err_msg="pallas canonical vs unmapped")
+
+
+class TestNoneDispatch:
+    """mapping=None and omitting the argument are the same program."""
+
+    def test_costmodel_none_bitwise(self):
+        dp = _designs()
+        f = jax.jit(lambda d: cm.evaluate(d, nop_fidelity="full"))
+        g = jax.jit(lambda d: cm.evaluate(d, nop_fidelity="full",
+                                          mapping=None))
+        _assert_tree_bitwise(f(dp), g(dp), "costmodel mapping=None")
+
+    def test_kernel_none_bitwise(self):
+        dp = _designs(seed=1)
+        a = ops.chiplet_eval(dp)
+        b = ops.chiplet_eval(dp, mapping=None)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_kernel_fast_tier_rejects_mapping(self):
+        dp = _designs(seed=1)
+        with pytest.raises(ValueError, match="canonical dataflow"):
+            ops.chiplet_eval(dp, nop_fidelity="fast",
+                             mapping=mpg.canonical(batch_shape=(16,)))
+        with pytest.raises(ValueError, match="canonical dataflow"):
+            cm.evaluate(dp, nop_fidelity="fast",
+                        mapping=mpg.canonical(batch_shape=(16,)))
+
+    def test_env_default_pytree_unchanged(self):
+        """A mapping-off env episode carries no mapping state and its
+        rewards match the placement-only episode bit-for-bit."""
+        cfg_off = chipenv.EnvConfig(placement_episode=True)
+        cfg_on = chipenv.EnvConfig(placement_episode=True,
+                                   mapping_actions=True)
+        key = jax.random.PRNGKey(0)
+        s_off, o_off = chipenv.reset(key, cfg_off)
+        s_on, o_on = chipenv.reset(key, cfg_on)
+        assert s_off.mapping is None
+        assert s_on.mapping is not None
+        n_pl = len(ps.PLACEMENT_HEAD_SIZES)
+        act = _random_actions(jax.random.fold_in(key, 1), 1, cfg_on)[0]
+        s_off2, _, r_off, _, _ = chipenv.step(s_off, act[:n_pl], cfg_off)
+        # a canonical-keeping mapping action: reassign slot 0 to stage 0,
+        # layer group 0 to the canonical tile index
+        act_canon = act.at[n_pl:].set(
+            jnp.asarray([0, 0, 0, mpg.CANON_TILE], jnp.int32))
+        s_on2, _, r_on, _, _ = chipenv.step(s_on, act_canon, cfg_on)
+        np.testing.assert_allclose(np.asarray(r_off), np.asarray(r_on),
+                                   rtol=1e-5)
+
+
+def _random_actions(key, n, cfg):
+    heads = jnp.asarray(chipenv.head_sizes(cfg), jnp.int32)
+    return jax.random.randint(key, (n, len(heads)), 0, heads,
+                              dtype=jnp.int32)
+
+
+class TestDeltaOracle:
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_env_mapping_delta_vs_scratch_30_steps(self, seed):
+        """Fused mapping+placement delta pricing agrees with scratch
+        evaluation of the same carried state on every Metrics field."""
+        mk = lambda delta: chipenv.EnvConfig(placement_episode=True,
+                                             mapping_actions=True,
+                                             delta_eval=delta,
+                                             episode_len=30)
+        d_cfg, s_cfg = mk(True), mk(False)
+        key = jax.random.PRNGKey(seed)
+        sd, _ = chipenv.reset(key, d_cfg)
+        ss, _ = chipenv.reset(key, s_cfg)
+        acts = _random_actions(jax.random.fold_in(key, 1), 30, d_cfg)
+        d_step = jax.jit(lambda st, a: chipenv.step(st, a, d_cfg))
+        s_step = jax.jit(lambda st, a: chipenv.step(st, a, s_cfg))
+        scen = d_cfg.scenario()
+        for i in range(30):
+            sd, od, rd, _, md = d_step(sd, acts[i])
+            ss, os_, rs, _, ms = s_step(ss, acts[i])
+            for field in cm.Metrics._fields:
+                np.testing.assert_allclose(
+                    float(getattr(md, field)), float(getattr(ms, field)),
+                    rtol=1e-5, atol=1e-5,
+                    err_msg=f"step {i}: {field}")
+            np.testing.assert_allclose(np.asarray(od), np.asarray(os_),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f"step {i}: obs")
+            # independent scratch oracle on the carried state
+            mo = cm.evaluate_scenario(sd.design, scen, d_cfg.hw,
+                                      sd.cache.placement,
+                                      mapping=sd.mapping)
+            np.testing.assert_allclose(float(md.reward), float(mo.reward),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f"step {i}: oracle reward")
+
+    def test_sa_mapping_chain_reward_matches_scratch(self):
+        """The co-annealing SA's best (placement, mapping) re-evaluates
+        from scratch to its reported best reward."""
+        cfg = sa.PlacementSAConfig(n_iters=200, p_mapping=0.3)
+        dp = ps.random_design(jax.random.PRNGKey(5))
+        res = sa.refine_placement(jax.random.PRNGKey(6), dp,
+                                  chipenv.EnvConfig(), cfg)
+        assert res.best_mapping is not None
+        scen = chipenv.EnvConfig().scenario()
+        m = cm.evaluate_scenario(dp, scen, chipenv.EnvConfig().hw,
+                                 res.best_placement,
+                                 mapping=res.best_mapping)
+        np.testing.assert_allclose(float(res.best_reward), float(m.reward),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestSlotRelabelInvariance:
+    def test_mapped_traffic_invariant_under_active_slot_relabel(self):
+        """NoP traffic under a mapping is a sum over (cell, stage)
+        pairs: permuting which slot index carries which (cell, stage)
+        among the active slots cannot change any stat."""
+        hyp = pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        dp = ps.random_design(jax.random.PRNGKey(11))
+        pre = cm._eval_prefix(dp, cm.hw.DEFAULT_HW)
+        v, n_pos = pre.v, int(pre.n_positions)
+        plc = pm.canonical(pre.mesh_m, pre.mesh_n, v.hbm_mask, v.arch_type)
+        mapping = mpg.random_mapping(jax.random.PRNGKey(12), n_pos)
+
+        @given(st.randoms(use_true_random=False))
+        @settings(max_examples=10, deadline=None)
+        def check(rng):
+            perm = list(range(n_pos))
+            rng.shuffle(perm)
+            perm = np.asarray(perm + list(range(n_pos, mpg.MAX_SLOTS)))
+            plc_p = plc._replace(
+                chiplet_cell=plc.chiplet_cell[perm])
+            map_p = mapping._replace(stage=mapping.stage[perm])
+            a = pm.nop_stats(plc, n_pos, v.hbm_mask, v.arch_type,
+                             mapping=mapping)
+            b = pm.nop_stats(plc_p, n_pos, v.hbm_mask, v.arch_type,
+                             mapping=map_p)
+            for f, x, y in zip(a._fields, a, b):
+                np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                           rtol=1e-5, atol=1e-6,
+                                           err_msg=f"relabel: {f}")
+
+        check()

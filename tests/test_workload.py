@@ -5,6 +5,9 @@ the *compiled* model (while-aware HLO dot census) — the same numbers feed
 both the Chiplet-Gym objective and the roofline's MODEL_FLOPS.
 """
 
+import builtins
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -52,6 +55,30 @@ class TestArchWorkloads:
     def test_registry_includes_archs(self):
         reg = wl.registry()
         assert "llama3-8b:train" in reg and "bert" in reg
+
+    def test_registry_tolerates_missing_configs(self, monkeypatch):
+        """Bootstrap order: repro.configs absent -> MLPerf-only registry."""
+        monkeypatch.delitem(sys.modules, "repro.configs", raising=False)
+        monkeypatch.setitem(sys.modules, "repro.configs", None)
+        reg = wl.registry()
+        assert set(reg) == set(wl.MLPERF)
+
+    def test_registry_surfaces_transitive_import_error(self, monkeypatch):
+        """Regression: a failure *inside* repro.configs must not be
+        swallowed into a silently-shrunk registry."""
+        real_import = builtins.__import__
+
+        def boom(name, *args, **kwargs):
+            if name == "repro.configs":
+                raise ModuleNotFoundError(
+                    "No module named 'some_transitive_dep'",
+                    name="some_transitive_dep")
+            return real_import(name, *args, **kwargs)
+
+        monkeypatch.delitem(sys.modules, "repro.configs", raising=False)
+        monkeypatch.setattr(builtins, "__import__", boom)
+        with pytest.raises(ModuleNotFoundError, match="some_transitive_dep"):
+            wl.registry()
 
 
 class TestAnalyticalVsCompiled:
