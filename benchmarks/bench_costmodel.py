@@ -43,6 +43,13 @@ from the carried ``PlacementEvalCache`` with ``lax.cond``-gated
 vectorized auto-reset vs the cache-free scratch rollout;
 ``--assert-min-env-step-ratio`` gates the end-to-end step ratio).
 
+ISSUE-10 adds the **in-scan telemetry** bench: phased placement-SA with
+``PlacementSAConfig.telemetry`` off vs on at the same shape, asserting
+the off path is bit-exact with a default-constructed config (identical
+trajectories AND compiled kernel count) and recording the counters-on
+wall overhead. ``--assert-telemetry`` turns both into CI gates
+(identity hard, overhead <= 15%).
+
 ``--mapping`` records the fourth design layer's cost and gain: full-tier
 ``evaluate`` throughput with a traced mapping vs ``mapping=None`` (the
 latter compiles the exact unmapped program), and the extra reward that
@@ -65,6 +72,7 @@ import numpy as np
 from repro.core import costmodel as cm
 from repro.core import params as ps
 from repro.core import placement as pm
+from repro.telemetry import profile as tprof
 
 # Measured on this 2-core CPU container, same batch/protocol as below.
 BEFORE = {"designs_per_s": 113208.0, "batch": 65536,
@@ -120,22 +128,9 @@ def _placement_gain_sweep(n_designs: int, n_iters: int) -> dict:
     return out
 
 
-def _count_step_kernels(fn, *args) -> int:
-    """Fused-kernel count of the compiled SA scan body.
-
-    Deterministic proxy for per-step scheduled work: the number of
-    fusion/reduce/gather/scatter roots inside the largest while-loop
-    body of the compiled program (each is one launched kernel on the
-    CPU backend, which is what dominates small-batch SA steps).
-    """
-    import re
-    txt = fn.lower(*args).compile().as_text()
-    bodies = re.findall(r"%while_body[^\{]*\{(.*?)\n\}", txt, re.S)
-    if not bodies:
-        return 0
-    body = max(bodies, key=len)
-    return len(re.findall(
-        r"= \S+ (?:fusion|reduce|gather|scatter|sort|dot)\(", body))
+# per-step scheduled-work proxy, shared with bench_optimizer.py and the
+# ci.sh kernel guards (promoted from this module's old local copy)
+_count_step_kernels = tprof.compiled_kernel_count
 
 
 def _placement_sa_bench(smoke: bool) -> dict:
@@ -281,6 +276,103 @@ def _placement_sa_phased_bench(smoke: bool) -> dict:
           f"{rec['wall_ratio']:.2f}x wall; mean gain "
           f"{gains['mixed_delta'].mean():+.3f} vs "
           f"{gains['phased'].mean():+.3f}")
+    return rec
+
+
+def _telemetry_bench(smoke: bool) -> dict:
+    """In-scan telemetry counters: off-path identity + on-path overhead.
+
+    ISSUE-10 gate, measured at the phased-SA bench shape (the hot path
+    with the most per-step telemetry work — per-segment counter bins).
+    Three compiled programs, same keys/designs:
+
+      - ``off`` — ``telemetry=False`` (default): must compile the exact
+        pre-telemetry program; trajectories are asserted bitwise equal
+        to the baseline below.
+      - ``baseline`` — the same config built without touching the
+        telemetry field at all (belt and braces: a default-constructed
+        config IS the off path).
+      - ``on`` — ``telemetry=True``: counters ride the scan carry.
+        Trajectory must still be bitwise identical (counters only read
+        values the step already computed), and the wall-clock overhead
+        is recorded honestly; ``--assert-telemetry`` gates it at 15%.
+    """
+    from repro.core import env as chipenv
+    from repro.optimizer import scenario as suite
+    from repro.sa import annealing as sa
+    from repro.telemetry import counters as tl
+
+    n_designs = 8 if smoke else 16
+    n_iters = 300 if smoke else 1000
+    schedule = (("chiplet", 40), ("hbm", 10))
+    env_cfg = chipenv.EnvConfig(hw=suite.PLACEMENT_SENSITIVE_HW)
+    dps = ps.random_design(jax.random.PRNGKey(11), (n_designs,))
+    keys = jax.random.split(jax.random.PRNGKey(12), n_designs)
+
+    cfgs = {
+        "baseline": sa.PlacementSAConfig(n_iters=n_iters,
+                                         phase_schedule=schedule),
+        "off": sa.PlacementSAConfig(n_iters=n_iters,
+                                    phase_schedule=schedule,
+                                    telemetry=False),
+        "on": sa.PlacementSAConfig(n_iters=n_iters,
+                                   phase_schedule=schedule,
+                                   telemetry=True),
+    }
+    fns, results, kernels = {}, {}, {}
+    best = {name: float("inf") for name in cfgs}
+    for name, cfg in cfgs.items():
+        fn = jax.jit(jax.vmap(lambda k, d, _c=cfg: sa.refine_placement(
+            k, d, env_cfg, _c)))
+        kernels[name] = _count_step_kernels(fn, keys, dps)
+        r = fn(keys, dps)
+        jax.block_until_ready(r)
+        results[name] = r
+        fns[name] = fn
+    for _ in range(4):                      # alternating best-of-4
+        for name in cfgs:
+            t0 = time.time()
+            jax.block_until_ready(fns[name](keys, dps))
+            best[name] = min(best[name], time.time() - t0)
+    steps = {name: n_designs * n_iters / best[name] for name in cfgs}
+
+    def _traj(res):
+        return (np.asarray(res.best_reward), np.asarray(res.history),
+                np.asarray(res.canonical_reward))
+
+    off_identical = all(
+        (a == b).all() for a, b in zip(_traj(results["off"]),
+                                       _traj(results["baseline"])))
+    on_identical = all(
+        (a == b).all() for a, b in zip(_traj(results["on"]),
+                                       _traj(results["baseline"])))
+    tel = results["on"].telemetry
+    summary = tl.summarize_sa(tel)
+    counters_consistent = (
+        sum(summary["propose"]) == n_designs * n_iters
+        and sum(summary["seg_propose"]) == n_designs * n_iters
+        and all(a <= p for a, p in zip(summary["accept"],
+                                       summary["propose"])))
+    overhead_x = best["on"] / best["off"]
+    rec = {
+        "batch": n_designs, "sa_iters": n_iters,
+        "phase_schedule": [list(s) for s in schedule],
+        "off_steps_per_s": round(steps["off"], 1),
+        "on_steps_per_s": round(steps["on"], 1),
+        "overhead_x": round(overhead_x, 3),
+        "off_step_kernels": kernels["off"],
+        "on_step_kernels": kernels["on"],
+        "off_bitwise_identical": bool(off_identical),
+        "on_trajectory_identical": bool(on_identical),
+        "off_kernels_unchanged": kernels["off"] == kernels["baseline"],
+        "counters_consistent": bool(counters_consistent),
+        "accept_rate": summary["accept_rate"],
+    }
+    print(f"[bench] telemetry: off {steps['off']:,.0f} steps/s "
+          f"({kernels['off']} kernels) vs on {steps['on']:,.0f} "
+          f"({kernels['on']} kernels) -> {overhead_x:.3f}x wall overhead; "
+          f"off-identical={off_identical} on-identical={on_identical} "
+          f"counters-ok={counters_consistent}")
     return rec
 
 
@@ -538,6 +630,13 @@ def main():
                     help="fail unless delta-priced placement-episode env "
                          "steps deliver >= RATIO x the cache-free "
                          "scratch-evaluate rollout's steps/s (wall clock)")
+    ap.add_argument("--assert-telemetry", action="store_true",
+                    help="fail unless (a) telemetry=False compiles the "
+                         "exact pre-telemetry phased-SA program (bitwise "
+                         "trajectories, unchanged kernel count), "
+                         "(b) telemetry=True keeps the trajectory bitwise "
+                         "and costs <= 15%% wall overhead, and (c) the "
+                         "counters are internally consistent")
     ap.add_argument("--placement-gain", action="store_true",
                     help="also sweep placement-SA gain per HW preset")
     ap.add_argument("--mapping", action="store_true",
@@ -598,6 +697,9 @@ def main():
     phased_rec = _placement_sa_phased_bench(args.smoke)
     record["placement_sa_phased"] = phased_rec
 
+    tel_rec = _telemetry_bench(args.smoke)
+    record["telemetry"] = tel_rec
+
     env_rec = _env_step_bench(args.smoke)
     record["env_step"] = env_rec
 
@@ -656,6 +758,25 @@ def main():
               f"{env_rec['step_ratio']:.2f}x < required "
               f"{args.assert_min_env_step_ratio:.2f}x", file=sys.stderr)
         sys.exit(1)
+    if args.assert_telemetry:
+        if not (tel_rec["off_bitwise_identical"]
+                and tel_rec["off_kernels_unchanged"]):
+            print("[bench] FAIL: telemetry=False is not bit-exact with "
+                  "the pre-telemetry phased-SA program", file=sys.stderr)
+            sys.exit(1)
+        if not tel_rec["on_trajectory_identical"]:
+            print("[bench] FAIL: telemetry=True perturbed the SA "
+                  "trajectory", file=sys.stderr)
+            sys.exit(1)
+        if not tel_rec["counters_consistent"]:
+            print("[bench] FAIL: telemetry counters are internally "
+                  "inconsistent", file=sys.stderr)
+            sys.exit(1)
+        if tel_rec["overhead_x"] > 1.15:
+            print(f"[bench] FAIL: telemetry-on wall overhead "
+                  f"{tel_rec['overhead_x']:.3f}x > allowed 1.15x",
+                  file=sys.stderr)
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -30,6 +30,7 @@ from repro.core import hw_constants as hw
 from repro.core import params as ps
 from repro.rl import ppo
 from repro.sa import annealing as sa
+from repro.telemetry import profile as tprof
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
 N_SEEDS = 10 if FULL else 4
@@ -93,11 +94,17 @@ def bench_portfolio_engine(n_rl: int, rl_cfg: ppo.PPOConfig,
         seq_rewards.append(float(res.best_reward))
     seq_s = time.time() - t0
 
+    # split compile from run via the shared profiling API so the record
+    # shows how much of the vectorized wall is one-time XLA compilation
+    fn = jax.jit(lambda k: ppo.train_population(
+        k, n_rl, cfg=rl_cfg, total_timesteps=timesteps))
+    compiled, compile_s = tprof.compile_timer(
+        fn, key, name="train_population")
     t0 = time.time()
-    pop = ppo.train_population(key, n_rl, cfg=rl_cfg,
-                               total_timesteps=timesteps)
+    pop = compiled(key)
     jax.block_until_ready(pop)
-    vec_s = time.time() - t0
+    run_s = time.time() - t0
+    vec_s = compile_s + run_s
     pop_rewards = np.asarray(pop.best_reward)
 
     return {
@@ -107,6 +114,8 @@ def bench_portfolio_engine(n_rl: int, rl_cfg: ppo.PPOConfig,
         "timesteps_per_agent": timesteps,
         "sequential_wall_s": round(seq_s, 3),
         "vectorized_wall_s": round(vec_s, 3),
+        "vectorized_compile_s": round(compile_s, 3),
+        "vectorized_run_s": round(run_s, 3),
         "speedup": round(seq_s / max(vec_s, 1e-9), 2),
         "sequential_agents_per_s": round(n_rl / max(seq_s, 1e-9), 3),
         "vectorized_agents_per_s": round(n_rl / max(vec_s, 1e-9), 3),
@@ -142,10 +151,13 @@ def bench_evo_arm(smoke: bool = True) -> dict:
            else evo.EvoConfig(pop_size=64, n_generations=60))
     fn = jax.jit(lambda k: evo.evolve_population(k, n_islands, cfg=cfg))
     key = jax.random.PRNGKey(9)
-    res = fn(key)
-    jax.block_until_ready(res)            # compile + first run
+    compiled, compile_s = tprof.compile_timer(
+        fn, key, name="evolve_population")
+    gen_kernels = tprof.compiled_kernel_count(fn, key)
+    res = compiled(key)
+    jax.block_until_ready(res)            # first run (warmup)
     t0 = time.time()
-    res = fn(key)
+    res = compiled(key)
     jax.block_until_ready(res)
     wall = time.time() - t0
     n_evals = n_islands * cfg.pop_size * (cfg.n_generations + 1)
@@ -162,6 +174,8 @@ def bench_evo_arm(smoke: bool = True) -> dict:
         "pop_size": cfg.pop_size,
         "n_generations": cfg.n_generations,
         "wall_s": round(wall, 3),
+        "compile_s": round(compile_s, 3),
+        "gen_step_kernels": gen_kernels,
         "evals_per_s": round(n_evals / max(wall, 1e-9), 1),
         "best_reward": round(float(jnp.max(res.best_reward)), 2),
         "archive_points": int(val.sum()),

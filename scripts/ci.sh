@@ -92,9 +92,19 @@ echo "=== smoke: cost-model eval throughput (fast-tier + delta-SA guards) ==="
 # the placement context every step, ~1.44x from delta pricing on top).
 # The run also hard-fails if the delta env rewards diverge from either
 # scratch stream at 1e-5.
+#
+# ISSUE-10 telemetry guards (--assert-telemetry): (e) telemetry=False
+# must be BITWISE identical to the pre-telemetry program — same phased-SA
+# trajectories AND the same compiled while-body kernel count (counted by
+# the shared telemetry/profile.py counter the other guards use); (f) the
+# counters-on run must leave trajectories bitwise unchanged (counters
+# only read already-computed values), its counter totals must match the
+# proposal ledger exactly, and its wall overhead must stay <= 1.15x the
+# off path (measured 1.03x at the smoke protocol).
 python benchmarks/bench_costmodel.py --smoke --assert-min-ratio 1.8 \
     --assert-min-sa-ratio 1.05 --assert-min-sa-kernel-ratio 1.7 \
     --assert-min-phased-sa-ratio 1.25 --assert-min-env-step-ratio 2.5 \
+    --assert-telemetry \
     --out "${TMPDIR:-/tmp}/bench_costmodel_ci.json"
 
 echo "=== smoke: mapping-layer guards (fourth design layer) ==="

@@ -1,0 +1,221 @@
+"""Render a telemetry run journal into a human-readable run summary.
+
+Reads the JSONL journal written by ``--telemetry out.jsonl`` (see
+``repro.telemetry.journal``) and prints: the environment fingerprint,
+the span tree with wall-clock durations, per-arm convergence (best
+reward + sparkline curve), placement-SA acceptance rates/curves, GA
+archive hypervolume over generations, PPO update stats, surrogate
+fit/rank-drift events, compile timings, and the suite-level archive /
+winners summary.
+
+    PYTHONPATH=src python scripts/telemetry_report.py /tmp/run.jsonl
+"""
+
+import argparse
+import sys
+
+from repro.telemetry import journal as tj
+
+_TICKS = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(values, width=48):
+    """Unicode sparkline of a numeric sequence (downsampled to width)."""
+    vals = [float(v) for v in values
+            if v is not None and v == v and abs(float(v)) != float("inf")]
+    if not vals:
+        return "(no finite samples)"
+    if len(vals) > width:
+        stride = len(vals) / width
+        vals = [vals[int(i * stride)] for i in range(width)]
+    lo, hi = min(vals), max(vals)
+    if hi <= lo:
+        return _TICKS[0] * len(vals) + f"  [{lo:.4g}]"
+    chars = "".join(_TICKS[int((v - lo) / (hi - lo) * (len(_TICKS) - 1))]
+                    for v in vals)
+    return f"{chars}  [{lo:.4g} .. {hi:.4g}]"
+
+
+def _fmt_dur(s):
+    return f"{s:.1f}s" if s >= 1 else f"{s * 1e3:.0f}ms"
+
+
+def _span_tree(records):
+    """Closed spans in order, with depth from their parent chain."""
+    spans = [r for r in records if r.get("kind") == "span"]
+    depth = {}
+    out = []
+    for r in spans:
+        d = depth.get(r.get("parent"), -1) + 1 if r.get("parent") else 0
+        depth[r["name"]] = d
+        out.append((d, r))
+    return out
+
+
+def _accept_rate_curve(ev):
+    """Per-record acceptance rate from a cumulative accept curve."""
+    curve = ev.get("accept_curve")
+    if not curve or len(curve) < 2:
+        return None
+    total = sum(ev.get("propose", [])) or 1
+    stride = total / (len(curve) - 1)
+    rates = []
+    for i in range(1, len(curve)):
+        rates.append((curve[i] - curve[i - 1]) / max(stride, 1))
+    return rates
+
+
+def render(records, out=sys.stdout):
+    w = out.write
+    by_name = {}
+    for r in records:
+        if r.get("kind") == "event":
+            by_name.setdefault(r["name"], []).append(r)
+
+    begin = next((r for r in records if r.get("kind") == "run_begin"), None)
+    end_ts = max((r["ts"] for r in records if "ts" in r), default=None)
+    w("telemetry run report\n====================\n")
+    if begin:
+        env = begin.get("env", {})
+        w(f"run:      {begin.get('run')}\n")
+        if end_ts is not None:
+            w(f"wall:     {_fmt_dur(end_ts - begin['ts'])}\n")
+        w(f"env:      python {env.get('python')}, jax {env.get('jax')} "
+          f"({env.get('backend')}, {env.get('device_count')} device(s), "
+          f"{env.get('cpu_count')} cpus)\n")
+        w(f"platform: {env.get('platform')}\n")
+
+    cfgs = by_name.get("suite_config", [])
+    for c in cfgs:
+        w(f"\nsuite: {c.get('n_scenarios')} scenario(s), "
+          f"arms sa={c.get('n_sa')} rl={c.get('n_rl')} evo={c.get('n_evo')}"
+          f", surrogate={'on' if c.get('surrogate') else 'off'}"
+          f", mapping={'on' if c.get('mapping_refine') else 'off'}"
+          f", trace={c.get('trace') or 'off'}\n")
+
+    tree = _span_tree(records)
+    if tree:
+        w("\nstages\n------\n")
+        for d, r in tree:
+            extras = {k: v for k, v in r.items()
+                      if k not in ("ts", "run", "kind", "name", "parent",
+                                   "dur_s")}
+            meta = ", ".join(f"{k}={v}" for k, v in extras.items())
+            w(f"  {'  ' * d}{r['name']:<{24 - 2 * d}} "
+              f"{_fmt_dur(r['dur_s']):>8}   {meta}\n")
+
+    conv = by_name.get("arm_convergence", [])
+    if conv:
+        w("\nper-arm convergence (best-so-far reward)\n"
+          "----------------------------------------\n")
+        for ev in conv:
+            curve = ev.get("curve") or []
+            # scenario suites log (S, T) curves; portfolios log (T,)
+            curves = curve if curve and isinstance(curve[0], list) \
+                else [curve]
+            best = ev.get("best") or []
+            if not isinstance(best, list):
+                best = [best]
+            for s, c in enumerate(curves):
+                tag = f"[{s}]" if len(curves) > 1 else ""
+                b = f"{best[s]:.1f}" if s < len(best) else "?"
+                w(f"  {ev['arm']:<4}{tag:<5} best={b:>9}  {sparkline(c)}\n")
+
+    acc = by_name.get("sa_accept", [])
+    if acc:
+        w("\nplacement-SA acceptance\n-----------------------\n")
+        for ev in acc:
+            scen = ev.get("scenario", "")
+            rates = ", ".join(f"{r:.2f}" for r in ev.get("accept_rate", []))
+            seg = ev.get("seg_accept_rate", [])
+            segs = ("" if len(seg) <= 1 else
+                    "  segments [" + ", ".join(f"{r:.2f}" for r in seg)
+                    + "]")
+            w(f"  {scen or ev.get('stage', '?')}: accept-rate/kind "
+              f"[{rates}] improve={ev.get('improve')}{segs}\n")
+            rc = _accept_rate_curve(ev)
+            if rc:
+                w(f"    accept-rate over run: {sparkline(rc)}\n")
+
+    adapt = by_name.get("sa_adapt", [])
+    for ev in adapt:
+        w(f"\nadaptive SA schedule ({ev.get('rounds')} rounds): "
+          f"{ev.get('schedules')}\n")
+
+    evo = by_name.get("evo_stats", [])
+    if evo:
+        w("\nGA generation stats\n-------------------\n")
+        for ev in evo:
+            hv = ev.get("archive_hv") or []
+            hvs = hv if hv and isinstance(hv[0], list) else [hv]
+            div = ev.get("diversity") or []
+            divs = div if div and isinstance(div[0], list) else [div]
+            for s, c in enumerate(hvs):
+                tag = f"[{s}]" if len(hvs) > 1 else ""
+                w(f"  archive HV{tag:<5} {sparkline(c)}\n")
+            for s, c in enumerate(divs):
+                tag = f"[{s}]" if len(divs) > 1 else ""
+                w(f"  diversity {tag:<5} {sparkline(c)}\n")
+
+    ppo = by_name.get("ppo_stats", [])
+    if ppo:
+        w("\nPPO update stats\n----------------\n")
+        for ev in ppo:
+            for k in ("entropy", "approx_kl", "clip_frac", "return_mean"):
+                c = ev.get(k) or []
+                cs = c if c and isinstance(c[0], list) else [c]
+                for s, cc in enumerate(cs):
+                    tag = f"[{s}]" if len(cs) > 1 else ""
+                    w(f"  {k:<12}{tag:<5} {sparkline(cc)}\n")
+
+    fits = by_name.get("surrogate_fit", [])
+    drifts = by_name.get("surrogate_rank_drift", [])
+    boots = by_name.get("surrogate_bootstrap", [])
+    if fits or boots:
+        w("\nsurrogate\n---------\n")
+        for ev in boots:
+            w(f"  bootstrap: {ev.get('n')} analytic evals "
+              f"(+{ev.get('tap_rows')} tapped) -> "
+              f"{ev.get('dataset_rows')} dataset rows\n")
+        for ev in fits:
+            w(f"  fit @ chunk {ev.get('chunk')}: "
+              f"{ev.get('dataset_rows')} dataset rows\n")
+        for ev in drifts:
+            w(f"  rank drift @ chunk {ev.get('chunk')}: "
+              f"spearman {ev.get('spearman'):.3f} vs previous fit\n")
+
+    compiles = by_name.get("compile", [])
+    if compiles:
+        w("\ncompile events\n--------------\n")
+        for ev in compiles:
+            w(f"  {ev.get('target', '?'):<32} "
+              f"{_fmt_dur(ev.get('dur_s', 0))}\n")
+
+    arch = by_name.get("suite_archive", [])
+    for ev in arch:
+        w(f"\nsuite archive: {ev.get('n_points')} non-dominated points "
+          f"(capacity {ev.get('capacity')}), "
+          f"hypervolume {ev.get('hypervolume'):.4g}\n")
+
+    winners = by_name.get("suite_end", [])
+    for ev in winners:
+        w("\nwinners\n-------\n")
+        for row in ev.get("winners", []):
+            w(f"  {row.get('scenario', ''):<43} "
+              f"{row.get('reward', 0.0):>9.1f}  {row.get('source')}\n")
+        w(f"\nsuite wall-time {_fmt_dur(ev.get('wall_time_s', 0))}\n")
+    for ev in by_name.get("portfolio_end", []):
+        w(f"\nportfolio winner: reward {ev.get('best_reward'):.1f} "
+          f"({ev.get('source')}), placement {ev.get('placement_reward')}, "
+          f"wall {_fmt_dur(ev.get('wall_time_s', 0))}\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("journal", help="JSONL journal from --telemetry")
+    args = ap.parse_args()
+    render(tj.load(args.journal))
+
+
+if __name__ == "__main__":
+    main()

@@ -631,7 +631,10 @@ def unregister_eval_tap(tap) -> None:
 def _notify_eval_taps(dp, workload, weights, mtr) -> None:
     if not _EVAL_TAPS:
         return
-    if any(isinstance(x, jax.core.Tracer)
+    # compat.is_tracer: jax.core.Tracer is a deprecated access path on
+    # newer jax — the shared shim resolves jax.Tracer with a fallback.
+    from repro.parallel import compat
+    if any(compat.is_tracer(x)
            for x in (mtr.reward, dp.arch_type, workload.gemm_ops,
                      weights.alpha)):
         return

@@ -50,6 +50,7 @@ from repro.core import mapping as mpg
 from repro.core import params as ps
 from repro.core import placement as pm
 from repro.core import spaces
+from repro.telemetry import counters as tl
 
 OBS_DIM = 10
 OBS_DIM_PLACEMENT = 13   # + [hops_hbm_mean, hops_ai_mean, link_contention]
@@ -94,6 +95,13 @@ class EnvConfig:
     # mapping diagnostics. Requires placement_episode. Default off —
     # the 4-head placement episode stays bit-identical.
     mapping_actions: bool = False
+    # in-scan telemetry for the placement-episode path
+    # (telemetry/counters.EnvCounters riding EnvState.tel): step /
+    # episode / delta-vs-scratch eval counts and reward accumulators
+    # that survive auto-resets. False (default) keeps EnvState.tel None
+    # and statically compiles the exact pre-telemetry program; rewards,
+    # observations and the key stream are untouched either way.
+    telemetry: bool = False
 
     def scenario(self) -> cm.Scenario:
         return cm.Scenario(workload=self.workload, weights=self.weights)
@@ -140,6 +148,9 @@ class EnvState(NamedTuple):
     # mapping-episode mode only (EnvConfig.mapping_actions): the carried
     # dataflow the next step mutates; starts canonical at reset.
     mapping: mpg.Mapping = None
+    # placement-episode telemetry (EnvConfig.telemetry only): counters
+    # that accumulate across auto-reset boundaries.
+    tel: tl.EnvCounters = None
 
 
 action_space = spaces.MultiDiscrete(ps.HEAD_SIZES)
@@ -250,8 +261,10 @@ def _reset_placement(design, k_state, cfg: EnvConfig, scenario):
         # mapping-free placement episode
         mapping = mpg.canonical()
         msum = mpg.traffic_summary(mapping, n_pos)
+    tel = tl.init_env() if cfg.telemetry else None
     state = EnvState(design=design, t=jnp.int32(0), prev_reward=zero,
-                     key=k_state, ctx=ctx, cache=cache, mapping=mapping)
+                     key=k_state, ctx=ctx, cache=cache, mapping=mapping,
+                     tel=tel)
     return state, _observe(metrics, 0, zero, cfg, msum)
 
 
@@ -333,8 +346,11 @@ def _step_placement(state: EnvState, action: jnp.ndarray,
     t_next = state.t + 1
     done = t_next >= cfg.episode_len
     obs = _observe(metrics, t_next, reward, cfg, msum)
+    tel = state.tel
+    if cfg.telemetry:
+        tel = tl.env_step_update(tel, reward, cfg.delta_eval)
     new_state = state._replace(t=t_next, prev_reward=reward, cache=cache,
-                               mapping=mapping)
+                               mapping=mapping, tel=tel)
     return new_state, obs, reward, done, metrics
 
 
@@ -349,6 +365,12 @@ def auto_reset_step(state: EnvState, action: jnp.ndarray,
     out_state = jax.tree_util.tree_map(
         lambda a, b: jnp.where(done, a, b),
         reset_state._replace(key=k_next), new_state)
+    if cfg.telemetry and cfg.placement_episode:
+        # counters accumulate across episode boundaries: carry the
+        # stepped counters forward (not the fresh-episode zeros the
+        # where-combine picked) and count the completed episode
+        out_state = out_state._replace(
+            tel=tl.env_episode_update(new_state.tel, done))
     out_obs = jnp.where(done, reset_obs, obs)
     return out_state, out_obs, reward, done, metrics
 
@@ -383,6 +405,11 @@ def auto_reset_step_vec(states: EnvState, actions: jnp.ndarray,
             lambda a, b: jnp.where(
                 done.reshape(done.shape + (1,) * (a.ndim - 1)), a, b),
             reset_states._replace(key=keys[:, 0]), new_states)
+        if cfg.telemetry and cfg.placement_episode:
+            # same contract as auto_reset_step: counters survive the
+            # boundary and the finished episodes are counted per env
+            out_states = out_states._replace(
+                tel=tl.env_episode_update(new_states.tel, done))
         out_obs = jnp.where(done[:, None], reset_obs, obs)
         return out_states, out_obs
 

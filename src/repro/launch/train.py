@@ -91,18 +91,43 @@ def train_scenario_suite(args):
                                 train=strain.TrainConfig(steps=800,
                                                          batch_size=512))
             if args.smoke else srk.SurrogateConfig())
+    if args.telemetry:
+        # journal wants the in-scan counters from every stage that has
+        # them; the off-by-default flags flip on together here (each one
+        # alone is bit-exact off, and on they only read computed values)
+        overrides_tl = {
+            "placement_sa": dataclasses.replace(cfg.placement_sa,
+                                                telemetry=True),
+            "evo": dataclasses.replace(cfg.evo, telemetry=True),
+            "rl": dataclasses.replace(cfg.rl, telemetry=True),
+        }
+        overrides.update(overrides_tl)
     cfg = dataclasses.replace(cfg, **overrides)
     cfg = suite.with_hw_preset(cfg, args.hw_preset)
     print(f"[suite] workloads={workloads} x {len(cfg.weight_grid)} "
           f"weight settings, n_sa={cfg.n_sa}, n_rl={cfg.n_rl}, "
           f"surrogate={'on' if cfg.surrogate is not None else 'off'}, "
           f"trace={args.trace or 'off'}, hw-preset={args.hw_preset}")
-    res = suite.run_suite(_jax.random.PRNGKey(args.seed), cfg, verbose=True)
+    journal = None
+    if args.telemetry:
+        from repro.telemetry import journal as tj
+        journal = tj.Journal(args.telemetry)
+        print(f"[suite] telemetry journal -> {args.telemetry} "
+              f"(run {journal.run_id})")
+    try:
+        res = suite.run_suite(_jax.random.PRNGKey(args.seed), cfg,
+                              verbose=True, journal=journal)
+    finally:
+        if journal is not None:
+            journal.close()
     print()
     print(suite.format_report(res))
     if args.out:
         suite.save_json(res, args.out)
         print(f"\n[suite] wrote {args.out}")
+    if args.telemetry:
+        print(f"[suite] render the journal with: "
+              f"python scripts/telemetry_report.py {args.telemetry}")
 
 
 def train_evo(args):
@@ -211,6 +236,12 @@ def main():
                          "rate (default: preset's 1.5)")
     ap.add_argument("--out", default=None,
                     help="write the scenario-suite JSON report here")
+    ap.add_argument("--telemetry", default=None, metavar="OUT.jsonl",
+                    help="scenario-suite: write a structured run journal "
+                         "(JSONL spans/events; telemetry/journal.py) here "
+                         "and switch the in-scan counters on for every "
+                         "stage that has them; render with "
+                         "scripts/telemetry_report.py")
     args = ap.parse_args()
     if args.arch == "chipletgym":
         train_chipletgym(args)

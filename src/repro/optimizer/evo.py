@@ -37,6 +37,7 @@ from repro.core import mapping as mpg
 from repro.core import params as ps
 from repro.core import placement as pm
 from repro.optimizer import archive as ar
+from repro.telemetry import counters as tl
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +93,15 @@ class EvoConfig:
     # archive.insert_batch eviction key ('crowding' default | 'hv' for
     # leave-one-out hypervolume-contribution eviction)
     archive_eviction: str = "crowding"
+    # in-scan telemetry (telemetry/counters.EvoGenStats): per-generation
+    # population diversity, mean fitness, archive insert/evict counts
+    # and a live hypervolume sample, emitted alongside the best-so-far
+    # history and returned as EvoResult.telemetry. False (default)
+    # statically compiles the exact pre-telemetry program — the GA key
+    # stream and every result leaf stay bit-for-bit. Stats only read
+    # values the generation already computed (plus an O(capacity^2)
+    # archive diff and one HV sweep per generation).
+    telemetry: bool = False
 
 
 class EvoResult(NamedTuple):
@@ -100,6 +110,9 @@ class EvoResult(NamedTuple):
     history: jnp.ndarray           # (n_generations,) best-so-far trace
     archive: ar.Archive            # live non-dominated PPAC front
     best_genome: jnp.ndarray       # (G,) int32 — incl. placement genes
+    # per-generation stats (cfg.telemetry only; counters.EvoGenStats
+    # with a leading generation axis)
+    telemetry: tl.EvoGenStats = None
 
 
 def genome_head_sizes(cfg: EvoConfig) -> Tuple[int, ...]:
@@ -184,11 +197,12 @@ def evolve(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
                               cfg.mapping_genes)
     carry0 = _init_carry(key, cfg, heads, eval_pop)
     generation = _make_generation(cfg, heads, eval_pop, surrogate)
-    (_, _, best_g, best_r, arc, _), history = jax.lax.scan(
+    (_, _, best_g, best_r, arc, _), ys = jax.lax.scan(
         generation, carry0, None, length=cfg.n_generations)
+    history, stats = ys if cfg.telemetry else (ys, None)
     return EvoResult(best_design=ps.from_flat(best_g[: ps.N_PARAMS]),
                      best_reward=best_r, history=history, archive=arc,
-                     best_genome=best_g)
+                     best_genome=best_g, telemetry=stats)
 
 
 def _make_eval_pop(env_cfg, scenario, placement_genes,
@@ -268,12 +282,24 @@ def _make_generation(cfg: EvoConfig, heads, eval_pop, surrogate=None):
         child = child.at[0].set(best_g)        # elitism (static index)
 
         fit_c, obj_c = eval_pop(child)
+        arc_prev = arc
         arc = ar.insert_batch(arc, obj_c, child, reward=fit_c,
                               eviction=cfg.archive_eviction)
         i = jnp.argmax(fit_c)
         better = fit_c[i] > best_r
         best_g = jnp.where(better, child[i], best_g)
         best_r = jnp.where(better, fit_c[i], best_r)
+        if cfg.telemetry:
+            inserts, evicts = tl.archive_delta(arc_prev, arc)
+            stats = tl.EvoGenStats(
+                diversity=tl.population_diversity(child),
+                mean_fitness=jnp.mean(fit_c),
+                archive_inserts=inserts, archive_evicts=evicts,
+                archive_n=jnp.sum(arc.valid.astype(jnp.int32)),
+                archive_hv=ar.hypervolume(
+                    arc, ar.nadir_ref(arc.points, arc.valid)))
+            return (child, fit_c, best_g, best_r, arc, key), (best_r,
+                                                              stats)
         return (child, fit_c, best_g, best_r, arc, key), best_r
 
     return generation
@@ -318,7 +344,7 @@ def _evolve_islands(keys, env_cfg, cfg: EvoConfig, scenario,
         vgen = jax.vmap(lambda c: generation(c, None))
 
         def epoch(vcarry, g):
-            vcarry, best_r = vgen(vcarry)
+            vcarry, ys = vgen(vcarry)
             pop, fit, best_g, best_rc, arc, key = vcarry
             do = ((g + 1) % cfg.migrate_every) == 0
             # emigrant: each island's best individual, selected by a
@@ -336,17 +362,21 @@ def _evolve_islands(keys, env_cfg, cfg: EvoConfig, scenario,
             sel = do & oh_w
             pop = jnp.where(sel[:, :, None], in_g[:, None, :], pop)
             fit = jnp.where(sel, in_f[:, None], fit)
-            return (pop, fit, best_g, best_rc, arc, key), best_r
+            return (pop, fit, best_g, best_rc, arc, key), ys
 
         carry, hist = jax.lax.scan(epoch, carry0,
                                    jnp.arange(cfg.n_generations))
         (_, _, best_g, best_r, arc, _) = carry
-        return best_g, best_r, jnp.swapaxes(hist, 0, 1), arc
+        # scan stacks generations first; callers expect (islands, gens)
+        hist = jax.tree_util.tree_map(
+            lambda x: jnp.swapaxes(x, 0, 1), hist)
+        return best_g, best_r, hist, arc
 
-    best_g, best_r, history, arc = jax.jit(run)(keys)
+    best_g, best_r, hist, arc = jax.jit(run)(keys)
+    history, stats = hist if cfg.telemetry else (hist, None)
     return EvoResult(best_design=ps.from_flat(best_g[:, : ps.N_PARAMS]),
                      best_reward=best_r, history=history, archive=arc,
-                     best_genome=best_g)
+                     best_genome=best_g, telemetry=stats)
 
 
 def evolve_scenario_population(key, scenarios: cm.Scenario, n_islands: int,

@@ -42,6 +42,8 @@ from repro.rl import ppo
 from repro.sa import annealing as sa
 from repro.surrogate import dataset as sds
 from repro.surrogate import ranker as srk
+from repro.telemetry import counters as tl
+from repro.telemetry import journal as tj
 
 
 @dataclasses.dataclass(frozen=True)
@@ -222,7 +224,8 @@ def coordinate_refine_batch(flats, scenarios: cm.Scenario,
 def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
              cfg: PortfolioConfig = PortfolioConfig(),
              verbose: bool = False,
-             scenario: cm.Scenario = None) -> PortfolioResult:
+             scenario: cm.Scenario = None,
+             journal=None) -> PortfolioResult:
     """Algorithm 1: best of {SA chains} U {RL agents} U {GA islands}.
 
     Every arm is a single vmapped XLA program (``sa.run_population``,
@@ -234,24 +237,47 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
     the candidate and refine sets: ``best_reward`` with the evo arm is
     >= the SA+RL-only portfolio's on the same key, scenario for
     scenario (asserted by tests/test_evo.py and the smoke bench).
+
+    ``journal`` (optional ``telemetry.journal.Journal``) receives one
+    span per stage plus per-arm convergence events; it is also installed
+    as the ambient journal for the duration of the run. ``None`` falls
+    back to the ambient journal; with neither, emits are no-ops.
     """
+    if journal is None:
+        journal = tj.current()
+    jr = tj.or_null(journal)
+    with tj.use(journal):
+        return _optimize(jr, key, env_cfg, cfg, verbose, scenario)
+
+
+def _optimize(jr, key, env_cfg, cfg: PortfolioConfig, verbose, scenario):
     t0 = time.time()
     scenario = env_cfg.scenario() if scenario is None else scenario
     k_sa, k_rl = jax.random.split(key)
     k_evo = jax.random.fold_in(key, 3)
 
     # --- SA population (one vmapped program) -------------------------------
-    sa_res = sa.run_population(k_sa, cfg.n_sa, env_cfg, cfg.sa,
-                               scenario=scenario)
+    with jr.span("arm:sa", key_stream="split(key)[0]", n_chains=cfg.n_sa,
+                 n_iters=cfg.sa.n_iters):
+        sa_res = sa.run_population(k_sa, cfg.n_sa, env_cfg, cfg.sa,
+                                   scenario=scenario)
+        jr.event("arm_convergence", arm="sa",
+                 best=np.asarray(sa_res.best_reward),
+                 curve=np.asarray(sa_res.history).max(axis=0))
     sa_rewards = np.asarray(sa_res.best_reward)
     sa_flats = np.asarray(ps.to_flat(sa_res.best_design))
 
     # --- RL population (one vmapped program, seed-compatible with the old
     # sequential loop) ------------------------------------------------------
     if cfg.n_rl > 0:
-        rl_res = ppo.train_population(k_rl, cfg.n_rl, env_cfg, cfg.rl,
-                                      total_timesteps=cfg.rl_timesteps,
-                                      scenario=scenario)
+        with jr.span("arm:rl", key_stream="split(key)[1]",
+                     n_agents=cfg.n_rl, timesteps=cfg.rl_timesteps):
+            rl_res = ppo.train_population(k_rl, cfg.n_rl, env_cfg, cfg.rl,
+                                          total_timesteps=cfg.rl_timesteps,
+                                          scenario=scenario)
+            jr.event("arm_convergence", arm="rl",
+                     best=np.asarray(rl_res.best_reward),
+                     curve=np.asarray(rl_res.log.best_reward).max(axis=0))
         rl_rewards_arr = np.asarray(rl_res.best_reward, np.float32)
         rl_flats = np.asarray(ps.to_flat(rl_res.best_design))   # (n_rl, 14)
         rl_actions = np.asarray(rl_res.best_action)   # incl. placement heads
@@ -266,8 +292,20 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
     # --- GA islands (one vmapped program, archive riding the scan) ---------
     evo_archive = None
     if cfg.n_evo > 0:
-        evo_res = evo.evolve_population(k_evo, cfg.n_evo, env_cfg, cfg.evo,
-                                        scenario=scenario)
+        with jr.span("arm:evo", key_stream="fold_in(key, 3)",
+                     n_islands=cfg.n_evo,
+                     n_generations=cfg.evo.n_generations):
+            evo_res = evo.evolve_population(k_evo, cfg.n_evo, env_cfg,
+                                            cfg.evo, scenario=scenario)
+            jr.event("arm_convergence", arm="evo",
+                     best=np.asarray(evo_res.best_reward),
+                     curve=np.asarray(evo_res.history).max(axis=0))
+            if evo_res.telemetry is not None:
+                st = evo_res.telemetry
+                jr.event("evo_stats",
+                         diversity=np.asarray(st.diversity).mean(axis=0),
+                         archive_hv=np.asarray(st.archive_hv).max(axis=0),
+                         archive_n=np.asarray(st.archive_n).max(axis=0))
         evo_rewards_arr = np.asarray(evo_res.best_reward, np.float32)
         evo_flats = np.asarray(ps.to_flat(evo_res.best_design))
         evo_genomes = np.asarray(evo_res.best_genome)   # incl. plc genes
@@ -300,8 +338,9 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
         scen_rep = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(jnp.asarray(x),
                                        (n_arms,) + jnp.shape(x)), scenario)
-        refine_flats, refine_rewards = coordinate_refine_batch(
-            arm_best, scen_rep, env_cfg, cfg.max_refine_sweeps)
+        with jr.span("refine", rows=n_arms, sweeps=cfg.max_refine_sweeps):
+            refine_flats, refine_rewards = coordinate_refine_batch(
+                arm_best, scen_rep, env_cfg, cfg.max_refine_sweeps)
         j = int(np.argmax(refine_rewards))
         refined_r = float(refine_rewards[j])
         if refined_r > best_r:
@@ -343,10 +382,12 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
         if cfg.surrogate is not None:
             scen_b = jax.tree_util.tree_map(
                 lambda x: jnp.asarray(x)[None], scenario)
-            sres = srk.run_stage(
-                jax.random.fold_in(key, 7), scen_b, cfg.surrogate,
-                env_cfg.hw, nop_fidelity=env_cfg.nop_fidelity,
-                tap_dataset=tap.dataset)
+            with jr.span("surrogate", key_stream="fold_in(key, 7)",
+                         mode=cfg.surrogate.mode):
+                sres = srk.run_stage(
+                    jax.random.fold_in(key, 7), scen_b, cfg.surrogate,
+                    env_cfg.hw, nop_fidelity=env_cfg.nop_fidelity,
+                    tap_dataset=tap.dataset)
             sur_flats = np.asarray(sres.cand_flats[0])
             sur_rewards_arr = np.asarray(sres.cand_rewards[0], np.float32)
             s_mtr = cm.evaluate_scenario(
@@ -395,9 +436,14 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
         _, init_plc = evo.genome_placement(win_g)
     placement, placement_r = init_plc, overall_r
     if cfg.refine_placement:
-        pres = sa.refine_placement(
-            jax.random.fold_in(key, 2), best_design, env_cfg,
-            cfg.placement_sa, scenario, init_placement=init_plc)
+        with jr.span("placement", key_stream="fold_in(key, 2)",
+                     n_iters=cfg.placement_sa.n_iters):
+            pres = sa.refine_placement(
+                jax.random.fold_in(key, 2), best_design, env_cfg,
+                cfg.placement_sa, scenario, init_placement=init_plc)
+            if pres.telemetry is not None:
+                jr.event("sa_accept", stage="placement",
+                         **tl.summarize_sa(pres.telemetry))
         placement = pres.best_placement
         placement_r = float(pres.best_reward)
 
@@ -414,15 +460,20 @@ def optimize(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
         if map_sa is None:
             map_sa = dataclasses.replace(cfg.placement_sa, p_mapping=0.25,
                                          phase_schedule=None)
-        mres = sa.refine_placement(
-            jax.random.fold_in(key, 8), best_design, env_cfg,
-            map_sa, scenario, init_placement=placement)
+        with jr.span("mapping", key_stream="fold_in(key, 8)",
+                     n_iters=map_sa.n_iters):
+            mres = sa.refine_placement(
+                jax.random.fold_in(key, 8), best_design, env_cfg,
+                map_sa, scenario, init_placement=placement)
         if float(mres.best_reward) > placement_r + 1e-6:
             placement = mres.best_placement
             mapping = mres.best_mapping
             mapping_r = float(mres.best_reward)
             placement_r = mapping_r
 
+    jr.event("portfolio_end", best_reward=overall_r, source=source,
+             placement_reward=placement_r, mapping_reward=mapping_r,
+             wall_time_s=time.time() - t0)
     return PortfolioResult(
         best_design=best_design,
         best_reward=overall_r,

@@ -39,6 +39,8 @@ from repro.optimizer import portfolio
 from repro.rl import ppo
 from repro.sa import annealing as sa
 from repro.surrogate import ranker as srk
+from repro.telemetry import counters as tl
+from repro.telemetry import journal as tj
 
 # (alpha, beta, gamma) objective trade-offs swept by default (Eq. 17):
 # balanced (paper default), throughput-first, cost-first, energy-aware.
@@ -249,8 +251,18 @@ def pareto_indices(points: np.ndarray,
 
 
 def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
-              verbose: bool = False) -> SuiteResult:
+              verbose: bool = False, journal=None) -> SuiteResult:
     """Portfolio-optimize every scenario in the grid; every stage vectorized.
+
+    ``journal`` (a :class:`repro.telemetry.journal.Journal`, optional)
+    receives one span per suite stage — the arms under their key-stream
+    labels, refinement, placement, mapping — plus per-arm convergence
+    events and the suite-archive hypervolume. While the suite runs the
+    journal is also installed as the ambient journal, so deep call sites
+    (the surrogate ranker's refit loop, ``profile.compile_timer``, the
+    adaptive placement-SA schedule) emit into the same stream. With
+    ``journal=None`` the ambient journal (if any) is used; with neither,
+    every emit is a no-op.
 
     The SA arm runs (S scenarios x n_sa chains) as one XLA program, the
     RL arm (S scenarios x n_rl agents) as another, the GA arm
@@ -268,9 +280,22 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
     ``pareto_normalized`` index lists are read back from archive
     membership rather than a host-side filter.
     """
+    if journal is None:
+        journal = tj.current()
+    jr = tj.or_null(journal)
+    with tj.use(journal):
+        return _run_suite(jr, key, cfg, verbose)
+
+
+def _run_suite(jr, key, cfg: SuiteConfig, verbose: bool) -> SuiteResult:
     t0 = time.time()
     names, wnames, scenarios = build_scenarios(cfg)
     n_scen = len(names)
+    jr.event("suite_config", n_scenarios=n_scen, scenarios=names,
+             workloads=list(cfg.workloads), n_sa=cfg.n_sa, n_rl=cfg.n_rl,
+             n_evo=cfg.n_evo, surrogate=cfg.surrogate is not None,
+             mapping_refine=cfg.mapping_refine,
+             trace=None if cfg.trace is None else str(cfg.trace))
     k_sa, k_rl, k_pl = jax.random.split(jnp.asarray(key), 3)
     # folded, not split: the SA/RL streams must not depend on n_evo
     k_evo = jax.random.fold_in(jnp.asarray(key), 4)
@@ -279,33 +304,74 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
     cand_flats = []                                     # each (S, K_arm, 14)
     arm_slices = []                                     # (name, lo, hi)
     evo_archives = None
+    # per-island leaves are (S, n_islands, T); reduce the island axis for
+    # the journal's per-scenario curves (2-D leaves pass through)
+    def _over_islands(a, red):
+        a = np.asarray(a)
+        return red(a, axis=1) if a.ndim >= 3 else a
+
     if cfg.n_sa > 0:
-        sa_res = sa.run_scenario_population(
-            k_sa, scenarios, cfg.n_sa, cfg.env, cfg.sa)
+        with jr.span("arm:sa", key_stream="split(key, 3)[0]",
+                     n_chains=cfg.n_sa, n_iters=cfg.sa.n_iters):
+            sa_res = sa.run_scenario_population(
+                k_sa, scenarios, cfg.n_sa, cfg.env, cfg.sa)
+            jr.event("arm_convergence", arm="sa",
+                     best=np.asarray(sa_res.best_reward).max(axis=1),
+                     curve=_over_islands(sa_res.history, np.max))
         cand_rewards.append(np.asarray(sa_res.best_reward))
         cand_flats.append(np.asarray(ps.to_flat(sa_res.best_design)))
         arm_slices.append(("sa", 0, cfg.n_sa))
     if cfg.n_rl > 0:
-        rl_res = ppo.train_scenario_population(
-            k_rl, scenarios, cfg.n_rl, cfg.env, cfg.rl,
-            total_timesteps=cfg.rl_timesteps)
+        with jr.span("arm:rl", key_stream="split(key, 3)[1]",
+                     n_agents=cfg.n_rl, timesteps=cfg.rl_timesteps):
+            rl_res = ppo.train_scenario_population(
+                k_rl, scenarios, cfg.n_rl, cfg.env, cfg.rl,
+                total_timesteps=cfg.rl_timesteps)
+            jr.event("arm_convergence", arm="rl",
+                     best=np.asarray(rl_res.best_reward).max(axis=1),
+                     curve=_over_islands(rl_res.log.best_reward, np.max))
+            if rl_res.telemetry is not None:
+                st = rl_res.telemetry
+                jr.event("ppo_stats",
+                         entropy=_over_islands(st.entropy, np.mean),
+                         approx_kl=_over_islands(st.approx_kl, np.mean),
+                         clip_frac=_over_islands(st.clip_frac, np.mean),
+                         return_mean=_over_islands(st.return_mean, np.mean))
         cand_rewards.append(np.asarray(rl_res.best_reward))
         cand_flats.append(np.asarray(ps.to_flat(rl_res.best_design)))
         lo = arm_slices[-1][2] if arm_slices else 0
         arm_slices.append(("rl", lo, lo + cfg.n_rl))
     if cfg.n_evo > 0:
-        evo_res = evo_mod.evolve_scenario_population(
-            k_evo, scenarios, cfg.n_evo, cfg.env, cfg.evo)
+        with jr.span("arm:evo", key_stream="fold_in(key, 4)",
+                     n_islands=cfg.n_evo,
+                     n_generations=cfg.evo.n_generations):
+            evo_res = evo_mod.evolve_scenario_population(
+                k_evo, scenarios, cfg.n_evo, cfg.env, cfg.evo)
+            jr.event("arm_convergence", arm="evo",
+                     best=np.asarray(evo_res.best_reward).max(axis=1),
+                     curve=_over_islands(evo_res.history, np.max))
+            if evo_res.telemetry is not None:
+                st = evo_res.telemetry
+                jr.event("evo_stats",
+                         diversity=_over_islands(st.diversity, np.mean),
+                         archive_hv=_over_islands(st.archive_hv, np.max),
+                         archive_n=_over_islands(st.archive_n, np.max),
+                         inserts=_over_islands(st.archive_inserts, np.sum),
+                         evicts=_over_islands(st.archive_evicts, np.sum))
         cand_rewards.append(np.asarray(evo_res.best_reward))
         cand_flats.append(np.asarray(ps.to_flat(evo_res.best_design)))
         evo_archives = evo_res.archive     # leaves (S, n_evo, C, ...)
         lo = arm_slices[-1][2] if arm_slices else 0
         arm_slices.append(("evo", lo, lo + cfg.n_evo))
     if cfg.surrogate is not None:
-        sur_stage = srk.run_stage(
-            jax.random.fold_in(jnp.asarray(key), 7), scenarios,
-            cfg.surrogate, cfg.env.hw, nop_fidelity=cfg.env.nop_fidelity,
-            refit_every=cfg.surrogate_refit_every)
+        with jr.span("surrogate", key_stream="fold_in(key, 7)",
+                     mode=cfg.surrogate.mode,
+                     refit_every=cfg.surrogate_refit_every):
+            sur_stage = srk.run_stage(
+                jax.random.fold_in(jnp.asarray(key), 7), scenarios,
+                cfg.surrogate, cfg.env.hw,
+                nop_fidelity=cfg.env.nop_fidelity,
+                refit_every=cfg.surrogate_refit_every)
         cand_rewards.append(np.asarray(sur_stage.cand_rewards))
         cand_flats.append(np.asarray(sur_stage.cand_flats))
         lo = arm_slices[-1][2] if arm_slices else 0
@@ -339,9 +405,11 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
     if cfg.refine:
         rep_scen = jax.tree_util.tree_map(
             lambda x: jnp.repeat(x, n_arms, axis=0), scenarios)
-        re_flats, re_r = portfolio.coordinate_refine_batch(
-            arm_flats.reshape(n_scen * n_arms, ps.N_PARAMS), rep_scen,
-            cfg.env, cfg.max_refine_sweeps)
+        with jr.span("refine", rows=n_scen * n_arms,
+                     sweeps=cfg.max_refine_sweeps):
+            re_flats, re_r = portfolio.coordinate_refine_batch(
+                arm_flats.reshape(n_scen * n_arms, ps.N_PARAMS), rep_scen,
+                cfg.env, cfg.max_refine_sweeps)
         refined_flats = re_flats.reshape(n_scen, n_arms, ps.N_PARAMS)
         re_r = np.asarray(re_r, np.float64).reshape(n_scen, n_arms)
         for s in range(n_scen):
@@ -359,8 +427,16 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
     placements = None
     canonical_rewards = winner_rewards.copy()
     if cfg.placement_refine:
-        pres = sa.refine_placement_scenarios(
-            k_pl, dp_batch, scenarios, cfg.env, cfg.placement_sa)
+        with jr.span("placement", key_stream="split(key, 3)[2]",
+                     n_iters=cfg.placement_sa.n_iters):
+            pres = sa.refine_placement_scenarios(
+                k_pl, dp_batch, scenarios, cfg.env, cfg.placement_sa)
+            if pres.telemetry is not None:
+                for s in range(n_scen):
+                    jr.event("sa_accept", stage="placement",
+                             scenario=names[s],
+                             **tl.summarize_sa(jax.tree_util.tree_map(
+                                 lambda x, s=s: x[s], pres.telemetry)))
         placements = pres.best_placement
         canonical_rewards = np.asarray(pres.canonical_reward, np.float64)
         placed_rewards = np.asarray(pres.best_reward, np.float64)
@@ -373,9 +449,11 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
         # lockstep coordinate sweep scoring every Table-1 candidate WITH
         # its scenario's annealed placement (design<->placement co-descent)
         if cfg.refine and cfg.post_placement_sweep:
-            re_flats, re_r = portfolio.coordinate_refine_batch(
-                winner_flats, scenarios, cfg.env, cfg.max_refine_sweeps,
-                placements=placements)
+            with jr.span("refine:post_placement", rows=n_scen,
+                         sweeps=cfg.max_refine_sweeps):
+                re_flats, re_r = portfolio.coordinate_refine_batch(
+                    winner_flats, scenarios, cfg.env,
+                    cfg.max_refine_sweeps, placements=placements)
             changed = False
             for s in range(n_scen):
                 if re_r[s] > winner_rewards[s] + 1e-6:
@@ -428,10 +506,12 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
                                          phase_schedule=None)
         k_map = jax.random.fold_in(jnp.asarray(key), 8)
         map_keys = jax.random.split(k_map, n_scen)
-        mres = jax.jit(jax.vmap(
-            lambda k, d, s, p: sa.refine_placement(
-                k, d, cfg.env, map_sa, s, init_placement=p)))(
-                    map_keys, dp_batch, scenarios, placements)
+        with jr.span("mapping", key_stream="fold_in(key, 8)",
+                     n_iters=map_sa.n_iters):
+            mres = jax.jit(jax.vmap(
+                lambda k, d, s, p: sa.refine_placement(
+                    k, d, cfg.env, map_sa, s, init_placement=p)))(
+                        map_keys, dp_batch, scenarios, placements)
         map_rewards = np.asarray(mres.best_reward, np.float64)
         better = map_rewards > winner_rewards + 1e-6
         for s in range(n_scen):
@@ -458,18 +538,21 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
     # SLO / p99 channels into the outcomes and the fourth objective)
     traced = scenarios.trace is not None
     win_slo = win_p99 = None
-    if traced:
-        tm = cm.evaluate_trace_scenarios(dp_batch, scenarios, cfg.env.hw,
-                                         placements=placements,
-                                         mappings=mappings)
-        metrics = tm.metrics
-        win_slo = np.asarray(tm.slo_attainment, np.float64)       # (S,)
-        win_p99 = np.asarray(jnp.max(tm.p99_latency_s, axis=1),
-                             np.float64)                          # (S,)
-    else:
-        metrics = cm.evaluate_scenarios(dp_batch, scenarios, cfg.env.hw,
-                                        placements=placements,
-                                        mappings=mappings)
+    with jr.span("evaluate", traced=traced):
+        if traced:
+            tm = cm.evaluate_trace_scenarios(dp_batch, scenarios,
+                                             cfg.env.hw,
+                                             placements=placements,
+                                             mappings=mappings)
+            metrics = tm.metrics
+            win_slo = np.asarray(tm.slo_attainment, np.float64)   # (S,)
+            win_p99 = np.asarray(jnp.max(tm.p99_latency_s, axis=1),
+                                 np.float64)                      # (S,)
+        else:
+            metrics = cm.evaluate_scenarios(dp_batch, scenarios,
+                                            cfg.env.hw,
+                                            placements=placements,
+                                            mappings=mappings)
 
     outcomes = []
     for s in range(n_scen):
@@ -612,6 +695,14 @@ def run_suite(key, cfg: SuiteConfig = SuiteConfig(),
         payload=jnp.arange(n_scen, dtype=jnp.int32))
     hv = float(ar.hypervolume(
         suite_arc, ar.nadir_ref(suite_arc.points, suite_arc.valid)))
+
+    jr.event("suite_archive", hypervolume=hv,
+             n_points=int(suite_arc.n_valid),
+             capacity=cfg.archive_capacity)
+    jr.event("suite_end", wall_time_s=time.time() - t0,
+             winners=[{"scenario": names[s],
+                       "reward": float(winner_rewards[s]),
+                       "source": sources[s]} for s in range(n_scen)])
 
     return SuiteResult(outcomes=outcomes, pareto=pareto,
                        wall_time_s=time.time() - t0,

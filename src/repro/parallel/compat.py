@@ -15,3 +15,16 @@ try:
 except AttributeError:
     from jax.experimental.shard_map import shard_map       # noqa: F401
     SHARD_MAP_UNCHECKED_KW = {"check_rep": False}
+
+# ``jax.core.Tracer`` is a deprecated access path on newer jax (the
+# public spelling is ``jax.Tracer``, added in 0.4.x); resolve whichever
+# exists once so guard sites (costmodel eval taps) don't touch
+# ``jax.core`` directly.
+Tracer = getattr(jax, "Tracer", None)
+if Tracer is None:  # pragma: no cover - depends on installed jax
+    Tracer = jax.core.Tracer
+
+
+def is_tracer(x) -> bool:
+    """True when ``x`` is an abstract value from an active jax trace."""
+    return isinstance(x, Tracer)

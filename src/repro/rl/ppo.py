@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from repro.core import env as chipenv
 from repro.core import params as ps
 from repro.rl import networks as nets
+from repro.telemetry import counters as tl
 from repro.training.optim import Adam, apply_updates
 
 
@@ -41,6 +42,13 @@ class PPOConfig:
     gamma: float = 0.99
     gae_lambda: float = 0.95     # "bias-variance trade-off factor"
     max_grad_norm: float = 0.5
+    # in-scan telemetry (telemetry/counters.PPOUpdateStats): per-update
+    # GAE-return mean/std, policy entropy, approx-KL (k1) and clip
+    # fraction, returned as TrainResult.telemetry. False (default)
+    # statically compiles the exact pre-telemetry program (losses and
+    # the key stream are untouched; the extra stats are computed from
+    # quantities the loss already produces).
+    telemetry: bool = False
 
 
 class Rollout(NamedTuple):
@@ -77,6 +85,9 @@ class TrainResult(NamedTuple):
     best_design: ps.DesignPoint
     best_reward: jnp.ndarray
     best_action: jnp.ndarray     # full action incl. any placement heads
+    # per-update stats (cfg.telemetry only; counters.PPOUpdateStats
+    # with a leading updates axis)
+    telemetry: tl.PPOUpdateStats = None
 
 
 def collect_rollout(params, env_states, obs, key, env_cfg, cfg: PPOConfig,
@@ -131,7 +142,8 @@ def compute_gae(traj: Rollout, last_value, cfg: PPOConfig):
     return advantages, returns
 
 
-def ppo_loss(params, batch, cfg: PPOConfig, head_sizes=None):
+def ppo_loss(params, batch, cfg: PPOConfig, head_sizes=None,
+             extra_stats: bool = False):
     obs, actions, old_logp, advantages, returns = batch
     logits, value = nets.policy_value(params, obs)
     logp = nets.log_prob(logits, actions, head_sizes)
@@ -145,6 +157,13 @@ def ppo_loss(params, batch, cfg: PPOConfig, head_sizes=None):
     value_loss = 0.5 * jnp.mean(jnp.square(returns - value))
     ent = jnp.mean(nets.entropy(logits, head_sizes))
     total = (policy_loss + cfg.vf_coef * value_loss - cfg.ent_coef * ent)
+    if extra_stats:
+        # telemetry-only diagnostics from quantities already computed:
+        # k1 approx-KL and the clipped-ratio fraction
+        approx_kl = jnp.mean(old_logp - logp)
+        clip_frac = jnp.mean(
+            (jnp.abs(ratio - 1.0) > cfg.clip_range).astype(jnp.float32))
+        return total, (policy_loss, value_loss, ent, approx_kl, clip_frac)
     return total, (policy_loss, value_loss, ent)
 
 
@@ -204,7 +223,8 @@ def make_update_step(env_cfg: chipenv.EnvConfig, cfg: PPOConfig,
             def mb_fn(mb_carry, batch):
                 params, opt_state = mb_carry
                 (loss, aux), grads = jax.value_and_grad(
-                    ppo_loss, has_aux=True)(params, batch, cfg, heads)
+                    ppo_loss, has_aux=True)(params, batch, cfg, heads,
+                                            cfg.telemetry)
                 if grad_reduce is not None:
                     grads = grad_reduce(grads)
                 updates, opt_state = optimizer.update(grads, opt_state, params)
@@ -217,7 +237,11 @@ def make_update_step(env_cfg: chipenv.EnvConfig, cfg: PPOConfig,
 
         (params, opt_state, key), aux = jax.lax.scan(
             epoch_fn, (params, opt_state, key), None, length=cfg.n_epochs)
-        pol_l, val_l, ent = jax.tree_util.tree_map(jnp.mean, aux)
+        aux_means = jax.tree_util.tree_map(jnp.mean, aux)
+        if cfg.telemetry:
+            pol_l, val_l, ent, approx_kl, clip_frac = aux_means
+        else:
+            pol_l, val_l, ent = aux_means
 
         mean_r = traj.rewards.mean()
         log = TrainLog(
@@ -229,6 +253,11 @@ def make_update_step(env_cfg: chipenv.EnvConfig, cfg: PPOConfig,
                                env_states=env_states, obs=obs, key=key,
                                best_reward=best_reward,
                                best_action=best_action)
+        if cfg.telemetry:
+            stats = tl.PPOUpdateStats(
+                return_mean=returns.mean(), return_std=returns.std(),
+                entropy=ent, approx_kl=approx_kl, clip_frac=clip_frac)
+            return new_carry, (log, stats)
         return new_carry, log
 
     return update
@@ -264,9 +293,10 @@ def train(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
         key=k_train, best_reward=jnp.float32(-jnp.inf),
         best_action=jnp.zeros((chipenv.action_dim(env_cfg),), jnp.int32))
 
-    carry, log = jax.lax.scan(
+    carry, ys = jax.lax.scan(
         jax.jit(lambda c, x: update(c, x, scenario)),
         carry, None, length=n_updates)
+    log, stats = ys if cfg.telemetry else (ys, None)
     # placement-episode actions carry no Table-1 assignment: the design
     # is drawn per episode, so best_design is a placeholder there and
     # best_action (the 4 placement heads) is the meaningful output.
@@ -277,7 +307,8 @@ def train(key, env_cfg: chipenv.EnvConfig = chipenv.EnvConfig(),
     return TrainResult(params=carry.params, log=log,
                        best_design=best_design,
                        best_reward=carry.best_reward,
-                       best_action=carry.best_action)
+                       best_action=carry.best_action,
+                       telemetry=stats)
 
 
 def train_population(key, n_agents: int,

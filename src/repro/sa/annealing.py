@@ -25,6 +25,7 @@ from repro.core import env as chipenv
 from repro.core import mapping as mpg
 from repro.core import params as ps
 from repro.core import placement as pm
+from repro.telemetry import counters as tl
 
 _HEADS = jnp.asarray(ps.HEAD_SIZES, jnp.float32)
 
@@ -228,6 +229,28 @@ class PlacementSAConfig:
     # n_chains=1 preserves the PR-4 key-split layout bit-for-bit (the
     # recorded-trajectory oracle runs against it).
     n_chains: int = 1
+    # in-scan telemetry (telemetry/counters.SACounters): per-move-kind
+    # and per-phase-segment propose/accept counts, best-so-far improve
+    # count, and a cumulative accepted-move curve at the history stride,
+    # returned as PlacementResult.telemetry. False (default) statically
+    # compiles the exact pre-telemetry program — bit-for-bit the
+    # recorded trajectories. True adds counter arithmetic on values the
+    # step already computes (no randomness, trajectory unchanged; the
+    # identity + overhead are gated by bench_costmodel --assert-telemetry).
+    telemetry: bool = False
+    # acceptance-band schedule adaptation (requires phase_schedule):
+    # split the budget into adapt_rounds host-driven rounds; after each,
+    # segments whose measured acceptance rate is above the band grow by
+    # adapt_factor (hot segments keep exploring), below-band segments
+    # shrink (cold segments stop wasting proposals). Lengths stay within
+    # [1, base * adapt_max_scale]; each round's budget is rounded down
+    # to whole cycles. False (default) = bit-exact single-shot program.
+    # Host-driven: not jit/vmap-safe (rates must be concrete).
+    adapt_schedule: bool = False
+    adapt_band: tuple = (0.15, 0.45)
+    adapt_factor: float = 2.0
+    adapt_rounds: int = 4
+    adapt_max_scale: int = 8
 
 
 def _validated_phase_schedule(cfg: PlacementSAConfig):
@@ -270,6 +293,8 @@ class PlacementResult(NamedTuple):
     # the best placement/reward were then scored under the canonical
     # mapping, i.e. the pre-mapping objective)
     best_mapping: mpg.Mapping = None
+    # in-scan counters (cfg.telemetry only; telemetry/counters.SACounters)
+    telemetry: tl.SACounters = None
 
 
 def refine_placement(key, design: ps.DesignPoint,
@@ -315,6 +340,12 @@ def refine_placement(key, design: ps.DesignPoint,
     the PR-4 recorded trajectories bit-for-bit.
     """
     scenario = env_cfg.scenario() if scenario is None else scenario
+    if cfg.adapt_schedule:
+        # host-driven acceptance-band schedule adaptation (PR-7
+        # follow-up): rounds of the ordinary compiled chain with
+        # telemetry forced on, re-shaping the schedule between rounds.
+        return _refine_placement_adaptive(key, design, env_cfg, cfg,
+                                          scenario, init_placement)
     v = ps.decode(design)
     n_pos = cm.footprint_positions(v)
     m, n = cm.mesh_dims(n_pos)
@@ -324,6 +355,13 @@ def refine_placement(key, design: ps.DesignPoint,
     mesh_edges = ctx.prefix.mesh_edges
 
     use_mapping = cfg.p_mapping > 0.0
+    # static telemetry dispatch (the mapping=None convention): when off,
+    # no counter state enters any carry and the compiled program is the
+    # exact pre-telemetry one; when on, counters ride the end of the
+    # carry tuple and the scan additionally emits a cumulative
+    # accepted-move trace. Counters only read values the step already
+    # computed, so the trajectory itself is identical either way.
+    use_tel = cfg.telemetry
 
     def objective(plc: pm.Placement, mapping=None) -> jnp.ndarray:
         return cm.scenario_reward(design, scenario, env_cfg.hw, plc,
@@ -413,10 +451,13 @@ def refine_placement(key, design: ps.DesignPoint,
             cell=jnp.where(is_map, own_cell, move.cell))
         return move, key, k_acc, cand_map
 
-    def make_step_full(pin_kind=None):
+    def make_step_full(pin_kind=None, seg=0):
         """PR-3 semantics: one full costmodel.evaluate per candidate
-        (kept as the delta benchmark baseline and trajectory oracle)."""
+        (kept as the delta benchmark baseline and trajectory oracle).
+        ``seg`` is the static phase-segment index telemetry bins into."""
         def step_full(state, it):
+            if use_tel:
+                state, tel = state[:-1], state[-1]
             if use_mapping:
                 plc, r_curr, best, r_best, mapping, best_map, key = state
                 move, key, k_acc, cand_map = propose(
@@ -444,9 +485,13 @@ def refine_placement(key, design: ps.DesignPoint,
                     best_map)
                 mapping = jax.tree_util.tree_map(
                     lambda a, b: jnp.where(accept, a, b), cand_map, mapping)
-                return (plc, r_curr, best, r_best, mapping, best_map,
-                        key), r_best
-            return (plc, r_curr, best, r_best, key), r_best
+                out = (plc, r_curr, best, r_best, mapping, best_map, key)
+            else:
+                out = (plc, r_curr, best, r_best, key)
+            if use_tel:
+                tel = tl.sa_update(tel, move.kind, accept, better_best, seg)
+                return out + (tel,), (r_best, jnp.sum(tel.accept))
+            return out, r_best
         return step_full
 
     # p_hbm pins the move kind at 0 or 1 -> statically prune the dead
@@ -457,12 +502,15 @@ def refine_placement(key, design: ps.DesignPoint,
                   else "hbm" if cfg.p_hbm >= 1.0 and not use_mapping
                   else "mixed")
 
-    def make_step_delta(mk, pin_kind=None):
+    def make_step_delta(mk, pin_kind=None, seg=0):
         """Cache-carried step: delta NoP stats + suffix-only reward;
         accept/reject folds the candidate back via pm.commit_move.
         ``mk`` statically prunes the untaken delta branch; phased
-        segments pass mk='chiplet'/'hbm' with the matching pin."""
+        segments pass mk='chiplet'/'hbm' with the matching pin. ``seg``
+        is the static phase-segment index telemetry bins into."""
         def step_delta(state, it):
+            if use_tel:
+                state, tel = state[:-1], state[-1]
             if use_mapping:
                 cache, r_curr, best, r_best, mapping, best_map, key = state
                 move, key, k_acc, cand_map = propose(
@@ -496,12 +544,17 @@ def refine_placement(key, design: ps.DesignPoint,
                     best_map)
                 mapping = jax.tree_util.tree_map(
                     lambda a, b: jnp.where(accept, a, b), cand_map, mapping)
-                return (cache, r_curr, best, r_best, mapping, best_map,
-                        key), r_best
-            return (cache, r_curr, best, r_best, key), r_best
+                out = (cache, r_curr, best, r_best, mapping, best_map, key)
+            else:
+                out = (cache, r_curr, best, r_best, key)
+            if use_tel:
+                tel = tl.sa_update(tel, move.kind, accept, better_best, seg)
+                return out + (tel,), (r_best, jnp.sum(tel.accept))
+            return out, r_best
         return step_delta
 
     segs = _validated_phase_schedule(cfg)
+    n_segments = 1 if segs is None else len(segs)
 
     def _chain(chain_key):
         incumbent = start if not cfg.delta_eval else pm.nop_stats_cache(
@@ -514,17 +567,15 @@ def refine_placement(key, design: ps.DesignPoint,
                      chain_key)
         else:
             state = (incumbent, r_start, start, r_start, chain_key)
+        if use_tel:
+            state = state + (tl.init_sa(n_segments),)
         best_map = None
         if segs is None:
             step = (make_step_delta(move_kinds) if cfg.delta_eval
                     else make_step_full())
             iters = jnp.arange(cfg.n_iters, dtype=jnp.float32)
-            if use_mapping:
-                (_, _, best, r_best, _, best_map, _), trace = jax.lax.scan(
-                    step, state, iters, unroll=cfg.scan_unroll)
-            else:
-                (_, _, best, r_best, _), trace = jax.lax.scan(
-                    step, state, iters, unroll=cfg.scan_unroll)
+            final, trace = jax.lax.scan(
+                step, state, iters, unroll=cfg.scan_unroll)
         else:
             # phase-scheduled chain: an outer scan over cycles; each
             # cycle runs one statically-pruned inner scan per segment
@@ -532,38 +583,65 @@ def refine_placement(key, design: ps.DesignPoint,
             # Temperature follows the *global* iteration index, so the
             # schedule only changes which kind each iteration draws.
             cycle = sum(ln for _, ln in segs)
+            # without telemetry, segments of the same kind share one
+            # step closure (seg is unused); with telemetry each segment
+            # bins its counters separately, so build one step per slot.
             steps = {}
-            for kname, _ in segs:
-                if kname not in steps:
-                    pin = 0 if kname == "chiplet" else 1
-                    steps[kname] = (make_step_delta(kname, pin)
-                                    if cfg.delta_eval
-                                    else make_step_full(pin))
+            seg_steps = []
+            for si, (kname, _) in enumerate(segs):
+                pin = 0 if kname == "chiplet" else 1
+                seg = si if use_tel else 0
+                if use_tel or kname not in steps:
+                    steps_key = si if use_tel else kname
+                    steps[steps_key] = (
+                        make_step_delta(kname, pin, seg) if cfg.delta_eval
+                        else make_step_full(pin, seg))
+                seg_steps.append(steps[si if use_tel else kname])
 
             def cycle_body(st, c):
                 traces = []
                 off = 0
-                for kname, ln in segs:
+                for si, (kname, ln) in enumerate(segs):
                     iters = (c * cycle + off
                              + jnp.arange(ln)).astype(jnp.float32)
                     st, tr = jax.lax.scan(
-                        steps[kname], st, iters,
+                        seg_steps[si], st, iters,
                         unroll=min(cfg.scan_unroll, ln))
                     traces.append(tr)
                     off += ln
+                if use_tel:
+                    return st, tuple(
+                        jnp.concatenate([t[i] for t in traces])
+                        for i in range(2))
                 return st, jnp.concatenate(traces)
 
             n_cycles = cfg.n_iters // cycle
-            (_, _, best, r_best, _), trace2 = jax.lax.scan(
+            final, trace2 = jax.lax.scan(
                 cycle_body, state, jnp.arange(n_cycles))
-            trace = trace2.reshape(cfg.n_iters)
+            if use_tel:
+                trace = tuple(t.reshape(cfg.n_iters) for t in trace2)
+            else:
+                trace = trace2.reshape(cfg.n_iters)
+        # the carry layout is positional: (incumbent, r_curr, best,
+        # r_best, ...) with mapping/best_map/key in the middle and the
+        # optional telemetry counters always last
+        best, r_best = final[2], final[3]
+        if use_mapping:
+            best_map = final[5]
+        tel = final[-1] if use_tel else None
+        if use_tel:
+            trace, acc_trace = trace
         # strided best-so-far trace + the final value (the stride rarely
         # lands on the last iteration; history[-1] must equal best_reward)
         history = jnp.concatenate([trace[:: cfg.record_every], trace[-1:]])
-        return best, r_best, history, best_map
+        if use_tel:
+            curve = jnp.concatenate(
+                [acc_trace[:: cfg.record_every], acc_trace[-1:]])
+            tel = tel._replace(accept_curve=curve)
+        return best, r_best, history, best_map, tel
 
     if cfg.n_chains <= 1:
-        best, r_best, history, best_map = _chain(key)
+        best, r_best, history, best_map, telemetry = _chain(key)
     else:
         # several chains per design in one program: same incumbent,
         # independent RNG streams; keep the best chain's result. Chain 0
@@ -572,7 +650,8 @@ def refine_placement(key, design: ps.DesignPoint,
         # result is never worse than n_chains=1 on the same key.
         chain_keys = jnp.concatenate(
             [key[None], jax.random.split(key, cfg.n_chains - 1)])
-        bests, r_bests, histories, best_maps = jax.vmap(_chain)(chain_keys)
+        bests, r_bests, histories, best_maps, tels = jax.vmap(
+            _chain)(chain_keys)
         win = jnp.argmax(r_bests)
         best = jax.tree_util.tree_map(
             lambda x: jnp.take(x, win, axis=0), bests)
@@ -580,9 +659,106 @@ def refine_placement(key, design: ps.DesignPoint,
         history = jnp.take(histories, win, axis=0)
         best_map = jax.tree_util.tree_map(
             lambda x: jnp.take(x, win, axis=0), best_maps)
+        telemetry = jax.tree_util.tree_map(
+            lambda x: jnp.take(x, win, axis=0), tels)
     return PlacementResult(best_placement=best, best_reward=r_best,
                            canonical_reward=r0, history=history,
-                           best_mapping=best_map)
+                           best_mapping=best_map, telemetry=telemetry)
+
+
+def _adapted_schedule(segs, rates, cfg: PlacementSAConfig,
+                      base_segs=None):
+    """One acceptance-band adaptation step over a phase schedule.
+
+    ``segs`` is the current ((kind, len), ...) tuple, ``rates`` the
+    measured per-segment acceptance rates (len(segs) floats), ``base_segs``
+    the original schedule whose lengths bound the scaling. Segments whose
+    acceptance rate is above the band grow by ``adapt_factor`` (the chain
+    is still finding acceptable moves there — let it keep exploring);
+    below-band segments shrink (cold segments waste proposals). Lengths
+    stay in [1, base * adapt_max_scale]. Pure (host-side ints) and
+    unit-tested directly.
+    """
+    base_segs = segs if base_segs is None else base_segs
+    lo, hi = cfg.adapt_band
+    out = []
+    for (kname, ln), (_, base_ln), rate in zip(segs, base_segs, rates):
+        if rate > hi:
+            ln = int(round(ln * cfg.adapt_factor))
+        elif rate < lo:
+            ln = int(round(ln / cfg.adapt_factor))
+        ln = max(1, min(ln, int(base_ln) * cfg.adapt_max_scale))
+        out.append((kname, ln))
+    return tuple(out)
+
+
+def _refine_placement_adaptive(key, design, env_cfg, cfg, scenario,
+                               init_placement):
+    """Acceptance-band adaptive phase scheduling (PR-7 follow-up).
+
+    Host-driven: splits ``cfg.n_iters`` into ``cfg.adapt_rounds`` rounds
+    of the ordinary compiled chain (telemetry forced on), feeding each
+    round's per-segment acceptance rates into ``_adapted_schedule`` to
+    reshape the next round's schedule. Rounds chain through
+    ``init_placement`` (each starts from the previous best, so the best
+    reward is monotone across rounds); keys fold per round off the
+    caller's key. Not jit/vmap-safe — the rates must be concrete — and
+    each distinct schedule shape compiles its own program; this mode is
+    for host-level tuning runs, not the vmapped suite path.
+
+    Returns a PlacementResult whose history is the concatenation of the
+    rounds' best-so-far traces and whose telemetry merges the rounds'
+    counters (accept_curve stays cumulative across rounds). The
+    schedules taken are emitted as an ``sa_adapt`` event when an
+    ambient journal (telemetry.journal.use) is active.
+    """
+    import numpy as np
+
+    segs = _validated_phase_schedule(cfg)
+    if segs is None:
+        raise ValueError("adapt_schedule=True requires a phase_schedule")
+    rounds = max(int(cfg.adapt_rounds), 1)
+    budget = cfg.n_iters // rounds
+    if budget < sum(ln for _, ln in segs):
+        raise ValueError(
+            f"n_iters ({cfg.n_iters}) too small for {rounds} adaptation "
+            f"rounds of at least one cycle each")
+
+    cur = segs
+    plc = init_placement
+    res = None
+    merged = None
+    histories = []
+    schedules = []
+    for r in range(rounds):
+        cycle = sum(ln for _, ln in cur)
+        n_iters = max(budget // cycle, 1) * cycle
+        rcfg = dataclasses.replace(
+            cfg, adapt_schedule=False, telemetry=True,
+            phase_schedule=cur, n_iters=n_iters,
+            record_every=min(cfg.record_every, n_iters))
+        res = refine_placement(jax.random.fold_in(key, r), design,
+                               env_cfg, rcfg, scenario,
+                               init_placement=plc)
+        plc = res.best_placement
+        histories.append(res.history)
+        schedules.append(cur)
+        merged = (res.telemetry if merged is None
+                  else tl.merge_sa(merged, res.telemetry))
+        rates = [
+            float(a) / max(float(p), 1.0)
+            for a, p in zip(np.asarray(res.telemetry.seg_accept),
+                            np.asarray(res.telemetry.seg_propose))]
+        cur = _adapted_schedule(cur, rates, cfg, base_segs=segs)
+    from repro.telemetry import journal as tj
+    tj.current_or_null().event(
+        "sa_adapt", schedules=[list(map(list, s)) for s in schedules],
+        rounds=rounds)
+    return PlacementResult(
+        best_placement=res.best_placement, best_reward=res.best_reward,
+        canonical_reward=res.canonical_reward,
+        history=jnp.concatenate(histories), best_mapping=None,
+        telemetry=merged)
 
 
 def refine_placement_scenarios(key, designs: ps.DesignPoint,

@@ -31,12 +31,14 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import costmodel as cm
 from repro.core import params as ps
 from repro.surrogate import dataset as sds
 from repro.surrogate import model as sm
 from repro.surrogate import train as strain
+from repro.telemetry import journal as tj
 
 _HEADS = jnp.asarray(ps.HEAD_SIZES, jnp.int32)
 
@@ -135,6 +137,24 @@ def bootstrap_dataset(key, scenarios: cm.Scenario, n: int, hw_cfg,
     return ds, flats, mtr.reward
 
 
+def _spearman(a: np.ndarray, b: np.ndarray) -> float:
+    """Spearman rank correlation of two equal-length score vectors."""
+    ra = np.argsort(np.argsort(a)).astype(np.float64)
+    rb = np.argsort(np.argsort(b)).astype(np.float64)
+    ra -= ra.mean()
+    rb -= rb.mean()
+    denom = float(np.sqrt((ra ** 2).sum() * (rb ** 2).sum()))
+    return float((ra * rb).sum() / denom) if denom else 0.0
+
+
+def _probe_scores(params, probe: jnp.ndarray, scenario, backend) -> np.ndarray:
+    """Surrogate scores of a fixed probe pool under one scenario (used
+    only for the journal's rank-drift metric; touches no key stream)."""
+    from repro.kernels import ops
+    folded = _fold_scenario(params, scenario)
+    return np.asarray(ops.surrogate_score(probe, folded, backend=backend))
+
+
 def _rank_and_rescore(params, pool, scenarios, cfg: SurrogateConfig,
                       hw_cfg, nop_fidelity):
     """Surrogate-rank ``pool`` per scenario, analytically re-score the
@@ -178,10 +198,15 @@ def run_stage(key, scenarios: cm.Scenario, cfg: SurrogateConfig, hw_cfg,
     k_boot = jax.random.fold_in(key, 0)
     k_sel = jax.random.fold_in(key, 1)
     k_train = jax.random.fold_in(key, 2)
+    jr = tj.current_or_null()
 
     ds, boot_flats, boot_rewards = bootstrap_dataset(
         k_boot, scenarios, cfg.bootstrap, hw_cfg, nop_fidelity,
         capacity=cfg.capacity, seed_rows=tap_dataset)
+    jr.event("surrogate_bootstrap", n=cfg.bootstrap,
+             tap_rows=0 if tap_dataset is None else int(
+                 sds.size(tap_dataset)),
+             dataset_rows=int(sds.size(ds)))
 
     if cfg.mode == "random":
         extra = random_flats(k_sel, cfg.top_k)
@@ -193,6 +218,7 @@ def run_stage(key, scenarios: cm.Scenario, cfg: SurrogateConfig, hw_cfg,
         params = None
     elif refit_every <= 0:
         params, _ = strain.fit(k_train, ds, cfg.train)
+        jr.event("surrogate_fit", chunk=0, dataset_rows=int(sds.size(ds)))
         pool = random_flats(k_sel, cfg.pool_size)
         sel_flats, mtr = _rank_and_rescore(params, pool, scenarios, cfg,
                                            hw_cfg, nop_fidelity)
@@ -201,11 +227,28 @@ def run_stage(key, scenarios: cm.Scenario, cfg: SurrogateConfig, hw_cfg,
         sfeats = sm.scenario_features(scenarios)            # (S, S_FEAT)
         flats_parts, reward_parts = [], []
         params = None
+        # rank-drift probe: a fixed, already-evaluated pool scored under
+        # the first scenario after every re-fit; Spearman between
+        # consecutive fits' scores shows how much the ranking moved as
+        # the suite's own eval traffic folds in. Journal-only (skipped
+        # when no journal is ambient) and key-stream-free.
+        drift = isinstance(jr, tj.Journal)
+        probe = boot_flats[: min(512, boot_flats.shape[0])]
+        scen0 = jax.tree_util.tree_map(lambda x: x[0], scenarios)
+        prev_scores = None
         for c0 in range(0, n_scen, refit_every):
             chunk = jax.tree_util.tree_map(
                 lambda x: x[c0:c0 + refit_every], scenarios)
             params, _ = strain.fit(jax.random.fold_in(k_train, c0), ds,
                                    cfg.train)
+            jr.event("surrogate_fit", chunk=c0,
+                     dataset_rows=int(sds.size(ds)))
+            if drift:
+                scores = _probe_scores(params, probe, scen0, cfg.backend)
+                if prev_scores is not None:
+                    jr.event("surrogate_rank_drift", chunk=c0,
+                             spearman=_spearman(prev_scores, scores))
+                prev_scores = scores
             pool = random_flats(jax.random.fold_in(k_sel, c0),
                                 cfg.pool_size)
             cf, cmtr = _rank_and_rescore(params, pool, chunk, cfg,

@@ -1,0 +1,12 @@
+"""Observability: in-scan counters, structured run journal, profiling.
+
+Three layers (see each module's docstring):
+
+- ``telemetry.counters`` — JAX-resident counter pytrees carried through
+  the SA / GA / PPO / env ``lax.scan`` hot loops (default off = the
+  exact pre-telemetry program, bitwise).
+- ``telemetry.journal`` — host-side span/event JSONL sink for suite and
+  portfolio runs; rendered by ``scripts/telemetry_report.py``.
+- ``telemetry.profile`` — shared compiled-kernel counting, compile
+  timing, and an optional ``jax.profiler`` trace context.
+"""

@@ -1,0 +1,269 @@
+"""JAX-resident telemetry counters for the search hot loops.
+
+Every optimizer hot loop in this repo — the placement-SA scan, the GA
+generation scan, the PPO update scan, placement-episode rollouts — runs
+as one opaque XLA program; the only host-level observation point is
+``costmodel.register_eval_tap``, which deliberately skips traced calls.
+The pytrees in this module ride *inside* those ``lax.scan`` carries (or
+are emitted as per-step scan outputs), so acceptance rates, archive
+churn and convergence dynamics are measured exactly where they happen.
+
+Contract (mirrors the repo's ``mapping=None`` convention): telemetry is
+OFF by default everywhere (``telemetry=False`` config fields /
+``tel=None`` state fields), and the off path statically compiles the
+exact pre-telemetry program — bit-for-bit, CI-gated against the
+recorded PR-4 SA trajectories. Turning telemetry ON adds counter
+arithmetic on values the step already computes; it draws no randomness
+and never perturbs the trajectory (asserted in tests/test_telemetry.py
+and by ``bench_costmodel.py --assert-telemetry``).
+
+All counters are small fixed-shape device arrays, so they vmap cleanly
+over scenario / design / chain axes and cost O(1) memory per carry.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# SA placement-refinement counters (sa/annealing.py)
+# --------------------------------------------------------------------------
+
+class SACounters(NamedTuple):
+    """Per-chain counters of ``sa.refine_placement``.
+
+    ``propose`` / ``accept`` count proposals and accepted moves per move
+    kind (index 0 = chiplet relocate/swap, 1 = HBM re-anchor; a mapping
+    move rides kind 0 — it neutralizes its placement half). ``improve``
+    counts best-so-far improvements. ``seg_propose`` / ``seg_accept``
+    resolve the same counts per phase-schedule segment (one bin total
+    when no schedule is set). ``accept_curve`` is filled after the scan:
+    the cumulative accepted-move count at the same stride as
+    ``PlacementResult.history`` (so acceptance-rate curves line up with
+    the best-so-far trace).
+    """
+
+    propose: jnp.ndarray       # (2,) int32, per move kind
+    accept: jnp.ndarray        # (2,) int32
+    improve: jnp.ndarray       # () int32, best-so-far improvements
+    seg_propose: jnp.ndarray   # (n_segments,) int32
+    seg_accept: jnp.ndarray    # (n_segments,) int32
+    accept_curve: jnp.ndarray = None   # (n_records,) int32, post-scan
+
+
+def init_sa(n_segments: int = 1) -> SACounters:
+    return SACounters(
+        propose=jnp.zeros((2,), jnp.int32),
+        accept=jnp.zeros((2,), jnp.int32),
+        improve=jnp.int32(0),
+        seg_propose=jnp.zeros((n_segments,), jnp.int32),
+        seg_accept=jnp.zeros((n_segments,), jnp.int32))
+
+
+def sa_update(c: SACounters, kind, accept, improved,
+              seg: int = 0) -> SACounters:
+    """One SA step's counter update. ``kind`` is the (traced) move kind,
+    ``accept`` / ``improved`` the step's accept and best-so-far booleans,
+    ``seg`` the *static* phase-segment index. Pure arithmetic on values
+    the step already computed — no randomness, no trajectory impact."""
+    oh = (jnp.arange(2, dtype=jnp.int32)
+          == jnp.asarray(kind, jnp.int32)).astype(jnp.int32)
+    acc = jnp.asarray(accept).astype(jnp.int32)
+    return c._replace(
+        propose=c.propose + oh,
+        accept=c.accept + oh * acc,
+        improve=c.improve + jnp.asarray(improved).astype(jnp.int32),
+        seg_propose=c.seg_propose.at[seg].add(jnp.int32(1)),
+        seg_accept=c.seg_accept.at[seg].add(acc))
+
+
+def merge_sa(a: SACounters, b: SACounters) -> SACounters:
+    """Sum two rounds' counters; accept curves concatenate with the
+    second curve offset by the first round's final count (the curve
+    stays a cumulative accepted-move count)."""
+    curve = None
+    if a.accept_curve is not None and b.accept_curve is not None:
+        curve = jnp.concatenate(
+            [a.accept_curve, b.accept_curve + a.accept_curve[-1]])
+    return SACounters(
+        propose=a.propose + b.propose,
+        accept=a.accept + b.accept,
+        improve=a.improve + b.improve,
+        seg_propose=a.seg_propose + b.seg_propose,
+        seg_accept=a.seg_accept + b.seg_accept,
+        accept_curve=curve)
+
+
+def summarize_sa(c: SACounters) -> dict:
+    """Host-side summary dict (plain Python scalars/lists, JSON-safe).
+    Accepts counters with or without leading batch axes (summed over)."""
+    prop = np.asarray(c.propose).reshape(-1, 2).sum(axis=0)
+    acc = np.asarray(c.accept).reshape(-1, 2).sum(axis=0)
+    n_seg = np.asarray(c.seg_propose).shape[-1]
+    sprop = np.asarray(c.seg_propose).reshape(-1, n_seg).sum(axis=0)
+    sacc = np.asarray(c.seg_accept).reshape(-1, n_seg).sum(axis=0)
+    out = {
+        "propose": [int(x) for x in prop],
+        "accept": [int(x) for x in acc],
+        "improve": int(np.asarray(c.improve).sum()),
+        "accept_rate": [float(a / max(p, 1))
+                        for a, p in zip(acc, prop)],
+        "seg_propose": [int(x) for x in sprop],
+        "seg_accept": [int(x) for x in sacc],
+        "seg_accept_rate": [float(a / max(p, 1))
+                            for a, p in zip(sacc, sprop)],
+    }
+    if c.accept_curve is not None:
+        curve = np.asarray(c.accept_curve)
+        out["accept_curve"] = [int(x) for x in curve.reshape(
+            -1, curve.shape[-1])[0]] if curve.ndim > 1 else \
+            [int(x) for x in curve]
+    return out
+
+
+# --------------------------------------------------------------------------
+# Placement-episode env counters (core/env.py)
+# --------------------------------------------------------------------------
+
+class EnvCounters(NamedTuple):
+    """Per-env counters riding ``env.EnvState`` through rollout scans.
+
+    ``delta_evals`` / ``scratch_evals`` split step pricing by path (the
+    delta-vs-scratch eval count of the ISSUE); ``episodes`` counts
+    auto-reset boundaries, and the reward accumulators survive resets
+    (the auto-reset combine carries the *stepped* counters forward, not
+    the fresh-episode zeros)."""
+
+    steps: jnp.ndarray          # () int32
+    episodes: jnp.ndarray       # () int32, completed episodes
+    delta_evals: jnp.ndarray    # () int32, delta-priced step evals
+    scratch_evals: jnp.ndarray  # () int32, from-scratch step evals
+    reward_sum: jnp.ndarray     # () float32
+    best_reward: jnp.ndarray    # () float32
+
+
+def init_env() -> EnvCounters:
+    return EnvCounters(
+        steps=jnp.int32(0), episodes=jnp.int32(0),
+        delta_evals=jnp.int32(0), scratch_evals=jnp.int32(0),
+        reward_sum=jnp.float32(0.0),
+        best_reward=jnp.float32(-jnp.inf))
+
+
+def env_step_update(c: EnvCounters, reward, delta_eval: bool) -> EnvCounters:
+    one = jnp.int32(1)
+    r = jnp.asarray(reward, jnp.float32)
+    return c._replace(
+        steps=c.steps + one,
+        delta_evals=c.delta_evals + (one if delta_eval else 0),
+        scratch_evals=c.scratch_evals + (0 if delta_eval else one),
+        reward_sum=c.reward_sum + r,
+        best_reward=jnp.maximum(c.best_reward, r))
+
+
+def env_episode_update(c: EnvCounters, done) -> EnvCounters:
+    return c._replace(
+        episodes=c.episodes + jnp.asarray(done).astype(jnp.int32))
+
+
+def summarize_env(c: EnvCounters) -> dict:
+    steps = int(np.asarray(c.steps).sum())
+    return {
+        "steps": steps,
+        "episodes": int(np.asarray(c.episodes).sum()),
+        "delta_evals": int(np.asarray(c.delta_evals).sum()),
+        "scratch_evals": int(np.asarray(c.scratch_evals).sum()),
+        "mean_step_reward": float(np.asarray(c.reward_sum).sum()
+                                  / max(steps, 1)),
+        "best_reward": float(np.asarray(c.best_reward).max()),
+    }
+
+
+# --------------------------------------------------------------------------
+# GA per-generation stats (optimizer/evo.py)
+# --------------------------------------------------------------------------
+
+class EvoGenStats(NamedTuple):
+    """Per-generation scan outputs of ``evo.evolve`` (leading axis:
+    generations). ``diversity`` is the mean pairwise gene-disagreement
+    fraction of the offspring population (1 = all genomes distinct
+    everywhere, 0 = converged); insert/evict counts are archive-row
+    membership deltas; ``archive_hv`` samples the live archive's exact
+    hypervolume w.r.t. its own nadir point each generation."""
+
+    diversity: jnp.ndarray        # () float32
+    mean_fitness: jnp.ndarray     # () float32
+    archive_inserts: jnp.ndarray  # () int32
+    archive_evicts: jnp.ndarray   # () int32
+    archive_n: jnp.ndarray        # () int32, valid rows after insert
+    archive_hv: jnp.ndarray       # () float32
+
+
+def population_diversity(pop: jnp.ndarray) -> jnp.ndarray:
+    """Mean pairwise Hamming fraction of an int (P, G) population."""
+    neq = pop[:, None, :] != pop[None, :, :]
+    return jnp.mean(neq.astype(jnp.float32))
+
+
+def archive_delta(old_arc, new_arc):
+    """(inserts, evicts): membership changes between two archive states,
+    by exact point-row equality (cheap: capacity^2 comparisons)."""
+    eq = jnp.all(old_arc.points[:, None, :] == new_arc.points[None, :, :],
+                 axis=-1)                                   # (C, C) old x new
+    old_survives = jnp.any(eq & new_arc.valid[None, :], axis=1)
+    new_is_old = jnp.any(eq & old_arc.valid[:, None], axis=0)
+    evicts = jnp.sum((old_arc.valid & ~old_survives).astype(jnp.int32))
+    inserts = jnp.sum((new_arc.valid & ~new_is_old).astype(jnp.int32))
+    return inserts, evicts
+
+
+def summarize_evo(stats: EvoGenStats) -> dict:
+    """Host-side summary; accepts stats stacked over generations (and
+    any leading island/scenario axes — curves use the first row)."""
+    def curve(x):
+        a = np.asarray(x, np.float64)
+        a = a.reshape(-1, a.shape[-1])[0]
+        return [float(v) for v in a]
+    return {
+        "diversity": curve(stats.diversity),
+        "mean_fitness": curve(stats.mean_fitness),
+        "archive_inserts": int(np.asarray(stats.archive_inserts).sum()),
+        "archive_evicts": int(np.asarray(stats.archive_evicts).sum()),
+        "archive_hv": curve(stats.archive_hv),
+        "final_archive_n": int(np.asarray(stats.archive_n).reshape(
+            -1, np.asarray(stats.archive_n).shape[-1])[0][-1]),
+    }
+
+
+# --------------------------------------------------------------------------
+# PPO per-update stats (rl/ppo.py)
+# --------------------------------------------------------------------------
+
+class PPOUpdateStats(NamedTuple):
+    """Per-update scan outputs of ``ppo.train`` (leading axis: updates).
+    ``approx_kl`` is the k1 estimator mean(old_logp - new_logp) over all
+    minibatches; ``clip_frac`` the fraction of ratios clipped."""
+
+    return_mean: jnp.ndarray   # () float32, mean GAE return
+    return_std: jnp.ndarray    # () float32
+    entropy: jnp.ndarray       # () float32, mean policy entropy
+    approx_kl: jnp.ndarray     # () float32
+    clip_frac: jnp.ndarray     # () float32
+
+
+def summarize_ppo(stats: PPOUpdateStats) -> dict:
+    def curve(x):
+        a = np.asarray(x, np.float64)
+        a = a.reshape(-1, a.shape[-1])[0]
+        return [float(v) for v in a]
+    return {
+        "return_mean": curve(stats.return_mean),
+        "entropy": curve(stats.entropy),
+        "approx_kl": curve(stats.approx_kl),
+        "clip_frac": curve(stats.clip_frac),
+    }

@@ -1,0 +1,206 @@
+"""Structured run journal: host-side span/event JSONL sink.
+
+One ``Journal`` per run writes newline-delimited JSON records to a file
+(or any file-like). Three record kinds:
+
+- ``{"kind": "run_begin", "run": <id>, "ts": ..., "env": {...}}`` —
+  opens the journal with an environment fingerprint (JAX version,
+  backend, device/CPU counts, platform).
+- ``{"kind": "event", "name": ..., "ts": ..., "span": <parent>, ...}``
+  — point-in-time facts (convergence curves, surrogate fits, compile
+  timings, archive hypervolume samples).
+- ``{"kind": "span_begin"/"span", "name": ..., "ts": ..., "dur_s": ...,
+  "parent": ...}`` — nested wall-clock stages (suite arms under their
+  ``fold_in`` keys, refine sweeps, placement, mapping). ``span_begin``
+  is written at entry so a crashed run still shows where it died;
+  ``span`` at exit carries the duration.
+
+Arbitrary extra fields are allowed on every record and are sanitized to
+plain JSON (numpy / JAX scalars and arrays included). The module also
+keeps an ambient *current journal* (``use(j)`` / ``current()``) so deep
+call sites — the surrogate ranker's refit loop, ``profile.compile_timer``
+— can emit events without threading a journal argument through every
+signature. ``scripts/telemetry_report.py`` renders a journal back into a
+human-readable run summary.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import platform
+import sys
+import time
+import uuid
+
+
+def environment_fingerprint() -> dict:
+    """Best-effort snapshot of the software/hardware environment."""
+    fp = {
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+        "cpu_count": os.cpu_count(),
+    }
+    try:
+        import jax
+        fp["jax"] = jax.__version__
+        fp["backend"] = jax.default_backend()
+        fp["device_count"] = jax.device_count()
+        fp["devices"] = [str(d) for d in jax.devices()]
+    except Exception as e:  # pragma: no cover - jax is always present here
+        fp["jax_error"] = repr(e)
+    return fp
+
+
+def _jsonable(x):
+    """Recursively coerce numpy/JAX scalars and arrays to plain JSON."""
+    if x is None or isinstance(x, (bool, int, float, str)):
+        return x
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if hasattr(x, "item") and getattr(x, "ndim", None) == 0:
+        return _jsonable(x.item())
+    if hasattr(x, "tolist"):
+        return _jsonable(x.tolist())
+    return str(x)
+
+
+class Journal:
+    """Append-only JSONL journal with nested spans.
+
+    Not thread-safe by design: the suite/portfolio drivers are
+    single-threaded host loops around compiled programs.
+    """
+
+    def __init__(self, path_or_file, run_id=None, fingerprint=True):
+        if hasattr(path_or_file, "write"):
+            self._f = path_or_file
+            self._owns = False
+            self.path = getattr(path_or_file, "name", None)
+        else:
+            self._f = open(path_or_file, "a", encoding="utf-8")
+            self._owns = True
+            self.path = str(path_or_file)
+        self.run_id = run_id or uuid.uuid4().hex[:12]
+        self._stack = []          # names of open spans, outermost first
+        self._closed = False
+        if fingerprint:
+            self._write({"kind": "run_begin",
+                         "env": environment_fingerprint()})
+
+    # -- low-level ---------------------------------------------------------
+
+    def _write(self, rec: dict) -> None:
+        if self._closed:
+            return
+        rec = {"ts": time.time(), "run": self.run_id, **rec}
+        self._f.write(json.dumps(_jsonable(rec), sort_keys=False) + "\n")
+        self._f.flush()
+
+    # -- public API --------------------------------------------------------
+
+    def event(self, name: str, **fields) -> None:
+        self._write({"kind": "event", "name": name,
+                     "span": self._stack[-1] if self._stack else None,
+                     **fields})
+
+    @contextlib.contextmanager
+    def span(self, name: str, **fields):
+        parent = self._stack[-1] if self._stack else None
+        self._write({"kind": "span_begin", "name": name,
+                     "parent": parent, **fields})
+        self._stack.append(name)
+        t0 = time.perf_counter()
+        try:
+            yield self
+        finally:
+            dur = time.perf_counter() - t0
+            self._stack.pop()
+            self._write({"kind": "span", "name": name, "parent": parent,
+                         "dur_s": dur, **fields})
+
+    def close(self) -> None:
+        if not self._closed:
+            self._write({"kind": "run_end"})
+            if self._owns:
+                self._f.close()
+            self._closed = True
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+class NullJournal:
+    """No-op drop-in so call sites can write ``jr.event(...)`` without
+    ``if journal is not None`` at every line."""
+
+    run_id = None
+    path = None
+
+    def event(self, name, **fields):
+        pass
+
+    @contextlib.contextmanager
+    def span(self, name, **fields):
+        yield self
+
+    def close(self):
+        pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+NULL = NullJournal()
+
+
+def or_null(journal) -> "Journal | NullJournal":
+    return journal if journal is not None else NULL
+
+
+# -- ambient current journal ----------------------------------------------
+
+_CURRENT = None
+
+
+def current():
+    """The ambient journal set by ``use(...)``, or None."""
+    return _CURRENT
+
+
+def current_or_null():
+    return or_null(_CURRENT)
+
+
+@contextlib.contextmanager
+def use(journal):
+    """Make ``journal`` the ambient journal inside the block, so deep
+    call sites (ranker refits, compile_timer) can emit without plumbing."""
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = journal
+    try:
+        yield journal
+    finally:
+        _CURRENT = prev
+
+
+def load(path) -> list:
+    """Read a JSONL journal back into a list of record dicts."""
+    records = []
+    with open(path, "r", encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                records.append(json.loads(line))
+    return records

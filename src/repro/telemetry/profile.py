@@ -1,0 +1,87 @@
+"""Unified profiling hooks: compiled-kernel counts, compile timing,
+and an optional ``jax.profiler`` trace context.
+
+``compiled_kernel_count`` is the promoted (previously benchmark-local)
+``_count_step_kernels`` from ``benchmarks/bench_costmodel.py``: both
+benchmark drivers and the ``scripts/ci.sh`` kernel-ratio guards now
+share this one implementation, so a counting-rule change cannot drift
+the CI gate away from the recorded bench numbers.
+
+``compile_timer`` times an explicit lower+compile and emits a
+``compile`` event to the ambient journal (``telemetry.journal.use``),
+making compilation cost visible in run journals without extra plumbing.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import re
+import time
+
+from repro.telemetry import journal as tj
+
+
+def compiled_kernel_count(fn, *args, scope: str = "while") -> int:
+    """Count device kernels in ``fn``'s compiled HLO for ``args``.
+
+    ``scope="while"`` (the historical bench guard behavior) counts
+    inside the largest ``while_body`` — i.e. the per-iteration cost of
+    the dominant ``lax.scan``/``while_loop``; returns 0 when the program
+    has no loop. ``scope="module"`` counts the whole module. Counted ops
+    are the launch-bearing ones on CPU/TPU backends: fusion, reduce,
+    gather, scatter, sort, dot.
+    """
+    txt = fn.lower(*args).compile().as_text()
+    if scope == "while":
+        # historical rule first (the recorded bench numbers and CI ratio
+        # guards were measured against it); XLA does not always name loop
+        # bodies %while_body — some programs keep %region_N.M — so when
+        # the name-based extraction finds nothing, follow the while ops'
+        # body= references instead
+        bodies = re.findall(r"%while_body[^\{]*\{(.*?)\n\}", txt, re.S)
+        if not bodies:
+            for name in set(re.findall(r"body=%?([\w\.\-]+)", txt)):
+                m = re.search(
+                    r"^\s*%?" + re.escape(name) + r" \([^\)]*\)[^\{]*\{"
+                    r"(.*?)\n\s*\}", txt, re.S | re.M)
+                if m:
+                    bodies.append(m.group(1))
+        if not bodies:
+            return 0
+        txt = max(bodies, key=len)
+    elif scope != "module":
+        raise ValueError(f"unknown scope {scope!r}")
+    return len(re.findall(
+        r"= \S+ (?:fusion|reduce|gather|scatter|sort|dot)\(", txt))
+
+
+def compile_timer(fn, *args, name: str = None):
+    """Explicitly lower+compile ``fn`` for ``args``; returns
+    ``(compiled, wall_s)``. Emits a ``compile`` event (name + duration)
+    to the ambient journal when one is active."""
+    t0 = time.perf_counter()
+    compiled = fn.lower(*args).compile()
+    wall = time.perf_counter() - t0
+    tj.current_or_null().event(
+        "compile", target=name or getattr(fn, "__name__", repr(fn)),
+        dur_s=wall)
+    return compiled, wall
+
+
+@contextlib.contextmanager
+def trace_profile(log_dir):
+    """Wrap a block in ``jax.profiler.trace(log_dir)`` when available;
+    silently a no-op when ``log_dir`` is falsy or the profiler backend
+    is missing (keeps callers unconditional)."""
+    if not log_dir:
+        yield
+        return
+    try:
+        import jax.profiler as _prof
+        ctx = _prof.trace(str(log_dir))
+    except Exception:
+        yield
+        return
+    with ctx:
+        yield
+    tj.current_or_null().event("profiler_trace", log_dir=str(log_dir))
